@@ -1,0 +1,40 @@
+//! PARS3 vs the conflict-free graph-coloring SSpMV of Elafrou et al. [3]
+//! (the §4.1 comparison): phases, conflict counts, and modeled speedups.
+//!
+//! ```text
+//! cargo run --release --example coloring_compare [-- scale]
+//! ```
+
+use pars3::coordinator::Config;
+use pars3::graph::coloring::color_rows;
+use pars3::kernel::coloring_spmv::ColoringPlan;
+use pars3::kernel::serial_sss::sss_spmv;
+use pars3::mpisim::CostModel;
+use pars3::report;
+use std::sync::Arc;
+
+fn main() -> pars3::Result<()> {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let cfg = Config { scale, ..Config::default() };
+    let suite = report::prepared_suite(&cfg)?;
+    let biggest = suite.iter().max_by_key(|(_, p)| p.nnz_lower).unwrap();
+    let model = CostModel::calibrate(&biggest.1.sss, 5);
+
+    println!("{}", report::coloring_compare(&suite, &cfg.ranks, &model));
+
+    // numerics check: the phased executor returns the same y
+    let (_, prep) = &suite[0];
+    let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.17).cos()).collect();
+    let mut want = vec![0.0; prep.n];
+    sss_spmv(&prep.sss, &x, &mut want);
+    let coloring = color_rows(&prep.sss);
+    let plan = Arc::new(ColoringPlan::new(prep.sss.clone(), 4)?);
+    let got = plan.execute_threaded(&x);
+    let err = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+    println!(
+        "numerics check ({}): {} phases, threaded phased executor max |dy| = {err:.3e}",
+        suite[0].0.name, coloring.num_colors
+    );
+    assert!(err < 1e-9);
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! §Perf probe: PJRT hot-loop variants, warm (compile amortized).
+//! Compares: (a) single-step artifact with per-call band literal
+//! (pre-optimization), (b) single-step with hoisted band literal,
+//! (c) 8-iteration chunk with hoisted band (production path).
+use pars3::runtime::{Manifest, PjrtRuntime};
+use pars3::util::SmallRng;
+
+fn main() -> pars3::Result<()> {
+    let mut rt = PjrtRuntime::new(Manifest::load("artifacts")?)?;
+    let (n, beta) = (1024usize, 16usize);
+    let mut rng = SmallRng::seed_from_u64(1);
+    let mut lo: Vec<f32> = (0..beta * n).map(|_| rng.gen_range_f64(-0.1, 0.1) as f32).collect();
+    for d in 0..beta {
+        for j in n - d - 1..n {
+            lo[d * n + j] = 0.0; // band tail padding invariant
+        }
+    }
+    let r0: Vec<f32> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0) as f32).collect();
+    let a = [2.0f32];
+    let iters = 64usize;
+
+    // (a) step artifact, per-call literals (old execute_f32 path)
+    let step = rt.load("mrs_step_n1024_b16")?;
+    let mut x = vec![0.0f32; n];
+    let mut r = r0.clone();
+    let _ = step.execute_f32(&[&lo, &x, &r, &a])?; // warmup/compile
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let out = step.execute_f32(&[&lo, &x, &r, &a])?;
+        x = out[0].clone();
+        r = out[1].clone();
+    }
+    let ta = t0.elapsed().as_secs_f64();
+    let xa_final = x.clone();
+
+    // (b) step artifact, hoisted band literal
+    let lo_lit = step.literal_for(0, &lo)?;
+    let a_lit = step.literal_for(3, &a)?;
+    let mut x = vec![0.0f32; n];
+    let mut r = r0.clone();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let x_lit = step.literal_for(1, &x)?;
+        let r_lit = step.literal_for(2, &r)?;
+        let out = step.execute_literals(&[&lo_lit, &x_lit, &r_lit, &a_lit])?;
+        x = out[0].clone();
+        r = out[1].clone();
+    }
+    let tb = t0.elapsed().as_secs_f64();
+
+    // (c) chunk artifact (8 fused iters), hoisted band literal
+    let chunk = rt.load("mrs_chunk_n1024_b16")?;
+    let lo_lit = chunk.literal_for(0, &lo)?;
+    let a_lit = chunk.literal_for(3, &a)?;
+    let warm = vec![0.0f32; n];
+    let _ = chunk.execute_literals(&[&lo_lit, &chunk.literal_for(1, &warm)?, &chunk.literal_for(2, &r0)?, &a_lit])?;
+    let mut x2 = vec![0.0f32; n];
+    let mut r2 = r0.clone();
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters / 8 {
+        let x_lit = chunk.literal_for(1, &x2)?;
+        let r_lit = chunk.literal_for(2, &r2)?;
+        let out = chunk.execute_literals(&[&lo_lit, &x_lit, &r_lit, &a_lit])?;
+        x2 = out[0].clone();
+        r2 = out[1].clone();
+    }
+    let tc = t0.elapsed().as_secs_f64();
+
+    println!("per-iteration (warm, n=1024 beta=16, {iters} iters):");
+    println!("  (a) step + per-call literals : {:8.1} us", ta / iters as f64 * 1e6);
+    println!("  (b) step + hoisted band      : {:8.1} us  ({:.2}x)", tb / iters as f64 * 1e6, ta / tb);
+    println!("  (c) 8-iter chunk + hoisted   : {:8.1} us  ({:.2}x)", tc / iters as f64 * 1e6, ta / tc);
+    let xa = xa_final;
+    let err_ab = xa.iter().zip(&x).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max);
+    let err_bc = x.iter().zip(&x2).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max);
+    let nx = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+    println!("  ||x|| = {nx:.3}  max|x_a-x_b| = {err_ab:.2e}  max|x_b-x_c| = {err_bc:.2e}");
+    Ok(())
+}

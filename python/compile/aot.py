@@ -1,0 +1,131 @@
+"""AOT export: lower the L2/L1 graph to HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` —
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run via ``make artifacts``:
+
+  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per (function, n, beta) config plus
+``manifest.json`` describing shapes/order of every input and output, which
+``rust/src/runtime/artifacts.rs`` parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (n, beta, tile) configs exported for both spmv and mrs_step. Sizes are
+# chosen so the band (beta * n f32) stays VMEM-scale and compile time stays
+# sane on this box; the Rust coordinator picks the smallest config >= its
+# problem and zero-pads (see runtime::artifacts).
+CONFIGS = [
+    (1024, 16, 128),
+    (4096, 32, 256),
+    (8192, 64, 256),
+]
+
+# Iterations fused into each mrs_chunk artifact (§Perf: amortizes PJRT
+# dispatch + input transfer; the Rust driver checks convergence at chunk
+# granularity).
+CHUNK_ITERS = 8
+
+# Whole-solve artifact (fixed iteration count) — one config is enough to
+# prove the scan-fused path; step/chunk artifacts are the production path.
+SOLVE_CONFIG = (1024, 16, 128, 64)  # n, beta, tile, iters
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_list(specs):
+    return [{"shape": list(s.shape), "dtype": s.dtype.name} for s in specs]
+
+
+def export_one(name, fn, specs, out_dir, kind, meta):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_specs = jax.eval_shape(fn, *specs)
+    entry = {
+        "name": name,
+        "kind": kind,
+        "file": fname,
+        "inputs": _spec_list(specs),
+        "outputs": _spec_list(jax.tree_util.tree_leaves(out_specs)),
+        **meta,
+    }
+    print(f"  wrote {fname} ({len(text)} chars)")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for n, beta, tile in CONFIGS:
+        meta = {"n": n, "beta": beta, "tile": tile}
+        fn, specs = model.make_spmv(n, beta, tile)
+        entries.append(
+            export_one(f"spmv_n{n}_b{beta}", fn, specs, args.out_dir, "spmv", meta)
+        )
+        fn, specs = model.make_mrs_step(n, beta, tile)
+        entries.append(
+            export_one(f"mrs_step_n{n}_b{beta}", fn, specs, args.out_dir, "mrs_step", meta)
+        )
+        # §Perf: 8-iteration chunk — amortizes PJRT dispatch + transfers
+        fn, specs = model.make_mrs_chunk(n, beta, tile, CHUNK_ITERS)
+        entries.append(
+            export_one(
+                f"mrs_chunk_n{n}_b{beta}",
+                fn,
+                specs,
+                args.out_dir,
+                "mrs_chunk",
+                {**meta, "iters": CHUNK_ITERS},
+            )
+        )
+
+    n, beta, tile, iters = SOLVE_CONFIG
+    fn, specs = model.make_mrs_solve(n, beta, tile, iters)
+    entries.append(
+        export_one(
+            f"mrs_solve_n{n}_b{beta}_i{iters}",
+            fn,
+            specs,
+            args.out_dir,
+            "mrs_solve",
+            {"n": n, "beta": beta, "tile": tile, "iters": iters},
+        )
+    )
+
+    manifest = {"version": 1, "dtype": "f32", "artifacts": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: banded shifted skew-symmetric SpMV.
+
+This is the compute hot-spot of PARS3 after preprocessing: once RCM has
+reordered the matrix into a band of half-bandwidth ``beta``, the middle
+split is a (mostly dense) lower band stored in DIA ("diagonal") layout.
+
+Storage convention (shared with the Rust side, see ``sparse::dia``):
+
+  * ``A = alpha * I + S`` with ``S = -S^T`` (shifted skew-symmetric).
+  * ``lo`` has shape ``(beta, n)`` with ``lo[d, j] = S[j + d + 1, j]``
+    (the ``d+1``-th sub-diagonal, stored at its *column* index ``j``;
+    entries with ``j + d + 1 >= n`` are zero padding).
+  * The strictly upper triangle is implied: ``S[j, j + d + 1] = -lo[d, j]``.
+
+The multiply is therefore, for each row ``i``::
+
+  y[i] = alpha * x[i]
+       + sum_d lo[d, i - d - 1] * x[i - d - 1]     (lower band, row i)
+       - sum_d lo[d, i]         * x[i + d + 1]     (mirrored upper band)
+
+which is exactly the paper's "single read of a symmetric pair drives two
+multiplies" trick (eqs. (2)-(6)) — realized owner-computes: each row tile
+reads the mirrored band columns instead of remote-accumulating into a
+neighbour's output (see DESIGN.md §Hardware-Adaptation).
+
+The kernel runs over a 1-D grid of row tiles. Inputs arrive pre-padded by
+the wrapper so all in-kernel dynamic slices are in-bounds:
+
+  * ``x_pad``  : ``(n + 2*beta,)``  with ``x_pad[beta + j] = x[j]``
+  * ``lo_pad`` : ``(beta, n + beta)`` with ``lo_pad[d, beta + j] = lo[d, j]``
+
+TPU mapping notes (structure, not interpret-mode wallclock): the row tile
+of ``y`` plus its ``2*beta`` halo of ``x`` and a ``(beta, tile)`` band tile
+live in VMEM; traffic is dominated by the band tile (``beta * tile`` f32),
+streamed once per program — the memory-bound roofline for SpMV. The
+``fori_loop`` over diagonals keeps the HLO size independent of ``beta``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _band_spmv_kernel(alpha_ref, lo_pad_ref, x_pad_ref, y_ref, *, beta: int, tile: int):
+    """One row-tile of the banded skew-symmetric multiply."""
+    t = pl.program_id(0)
+    base = t * tile
+    alpha = alpha_ref[0]
+
+    # Diagonal split: y_tile = alpha * x_tile.
+    x_c = pl.load(x_pad_ref, (pl.dslice(base + beta, tile),))
+    acc = alpha * x_c
+
+    def body(d, acc):
+        # Lower band: row i uses lo[d, i-d-1] * x[i-d-1].
+        lo_low = pl.load(lo_pad_ref, (d, pl.dslice(base + beta - d - 1, tile)))
+        x_low = pl.load(x_pad_ref, (pl.dslice(base + beta - d - 1, tile),))
+        # Mirrored upper band: row i uses -lo[d, i] * x[i+d+1].
+        lo_up = pl.load(lo_pad_ref, (d, pl.dslice(base + beta, tile)))
+        x_up = pl.load(x_pad_ref, (pl.dslice(base + beta + d + 1, tile),))
+        return acc + lo_low * x_low - lo_up * x_up
+
+    acc = jax.lax.fori_loop(0, beta, body, acc)
+    pl.store(y_ref, (pl.dslice(0, tile),), acc)
+
+
+def band_spmv(lo: jax.Array, x: jax.Array, alpha: jax.Array, *, tile: int = 256) -> jax.Array:
+    """Compute ``y = (alpha*I + S) @ x`` for a DIA-stored lower band ``lo``.
+
+    Args:
+      lo: ``(beta, n)`` sub-diagonals of the skew-symmetric part ``S``.
+      x: ``(n,)`` input vector.
+      alpha: ``(1,)`` shift scalar (as an array so it stays an HLO input).
+      tile: row-tile size; must divide ``n``.
+
+    Returns:
+      ``(n,)`` output vector.
+    """
+    beta, n = lo.shape
+    if n % tile != 0:
+        raise ValueError(f"tile {tile} must divide n {n}")
+    dtype = x.dtype
+    x_pad = jnp.pad(x, (beta, beta))
+    lo_pad = jnp.pad(lo, ((0, 0), (beta, 0)))
+    kernel = functools.partial(_band_spmv_kernel, beta=beta, tile=tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda t: (0,)),
+            pl.BlockSpec(lo_pad.shape, lambda t: (0, 0)),
+            pl.BlockSpec(x_pad.shape, lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda t: (t,)),
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(alpha.astype(dtype), lo_pad, x_pad)

@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These implement the same DIA band convention as ``band_spmv.py`` with
+straightforward (unblocked) jnp index arithmetic, plus a dense
+materializer used by the tests to cross-check against ``jnp.matmul``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def band_spmv_ref(lo: jax.Array, x: jax.Array, alpha: jax.Array) -> jax.Array:
+    """Reference ``y = (alpha*I + S) @ x`` for DIA lower band ``lo``."""
+    beta, n = lo.shape
+    y = alpha.astype(x.dtype)[0] * x
+    for d in range(beta):
+        k = d + 1
+        if k >= n:
+            break
+        # Lower band: S[j+k, j] = lo[d, j].
+        y = y.at[k:].add(lo[d, : n - k] * x[: n - k])
+        # Mirrored upper band: S[j, j+k] = -lo[d, j].
+        y = y.at[: n - k].add(-lo[d, : n - k] * x[k:])
+    return y
+
+
+def dense_from_band(lo: jax.Array, alpha: jax.Array) -> jax.Array:
+    """Materialize ``alpha*I + S`` as a dense ``(n, n)`` matrix."""
+    beta, n = lo.shape
+    a = alpha.astype(lo.dtype)[0] * jnp.eye(n, dtype=lo.dtype)
+    for d in range(beta):
+        k = d + 1
+        if k >= n:
+            break
+        diag = lo[d, : n - k]
+        a = a + jnp.diag(diag, -k) - jnp.diag(diag, k)
+    return a
+
+
+def fused_update_ref(
+    x: jax.Array, r: jax.Array, p: jax.Array, a: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Reference for the fused MRS vector update."""
+    s = a.astype(x.dtype)[0]
+    return x + s * r, r - s * p
+
+
+def mrs_step_ref(lo, x, r, alpha, eps: float = 1e-30):
+    """Reference single minimal-residual iteration (see model.mrs_step)."""
+    p = band_spmv_ref(lo, r, alpha)
+    rr = jnp.dot(r, r)
+    pp = jnp.dot(p, p)
+    a = alpha.astype(x.dtype)[0] * rr / jnp.maximum(pp, eps)
+    return x + a * r, r - a * p, rr

@@ -1,0 +1,141 @@
+"""L2 JAX model: the iterative-solver compute graph PARS3 accelerates.
+
+The paper's motivating consumer is the MRS family of Krylov methods for
+shifted skew-symmetric systems ``A x = b`` with ``A = alpha*I + S``,
+``S = -S^T`` — the striking feature being *one SpMV and one inner product
+per iteration* (§1). We implement the classical minimal-residual
+iteration specialized to this class:
+
+  p   = A r
+  a   = (r, A r) / (A r, A r) = alpha * ||r||^2 / ||p||^2
+        (the skew part drops out of the numerator: (r, S r) = 0)
+  x  <- x + a r
+  r  <- r - a p
+
+which converges monotonically in ||r|| whenever ``alpha != 0`` (the field
+of values of A lies on the vertical line Re = alpha). The SpMV is the
+L1 Pallas band kernel; the vector updates are the fused L1 kernel.
+
+Everything here is build-time Python: ``aot.py`` lowers these functions
+once to HLO text, and the Rust coordinator replays them via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.band_spmv import band_spmv
+from compile.kernels.fused_update import fused_update
+
+_EPS = 1e-30
+
+
+def spmv(lo, x, alpha, *, tile: int = 256):
+    """Banded shifted skew-symmetric SpMV (L1 kernel wrapper)."""
+    return band_spmv(lo, x, alpha, tile=tile)
+
+
+def mrs_step(lo, x, r, alpha, *, tile: int = 256):
+    """One minimal-residual iteration.
+
+    Returns ``(x', r', rr)`` where ``rr = ||r||^2`` *before* the update —
+    the Rust driver uses it for its convergence check, so each iteration
+    costs exactly one SpMV plus two inner products, matching the paper's
+    per-iteration budget.
+    """
+    p = spmv(lo, r, alpha, tile=tile)
+    rr = jnp.dot(r, r)
+    pp = jnp.dot(p, p)
+    a = alpha.astype(x.dtype)[0] * rr / jnp.maximum(pp, _EPS)
+    x2, r2 = fused_update(x, r, p, a[None], tile=tile)
+    return x2, r2, rr[None]
+
+
+def mrs_solve(lo, b, alpha, *, iters: int, tile: int = 256):
+    """Run ``iters`` minimal-residual iterations from ``x0 = 0``.
+
+    Returns ``(x, r, history)`` with ``history[k] = ||r_k||^2``. Used for
+    whole-solve AOT artifacts and for pytest cross-checks; the Rust hot
+    path prefers the single-step artifact so it owns the stopping rule.
+    """
+
+    def body(carry, _):
+        x, r = carry
+        x2, r2, rr = mrs_step(lo, x, r, alpha, tile=tile)
+        return (x2, r2), rr[0]
+
+    x0 = jnp.zeros_like(b)
+    (x, r), hist = jax.lax.scan(body, (x0, b), None, length=iters)
+    return x, r, hist
+
+
+def make_spmv(n: int, beta: int, tile: int):
+    """Jit-able ``(lo, x, alpha) -> (y,)`` closure + arg specs for AOT."""
+
+    def fn(lo, x, alpha):
+        return (spmv(lo, x, alpha, tile=tile),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((beta, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+
+
+def make_mrs_step(n: int, beta: int, tile: int):
+    """Jit-able ``(lo, x, r, alpha) -> (x', r', rr)`` closure + arg specs."""
+
+    def fn(lo, x, r, alpha):
+        return mrs_step(lo, x, r, alpha, tile=tile)
+
+    return fn, (
+        jax.ShapeDtypeStruct((beta, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+
+
+def mrs_chunk(lo, x, r, alpha, *, iters: int, tile: int = 256):
+    """Run `iters` MRS iterations in one call (§Perf: amortizes PJRT
+    dispatch + input transfer over `iters` solver steps while the Rust
+    driver keeps the stopping rule at chunk granularity).
+
+    Returns ``(x', r', hist)`` with ``hist[k] = ||r_k||^2`` before step k.
+    """
+
+    def body(carry, _):
+        x, r = carry
+        x2, r2, rr = mrs_step(lo, x, r, alpha, tile=tile)
+        return (x2, r2), rr[0]
+
+    (x2, r2), hist = jax.lax.scan(body, (x, r), None, length=iters)
+    return x2, r2, hist
+
+
+def make_mrs_chunk(n: int, beta: int, tile: int, iters: int):
+    """Jit-able ``(lo, x, r, alpha) -> (x', r', hist)`` chunk closure."""
+
+    def fn(lo, x, r, alpha):
+        return mrs_chunk(lo, x, r, alpha, iters=iters, tile=tile)
+
+    return fn, (
+        jax.ShapeDtypeStruct((beta, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+
+
+def make_mrs_solve(n: int, beta: int, tile: int, iters: int):
+    """Jit-able whole-solve ``(lo, b, alpha) -> (x, r, hist)`` closure."""
+
+    def fn(lo, b, alpha):
+        return mrs_solve(lo, b, alpha, iters=iters, tile=tile)
+
+    return fn, (
+        jax.ShapeDtypeStruct((beta, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )

@@ -1,0 +1,160 @@
+"""pytest: Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes (n, beta, tile) and value distributions; fixed
+seeds keep the suite deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.band_spmv import band_spmv
+from compile.kernels.fused_update import fused_update
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_band(rng, n, beta, dtype=np.float32, scale=1.0):
+    """Random DIA lower band with the trailing-pad invariant enforced."""
+    lo = (rng.standard_normal((beta, n)) * scale).astype(dtype)
+    for d in range(beta):
+        k = d + 1
+        if k <= n:
+            lo[d, n - k :] = 0.0  # S[j+k, j] needs j+k < n
+        else:
+            lo[d, :] = 0.0
+    return lo
+
+
+@pytest.mark.parametrize(
+    "n,beta,tile",
+    [
+        (128, 1, 32),
+        (128, 8, 32),
+        (128, 16, 128),
+        (256, 3, 64),
+        (512, 32, 64),
+        (1024, 16, 128),
+        (256, 64, 32),  # beta > tile
+        (64, 63, 64),  # beta ~ n
+    ],
+)
+def test_band_spmv_matches_ref(n, beta, tile):
+    rng = np.random.default_rng(1234 + n + beta)
+    lo = jnp.asarray(rand_band(rng, n, beta))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    alpha = jnp.asarray([0.7], dtype=jnp.float32)
+    got = band_spmv(lo, x, alpha, tile=tile)
+    want = ref.band_spmv_ref(lo, x, alpha)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,beta", [(64, 4), (96, 11), (128, 32)])
+def test_ref_matches_dense(n, beta):
+    """The oracle itself is checked against a dense materialization."""
+    rng = np.random.default_rng(77)
+    lo = jnp.asarray(rand_band(rng, n, beta))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    alpha = jnp.asarray([1.3], dtype=jnp.float32)
+    a = ref.dense_from_band(lo, alpha)
+    np.testing.assert_allclose(
+        ref.band_spmv_ref(lo, x, alpha), a @ x, rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("n,beta", [(64, 8), (128, 16)])
+def test_dense_is_shifted_skew_symmetric(n, beta):
+    rng = np.random.default_rng(5)
+    lo = jnp.asarray(rand_band(rng, n, beta))
+    alpha = jnp.asarray([2.5], dtype=jnp.float32)
+    a = ref.dense_from_band(lo, alpha)
+    s = a - alpha[0] * jnp.eye(n)
+    np.testing.assert_allclose(s, -s.T, atol=0.0)
+
+
+def test_band_spmv_zero_alpha_pure_skew():
+    """alpha=0: y = S x, so (x, y) = 0 (skew-symmetry invariant)."""
+    rng = np.random.default_rng(9)
+    n, beta = 256, 12
+    lo = jnp.asarray(rand_band(rng, n, beta))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    y = band_spmv(lo, x, jnp.zeros(1, jnp.float32), tile=64)
+    assert abs(float(jnp.dot(x, y))) < 1e-2 * float(jnp.linalg.norm(x) * jnp.linalg.norm(y) + 1)
+
+
+def test_band_spmv_identity_band_zero():
+    """Zero band: y = alpha x exactly."""
+    n, beta = 128, 7
+    lo = jnp.zeros((beta, n), jnp.float32)
+    x = jnp.arange(n, dtype=jnp.float32)
+    y = band_spmv(lo, x, jnp.asarray([3.0], jnp.float32), tile=32)
+    np.testing.assert_allclose(y, 3.0 * x, atol=0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nt=st.integers(1, 8),
+    tile_log=st.integers(4, 7),
+    beta=st.integers(1, 48),
+    alpha=st.floats(-4.0, 4.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_band_spmv_hypothesis(nt, tile_log, beta, alpha, seed):
+    """Shape/value sweep: n = nt * tile for tile in {16..128}."""
+    tile = 1 << tile_log
+    n = nt * tile
+    beta = min(beta, n - 1)
+    rng = np.random.default_rng(seed)
+    lo = jnp.asarray(rand_band(rng, n, beta, scale=2.0))
+    x = jnp.asarray((rng.standard_normal(n) * 3).astype(np.float32))
+    a = jnp.asarray([alpha], dtype=jnp.float32)
+    got = band_spmv(lo, x, a, tile=tile)
+    want = ref.band_spmv_ref(lo, x, a)
+    scale = float(jnp.max(jnp.abs(want))) + 1.0
+    np.testing.assert_allclose(got / scale, want / scale, rtol=1e-4, atol=1e-4)
+
+
+def test_band_spmv_tile_must_divide():
+    lo = jnp.zeros((4, 100), jnp.float32)
+    x = jnp.zeros(100, jnp.float32)
+    with pytest.raises(ValueError):
+        band_spmv(lo, x, jnp.ones(1, jnp.float32), tile=64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nt=st.integers(1, 6),
+    a=st.floats(-10.0, 10.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_update_hypothesis(nt, a, seed):
+    tile = 64
+    n = nt * tile
+    rng = np.random.default_rng(seed)
+    x, r, p = (jnp.asarray(rng.standard_normal(n).astype(np.float32)) for _ in range(3))
+    aa = jnp.asarray([a], dtype=jnp.float32)
+    gx, gr = fused_update(x, r, p, aa, tile=tile)
+    wx, wr = ref.fused_update_ref(x, r, p, aa)
+    np.testing.assert_allclose(gx, wx, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(gr, wr, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 5e-2)])
+def test_band_spmv_dtype_sweep(dtype, tol):
+    """dtype sweep: f32 (production) and bf16 (TPU-native) tolerance."""
+    rng = np.random.default_rng(21)
+    n, beta, tile = 256, 8, 64
+    lo = jnp.asarray(rand_band(rng, n, beta)).astype(dtype)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32)).astype(dtype)
+    alpha = jnp.asarray([1.5], dtype=dtype)
+    got = np.asarray(band_spmv(lo, x, alpha, tile=tile), dtype=np.float32)
+    want = np.asarray(
+        ref.band_spmv_ref(
+            lo.astype(jnp.float32), x.astype(jnp.float32), alpha.astype(jnp.float32)
+        )
+    )
+    scale = np.abs(want).max() + 1.0
+    np.testing.assert_allclose(got / scale, want / scale, atol=tol)

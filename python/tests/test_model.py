@@ -1,0 +1,73 @@
+"""pytest: L2 model — MRS iteration correctness and convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from tests.test_kernel import rand_band
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def setup_system(n=128, beta=8, alpha=2.0, seed=3):
+    rng = np.random.default_rng(seed)
+    lo = jnp.asarray(rand_band(rng, n, beta, scale=0.3))
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    a = jnp.asarray([alpha], dtype=jnp.float32)
+    return lo, b, a
+
+
+def test_mrs_step_matches_ref():
+    lo, b, alpha = setup_system()
+    x = jnp.zeros_like(b)
+    gx, gr, grr = model.mrs_step(lo, x, b, alpha, tile=32)
+    wx, wr, wrr = ref.mrs_step_ref(lo, x, b, alpha)
+    np.testing.assert_allclose(gx, wx, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gr, wr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(grr[0], wrr, rtol=1e-5)
+
+
+def test_mrs_residual_monotone():
+    """Minimal-residual property: ||r_k|| is non-increasing for alpha>0."""
+    lo, b, alpha = setup_system(alpha=1.5)
+    _, _, hist = model.mrs_solve(lo, b, alpha, iters=30, tile=32)
+    h = np.asarray(hist)
+    assert np.all(h[1:] <= h[:-1] * (1 + 1e-5))
+
+
+def test_mrs_solves_system():
+    """After enough iterations, A x ~= b (diagonally dominant shift)."""
+    lo, b, alpha = setup_system(n=128, beta=4, alpha=3.0)
+    x, r, hist = model.mrs_solve(lo, b, alpha, iters=200, tile=32)
+    a = ref.dense_from_band(lo, alpha)
+    res = np.linalg.norm(np.asarray(a @ x - b)) / np.linalg.norm(np.asarray(b))
+    assert res < 1e-3, f"relative residual {res}"
+    # the reported history matches the actual residual trajectory's start
+    np.testing.assert_allclose(float(hist[0]), float(jnp.dot(b, b)), rtol=1e-5)
+
+
+def test_mrs_residual_consistency():
+    """r returned by the solve equals b - A x recomputed from scratch."""
+    lo, b, alpha = setup_system(n=64, beta=6, alpha=2.0, seed=11)
+    x, r, _ = model.mrs_solve(lo, b, alpha, iters=20, tile=32)
+    a = ref.dense_from_band(lo, alpha)
+    np.testing.assert_allclose(r, b - a @ x, rtol=1e-3, atol=1e-4)
+
+
+def test_spmv_wrapper_default_tile():
+    lo, b, alpha = setup_system(n=512, beta=8)
+    got = model.spmv(lo, b, alpha)  # default tile=256 divides 512
+    want = ref.band_spmv_ref(lo, b, alpha)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("alpha", [0.5, 1.0, 4.0])
+def test_mrs_convergence_rate_improves_with_shift(alpha):
+    """Larger shift => better conditioned => residual after k iters smaller."""
+    lo, b, _ = setup_system(n=128, beta=4, seed=7)
+    a = jnp.asarray([alpha], dtype=jnp.float32)
+    _, _, hist = model.mrs_solve(lo, b, a, iters=25, tile=32)
+    assert float(hist[-1]) < float(hist[0])

@@ -1,0 +1,58 @@
+//! Bench: **§4.1 comparison (X1)** — PARS3 vs the graph-coloring
+//! conflict-free SSpMV [3]: modeled speedups at every rank count plus
+//! real single-core executor timings and coloring statistics.
+
+use pars3::coordinator::Config;
+use pars3::graph::coloring::color_rows;
+use pars3::kernel::coloring_spmv::ColoringPlan;
+use pars3::kernel::pars3::Pars3Plan;
+use pars3::mpisim::CostModel;
+use pars3::report::{self, md_table};
+use pars3::util::bencher::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let suite = report::prepared_suite(&cfg).expect("suite");
+    let mut b = Bencher::new("coloring_vs_pars3");
+
+    let biggest = suite.iter().max_by_key(|(_, p)| p.nnz_lower).unwrap();
+    let model = CostModel::calibrate(&biggest.1.sss, 5);
+
+    // coloring preprocessing cost + phase counts (the baseline's weakness)
+    let mut rows = Vec::new();
+    for (m, prep) in &suite {
+        let t = b.bench(&format!("color-rows/{}", m.name), 1, 3, || {
+            let c = color_rows(&prep.sss);
+            std::hint::black_box(c.num_colors);
+        });
+        let c = color_rows(&prep.sss);
+        rows.push(vec![
+            m.name.to_string(),
+            c.num_colors.to_string(),
+            format!("{:.3e}", t.min),
+            prep.rcm_bw.to_string(),
+        ]);
+    }
+    b.section(&format!(
+        "## Coloring statistics (phases = barriers per multiply)\n\n{}",
+        md_table(&["Matrix", "phases", "coloring time s", "RCM bw"], &rows)
+    ));
+
+    // real executor timings at p=4, single core (overhead comparison)
+    for (m, prep) in suite.iter().take(2) {
+        let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.11).sin()).collect();
+        let pars3_plan = Pars3Plan::new(prep.split.clone(), 4).unwrap();
+        b.bench(&format!("pars3-emulated-p4/{}", m.name), 2, 5, || {
+            let (y, _) = pars3_plan.execute_emulated(&x);
+            std::hint::black_box(y.len());
+        });
+        let color_plan = ColoringPlan::new(prep.sss.clone(), 4).unwrap();
+        b.bench(&format!("coloring-emulated-p4/{}", m.name), 2, 5, || {
+            let y = color_plan.execute_emulated(&x);
+            std::hint::black_box(y.len());
+        });
+    }
+
+    b.section(&report::coloring_compare(&suite, &cfg.ranks, &model));
+    b.finish();
+}

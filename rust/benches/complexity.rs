@@ -1,0 +1,44 @@
+//! Bench: **X2** — Θ(NNZ) complexity claims: serial kernel time per NNZ
+//! stays flat across problem sizes, and preprocessing (RCM + split +
+//! conflict analysis) is Θ(NNZ) too.
+
+use pars3::coordinator::{Config, Coordinator};
+use pars3::kernel::conflict::ConflictMap;
+use pars3::report::{self, md_table};
+use pars3::sparse::gen;
+use pars3::util::bencher::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let mut b = Bencher::new("complexity");
+    let coord = Coordinator::new(cfg.clone());
+
+    // preprocessing linearity
+    let mut rows = Vec::new();
+    for n in [1000usize, 2000, 4000, 8000] {
+        let coo = gen::small_test_matrix(n, cfg.seed, cfg.alpha);
+        let t_prep = b.bench(&format!("preprocess/n={n}"), 1, 3, || {
+            let p = coord.prepare("cx", &coo).unwrap();
+            std::hint::black_box(p.rcm_bw);
+        });
+        let prep = coord.prepare("cx", &coo).unwrap();
+        let t_conf = b.bench(&format!("conflict-analysis/n={n}"), 1, 3, || {
+            let cm = ConflictMap::analyze(&prep.split, 16);
+            std::hint::black_box(cm.total_conflicts());
+        });
+        rows.push(vec![
+            n.to_string(),
+            prep.nnz_lower.to_string(),
+            format!("{:.1}", t_prep.min / prep.nnz_lower as f64 * 1e9),
+            format!("{:.1}", t_conf.min / prep.nnz_lower as f64 * 1e9),
+        ]);
+    }
+    b.section(&format!(
+        "## Θ(NNZ) preprocessing (ns per nnz should stay ~flat)\n\n{}",
+        md_table(&["n", "nnz_lower", "prep ns/nnz", "conflict ns/nnz"], &rows)
+    ));
+
+    // kernel linearity (report::complexity_report regenerates as table)
+    b.section(&report::complexity_report(&cfg, &[500, 1000, 2000, 4000, 8000]).unwrap());
+    b.finish();
+}

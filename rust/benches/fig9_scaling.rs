@@ -1,0 +1,64 @@
+//! Bench: **Figure 9** (the headline) — strong-scaling speedups of
+//! PARS3 over serial Alg. 1 for P = 1..64 on the six analogues, via the
+//! calibrated cost replay, plus per-plan preprocessing timings.
+
+use pars3::coordinator::Config;
+use pars3::kernel::pars3::Pars3Plan;
+use pars3::mpisim::CostModel;
+use pars3::report;
+use pars3::util::bencher::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let suite = report::prepared_suite(&cfg).expect("suite");
+    let mut b = Bencher::new("fig9_scaling");
+
+    let biggest = suite.iter().max_by_key(|(_, p)| p.nnz_lower).unwrap();
+    let model = CostModel::calibrate(&biggest.1.sss, 5);
+    b.section(&format!(
+        "calibrated: t_nnz={:.3}ns t_row={:.3}ns alpha={:.2}us beta={:.3}ns/B\n",
+        model.t_nnz * 1e9,
+        model.t_row * 1e9,
+        model.alpha * 1e6,
+        model.beta * 1e9
+    ));
+
+    // plan construction cost (Θ(NNZ) preprocessing at each P)
+    for (m, prep) in &suite {
+        b.bench(&format!("plan-p64/{}", m.name), 1, 3, || {
+            let plan = Pars3Plan::new(prep.split.clone(), 64.min(prep.n)).unwrap();
+            std::hint::black_box(plan.ranks.len());
+        });
+    }
+
+    // emulated kernel execution (the per-iteration hot path, 1 core)
+    for (m, prep) in &suite {
+        let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.29).cos()).collect();
+        let plan = Pars3Plan::new(prep.split.clone(), 8.min(prep.n)).unwrap();
+        b.bench(&format!("pars3-emulated-p8/{}", m.name), 2, 5, || {
+            let (y, _) = plan.execute_emulated(&x);
+            std::hint::black_box(y.len());
+        });
+    }
+
+    let f = report::fig9(&suite, &cfg.ranks, &model);
+    b.section("### calibrated to THIS box (1-core-era compute rates)\n");
+    b.section(&report::fig9_report(&f));
+
+    // secondary series: the paper's platform profile (slower per-core
+    // compute => relatively cheaper communication, the paper's regime)
+    let fo = report::fig9(&suite, &cfg.ranks, &CostModel::opteron());
+    b.section("### Opteron platform profile (paper's testbed class)\n");
+    b.section(&report::fig9_report(&fo));
+
+    // paper-shape checks, printed for EXPERIMENTS.md
+    let series = |n: &str| &fo.series.iter().find(|(m, _)| m == n).unwrap().1;
+    let af = series("af_5_k101_like");
+    let last = *af.last().unwrap();
+    b.section(&format!(
+        "shape check (opteron profile): af_5_k101_like at P=64: {last:.1}x \
+         (paper: ~19x); monotone growth: {}\n",
+        af.windows(2).all(|w| w[1] >= w[0] * 0.95)
+    ));
+    b.finish();
+}

@@ -1,0 +1,79 @@
+//! Bench: **Fig. 3 / Alg. 1** — the serial SSS kernel baseline, with the
+//! plain-CSR kernel and the split3 serial path for context (memory-bound
+//! roofline comparison; SSS touches half the matrix bytes of CSR).
+
+use pars3::coordinator::Config;
+use pars3::kernel::csr_spmv::csr_spmv;
+use pars3::kernel::serial_sss::sss_spmv;
+use pars3::kernel::{Spmv, Split3};
+use pars3::report::{self, md_table};
+use pars3::sparse::convert;
+use pars3::util::bencher::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let suite = report::prepared_suite(&cfg).expect("suite");
+    let mut b = Bencher::new("serial_baseline");
+    let mut rows = Vec::new();
+
+    for (m, prep) in &suite {
+        let n = prep.n;
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin()).collect();
+        let mut y = vec![0.0; n];
+
+        let t_sss = b.bench(&format!("sss/{}", m.name), 2, 5, || {
+            sss_spmv(&prep.sss, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+
+        let csr = convert::sss_to_csr(&prep.sss);
+        let t_csr = b.bench(&format!("csr/{}", m.name), 2, 5, || {
+            csr_spmv(&csr, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+
+        let split = Split3::with_outer_bw(&prep.sss, cfg.outer_bw).unwrap();
+        let t_split = b.bench(&format!("split3-serial/{}", m.name), 2, 5, || {
+            split.spmv_serial(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+
+        // LAPACK-style dgbmv baseline (§2): dense-band storage trade-off.
+        // Skip the widest analogues — their (2*bw+1)*n dense band array
+        // would not be representative (waste ratio ~1).
+        if prep.rcm_bw < 2_000 {
+            let dg = pars3::kernel::dgbmv::BandedDgbmv::from_sss(&prep.sss).unwrap();
+            let t_dg = b.bench(&format!("dgbmv/{}", m.name), 1, 3, || {
+                dg.spmv(&x, &mut y);
+                std::hint::black_box(&y);
+            });
+            b.section(&format!(
+                "dgbmv {}: waste ratio {:.3}, {:.2}x vs SSS\n",
+                m.name,
+                dg.waste_ratio(),
+                t_dg.min / t_sss.min
+            ));
+        }
+
+        let k = pars3::kernel::serial_sss::SerialSss::new(prep.sss.clone());
+        let th = pars3::perf::throughput(t_sss, k.flops(), k.bytes());
+        rows.push(vec![
+            m.name.to_string(),
+            format!("{:.3e}", t_sss.min),
+            format!("{:.3e}", t_csr.min),
+            format!("{:.3e}", t_split.min),
+            format!("{:.2}", t_csr.min / t_sss.min),
+            format!("{:.2}", th.gflops),
+            format!("{:.2}", th.gbytes),
+        ]);
+    }
+
+    b.section(&format!(
+        "## Serial kernels (Alg. 1 vs CSR vs split3-serial)\n\n{}",
+        md_table(
+            &["Matrix", "SSS s", "CSR s", "split3 s", "CSR/SSS", "SSS GFLOP/s", "SSS GB/s"],
+            &rows
+        )
+    ));
+    b.finish();
+}

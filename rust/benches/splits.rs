@@ -1,0 +1,73 @@
+//! Bench: **Figs. 4/6/7/8** — 3-way split structure: split sizes and
+//! densities over an `outer_bw` sweep, and the serial split3 kernel's
+//! sensitivity to the boundary (the paper's user bandwidth parameter).
+
+use pars3::coordinator::Config;
+use pars3::kernel::Split3;
+use pars3::report::{self, md_table};
+use pars3::util::bencher::Bencher;
+
+fn main() {
+    let cfg = Config::default();
+    let suite = report::prepared_suite(&cfg).expect("suite");
+    let mut b = Bencher::new("splits");
+
+    // split construction cost + execution across the outer_bw sweep
+    let (m, prep) = suite.iter().find(|(m, _)| m.name == "audikw_1_like").unwrap();
+    let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.19).cos()).collect();
+    let mut rows = Vec::new();
+    for outer_bw in [1usize, 3, 8, 16, 64] {
+        let split = Split3::with_outer_bw(&prep.sss, outer_bw).unwrap();
+        let t_build = b.bench(&format!("build/outer_bw={outer_bw}"), 1, 3, || {
+            let s = Split3::with_outer_bw(&prep.sss, outer_bw).unwrap();
+            std::hint::black_box(s.nnz_outer());
+        });
+        let mut y = vec![0.0; prep.n];
+        let t_run = b.bench(&format!("spmv/outer_bw={outer_bw}"), 2, 5, || {
+            split.spmv_serial(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+        rows.push(vec![
+            outer_bw.to_string(),
+            split.nnz_middle().to_string(),
+            split.nnz_outer().to_string(),
+            format!("{:.3e}", t_build.min),
+            format!("{:.3e}", t_run.min),
+        ]);
+    }
+    b.section(&format!(
+        "## outer_bw sweep on {} (n={})\n\n{}",
+        m.name,
+        prep.n,
+        md_table(&["outer_bw", "middle nnz", "outer nnz", "build s", "spmv s"], &rows)
+    ));
+
+    // ablation (paper §3.1.2 discussion): equal-rows vs equal-NNZ blocks
+    use pars3::kernel::balance::{analyze, RowPartition};
+    let mut rows = Vec::new();
+    for (m, prep) in &suite {
+        for p_ranks in [8usize, 32] {
+            let br = analyze(&prep.split, &RowPartition::by_rows(prep.n, p_ranks));
+            let bn = analyze(&prep.split, &RowPartition::by_nnz(&prep.split, p_ranks));
+            rows.push(vec![
+                m.name.to_string(),
+                p_ranks.to_string(),
+                format!("{:.3}", br.nnz_imbalance),
+                format!("{:.3}", bn.nnz_imbalance),
+                br.total_conflicts.to_string(),
+                bn.total_conflicts.to_string(),
+            ]);
+        }
+    }
+    b.section(&format!(
+        "## Ablation: equal-rows vs equal-NNZ distribution (imbalance = max/mean nnz)\n\n{}",
+        md_table(
+            &["Matrix", "P", "imb rows", "imb nnz", "conflicts rows", "conflicts nnz"],
+            &rows
+        )
+    ));
+
+    b.section(&report::splits_report(&suite, &[1, 3, 8, 16]));
+    b.section(&report::conflict_report(&suite, &cfg.ranks));
+    b.finish();
+}

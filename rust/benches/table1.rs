@@ -1,0 +1,28 @@
+//! Bench: **Table 1** — regenerate the benchmark-matrix characteristics
+//! table and time the Θ(NNZ) preprocessing (RCM + split) per matrix.
+
+use pars3::coordinator::{Config, Coordinator};
+use pars3::report;
+use pars3::sparse::{gen, skew};
+use pars3::util::bencher::Bencher;
+use pars3::util::SmallRng;
+
+fn main() {
+    let cfg = Config::default();
+    let mut b = Bencher::new("table1");
+
+    // time preprocessing per matrix (the amortized one-time cost)
+    let coord = Coordinator::new(cfg.clone());
+    for m in gen::paper_suite(cfg.scale) {
+        let mut rng = SmallRng::seed_from_u64(cfg.seed ^ m.n as u64);
+        let coo = skew::coo_from_pattern(m.n, &m.lower_edges, cfg.alpha, &mut rng);
+        b.bench(&format!("preprocess/{}", m.name), 1, 3, || {
+            let prep = coord.prepare(m.name, &coo).unwrap();
+            std::hint::black_box(prep.rcm_bw);
+        });
+    }
+
+    let suite = report::prepared_suite(&cfg).expect("suite");
+    b.section(&report::table1(&suite));
+    b.finish();
+}

@@ -1,0 +1,146 @@
+//! Coordinator configuration.
+//!
+//! Parsed from a minimal `key = value` TOML subset (the offline
+//! environment has no `toml`/`serde`; see DESIGN.md §2). Unknown keys
+//! are rejected so typos fail loudly. Example:
+//!
+//! ```text
+//! # pars3.toml
+//! scale = 0.25
+//! alpha = 2.0
+//! outer_bw = 3
+//! ranks = [1, 2, 4, 8, 16, 32, 64]
+//! artifacts_dir = "artifacts"
+//! threaded = false
+//! seed = 42
+//! ```
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+/// Runtime configuration for the coordinator and benches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Synthetic-suite scale (1.0 = ~1/64 of the paper's matrices).
+    pub scale: f64,
+    /// Shift `alpha` of the generated systems.
+    pub alpha: f64,
+    /// Outer-split bandwidth (paper default 3).
+    pub outer_bw: usize,
+    /// Rank counts swept by scaling experiments.
+    pub ranks: Vec<usize>,
+    /// Directory containing AOT artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Use real threads (true) or the deterministic emulated executor.
+    pub threaded: bool,
+    /// Generator seed.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            scale: 1.0,
+            alpha: 2.0,
+            outer_bw: 3,
+            ranks: vec![1, 2, 4, 8, 16, 32, 64],
+            artifacts_dir: PathBuf::from("artifacts"),
+            threaded: false,
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a config file; missing file = defaults.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Ok(Self::default());
+        }
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse the TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Self::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "scale" => cfg.scale = value.parse().context("scale")?,
+                "alpha" => cfg.alpha = value.parse().context("alpha")?,
+                "outer_bw" => cfg.outer_bw = value.parse().context("outer_bw")?,
+                "threaded" => cfg.threaded = value.parse().context("threaded")?,
+                "seed" => cfg.seed = value.parse().context("seed")?,
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = PathBuf::from(value.trim_matches('"'));
+                }
+                "ranks" => {
+                    let inner = value
+                        .trim()
+                        .strip_prefix('[')
+                        .and_then(|v| v.strip_suffix(']'))
+                        .with_context(|| format!("ranks must be a [list], got '{value}'"))?;
+                    cfg.ranks = inner
+                        .split(',')
+                        .map(|t| t.trim().parse::<usize>().context("ranks entry"))
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                _ => bail!("line {}: unknown config key '{key}'", lineno + 1),
+            }
+        }
+        if cfg.ranks.is_empty() || cfg.ranks.contains(&0) {
+            bail!("ranks must be non-empty and positive");
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.scale > 0.0 && c.outer_bw >= 1 && !c.ranks.is_empty());
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let c = Config::parse(
+            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nseed = 7\n",
+        )
+        .unwrap();
+        assert_eq!(c.scale, 0.5);
+        assert_eq!(c.alpha, 3.0);
+        assert_eq!(c.outer_bw, 5);
+        assert_eq!(c.ranks, vec![1, 2, 4]);
+        assert_eq!(c.artifacts_dir, PathBuf::from("art"));
+        assert!(c.threaded);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_ranks() {
+        assert!(Config::parse("foo = 1").is_err());
+        assert!(Config::parse("ranks = [0]").is_err());
+        assert!(Config::parse("ranks = []").is_err());
+        assert!(Config::parse("scale 0.5").is_err());
+    }
+
+    #[test]
+    fn missing_file_gives_defaults() {
+        let c = Config::load("/nonexistent/pars3.toml").unwrap();
+        assert_eq!(c, Config::default());
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator: the end-to-end pipeline
+//! (ingest → RCM reorder → 3-way split → conflict analysis → distribute
+//! → repeated SpMV / MRS solve), plus config and a request-service loop.
+//!
+//! This is the paper's system glued together: preprocessing is done once
+//! per matrix ([`Coordinator::prepare`]); the returned [`Prepared`]
+//! handle then serves arbitrarily many multiplies/solves — the
+//! amortization argument of §4 ("this overhead typically can be
+//! amortized in many repeated runs with the same matrix").
+
+pub mod config;
+pub mod pipeline;
+pub mod service;
+
+pub use config::Config;
+pub use pipeline::{Backend, Coordinator, Prepared};
+pub use service::{Request, Response, Service};

@@ -1,0 +1,197 @@
+//! Request-service loop: the long-running leader process.
+//!
+//! Models the deployment the paper targets — an iterative solver (or
+//! several) repeatedly hitting the same preprocessed matrix. A worker
+//! thread owns the [`Coordinator`]; clients submit requests over a
+//! channel and receive results over a per-request reply channel. (The
+//! offline environment has no tokio; a std::thread + mpsc loop provides
+//! the same single-owner async boundary.)
+
+use crate::coordinator::{Backend, Config, Coordinator, Prepared};
+use crate::solver::mrs::{MrsOptions, MrsResult};
+use crate::sparse::Coo;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+/// A request to the service.
+pub enum Request {
+    /// Preprocess and register a matrix under a key.
+    Prepare {
+        /// Registration key.
+        key: String,
+        /// Full COO matrix (shifted skew-symmetric).
+        coo: Coo,
+    },
+    /// Multiply against a registered matrix.
+    Spmv {
+        /// Matrix key.
+        key: String,
+        /// Input vector (RCM order).
+        x: Vec<f64>,
+        /// Backend to run.
+        backend: Backend,
+    },
+    /// MRS-solve against a registered matrix.
+    Solve {
+        /// Matrix key.
+        key: String,
+        /// Right-hand side.
+        b: Vec<f64>,
+        /// Solver options.
+        opts: MrsOptions,
+        /// Backend to run.
+        backend: Backend,
+    },
+    /// Stop the service loop.
+    Shutdown,
+}
+
+/// Service responses.
+pub enum Response {
+    /// Matrix registered; reports (n, nnz_lower, rcm_bw).
+    Prepared {
+        /// Dimension.
+        n: usize,
+        /// Stored lower NNZ.
+        nnz: usize,
+        /// Post-RCM bandwidth.
+        rcm_bw: usize,
+    },
+    /// SpMV result.
+    Spmv(Vec<f64>),
+    /// Solve result.
+    Solve(MrsResult),
+    /// Request failed.
+    Error(String),
+}
+
+type Envelope = (Request, Sender<Response>);
+
+/// Handle to a running service.
+pub struct Service {
+    tx: Sender<Envelope>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Spawn the worker thread.
+    pub fn start(cfg: Config) -> Self {
+        let (tx, rx) = channel::<Envelope>();
+        let worker = std::thread::spawn(move || {
+            let mut coord = Coordinator::new(cfg);
+            let mut registry: HashMap<String, Prepared> = HashMap::new();
+            while let Ok((req, reply)) = rx.recv() {
+                let resp = match req {
+                    Request::Shutdown => break,
+                    Request::Prepare { key, coo } => match coord.prepare(&key, &coo) {
+                        Ok(p) => {
+                            let r = Response::Prepared {
+                                n: p.n,
+                                nnz: p.nnz_lower,
+                                rcm_bw: p.rcm_bw,
+                            };
+                            registry.insert(key, p);
+                            r
+                        }
+                        Err(e) => Response::Error(format!("{e:#}")),
+                    },
+                    Request::Spmv { key, x, backend } => match registry.get(&key) {
+                        None => Response::Error(format!("unknown matrix '{key}'")),
+                        Some(p) => match coord.spmv(p, &x, backend) {
+                            Ok(y) => Response::Spmv(y),
+                            Err(e) => Response::Error(format!("{e:#}")),
+                        },
+                    },
+                    Request::Solve { key, b, opts, backend } => match registry.get(&key) {
+                        None => Response::Error(format!("unknown matrix '{key}'")),
+                        Some(p) => match coord.solve(p, &b, &opts, backend) {
+                            Ok(r) => Response::Solve(r),
+                            Err(e) => Response::Error(format!("{e:#}")),
+                        },
+                    },
+                };
+                let _ = reply.send(resp);
+            }
+        });
+        Self { tx, worker: Some(worker) }
+    }
+
+    /// Submit a request and block for the response.
+    pub fn call(&self, req: Request) -> Response {
+        let (rtx, rrx) = channel();
+        if self.tx.send((req, rtx)).is_err() {
+            return Response::Error("service stopped".into());
+        }
+        rrx.recv().unwrap_or(Response::Error("service dropped reply".into()))
+    }
+
+    /// Stop the worker.
+    pub fn shutdown(mut self) {
+        let (rtx, _rrx) = channel();
+        let _ = self.tx.send((Request::Shutdown, rtx));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let (rtx, _rrx) = channel();
+        let _ = self.tx.send((Request::Shutdown, rtx));
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    #[test]
+    fn prepare_then_spmv_and_solve() {
+        let svc = Service::start(Config::default());
+        let coo = gen::small_test_matrix(120, 21, 2.0);
+        let Response::Prepared { n, .. } =
+            svc.call(Request::Prepare { key: "m".into(), coo: coo.clone() })
+        else {
+            panic!("prepare failed")
+        };
+        assert_eq!(n, 120);
+
+        let x: Vec<f64> = (0..120).map(|i| i as f64 * 0.01).collect();
+        let Response::Spmv(y) = svc.call(Request::Spmv {
+            key: "m".into(),
+            x: x.clone(),
+            backend: Backend::Pars3 { p: 4 },
+        }) else {
+            panic!("spmv failed")
+        };
+        assert_eq!(y.len(), 120);
+
+        let Response::Solve(res) = svc.call(Request::Solve {
+            key: "m".into(),
+            b: x,
+            opts: MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 },
+            backend: Backend::Serial,
+        }) else {
+            panic!("solve failed")
+        };
+        assert!(res.converged);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_key_errors() {
+        let svc = Service::start(Config::default());
+        let resp = svc.call(Request::Spmv {
+            key: "nope".into(),
+            x: vec![],
+            backend: Backend::Serial,
+        });
+        assert!(matches!(resp, Response::Error(_)));
+    }
+}

@@ -1,0 +1,129 @@
+//! Symmetric adjacency structure (the pattern graph of a sparse matrix).
+
+use crate::sparse::{Coo, Sss};
+
+/// Undirected graph in CSR adjacency form.
+///
+/// Built from a matrix pattern: vertex per row, edge `{i, j}` per
+/// off-diagonal nonzero (symmetrized). Neighbour lists are sorted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Adjacency {
+    /// Number of vertices.
+    pub n: usize,
+    /// Offsets into `neighbors`, length `n+1`.
+    pub offsets: Vec<usize>,
+    /// Concatenated sorted neighbour lists.
+    pub neighbors: Vec<u32>,
+}
+
+impl Adjacency {
+    /// Build from lower-triangle edges `(i, j)`, `i > j` (deduped or not).
+    pub fn from_lower_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut deg = vec![0usize; n + 1];
+        for &(i, j) in edges {
+            deg[i as usize + 1] += 1;
+            deg[j as usize + 1] += 1;
+        }
+        for v in 0..n {
+            deg[v + 1] += deg[v];
+        }
+        let offsets = deg.clone();
+        let mut neighbors = vec![0u32; edges.len() * 2];
+        let mut next = deg;
+        for &(i, j) in edges {
+            neighbors[next[i as usize]] = j;
+            next[i as usize] += 1;
+            neighbors[next[j as usize]] = i;
+            next[j as usize] += 1;
+        }
+        let mut g = Self { n, offsets, neighbors };
+        g.sort_and_dedup();
+        g
+    }
+
+    /// Build from a full COO matrix's off-diagonal pattern.
+    pub fn from_coo(coo: &Coo) -> Self {
+        let edges: Vec<(u32, u32)> = coo
+            .rows
+            .iter()
+            .zip(&coo.cols)
+            .filter(|(&i, &j)| i > j)
+            .map(|(&i, &j)| (i, j))
+            .collect();
+        Self::from_lower_edges(coo.n, &edges)
+    }
+
+    /// Build from an SSS matrix (its stored lower triangle *is* the edge list).
+    pub fn from_sss(s: &Sss) -> Self {
+        let mut edges = Vec::with_capacity(s.nnz_lower());
+        for i in 0..s.n {
+            for (j, _) in s.row(i) {
+                edges.push((i as u32, j));
+            }
+        }
+        Self::from_lower_edges(s.n, &edges)
+    }
+
+    /// Neighbours of `v` (sorted).
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Number of (undirected) edges.
+    pub fn num_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    fn sort_and_dedup(&mut self) {
+        let mut new_neighbors = Vec::with_capacity(self.neighbors.len());
+        let mut new_offsets = vec![0usize; self.n + 1];
+        for v in 0..self.n {
+            let mut lst: Vec<u32> = self.neighbors(v).to_vec();
+            lst.sort_unstable();
+            lst.dedup();
+            new_neighbors.extend_from_slice(&lst);
+            new_offsets[v + 1] = new_neighbors.len();
+        }
+        self.offsets = new_offsets;
+        self.neighbors = new_neighbors;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_graph() {
+        let g = Adjacency::from_lower_edges(4, &[(1, 0), (2, 1), (3, 2)]);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn duplicate_edges_merged() {
+        let g = Adjacency::from_lower_edges(3, &[(1, 0), (1, 0), (2, 0)]);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn from_coo_ignores_diagonal_and_upper_dups() {
+        let mut c = Coo::new(3);
+        c.push(0, 0, 1.0);
+        c.push(2, 1, 5.0);
+        c.push(1, 2, -5.0);
+        let g = Adjacency::from_coo(&c);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(2), &[1]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Breadth-first level structures (the engine under RCM and the
+//! pseudo-peripheral finder).
+
+use crate::graph::Adjacency;
+
+/// Rooted level structure: vertices grouped by BFS distance from a root.
+#[derive(Debug, Clone)]
+pub struct LevelStructure {
+    /// `levels[d]` = vertices at distance `d` (only the root's component).
+    pub levels: Vec<Vec<u32>>,
+    /// Distance per vertex; `u32::MAX` for unreachable vertices.
+    pub dist: Vec<u32>,
+}
+
+impl LevelStructure {
+    /// Eccentricity of the root within its component.
+    pub fn height(&self) -> usize {
+        self.levels.len().saturating_sub(1)
+    }
+
+    /// Maximum level width (a lower bound on achievable bandwidth).
+    pub fn width(&self) -> usize {
+        self.levels.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+/// BFS from `root`, returning the level structure of its component.
+pub fn level_structure(g: &Adjacency, root: u32) -> LevelStructure {
+    let mut dist = vec![u32::MAX; g.n];
+    let mut levels: Vec<Vec<u32>> = vec![vec![root]];
+    dist[root as usize] = 0;
+    let mut frontier = vec![root];
+    let mut d = 0u32;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &w in g.neighbors(v as usize) {
+                if dist[w as usize] == u32::MAX {
+                    dist[w as usize] = d + 1;
+                    next.push(w);
+                }
+            }
+        }
+        d += 1;
+        if next.is_empty() {
+            break;
+        }
+        levels.push(next.clone());
+        frontier = next;
+    }
+    LevelStructure { levels, dist }
+}
+
+/// Connected components; returns `comp[v]` and component count.
+pub fn components(g: &Adjacency) -> (Vec<u32>, usize) {
+    let mut comp = vec![u32::MAX; g.n];
+    let mut c = 0u32;
+    for s in 0..g.n {
+        if comp[s] != u32::MAX {
+            continue;
+        }
+        comp[s] = c;
+        let mut stack = vec![s as u32];
+        while let Some(v) = stack.pop() {
+            for &w in g.neighbors(v as usize) {
+                if comp[w as usize] == u32::MAX {
+                    comp[w as usize] = c;
+                    stack.push(w);
+                }
+            }
+        }
+        c += 1;
+    }
+    (comp, c as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path5() -> Adjacency {
+        Adjacency::from_lower_edges(5, &[(1, 0), (2, 1), (3, 2), (4, 3)])
+    }
+
+    #[test]
+    fn levels_of_path() {
+        let ls = level_structure(&path5(), 0);
+        assert_eq!(ls.height(), 4);
+        assert_eq!(ls.width(), 1);
+        assert_eq!(ls.dist, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn levels_from_center() {
+        let ls = level_structure(&path5(), 2);
+        assert_eq!(ls.height(), 2);
+        assert_eq!(ls.width(), 2);
+    }
+
+    #[test]
+    fn components_of_disconnected() {
+        let g = Adjacency::from_lower_edges(5, &[(1, 0), (3, 2)]);
+        let (comp, c) = components(&g);
+        assert_eq!(c, 3); // {0,1}, {2,3}, {4}
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[2], comp[3]);
+        assert_ne!(comp[0], comp[2]);
+        assert_ne!(comp[4], comp[0]);
+    }
+
+    #[test]
+    fn unreachable_marked() {
+        let g = Adjacency::from_lower_edges(3, &[(1, 0)]);
+        let ls = level_structure(&g, 0);
+        assert_eq!(ls.dist[2], u32::MAX);
+    }
+}

@@ -1,0 +1,155 @@
+//! Greedy row coloring for the conflict-free SSpMV baseline
+//! (Elafrou, Goumas & Koziris, SC'19 — reference [3] of the paper).
+//!
+//! In symmetric/skew SSS SpMV, processing row `i` writes `y[i]` *and*
+//! `y[j]` for every stored `(i, j)`. Two rows conflict if their write
+//! sets intersect — equivalently, rows sharing a column (or one row's
+//! index appearing as the other's column) race on `y`. Coloring the
+//! conflict graph yields independent row sets ("phases") that can run in
+//! parallel with a barrier between phases; more phases = more
+//! synchronization = the scaling penalty the paper beats.
+
+use crate::sparse::Sss;
+
+/// Result of a row coloring.
+#[derive(Debug, Clone)]
+pub struct RowColoring {
+    /// Color per row.
+    pub color: Vec<u32>,
+    /// Number of colors (phases).
+    pub num_colors: usize,
+    /// Rows grouped by color.
+    pub classes: Vec<Vec<u32>>,
+}
+
+/// Greedy first-fit coloring of the SSS row-conflict graph.
+///
+/// Write set of row `i`: `{i} ∪ cols(i)`. Rows `a != b` conflict iff
+/// `W(a) ∩ W(b) != ∅`. We track, per output index `y[k]`, the colors of
+/// rows already writing `k`; a row takes the smallest color not used by
+/// any writer of any of its write-set indices. Complexity
+/// O(Σ_i |W(i)| * avg_writers) — fine for band matrices where each
+/// column is written by at most `bandwidth` rows.
+pub fn color_rows(s: &Sss) -> RowColoring {
+    let n = s.n;
+    // writers[k] = list of (row, color) already writing y[k]
+    let mut writers: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n];
+    let mut color = vec![u32::MAX; n];
+    let mut forbidden: Vec<bool> = Vec::new();
+    let mut num_colors = 0usize;
+
+    for i in 0..n {
+        forbidden.clear();
+        forbidden.resize(num_colors + 1, false);
+        let mark = |c: u32, forbidden: &mut Vec<bool>| {
+            let c = c as usize;
+            if c < forbidden.len() {
+                forbidden[c] = true;
+            }
+        };
+        for &(_, c) in &writers[i] {
+            mark(c, &mut forbidden);
+        }
+        for (j, _) in s.row(i) {
+            for &(_, c) in &writers[j as usize] {
+                mark(c, &mut forbidden);
+            }
+        }
+        let c = forbidden.iter().position(|&f| !f).unwrap() as u32;
+        color[i] = c;
+        num_colors = num_colors.max(c as usize + 1);
+        writers[i].push((i as u32, c));
+        for (j, _) in s.row(i) {
+            writers[j as usize].push((i as u32, c));
+        }
+    }
+
+    let mut classes = vec![Vec::new(); num_colors];
+    for (i, &c) in color.iter().enumerate() {
+        classes[c as usize].push(i as u32);
+    }
+    RowColoring { color, num_colors, classes }
+}
+
+/// Verify the coloring: no two same-colored rows share a write index.
+pub fn verify_coloring(s: &Sss, coloring: &RowColoring) -> bool {
+    let n = s.n;
+    // per color, per output index: written?
+    for class in &coloring.classes {
+        let mut written = vec![false; n];
+        for &i in class {
+            let i = i as usize;
+            if written[i] {
+                return false;
+            }
+            written[i] = true;
+            for (j, _) in s.row(i) {
+                if written[j as usize] {
+                    return false;
+                }
+                written[j as usize] = true;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{convert, gen, Symmetry};
+
+    fn band_matrix(n: usize, seed: u64) -> Sss {
+        let coo = gen::small_test_matrix(n, seed, 1.0);
+        convert::coo_to_sss(&coo, Symmetry::Skew).unwrap()
+    }
+
+    #[test]
+    fn coloring_is_valid() {
+        let s = band_matrix(60, 2);
+        let c = color_rows(&s);
+        assert!(verify_coloring(&s, &c));
+        assert_eq!(c.classes.iter().map(Vec::len).sum::<usize>(), 60);
+    }
+
+    #[test]
+    fn diagonal_matrix_needs_one_color() {
+        let mut coo = crate::sparse::Coo::new(5);
+        for i in 0..5 {
+            coo.push(i, i, 2.0);
+        }
+        let s = convert::coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        let c = color_rows(&s);
+        assert_eq!(c.num_colors, 1);
+    }
+
+    #[test]
+    fn tridiagonal_needs_at_least_two_colors() {
+        let mut coo = crate::sparse::Coo::new(6);
+        for i in 0..6u32 {
+            coo.push(i, i, 1.0);
+        }
+        for i in 1..6u32 {
+            coo.push(i, i - 1, 1.0);
+            coo.push(i - 1, i, -1.0);
+        }
+        let s = convert::coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        let c = color_rows(&s);
+        assert!(c.num_colors >= 2);
+        assert!(verify_coloring(&s, &c));
+    }
+
+    #[test]
+    fn denser_matrix_needs_more_colors() {
+        let sparse = band_matrix(80, 3);
+        let mut rng = crate::util::SmallRng::seed_from_u64(9);
+        let mut edges = gen::random_banded_pattern(80, 10, 0.9, &mut rng);
+        gen::add_long_range(&mut edges, 80, 0.2, &mut rng);
+        let dense_coo = crate::sparse::skew::coo_from_pattern(80, &edges, 1.0, &mut rng);
+        let dense = convert::coo_to_sss(&dense_coo, Symmetry::Skew).unwrap();
+        let cs = color_rows(&sparse);
+        let cd = color_rows(&dense);
+        assert!(verify_coloring(&dense, &cd));
+        assert!(cd.num_colors >= cs.num_colors);
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph substrate: adjacency structure, BFS level sets, pseudo-peripheral
+//! vertex finding, Reverse Cuthill-McKee reordering, and greedy coloring
+//! (the building block of the Elafrou et al. baseline).
+//!
+//! The paper uses MATLAB's `symrcm`; `rcm` here is the from-scratch
+//! equivalent (George-Liu pseudo-peripheral start + CM + reversal).
+
+pub mod adj;
+pub mod bfs;
+pub mod coloring;
+pub mod peripheral;
+pub mod rcm;
+
+pub use adj::Adjacency;
+pub use rcm::rcm;

@@ -1,0 +1,189 @@
+//! Load-balance ablation: equal-rows vs equal-NNZ distribution.
+//!
+//! Paper §3.1.2: "Alternatively, one might consider distributing equal
+//! amount of non-zero elements to processes with unequal amount of
+//! rows, however, its benefits may not be as trivial to derive." This
+//! module makes that discussion quantitative: it builds both partitions,
+//! measures per-rank work imbalance and conflict counts, and lets the
+//! cost model compare makespans (`benches/splits.rs` ablation).
+
+use crate::kernel::split3::Split3;
+
+/// A contiguous row partition over `p` ranks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowPartition {
+    /// `starts[r]..starts[r+1]` = rows of rank `r`; length `p + 1`.
+    pub starts: Vec<usize>,
+}
+
+impl RowPartition {
+    /// Equal-rows blocks (the paper's choice).
+    pub fn by_rows(n: usize, p: usize) -> Self {
+        let d = crate::kernel::conflict::BlockDist::new(n, p);
+        let mut starts: Vec<usize> = (0..p).map(|r| d.range(r).0).collect();
+        starts.push(n);
+        Self { starts }
+    }
+
+    /// Equal-NNZ blocks: greedy prefix cut at `total/p` stored entries
+    /// per rank (rows stay contiguous).
+    pub fn by_nnz(split: &Split3, p: usize) -> Self {
+        let n = split.n;
+        // per-row stored entries (middle + outer)
+        let mut row_nnz = vec![0usize; n];
+        for i in 0..n {
+            row_nnz[i] = split.middle.row_ptr[i + 1] - split.middle.row_ptr[i];
+        }
+        for e in &split.outer {
+            row_nnz[e.row as usize] += 1;
+        }
+        let total: usize = row_nnz.iter().sum();
+        let target = (total as f64 / p as f64).max(1.0);
+        let mut starts = Vec::with_capacity(p + 1);
+        starts.push(0usize);
+        let mut acc = 0usize;
+        let mut next_cut = target;
+        for (i, &c) in row_nnz.iter().enumerate() {
+            acc += c;
+            if acc as f64 >= next_cut && starts.len() < p {
+                starts.push(i + 1);
+                next_cut += target;
+            }
+        }
+        while starts.len() < p {
+            // degenerate: fewer cuts than ranks; pad with empty ranks
+            starts.push(n);
+        }
+        starts.push(n);
+        Self { starts }
+    }
+
+    /// Rank count.
+    pub fn p(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    /// Row range of `rank`.
+    pub fn range(&self, rank: usize) -> (usize, usize) {
+        (self.starts[rank], self.starts[rank + 1])
+    }
+
+    /// Owner of `row` (binary search).
+    pub fn rank_of(&self, row: usize) -> usize {
+        match self.starts.binary_search(&row) {
+            Ok(k) => k.min(self.p() - 1),
+            Err(k) => k - 1,
+        }
+    }
+}
+
+/// Per-partition balance statistics.
+#[derive(Debug, Clone)]
+pub struct BalanceStats {
+    /// Stored entries per rank.
+    pub nnz_per_rank: Vec<usize>,
+    /// Rows per rank.
+    pub rows_per_rank: Vec<usize>,
+    /// Cross-boundary (conflicting) entries per rank.
+    pub conflicts_per_rank: Vec<usize>,
+    /// `max(nnz) / mean(nnz)` — 1.0 is perfect balance.
+    pub nnz_imbalance: f64,
+    /// Total conflicting entries.
+    pub total_conflicts: usize,
+}
+
+/// Analyze a partition over a split matrix in Θ(NNZ).
+pub fn analyze(split: &Split3, part: &RowPartition) -> BalanceStats {
+    let p = part.p();
+    let mut nnz = vec![0usize; p];
+    let mut rows = vec![0usize; p];
+    let mut conf = vec![0usize; p];
+    for r in 0..p {
+        let (a, b) = part.range(r);
+        rows[r] = b - a;
+        for i in a..b {
+            for (j, _) in split.middle.row(i) {
+                nnz[r] += 1;
+                if (j as usize) < a {
+                    conf[r] += 1;
+                }
+            }
+        }
+    }
+    for e in &split.outer {
+        let r = part.rank_of(e.row as usize);
+        nnz[r] += 1;
+        if (e.col as usize) < part.range(r).0 {
+            conf[r] += 1;
+        }
+    }
+    let total: usize = nnz.iter().sum();
+    let mean = total as f64 / p as f64;
+    let imb = nnz.iter().copied().max().unwrap_or(0) as f64 / mean.max(1e-9);
+    BalanceStats {
+        nnz_imbalance: imb,
+        total_conflicts: conf.iter().sum(),
+        nnz_per_rank: nnz,
+        rows_per_rank: rows,
+        conflicts_per_rank: conf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{convert, gen, Symmetry};
+
+    fn split_fixture(n: usize, seed: u64) -> Split3 {
+        let coo = gen::small_test_matrix(n, seed, 1.0);
+        let g = crate::graph::Adjacency::from_coo(&coo);
+        let perm = crate::graph::rcm(&g);
+        let s = convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap();
+        Split3::with_outer_bw(&s, 3).unwrap()
+    }
+
+    #[test]
+    fn partitions_cover_rows() {
+        let split = split_fixture(300, 1);
+        for p in [1, 3, 8] {
+            for part in [RowPartition::by_rows(300, p), RowPartition::by_nnz(&split, p)] {
+                assert_eq!(part.p(), p);
+                assert_eq!(part.starts[0], 0);
+                assert_eq!(*part.starts.last().unwrap(), 300);
+                for w in part.starts.windows(2) {
+                    assert!(w[0] <= w[1]);
+                }
+                for row in [0usize, 1, 150, 299] {
+                    let r = part.rank_of(row);
+                    let (a, b) = part.range(r);
+                    assert!(a <= row && row < b, "row {row} rank {r} range {a}..{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_partition_is_better_balanced() {
+        let split = split_fixture(400, 2);
+        let p = 8;
+        let by_rows = analyze(&split, &RowPartition::by_rows(400, p));
+        let by_nnz = analyze(&split, &RowPartition::by_nnz(&split, p));
+        let total: usize = by_rows.nnz_per_rank.iter().sum();
+        assert_eq!(total, by_nnz.nnz_per_rank.iter().sum::<usize>());
+        assert!(
+            by_nnz.nnz_imbalance <= by_rows.nnz_imbalance + 1e-9,
+            "nnz {} vs rows {}",
+            by_nnz.nnz_imbalance,
+            by_rows.nnz_imbalance
+        );
+    }
+
+    #[test]
+    fn conflicts_counted_consistently() {
+        // with p=1 there are never conflicts, with any partition
+        let split = split_fixture(200, 3);
+        for part in [RowPartition::by_rows(200, 1), RowPartition::by_nnz(&split, 1)] {
+            assert_eq!(analyze(&split, &part).total_conflicts, 0);
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Block row distribution and conflict pre-identification (paper Fig. 2).
+//!
+//! Under block row distribution, processing a stored lower entry
+//! `(i, j)` on `rank(i)` also updates `y[j]` (the mirrored write). The
+//! entry is **safe** (yellow squares in Fig. 2) when `rank(j) ==
+//! rank(i)`; it is **conflicting** (purple) when the mirror lands in
+//! another rank's output block. The key PARS3 idea: because the matrix
+//! is banded, conflicts are confined to block boundaries, and a single
+//! Θ(NNZ) preprocessing pass can enumerate them exactly — no runtime
+//! synchronization or speculative rollback needed.
+
+use crate::kernel::split3::Split3;
+use crate::sparse::Sss;
+
+/// Block (contiguous) row distribution over `p` ranks.
+///
+/// The first `n % p` ranks get `ceil(n/p)` rows, the rest `floor(n/p)` —
+/// the paper's "equal amount of rows" scatter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockDist {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Rank count.
+    pub p: usize,
+}
+
+impl BlockDist {
+    /// Create a distribution; `p >= 1`.
+    pub fn new(n: usize, p: usize) -> Self {
+        assert!(p >= 1, "need at least one rank");
+        Self { n, p }
+    }
+
+    /// Row range `[start, end)` owned by `rank`.
+    pub fn range(&self, rank: usize) -> (usize, usize) {
+        let base = self.n / self.p;
+        let extra = self.n % self.p;
+        let start = rank * base + rank.min(extra);
+        let len = base + usize::from(rank < extra);
+        (start, (start + len).min(self.n))
+    }
+
+    /// Owner rank of `row`.
+    pub fn rank_of(&self, row: usize) -> usize {
+        debug_assert!(row < self.n);
+        let base = self.n / self.p;
+        let extra = self.n % self.p;
+        let cut = extra * (base + 1);
+        if row < cut {
+            row / (base + 1)
+        } else if base > 0 {
+            extra + (row - cut) / base
+        } else {
+            // n < p: ranks beyond n own nothing
+            row
+        }
+    }
+
+    /// Rows owned by `rank`.
+    pub fn rows_of(&self, rank: usize) -> usize {
+        let (a, b) = self.range(rank);
+        b - a
+    }
+}
+
+/// Per-rank conflict statistics from the preprocessing pass.
+#[derive(Debug, Clone, Default)]
+pub struct RankConflicts {
+    /// Stored middle-split entries whose rows this rank owns.
+    pub local_nnz: usize,
+    /// Of those, entries whose mirror write stays local (safe, yellow).
+    pub safe_nnz: usize,
+    /// Entries whose mirror write targets another rank (purple).
+    pub conflicting_nnz: usize,
+    /// Distinct remote ranks this rank's mirrors write into.
+    pub target_ranks: Vec<usize>,
+    /// Columns needed from other ranks for the direct products
+    /// (`x`-halo): per source rank, count of referenced columns.
+    pub halo_cols_by_src: Vec<(usize, usize)>,
+    /// Outer-split entries owned by this rank.
+    pub outer_nnz: usize,
+    /// Of the outer entries, how many conflict.
+    pub outer_conflicting: usize,
+}
+
+/// Whole-matrix conflict map for a given rank count.
+#[derive(Debug, Clone)]
+pub struct ConflictMap {
+    /// The distribution analyzed.
+    pub dist: BlockDist,
+    /// Per-rank statistics.
+    pub per_rank: Vec<RankConflicts>,
+}
+
+impl ConflictMap {
+    /// Analyze a split matrix under `p` ranks in one Θ(NNZ) pass.
+    pub fn analyze(split: &Split3, p: usize) -> Self {
+        let dist = BlockDist::new(split.n, p);
+        let mut per_rank = vec![RankConflicts::default(); p];
+        let mut halo: Vec<std::collections::BTreeMap<usize, usize>> =
+            vec![Default::default(); p];
+
+        for i in 0..split.n {
+            let r = dist.rank_of(i);
+            let rc = &mut per_rank[r];
+            for (j, _) in split.middle.row(i) {
+                let jr = dist.rank_of(j as usize);
+                rc.local_nnz += 1;
+                if jr == r {
+                    rc.safe_nnz += 1;
+                } else {
+                    rc.conflicting_nnz += 1;
+                    if !rc.target_ranks.contains(&jr) {
+                        rc.target_ranks.push(jr);
+                    }
+                    *halo[r].entry(jr).or_insert(0) += 1;
+                }
+            }
+        }
+        for e in &split.outer {
+            let r = dist.rank_of(e.row as usize);
+            let jr = dist.rank_of(e.col as usize);
+            per_rank[r].outer_nnz += 1;
+            if jr != r {
+                per_rank[r].outer_conflicting += 1;
+            }
+        }
+        for (r, h) in halo.into_iter().enumerate() {
+            per_rank[r].halo_cols_by_src = h.into_iter().collect();
+            per_rank[r].target_ranks.sort_unstable();
+        }
+        Self { dist, per_rank }
+    }
+
+    /// Analyze an unsplit SSS matrix (middle = everything).
+    pub fn analyze_sss(s: &Sss, p: usize) -> Self {
+        let split = Split3::new(s, s.bandwidth().max(1)).expect("split");
+        Self::analyze(&split, p)
+    }
+
+    /// Total conflicting entries across ranks (the Fig. 2 / [3] "data
+    /// races" count: grows with `p`).
+    pub fn total_conflicts(&self) -> usize {
+        self.per_rank.iter().map(|r| r.conflicting_nnz + r.outer_conflicting).sum()
+    }
+
+    /// Total safe entries (middle + outer whose mirrors stay local).
+    pub fn total_safe(&self) -> usize {
+        self.per_rank
+            .iter()
+            .map(|r| r.safe_nnz + (r.outer_nnz - r.outer_conflicting))
+            .sum()
+    }
+
+    /// Rank 0 never conflicts (paper §3: its mirrors stay local because
+    /// band columns `j < i` of the first block are owned by rank 0).
+    pub fn rank0_conflicts(&self) -> usize {
+        self.per_rank[0].conflicting_nnz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{convert, gen, Symmetry};
+
+    fn banded_split(n: usize, seed: u64, split_bw: usize) -> Split3 {
+        let coo = gen::small_test_matrix(n, seed, 1.0);
+        let g = crate::graph::Adjacency::from_coo(&coo);
+        let perm = crate::graph::rcm(&g);
+        let sss = convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap();
+        Split3::new(&sss, split_bw).unwrap()
+    }
+
+    #[test]
+    fn block_dist_partitions_rows() {
+        for (n, p) in [(10, 3), (7, 7), (100, 8), (5, 8), (64, 1)] {
+            let d = BlockDist::new(n, p);
+            let mut covered = 0;
+            for r in 0..p {
+                let (a, b) = d.range(r);
+                covered += b - a;
+                for row in a..b {
+                    assert_eq!(d.rank_of(row), r, "n={n} p={p} row={row}");
+                }
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn conflicts_partition_local_nnz() {
+        let split = banded_split(120, 1, 6);
+        for p in [1, 2, 4, 8] {
+            let cm = ConflictMap::analyze(&split, p);
+            let total: usize = cm.per_rank.iter().map(|r| r.local_nnz).sum();
+            assert_eq!(total, split.nnz_middle());
+            assert_eq!(cm.total_safe() + cm.total_conflicts(),
+                       split.nnz_middle() + split.nnz_outer());
+        }
+    }
+
+    #[test]
+    fn single_rank_has_no_conflicts() {
+        let split = banded_split(80, 2, 4);
+        let cm = ConflictMap::analyze(&split, 1);
+        assert_eq!(cm.total_conflicts(), 0);
+    }
+
+    #[test]
+    fn conflicts_grow_with_ranks() {
+        // the paper/[3] observation: more processes => more data races
+        let split = banded_split(200, 3, 8);
+        let c2 = ConflictMap::analyze(&split, 2).total_conflicts();
+        let c8 = ConflictMap::analyze(&split, 8).total_conflicts();
+        let c32 = ConflictMap::analyze(&split, 32).total_conflicts();
+        assert!(c2 <= c8 && c8 <= c32, "c2={c2} c8={c8} c32={c32}");
+    }
+
+    #[test]
+    fn rank0_never_conflicts() {
+        let split = banded_split(150, 4, 6);
+        for p in [2, 4, 8] {
+            let cm = ConflictMap::analyze(&split, p);
+            assert_eq!(cm.rank0_conflicts(), 0, "p={p}");
+        }
+    }
+
+    #[test]
+    fn banded_matrix_conflicts_only_with_neighbors() {
+        // with bandwidth << block size, every conflict targets rank-1
+        let split = banded_split(400, 5, 4);
+        let bw = split.total_bw;
+        let cm = ConflictMap::analyze(&split, 4);
+        let block = 100;
+        if bw < block {
+            for (r, rc) in cm.per_rank.iter().enumerate() {
+                for &t in &rc.target_ranks {
+                    assert_eq!(t, r - 1, "rank {r} targets {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_counts_match_conflicts() {
+        let split = banded_split(160, 6, 5);
+        let cm = ConflictMap::analyze(&split, 8);
+        for rc in &cm.per_rank {
+            let halo_total: usize = rc.halo_cols_by_src.iter().map(|(_, c)| c).sum();
+            assert_eq!(halo_total, rc.conflicting_nnz);
+        }
+    }
+}

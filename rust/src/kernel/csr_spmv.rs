@@ -1,0 +1,92 @@
+//! Plain CSR SpMV — the non-symmetric sanity baseline.
+//!
+//! Stores *both* triangles explicitly (twice the matrix traffic of SSS),
+//! which is exactly the memory-bandwidth saving the paper's SSS kernels
+//! exploit. Used to sanity-check results and to put the SSS kernels'
+//! throughput in context (§Perf).
+
+use crate::kernel::traits::Spmv;
+use crate::sparse::Csr;
+
+/// `y = A x` for a general CSR matrix.
+pub fn csr_spmv(a: &Csr, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), a.n);
+    debug_assert_eq!(y.len(), a.n);
+    for i in 0..a.n {
+        let mut acc = 0.0;
+        for k in a.row_ptr[i]..a.row_ptr[i + 1] {
+            acc += a.vals[k] * x[a.col_ind[k] as usize];
+        }
+        y[i] = acc;
+    }
+}
+
+/// Owned CSR kernel implementing [`Spmv`].
+pub struct CsrSpmv {
+    /// The matrix.
+    pub a: Csr,
+}
+
+impl CsrSpmv {
+    /// Wrap a CSR matrix.
+    pub fn new(a: Csr) -> Self {
+        Self { a }
+    }
+}
+
+impl Spmv for CsrSpmv {
+    fn n(&self) -> usize {
+        self.a.n
+    }
+
+    fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+        csr_spmv(&self.a, x, y);
+    }
+
+    fn flops(&self) -> u64 {
+        2 * self.a.nnz() as u64
+    }
+
+    fn bytes(&self) -> u64 {
+        (self.a.nnz() * (8 + 4) + (self.a.n + 1) * 8) as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "csr"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{convert, gen};
+
+    #[test]
+    fn matches_coo_reference() {
+        let coo = gen::small_test_matrix(48, 3, 1.5);
+        let csr = convert::coo_to_csr(&coo);
+        let x: Vec<f64> = (0..48).map(|i| (i as f64).cos()).collect();
+        let mut want = vec![0.0; 48];
+        coo.spmv_ref(&x, &mut want);
+        let mut got = vec![0.0; 48];
+        csr_spmv(&csr, &x, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn agrees_with_serial_sss() {
+        let coo = gen::small_test_matrix(64, 5, 2.0);
+        let csr = convert::coo_to_csr(&coo);
+        let sss = convert::coo_to_sss(&coo, crate::sparse::Symmetry::Skew).unwrap();
+        let x: Vec<f64> = (0..64).map(|i| ((i * 13) % 7) as f64).collect();
+        let mut y0 = vec![0.0; 64];
+        let mut y1 = vec![0.0; 64];
+        csr_spmv(&csr, &x, &mut y0);
+        crate::kernel::serial_sss::sss_spmv(&sss, &x, &mut y1);
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! LAPACK-style banded matrix-vector multiply (`dgbmv` analogue).
+//!
+//! The paper's §2 discusses BLAS `dgbmv`: after RCM, the band can be
+//! compressed into LAPACK banded storage — a dense `(2β+1) × n` array
+//! with `ab[β + i - j][j] = A[i][j]` — trading **wasted storage on
+//! explicit zeros inside the band** for perfectly regular access. This
+//! module implements that baseline so the trade-off is measurable
+//! (`benches/serial_baseline.rs`): for dense bands it wins on locality,
+//! for the sparse post-RCM middle split it loses on wasted traffic —
+//! which is exactly why PARS3 splits the band instead.
+
+use crate::kernel::traits::Spmv;
+use crate::sparse::{Sss, Symmetry};
+use crate::Result;
+use anyhow::ensure;
+
+/// Full (both-triangle) LAPACK-style banded matrix.
+#[derive(Debug, Clone)]
+pub struct BandedDgbmv {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Half-bandwidth.
+    pub beta: usize,
+    /// Column-major LAPACK band storage: `ab[d * n + j] = A[j + d - beta][j]`
+    /// for `d in 0..=2*beta` (rows `beta` above to `beta` below).
+    pub ab: Vec<f64>,
+}
+
+impl BandedDgbmv {
+    /// Build from an SSS matrix (expands the implied triangle; errors if
+    /// the band would be empty).
+    pub fn from_sss(s: &Sss) -> Result<Self> {
+        let beta = s.bandwidth();
+        ensure!(s.n > 0, "empty matrix");
+        let sign = s.sym.sign();
+        let width = 2 * beta + 1;
+        let mut ab = vec![0.0f64; width * s.n];
+        for i in 0..s.n {
+            // diagonal at band row beta
+            ab[beta * s.n + i] = s.dvalues[i];
+            for (j, v) in s.row(i) {
+                let j = j as usize;
+                // lower entry A[i][j] at band row beta + i - j, column j
+                ab[(beta + i - j) * s.n + j] = v;
+                // mirrored upper entry A[j][i] at band row beta + j - i, column i
+                ab[(beta + j - i) * s.n + i] = sign * v;
+            }
+        }
+        Ok(Self { n: s.n, beta, ab })
+    }
+
+    /// `y = A x` over the dense band (touches every band slot, zeros
+    /// included — the dgbmv trade-off).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        let (n, beta) = (self.n, self.beta);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for d in 0..=2 * beta {
+            // band row d holds A[i][j] with i - j = d - beta
+            let off = d as isize - beta as isize;
+            let row = &self.ab[d * n..(d + 1) * n];
+            // i = j + off must be in [0, n)
+            let j_lo = (-off).max(0) as usize;
+            let j_hi = if off > 0 { n - off as usize } else { n };
+            for j in j_lo..j_hi {
+                let i = (j as isize + off) as usize;
+                y[i] += row[j] * x[j];
+            }
+        }
+    }
+
+    /// Fraction of stored band slots that are explicit zeros (the wasted
+    /// storage §2 points out).
+    pub fn waste_ratio(&self) -> f64 {
+        if self.ab.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.ab.iter().filter(|v| **v == 0.0).count();
+        zeros as f64 / self.ab.len() as f64
+    }
+}
+
+impl Spmv for BandedDgbmv {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+        Self::spmv(self, x, y);
+    }
+
+    fn flops(&self) -> u64 {
+        (2 * (2 * self.beta + 1) * self.n) as u64
+    }
+
+    fn bytes(&self) -> u64 {
+        ((2 * self.beta + 1) * self.n * 8) as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "dgbmv"
+    }
+}
+
+/// Convenience check used by tests/benches.
+pub fn is_skew(s: &Sss) -> bool {
+    s.sym == Symmetry::Skew
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::serial_sss::sss_spmv;
+    use crate::sparse::{convert, gen};
+
+    fn banded(n: usize, seed: u64) -> Sss {
+        let mut rng = crate::util::SmallRng::seed_from_u64(seed);
+        let edges = gen::random_banded_pattern(n, 3, 0.5, &mut rng);
+        let coo = crate::sparse::skew::coo_from_pattern(n, &edges, 1.5, &mut rng);
+        convert::coo_to_sss(&coo, Symmetry::Skew).unwrap()
+    }
+
+    #[test]
+    fn matches_serial_sss() {
+        let s = banded(200, 1);
+        let b = BandedDgbmv::from_sss(&s).unwrap();
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.17).sin()).collect();
+        let mut want = vec![0.0; 200];
+        sss_spmv(&s, &x, &mut want);
+        let mut got = vec![0.0; 200];
+        b.spmv(&x, &mut got);
+        for (a, c) in got.iter().zip(&want) {
+            assert!((a - c).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn symmetric_variant_matches() {
+        let mut coo = crate::sparse::Coo::new(50);
+        for i in 0..50u32 {
+            coo.push(i, i, 2.0);
+        }
+        for i in 1..50u32 {
+            coo.push(i, i - 1, 0.5);
+            coo.push(i - 1, i, 0.5);
+        }
+        let s = convert::coo_to_sss(&coo, Symmetry::Symmetric).unwrap();
+        let b = BandedDgbmv::from_sss(&s).unwrap();
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let mut want = vec![0.0; 50];
+        sss_spmv(&s, &x, &mut want);
+        let mut got = vec![0.0; 50];
+        b.spmv(&x, &mut got);
+        for (a, c) in got.iter().zip(&want) {
+            assert!((a - c).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn waste_grows_with_sparse_bands() {
+        // a sparse wide band wastes most slots; a tridiagonal wastes few
+        let sparse = banded(300, 2);
+        let b = BandedDgbmv::from_sss(&sparse).unwrap();
+        assert!(b.waste_ratio() > 0.2, "waste {}", b.waste_ratio());
+        let mut coo = crate::sparse::Coo::new(30);
+        for i in 0..30u32 {
+            coo.push(i, i, 1.0);
+        }
+        for i in 1..30u32 {
+            coo.push(i, i - 1, 1.0);
+            coo.push(i - 1, i, -1.0);
+        }
+        let tri = convert::coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        let bt = BandedDgbmv::from_sss(&tri).unwrap();
+        assert!(bt.waste_ratio() < b.waste_ratio());
+    }
+}

@@ -1,0 +1,19 @@
+//! SpMV kernels: the serial baseline (paper Alg. 1), the 3-way band
+//! split, conflict pre-identification, the parallel PARS3 kernel (the
+//! paper's contribution), and the graph-coloring phased baseline
+//! (Elafrou et al. [3]) it is compared against.
+
+pub mod balance;
+pub mod coloring_spmv;
+pub mod conflict;
+pub mod csr_spmv;
+pub mod dgbmv;
+pub mod pars3;
+pub mod serial_sss;
+pub mod split3;
+pub mod traits;
+
+pub use conflict::{BlockDist, ConflictMap};
+pub use pars3::Pars3Plan;
+pub use split3::Split3;
+pub use traits::Spmv;

@@ -1,0 +1,442 @@
+//! PARS3 — Parallel 3-Way Banded Skew-SSpMV (the paper's contribution,
+//! §3.1.2).
+//!
+//! Pipeline per multiply, given the preprocessing done once in
+//! [`Pars3Plan::new`]:
+//!
+//! 1. **stage 1** — block row distribution of `x` (each rank owns a
+//!    contiguous slice, mirroring the output distribution);
+//! 2. **stage 2** — `x`-halo exchange: each rank needs the columns
+//!    `[halo_lo, r0)` to its left; the band structure makes these come
+//!    from the immediate neighbour(s). Messages follow the paper's
+//!    deadlock-avoiding order (posted from the last rank toward root);
+//! 3. **middle split compute** — each rank unrolls its local SSS slice;
+//!    mirror writes that stay local go straight into the output block,
+//!    mirror writes that cross a block boundary are *pre-identified*
+//!    (see [`crate::kernel::conflict`]) and batched into a per-rank
+//!    scratch slice;
+//! 4. **one-sided accumulate** — the scratch slice is pushed into the
+//!    shared output window (`MPI_Accumulate` substitute), overlappable
+//!    with the outer tail;
+//! 5. **outer split** — the few fringe entries are processed
+//!    sequentially per rank (paper's choice: avoids fine-grained
+//!    irregular communication);
+//! 6. **epoch fence** — barrier; the window now holds `y = A x`.
+
+use crate::kernel::conflict::BlockDist;
+use crate::kernel::split3::Split3;
+use crate::mpisim::{Window, World};
+use crate::Result;
+use anyhow::ensure;
+use std::sync::Arc;
+
+/// Tag for halo messages.
+const TAG_HALO: u32 = 1;
+
+/// Per-rank precomputed plan.
+#[derive(Debug, Clone)]
+pub struct RankPlan {
+    /// Rank id.
+    pub rank: usize,
+    /// Owned row range `[r0, r1)`.
+    pub r0: usize,
+    /// End of owned row range.
+    pub r1: usize,
+    /// Leftmost column referenced by any local entry (`<= r0`).
+    pub halo_lo: usize,
+    /// Halo sends: `(dest, lo, hi)` sub-ranges of *this* rank's block.
+    pub sends: Vec<(usize, usize, usize)>,
+    /// Halo receives: `(src, lo, hi)` sub-ranges arriving from the left.
+    pub recvs: Vec<(usize, usize, usize)>,
+    /// Middle-split entries with off-rank mirrors (conflict count).
+    pub conflicting_nnz: usize,
+    /// Local middle-split entries.
+    pub middle_nnz: usize,
+    /// Local outer-split entries (sequential tail).
+    pub outer_nnz: usize,
+}
+
+/// Execution statistics (instrumentation for the cost replay + §Perf).
+#[derive(Debug, Clone, Default)]
+pub struct Pars3Stats {
+    /// Messages sent per rank.
+    pub msgs: Vec<usize>,
+    /// Payload f64 count per rank.
+    pub msg_values: Vec<usize>,
+    /// Wallclock seconds per rank (threaded mode only).
+    pub rank_seconds: Vec<f64>,
+}
+
+/// The preprocessed parallel kernel.
+#[derive(Debug, Clone)]
+pub struct Pars3Plan {
+    /// The 3-way split (RCM-ordered band).
+    pub split: Arc<Split3>,
+    /// Block row distribution.
+    pub dist: BlockDist,
+    /// Per-rank plans.
+    pub ranks: Vec<RankPlan>,
+    /// Outer entries grouped by owning rank (row-major within a rank).
+    outer_by_rank: Vec<Vec<usize>>,
+}
+
+impl Pars3Plan {
+    /// Preprocess: Θ(NNZ) conflict/halo discovery for `p` ranks.
+    pub fn new(split: Split3, p: usize) -> Result<Self> {
+        ensure!(p >= 1, "need at least one rank");
+        ensure!(split.n >= p, "more ranks than rows ({} < {p})", split.n);
+        let split = Arc::new(split);
+        let dist = BlockDist::new(split.n, p);
+        let mut ranks: Vec<RankPlan> = (0..p)
+            .map(|r| {
+                let (r0, r1) = dist.range(r);
+                RankPlan {
+                    rank: r,
+                    r0,
+                    r1,
+                    halo_lo: r0,
+                    sends: Vec::new(),
+                    recvs: Vec::new(),
+                    conflicting_nnz: 0,
+                    middle_nnz: 0,
+                    outer_nnz: 0,
+                }
+            })
+            .collect();
+
+        // Θ(NNZ) discovery pass (paper: "we first iterate over SSS data
+        // ... to mark the conflicting process IDs").
+        for r in 0..p {
+            let (r0, r1) = dist.range(r);
+            let rp = &mut ranks[r];
+            for i in r0..r1 {
+                for (j, _) in split.middle.row(i) {
+                    let j = j as usize;
+                    rp.middle_nnz += 1;
+                    if j < r0 {
+                        rp.conflicting_nnz += 1;
+                        rp.halo_lo = rp.halo_lo.min(j);
+                    }
+                }
+            }
+        }
+        let mut outer_by_rank = vec![Vec::new(); p];
+        for (k, e) in split.outer.iter().enumerate() {
+            let r = dist.rank_of(e.row as usize);
+            ranks[r].outer_nnz += 1;
+            let j = e.col as usize;
+            if j < ranks[r].r0 {
+                ranks[r].conflicting_nnz += 1;
+                ranks[r].halo_lo = ranks[r].halo_lo.min(j);
+            }
+            outer_by_rank[r].push(k);
+        }
+
+        // Build halo send/recv schedules: rank r needs [halo_lo, r0).
+        for r in 0..p {
+            let (lo, hi) = (ranks[r].halo_lo, ranks[r].r0);
+            if lo >= hi {
+                continue;
+            }
+            let mut src = dist.rank_of(lo);
+            while src < r {
+                let (s0, s1) = dist.range(src);
+                let a = lo.max(s0);
+                let b = hi.min(s1);
+                if a < b {
+                    ranks[r].recvs.push((src, a, b));
+                }
+                src += 1;
+            }
+            let recvs = ranks[r].recvs.clone();
+            for (src, a, b) in recvs {
+                ranks[src].sends.push((r, a, b));
+            }
+        }
+        // Paper order: halo messages posted from the last rank toward
+        // root — sort each rank's sends by descending destination.
+        for rp in &mut ranks {
+            rp.sends.sort_by(|a, b| b.0.cmp(&a.0));
+            rp.recvs.sort_by(|a, b| b.0.cmp(&a.0));
+        }
+
+        Ok(Self { split, dist, ranks, outer_by_rank })
+    }
+
+    /// Rank-local compute shared by both executors. Adds this rank's
+    /// contributions into `yw`, a window covering `[halo_lo, r1)`:
+    /// `yw[..r0-halo_lo]` receives the cross-boundary (conflicting)
+    /// mirror contributions destined for one-sided accumulation, and
+    /// `yw[r0-halo_lo..]` is the rank's own output block. `xw` is the
+    /// matching contiguous `x` window over `[halo_lo, r1)` (§Perf:
+    /// branch-free indexing instead of a halo/local discriminating
+    /// closure on every access).
+    fn rank_compute(&self, rp: &RankPlan, xw: &[f64], yw: &mut [f64]) {
+        let split = &*self.split;
+        let sign = split.sym.sign();
+        let (r0, r1, base) = (rp.r0, rp.r1, rp.halo_lo);
+        debug_assert_eq!(xw.len(), r1 - base);
+        debug_assert_eq!(yw.len(), r1 - base);
+        // diagonal split
+        for i in r0..r1 {
+            yw[i - base] = split.diag[i] * xw[i - base];
+        }
+        // middle split
+        for i in r0..r1 {
+            let xi = xw[i - base];
+            let sxi = sign * xi;
+            let mut yi = 0.0;
+            let lo = split.middle.row_ptr[i];
+            let hi = split.middle.row_ptr[i + 1];
+            for (&j, &v) in split.middle.col_ind[lo..hi].iter().zip(&split.middle.vals[lo..hi]) {
+                let j = j as usize;
+                yi += v * xw[j - base];
+                yw[j - base] += v * sxi; // safe or conflicting mirror
+            }
+            yw[i - base] += yi;
+        }
+        // outer split: sequential tail
+        for &k in &self.outer_by_rank[rp.rank] {
+            let e = &split.outer[k];
+            let (i, j) = (e.row as usize, e.col as usize);
+            yw[i - base] += e.val * xw[j - base];
+            yw[j - base] += sign * e.val * xw[i - base];
+        }
+    }
+
+    /// Threaded execution over real OS threads + channels + one-sided
+    /// window. Returns `(y, stats)`.
+    pub fn execute_threaded(self: &Arc<Self>, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
+        assert_eq!(x.len(), self.split.n);
+        let p = self.dist.p;
+        let window = Window::new(self.split.n);
+        let x = Arc::new(x.to_vec());
+        let plan = self.clone();
+        let win = window.clone();
+        let results = World::run(p, move |mut ctx| {
+            let t0 = std::time::Instant::now();
+            let rp = &plan.ranks[ctx.rank];
+            // stage 1: block distribution — rank owns x[r0..r1]
+            let x_block = &x[rp.r0..rp.r1];
+            // stage 2: halo exchange, paper's last-to-root order
+            for &(dest, a, b) in &rp.sends {
+                ctx.send(dest, TAG_HALO, x[a..b].to_vec());
+            }
+            // contiguous x window [halo_lo, r1): halo then local block
+            let mut xw = vec![0.0f64; rp.r1 - rp.halo_lo];
+            xw[rp.r0 - rp.halo_lo..].copy_from_slice(x_block);
+            for &(src, a, b) in &rp.recvs {
+                let data = ctx.recv(src, TAG_HALO);
+                debug_assert_eq!(data.len(), b - a);
+                xw[a - rp.halo_lo..b - rp.halo_lo].copy_from_slice(&data);
+            }
+            // compute into the matching y window
+            let mut yw = vec![0.0f64; rp.r1 - rp.halo_lo];
+            plan.rank_compute(rp, &xw, &mut yw);
+            // one-sided epoch: one batched accumulate covers both the
+            // cross-boundary mirrors and the rank's own block
+            win.accumulate(rp.halo_lo, &yw);
+            ctx.barrier(); // epoch fence
+            (ctx.sent_msgs, ctx.sent_values, t0.elapsed().as_secs_f64())
+        });
+        let mut stats = Pars3Stats::default();
+        for (m, v, t) in results {
+            stats.msgs.push(m);
+            stats.msg_values.push(v);
+            stats.rank_seconds.push(t);
+        }
+        (window.to_vec(), stats)
+    }
+
+    /// Rank-sequential emulation: identical numerics and message
+    /// accounting without spawning threads. Used for large simulated `p`
+    /// (the cost replay) and for deterministic tests.
+    pub fn execute_emulated(&self, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
+        assert_eq!(x.len(), self.split.n);
+        let mut y = vec![0.0f64; self.split.n];
+        let mut stats = Pars3Stats::default();
+        let mut yw = Vec::new();
+        for rp in &self.ranks {
+            // zero-copy x window; reused y window buffer (§Perf:
+            // allocation-free after the first rank)
+            let xw = &x[rp.halo_lo..rp.r1];
+            yw.clear();
+            yw.resize(rp.r1 - rp.halo_lo, 0.0);
+            self.rank_compute(rp, xw, &mut yw);
+            for (k, v) in yw.iter().enumerate() {
+                y[rp.halo_lo + k] += v;
+            }
+            stats.msgs.push(rp.sends.len());
+            stats.msg_values.push(rp.sends.iter().map(|&(_, a, b)| b - a).sum());
+            stats.rank_seconds.push(0.0);
+        }
+        (y, stats)
+    }
+}
+
+/// [`crate::kernel::Spmv`] adapter running the threaded executor at a
+/// fixed rank count (the solver-facing interface).
+pub struct Pars3Kernel {
+    plan: Arc<Pars3Plan>,
+    threaded: bool,
+}
+
+impl Pars3Kernel {
+    /// Build from a split at `p` ranks. `threaded = false` uses the
+    /// emulated executor (deterministic; preferable on a 1-core box).
+    pub fn new(split: Split3, p: usize, threaded: bool) -> Result<Self> {
+        Ok(Self { plan: Arc::new(Pars3Plan::new(split, p)?), threaded })
+    }
+
+    /// The underlying plan.
+    pub fn plan(&self) -> &Pars3Plan {
+        &self.plan
+    }
+}
+
+impl crate::kernel::Spmv for Pars3Kernel {
+    fn n(&self) -> usize {
+        self.plan.split.n
+    }
+
+    fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+        let (out, _) = if self.threaded {
+            self.plan.execute_threaded(x)
+        } else {
+            self.plan.execute_emulated(x)
+        };
+        y.copy_from_slice(&out);
+    }
+
+    fn flops(&self) -> u64 {
+        let s = &self.plan.split;
+        (s.n + 4 * (s.nnz_middle() + s.nnz_outer())) as u64
+    }
+
+    fn bytes(&self) -> u64 {
+        let s = &self.plan.split;
+        (s.n * 8 + (s.nnz_middle() + s.nnz_outer()) * 12) as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "pars3"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::serial_sss::sss_spmv;
+    use crate::sparse::{convert, gen, Symmetry};
+
+    fn banded(n: usize, seed: u64, alpha: f64) -> crate::sparse::Sss {
+        let coo = gen::small_test_matrix(n, seed, alpha);
+        let g = crate::graph::Adjacency::from_coo(&coo);
+        let perm = crate::graph::rcm(&g);
+        convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap()
+    }
+
+    fn check_matches_serial(n: usize, seed: u64, p: usize, threaded: bool) {
+        let s = banded(n, seed, 1.5);
+        let x: Vec<f64> = (0..n).map(|i| ((i * 31) % 17) as f64 * 0.25 - 2.0).collect();
+        let mut want = vec![0.0; n];
+        sss_spmv(&s, &x, &mut want);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Arc::new(Pars3Plan::new(split, p).unwrap());
+        let (got, stats) = if threaded {
+            plan.execute_threaded(&x)
+        } else {
+            plan.execute_emulated(&x)
+        };
+        assert_eq!(stats.msgs.len(), p);
+        for (k, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-10, "row {k}: {a} vs {b} (n={n} p={p})");
+        }
+    }
+
+    #[test]
+    fn emulated_matches_serial_various_p() {
+        for p in [1, 2, 3, 4, 7, 16] {
+            check_matches_serial(120, 1, p, false);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial() {
+        for p in [1, 2, 4, 8] {
+            check_matches_serial(150, 2, p, true);
+        }
+    }
+
+    #[test]
+    fn big_p_edge_cases() {
+        check_matches_serial(64, 3, 64, false); // one row per rank
+        check_matches_serial(65, 4, 64, false); // uneven blocks
+    }
+
+    #[test]
+    fn threaded_and_emulated_agree() {
+        let s = banded(200, 5, 2.0);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Arc::new(Pars3Plan::new(split, 6).unwrap());
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.7).cos()).collect();
+        let (a, _) = plan.execute_threaded(&x);
+        let (b, _) = plan.execute_emulated(&x);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rejects_more_ranks_than_rows() {
+        let s = banded(10, 6, 1.0);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        assert!(Pars3Plan::new(split, 11).is_err());
+    }
+
+    #[test]
+    fn halo_is_neighbor_only_for_narrow_bands() {
+        let s = banded(600, 7, 1.0);
+        let bw = s.bandwidth();
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let p = 4;
+        let plan = Pars3Plan::new(split, p).unwrap();
+        let block = 150;
+        if bw < block {
+            for rp in &plan.ranks {
+                for &(src, _, _) in &rp.recvs {
+                    assert_eq!(src + 1, rp.rank, "recv from non-neighbor");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sends_are_posted_in_paper_order() {
+        let s = banded(300, 8, 1.0);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Pars3Plan::new(split, 8).unwrap();
+        for rp in &plan.ranks {
+            for w in rp.sends.windows(2) {
+                assert!(w[0].0 >= w[1].0, "sends not descending by dest");
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_adapter_works() {
+        use crate::kernel::Spmv;
+        let s = banded(80, 9, 1.0);
+        let x: Vec<f64> = (0..80).map(|i| i as f64 * 0.1).collect();
+        let mut want = vec![0.0; 80];
+        sss_spmv(&s, &x, &mut want);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let mut k = Pars3Kernel::new(split, 4, false).unwrap();
+        let mut got = vec![0.0; 80];
+        k.apply(&x, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        assert_eq!(k.name(), "pars3");
+    }
+}

@@ -1,0 +1,293 @@
+//! The 3-way band split (paper §3.1.2, Figs. 6-8).
+//!
+//! After RCM, the (lower) band of the matrix is split into:
+//!
+//! 1. **diagonal split** — the dense main diagonal (for shifted
+//!    skew-symmetric systems this is the constant shift);
+//! 2. **middle split** — entries with diagonal distance
+//!    `1 ..= split_bw`: the bulk of the NNZ, sparse inside the band;
+//! 3. **outer split** — entries with distance `> split_bw`: few,
+//!    scattered near the band edge, mostly conflicting under block
+//!    distribution; processed sequentially per rank (paper §3.1.2).
+//!
+//! `split_bw` is the user bandwidth parameter; the paper's default puts
+//! the outermost `outer_bw = 3` diagonals in the outer split.
+
+use crate::sparse::{Sss, Symmetry};
+use crate::Result;
+use anyhow::ensure;
+
+/// One entry of the outer split (COO-style, row-major sorted).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OuterEntry {
+    /// Row index.
+    pub row: u32,
+    /// Column index (`< row`).
+    pub col: u32,
+    /// Value.
+    pub val: f64,
+}
+
+/// The 3-way split of a banded SSS matrix.
+#[derive(Debug, Clone)]
+pub struct Split3 {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Mirror convention inherited from the source matrix.
+    pub sym: Symmetry,
+    /// Diagonal split.
+    pub diag: Vec<f64>,
+    /// Middle split (distance `1..=split_bw`), SSS-compressed.
+    pub middle: Sss,
+    /// Outer split (distance `> split_bw`), row-major COO.
+    pub outer: Vec<OuterEntry>,
+    /// The split boundary (user bandwidth parameter).
+    pub split_bw: usize,
+    /// Total bandwidth of the source band matrix.
+    pub total_bw: usize,
+}
+
+impl Split3 {
+    /// Split `s` at diagonal distance `split_bw`.
+    pub fn new(s: &Sss, split_bw: usize) -> Result<Self> {
+        ensure!(split_bw >= 1, "split_bw must be >= 1");
+        let total_bw = s.bandwidth();
+        let mut row_ptr = vec![0usize; s.n + 1];
+        let mut col_ind = Vec::new();
+        let mut vals = Vec::new();
+        let mut outer = Vec::new();
+        for i in 0..s.n {
+            for (j, v) in s.row(i) {
+                let d = i - j as usize;
+                if d <= split_bw {
+                    col_ind.push(j);
+                    vals.push(v);
+                } else {
+                    outer.push(OuterEntry { row: i as u32, col: j, val: v });
+                }
+            }
+            row_ptr[i + 1] = vals.len();
+        }
+        let middle = Sss {
+            n: s.n,
+            dvalues: vec![0.0; s.n], // diagonal lives in `diag`
+            row_ptr,
+            col_ind,
+            vals,
+            sym: s.sym,
+        };
+        Ok(Self {
+            n: s.n,
+            sym: s.sym,
+            diag: s.dvalues.clone(),
+            middle,
+            outer,
+            split_bw,
+            total_bw,
+        })
+    }
+
+    /// Paper default: outer split = the outermost `outer_bw` diagonals of
+    /// the actual band (`split_bw = total_bw - outer_bw`).
+    pub fn with_outer_bw(s: &Sss, outer_bw: usize) -> Result<Self> {
+        let total = s.bandwidth();
+        let split_bw = total.saturating_sub(outer_bw).max(1);
+        Self::new(s, split_bw)
+    }
+
+    /// NNZ partition invariant check: middle + outer == source lower NNZ.
+    pub fn nnz_middle(&self) -> usize {
+        self.middle.nnz_lower()
+    }
+
+    /// Outer-split NNZ.
+    pub fn nnz_outer(&self) -> usize {
+        self.outer.len()
+    }
+
+    /// Serial SpMV over the three splits (must agree exactly with
+    /// [`crate::kernel::serial_sss::sss_spmv`] on the unsplit matrix —
+    /// same per-row accumulation order).
+    pub fn spmv_serial(&self, x: &[f64], y: &mut [f64]) {
+        let sign = self.sym.sign();
+        // diagonal split
+        for i in 0..self.n {
+            y[i] = self.diag[i] * x[i];
+        }
+        // middle split
+        for i in 0..self.n {
+            let xi = x[i];
+            let mut yi = 0.0;
+            for k in self.middle.row_ptr[i]..self.middle.row_ptr[i + 1] {
+                let j = self.middle.col_ind[k] as usize;
+                let v = self.middle.vals[k];
+                yi += v * x[j];
+                y[j] += sign * v * xi;
+            }
+            y[i] += yi;
+        }
+        // outer split (sequential tail, paper §3.1.2)
+        for e in &self.outer {
+            let (i, j) = (e.row as usize, e.col as usize);
+            y[i] += e.val * x[j];
+            y[j] += sign * e.val * x[i];
+        }
+    }
+
+    /// Reassemble the original SSS matrix (for tests / invariants).
+    pub fn unsplit(&self) -> Sss {
+        let mut entries: Vec<(u32, u32, f64)> = Vec::with_capacity(self.nnz_middle() + self.nnz_outer());
+        for i in 0..self.n {
+            for (j, v) in self.middle.row(i) {
+                entries.push((i as u32, j, v));
+            }
+        }
+        for e in &self.outer {
+            entries.push((e.row, e.col, e.val));
+        }
+        entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut row_ptr = vec![0usize; self.n + 1];
+        let mut col_ind = Vec::with_capacity(entries.len());
+        let mut vals = Vec::with_capacity(entries.len());
+        let mut r = 0usize;
+        for (i, j, v) in entries {
+            while r < i as usize {
+                r += 1;
+                row_ptr[r] = col_ind.len();
+            }
+            col_ind.push(j);
+            vals.push(v);
+        }
+        while r < self.n {
+            r += 1;
+            row_ptr[r] = col_ind.len();
+        }
+        Sss {
+            n: self.n,
+            dvalues: self.diag.clone(),
+            row_ptr,
+            col_ind,
+            vals,
+            sym: self.sym,
+        }
+    }
+
+    /// Per-split statistics for the Figs. 6-8 report: `(name, nnz,
+    /// slots-in-region, density)` rows.
+    pub fn density_stats(&self) -> Vec<(&'static str, usize, u64, f64)> {
+        let n = self.n as u64;
+        let diag_nnz = self.diag.iter().filter(|v| **v != 0.0).count();
+        let area = |bw_lo: u64, bw_hi: u64| -> u64 {
+            // slots with diagonal distance in (bw_lo, bw_hi]
+            let f = |b: u64| -> u64 {
+                if n > b {
+                    b * (b + 1) / 2 + (n - b - 1) * b
+                } else {
+                    n * (n - 1) / 2
+                }
+            };
+            f(bw_hi) - f(bw_lo)
+        };
+        let mid_area = area(0, self.split_bw as u64).max(1);
+        let out_area = area(self.split_bw as u64, self.total_bw as u64).max(1);
+        vec![
+            ("diag", diag_nnz, n, diag_nnz as f64 / n as f64),
+            (
+                "middle",
+                self.nnz_middle(),
+                mid_area,
+                self.nnz_middle() as f64 / mid_area as f64,
+            ),
+            (
+                "outer",
+                self.nnz_outer(),
+                out_area,
+                self.nnz_outer() as f64 / out_area as f64,
+            ),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::serial_sss::sss_spmv;
+    use crate::sparse::{convert, gen};
+
+    fn band_fixture(n: usize, seed: u64) -> Sss {
+        // RCM-reorder a random matrix so it is genuinely banded
+        let coo = gen::small_test_matrix(n, seed, 2.0);
+        let g = crate::graph::Adjacency::from_coo(&coo);
+        let perm = crate::graph::rcm(&g);
+        let p = coo.permute_symmetric(&perm);
+        convert::coo_to_sss(&p, Symmetry::Skew).unwrap()
+    }
+
+    #[test]
+    fn partition_is_exact() {
+        let s = band_fixture(80, 1);
+        let total = s.nnz_lower();
+        for split_bw in [1, 3, 8, 1000] {
+            let sp = Split3::new(&s, split_bw).unwrap();
+            assert_eq!(sp.nnz_middle() + sp.nnz_outer(), total, "split_bw={split_bw}");
+        }
+    }
+
+    #[test]
+    fn unsplit_roundtrips() {
+        let s = band_fixture(60, 2);
+        let sp = Split3::new(&s, 4).unwrap();
+        assert_eq!(sp.unsplit(), s);
+    }
+
+    #[test]
+    fn spmv_matches_unsplit_kernel() {
+        let s = band_fixture(90, 3);
+        let x: Vec<f64> = (0..90).map(|i| ((i * 29) % 13) as f64 - 6.0).collect();
+        let mut want = vec![0.0; 90];
+        sss_spmv(&s, &x, &mut want);
+        for split_bw in [1, 2, 5, 20] {
+            let sp = Split3::new(&s, split_bw).unwrap();
+            let mut got = vec![0.0; 90];
+            sp.spmv_serial(&x, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-12, "split_bw={split_bw}");
+            }
+        }
+    }
+
+    #[test]
+    fn with_outer_bw_puts_fringe_outside() {
+        let s = band_fixture(80, 4);
+        let bw = s.bandwidth();
+        let sp = Split3::with_outer_bw(&s, 3).unwrap();
+        assert_eq!(sp.split_bw, bw - 3);
+        for e in &sp.outer {
+            assert!((e.row - e.col) as usize > bw - 3);
+        }
+    }
+
+    #[test]
+    fn middle_is_majority_outer_is_small() {
+        // paper's observation: middle carries the bulk, outer is tiny
+        let s = band_fixture(200, 5);
+        let sp = Split3::with_outer_bw(&s, 3).unwrap();
+        assert!(sp.nnz_middle() > sp.nnz_outer());
+    }
+
+    #[test]
+    fn density_stats_sum_to_total() {
+        let s = band_fixture(100, 6);
+        let sp = Split3::new(&s, 5).unwrap();
+        let stats = sp.density_stats();
+        let total: usize = stats.iter().map(|(_, nnz, _, _)| *nnz).sum();
+        let diag_nnz = sp.diag.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(total, s.nnz_lower() + diag_nnz);
+    }
+
+    #[test]
+    fn rejects_zero_split_bw() {
+        let s = band_fixture(30, 7);
+        assert!(Split3::new(&s, 0).is_err());
+    }
+}

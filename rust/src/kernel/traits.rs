@@ -1,0 +1,19 @@
+//! Common kernel interface so solvers and benches swap kernels freely.
+
+/// A repeated-multiply kernel `y = A x` (the iterative-solver hot path).
+pub trait Spmv {
+    /// Matrix dimension.
+    fn n(&self) -> usize;
+
+    /// Compute `y = A x`. `x.len() == y.len() == n()`.
+    fn apply(&mut self, x: &[f64], y: &mut [f64]);
+
+    /// Floating-point ops per `apply` (for roofline/throughput reports).
+    fn flops(&self) -> u64;
+
+    /// Bytes of matrix data touched per `apply` (memory-bound roofline).
+    fn bytes(&self) -> u64;
+
+    /// Human-readable kernel name for reports.
+    fn name(&self) -> &'static str;
+}

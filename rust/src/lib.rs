@@ -1,0 +1,34 @@
+//! # PARS3 — Parallel Sparse Skew-Symmetric SpMV with RCM Reordering
+//!
+//! Production-grade reproduction of *PARS3: Parallel Sparse
+//! Skew-Symmetric Matrix-Vector Multiplication with Reverse
+//! Cuthill-McKee Reordering* (Yıldırım & Manguoğlu, cs.DC 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution:
+//!   RCM reordering, 3-way band splitting, conflict pre-identification,
+//!   block distribution, simulated-MPI rank runtime with one-sided
+//!   accumulation, plus every substrate the paper depends on (sparse
+//!   formats, SPARSKIT-style conversions, graph algorithms, the
+//!   graph-coloring baseline of Elafrou et al., iterative solvers).
+//! * **L2/L1 (build-time Python)** — the MRS iteration + Pallas banded
+//!   skew-symmetric SpMV kernel, AOT-lowered to HLO text in
+//!   `artifacts/` and executed from Rust via PJRT (`runtime`).
+//!
+//! Start with [`coordinator::Coordinator`] for the high-level pipeline,
+//! or [`kernel::pars3`] for the parallel kernel itself. See DESIGN.md
+//! for the module inventory and EXPERIMENTS.md for reproduced results.
+
+pub mod coordinator;
+pub mod graph;
+pub mod kernel;
+pub mod mpisim;
+pub mod perf;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

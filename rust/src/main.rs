@@ -1,0 +1,285 @@
+//! `pars3` — leader entrypoint / CLI.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline registry):
+//!
+//! ```text
+//! pars3 info                          # artifact + platform info
+//! pars3 report <table1|rcm|conflicts|splits|fig9|coloring|complexity|all>
+//! pars3 spmv   [--matrix NAME] [--p N] [--backend serial|pars3|pjrt]
+//! pars3 solve  [--matrix NAME] [--p N] [--backend ...] [--tol T] [--iters K]
+//! pars3 serve  [--demo]               # request-service loop demo
+//! ```
+//!
+//! Global flags: `--config FILE` (default `pars3.toml`), `--scale S`,
+//! `--ranks a,b,c`, `--threaded`.
+
+use pars3::coordinator::{Backend, Config, Coordinator, Request, Response, Service};
+use pars3::mpisim::CostModel;
+use pars3::report;
+use pars3::solver::mrs::MrsOptions;
+use pars3::sparse::{gen, skew};
+use pars3::util::SmallRng;
+use pars3::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parsed command line.
+struct Args {
+    cmd: String,
+    sub: Option<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut it = std::env::args().skip(1).peekable();
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut sub = None;
+    let mut flags = std::collections::HashMap::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                it.next().unwrap()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), val);
+        } else if sub.is_none() {
+            sub = Some(a);
+        }
+    }
+    Args { cmd, sub, flags }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let path = args.flags.get("config").map(String::as_str).unwrap_or("pars3.toml");
+    let mut cfg = Config::load(path)?;
+    if let Some(s) = args.flags.get("scale") {
+        cfg.scale = s.parse()?;
+    }
+    if let Some(r) = args.flags.get("ranks") {
+        cfg.ranks = r.split(',').map(|t| t.trim().parse()).collect::<std::result::Result<_, _>>()?;
+    }
+    if args.flags.contains_key("threaded") {
+        cfg.threaded = true;
+    }
+    if let Some(d) = args.flags.get("artifacts") {
+        cfg.artifacts_dir = d.into();
+    }
+    Ok(cfg)
+}
+
+fn backend_of(args: &Args, default_p: usize) -> Result<Backend> {
+    let p: usize = args.flags.get("p").map(|v| v.parse()).transpose()?.unwrap_or(default_p);
+    Ok(match args.flags.get("backend").map(String::as_str).unwrap_or("pars3") {
+        "serial" => Backend::Serial,
+        "pjrt" => Backend::Pjrt,
+        "pars3" => Backend::Pars3 { p },
+        other => anyhow::bail!("unknown backend '{other}'"),
+    })
+}
+
+fn pick_matrix(cfg: &Config, name: &str) -> Result<(String, pars3::sparse::Coo)> {
+    let suite = gen::paper_suite(cfg.scale);
+    let m = suite
+        .iter()
+        .find(|m| m.name == name || m.name.trim_end_matches("_like") == name)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown matrix '{name}'; available: {}",
+                suite.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+    let mut rng = SmallRng::seed_from_u64(cfg.seed ^ m.n as u64);
+    Ok((m.name.to_string(), skew::coo_from_pattern(m.n, &m.lower_edges, cfg.alpha, &mut rng)))
+}
+
+fn run() -> Result<()> {
+    let args = parse_args();
+    let cfg = load_config(&args)?;
+    match args.cmd.as_str() {
+        "info" => cmd_info(cfg),
+        "report" => cmd_report(cfg, args.sub.as_deref().unwrap_or("all")),
+        "spmv" => cmd_spmv(cfg, &args),
+        "solve" => cmd_solve(cfg, &args),
+        "serve" => cmd_serve(cfg),
+        _ => {
+            println!(
+                "pars3 — Parallel 3-Way Banded Skew-SSpMV (paper reproduction)\n\n\
+                 usage: pars3 <info|report|spmv|solve|serve> [flags]\n\
+                 report subcommands: table1 rcm conflicts splits fig9 coloring complexity all\n\
+                 flags: --config F --scale S --ranks 1,2,4 --threaded --matrix NAME --p N\n\
+                        --backend serial|pars3|pjrt --tol T --iters K --artifacts DIR"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_info(cfg: Config) -> Result<()> {
+    println!("config: {cfg:?}");
+    let mut coord = Coordinator::new(cfg);
+    match coord.runtime() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts:");
+            let arts: Vec<_> = rt.manifest().artifacts.clone();
+            for a in arts {
+                println!(
+                    "  {:28} kind={:9} n={:6} beta={:3} tile={}",
+                    a.name, a.kind, a.n, a.beta, a.tile
+                );
+            }
+        }
+        Err(e) => println!("PJRT runtime unavailable: {e:#}"),
+    }
+    Ok(())
+}
+
+fn cmd_report(cfg: Config, which: &str) -> Result<()> {
+    let suite = report::prepared_suite(&cfg)?;
+    // calibrate the cost replay on the largest analogue (most stable)
+    let biggest = suite.iter().max_by_key(|(_, p)| p.nnz_lower).unwrap();
+    let model = CostModel::calibrate(&biggest.1.sss, 3);
+    let ranks = &cfg.ranks;
+    let mut out = String::new();
+    if matches!(which, "table1" | "all") {
+        out.push_str(&report::table1(&suite));
+        out.push('\n');
+    }
+    if matches!(which, "rcm" | "all") {
+        out.push_str(&report::rcm_report(&suite));
+        out.push('\n');
+    }
+    if matches!(which, "conflicts" | "all") {
+        out.push_str(&report::conflict_report(&suite, ranks));
+        out.push('\n');
+    }
+    if matches!(which, "splits" | "all") {
+        out.push_str(&report::splits_report(&suite, &[1, 3, 8, 16]));
+        out.push('\n');
+    }
+    if matches!(which, "fig9" | "all") {
+        let f = report::fig9(&suite, ranks, &model);
+        out.push_str(&report::fig9_report(&f));
+        out.push('\n');
+    }
+    if matches!(which, "coloring" | "all") {
+        out.push_str(&report::coloring_compare(&suite, ranks, &model));
+        out.push('\n');
+    }
+    if matches!(which, "complexity" | "all") {
+        out.push_str(&report::complexity_report(&cfg, &[500, 1000, 2000, 4000])?);
+        out.push('\n');
+    }
+    if out.is_empty() {
+        anyhow::bail!("unknown report '{which}'");
+    }
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_spmv(cfg: Config, args: &Args) -> Result<()> {
+    let name = args.flags.get("matrix").map(String::as_str).unwrap_or("af_5_k101_like");
+    let backend = backend_of(args, 8)?;
+    let (name, coo) = pick_matrix(&cfg, name)?;
+    let mut coord = Coordinator::new(cfg);
+    let prep = coord.prepare(&name, &coo)?;
+    println!(
+        "{name}: n={} nnz_lower={} bw {} -> {} (RCM)",
+        prep.n, prep.nnz_lower, prep.bw_before, prep.rcm_bw
+    );
+    let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let t0 = std::time::Instant::now();
+    let y = coord.spmv(&prep, &x, backend)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let norm: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+    println!("backend {backend:?}: ||y|| = {norm:.6e}  ({dt:.6}s incl. plan)");
+    // cross-check against serial
+    let y0 = coord.spmv(&prep, &x, Backend::Serial)?;
+    let err = y.iter().zip(&y0).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+    println!("max |y - y_serial| = {err:.3e}");
+    Ok(())
+}
+
+fn cmd_solve(cfg: Config, args: &Args) -> Result<()> {
+    let name = args.flags.get("matrix").map(String::as_str).unwrap_or("af_5_k101_like");
+    let backend = backend_of(args, 8)?;
+    let tol: f64 = args.flags.get("tol").map(|v| v.parse()).transpose()?.unwrap_or(1e-8);
+    let iters: usize = args.flags.get("iters").map(|v| v.parse()).transpose()?.unwrap_or(500);
+    let alpha = cfg.alpha;
+    let (name, coo) = pick_matrix(&cfg, name)?;
+    let mut coord = Coordinator::new(cfg);
+    let prep = coord.prepare(&name, &coo)?;
+    let mut rng = SmallRng::seed_from_u64(17);
+    let b: Vec<f64> = (0..prep.n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+    let opts = MrsOptions { alpha, max_iters: iters, tol };
+    let t0 = std::time::Instant::now();
+    let res = if args.flags.get("solver").map(String::as_str) == Some("krylov") {
+        // full Krylov MRS (Idema-Vuik family) over the same kernel
+        let kopts = pars3::solver::KrylovOptions { alpha, max_iters: iters, tol };
+        match backend {
+            Backend::Serial => {
+                let mut k = pars3::kernel::serial_sss::SerialSss::new(prep.sss.clone());
+                pars3::solver::mrs_krylov_solve(&mut k, &b, &kopts)
+            }
+            Backend::Pars3 { p } => {
+                let mut k = pars3::kernel::pars3::Pars3Kernel::new(
+                    prep.split.clone(),
+                    p,
+                    coord.cfg.threaded,
+                )?;
+                pars3::solver::mrs_krylov_solve(&mut k, &b, &kopts)
+            }
+            Backend::Pjrt => anyhow::bail!("--solver krylov supports serial/pars3 backends"),
+        }
+    } else {
+        coord.solve(&prep, &b, &opts, backend)?
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name}: backend {backend:?} converged={} iters={} rel_res={:.3e} ({dt:.3}s)",
+        res.converged,
+        res.iters,
+        (res.history.last().unwrap() / res.history[0]).sqrt()
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: Config) -> Result<()> {
+    println!("starting request service (demo mode: 3 scripted clients)...");
+    let scale = cfg.scale;
+    let alpha = cfg.alpha;
+    let seed = cfg.seed;
+    let svc = Service::start(cfg);
+    let suite = gen::paper_suite(scale);
+    let m = &suite[3]; // af analogue: fastest
+    let mut rng = SmallRng::seed_from_u64(seed ^ m.n as u64);
+    let coo = skew::coo_from_pattern(m.n, &m.lower_edges, alpha, &mut rng);
+    match svc.call(Request::Prepare { key: "demo".into(), coo }) {
+        Response::Prepared { n, nnz, rcm_bw } => {
+            println!("prepared '{}': n={n} nnz={nnz} rcm_bw={rcm_bw}", m.name)
+        }
+        Response::Error(e) => anyhow::bail!("prepare failed: {e}"),
+        _ => unreachable!(),
+    }
+    for client in 0..3 {
+        let n = m.n;
+        let x: Vec<f64> = (0..n).map(|i| ((i + client) as f64 * 0.11).cos()).collect();
+        match svc.call(Request::Spmv { key: "demo".into(), x, backend: Backend::Pars3 { p: 4 } }) {
+            Response::Spmv(y) => {
+                let norm: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+                println!("client {client}: spmv ok, ||y|| = {norm:.6e}");
+            }
+            Response::Error(e) => println!("client {client}: error {e}"),
+            _ => unreachable!(),
+        }
+    }
+    svc.shutdown();
+    println!("service stopped.");
+    Ok(())
+}

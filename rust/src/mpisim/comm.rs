@@ -1,0 +1,193 @@
+//! Rank world over threads + channels (MPI point-to-point substitute).
+//!
+//! Each rank runs on its own OS thread with a `RankCtx` handle providing
+//! tagged `send`/`recv` with (source, tag) matching semantics and a
+//! world barrier — enough to express the paper's communication schedule
+//! (ordered halo chain + accumulate epochs). Channels are unbounded, so
+//! the paper's deadlock concern with blocking sends does not bite here;
+//! the *ordering* of the chain is still preserved for fidelity of the
+//! instrumentation.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+/// A tagged message between ranks.
+#[derive(Debug)]
+struct Msg {
+    src: usize,
+    tag: u32,
+    data: Vec<f64>,
+}
+
+/// Per-rank communication handle.
+pub struct RankCtx {
+    /// This rank's id.
+    pub rank: usize,
+    /// World size.
+    pub p: usize,
+    senders: Vec<Sender<Msg>>,
+    receiver: Receiver<Msg>,
+    pending: HashMap<(usize, u32), VecDeque<Vec<f64>>>,
+    barrier: Arc<Barrier>,
+    /// Messages sent (count, payload f64s) — instrumentation.
+    pub sent_msgs: usize,
+    /// Total payload values sent.
+    pub sent_values: usize,
+}
+
+impl RankCtx {
+    /// Send `data` to `dest` with `tag` (non-blocking, buffered).
+    pub fn send(&mut self, dest: usize, tag: u32, data: Vec<f64>) {
+        self.sent_msgs += 1;
+        self.sent_values += data.len();
+        self.senders[dest]
+            .send(Msg { src: self.rank, tag, data })
+            .expect("rank channel closed");
+    }
+
+    /// Blocking receive matching `(src, tag)`; out-of-order arrivals are
+    /// queued (MPI matching semantics).
+    pub fn recv(&mut self, src: usize, tag: u32) -> Vec<f64> {
+        if let Some(q) = self.pending.get_mut(&(src, tag)) {
+            if let Some(d) = q.pop_front() {
+                return d;
+            }
+        }
+        loop {
+            let m = self.receiver.recv().expect("rank channel closed");
+            if m.src == src && m.tag == tag {
+                return m.data;
+            }
+            self.pending.entry((m.src, m.tag)).or_default().push_back(m.data);
+        }
+    }
+
+    /// World barrier.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+}
+
+/// The rank world: spawns `p` threads and runs `f` on each.
+pub struct World;
+
+impl World {
+    /// Run `f(rank_ctx)` on `p` ranks; returns per-rank results in rank
+    /// order. Panics in any rank propagate.
+    pub fn run<R, F>(p: usize, f: F) -> Vec<R>
+    where
+        R: Send + 'static,
+        F: Fn(RankCtx) -> R + Send + Sync + 'static,
+    {
+        assert!(p >= 1);
+        let mut senders = Vec::with_capacity(p);
+        let mut receivers = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let barrier = Arc::new(Barrier::new(p));
+        let f = Arc::new(f);
+        let mut handles = Vec::with_capacity(p);
+        for (rank, receiver) in receivers.into_iter().enumerate() {
+            let ctx = RankCtx {
+                rank,
+                p,
+                senders: senders.clone(),
+                receiver,
+                pending: HashMap::new(),
+                barrier: barrier.clone(),
+                sent_msgs: 0,
+                sent_values: 0,
+            };
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || f(ctx)));
+        }
+        drop(senders);
+        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass() {
+        let results = World::run(4, |mut ctx| {
+            let next = (ctx.rank + 1) % ctx.p;
+            let prev = (ctx.rank + ctx.p - 1) % ctx.p;
+            ctx.send(next, 7, vec![ctx.rank as f64]);
+            let got = ctx.recv(prev, 7);
+            got[0]
+        });
+        assert_eq!(results, vec![3.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn tag_matching_reorders() {
+        let results = World::run(2, |mut ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, 1, vec![1.0]);
+                ctx.send(1, 2, vec![2.0]);
+                0.0
+            } else {
+                // receive in the opposite order of sending
+                let b = ctx.recv(0, 2);
+                let a = ctx.recv(0, 1);
+                a[0] * 10.0 + b[0]
+            }
+        });
+        assert_eq!(results[1], 12.0);
+    }
+
+    #[test]
+    fn paper_chain_order_no_deadlock() {
+        // last rank sends to P-1, ..., rank 1 sends to 0 (paper §3.1.2)
+        let p = 6;
+        let results = World::run(p, |mut ctx| {
+            if ctx.rank + 1 < ctx.p {
+                let d = ctx.recv(ctx.rank + 1, 3);
+                if ctx.rank > 0 {
+                    ctx.send(ctx.rank - 1, 3, vec![d[0] + 1.0]);
+                }
+                d[0]
+            } else {
+                ctx.send(ctx.rank - 1, 3, vec![0.0]);
+                -1.0
+            }
+        });
+        assert_eq!(results[0], (p - 2) as f64);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        COUNT.store(0, Ordering::SeqCst);
+        let results = World::run(4, |ctx| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+            ctx.barrier();
+            COUNT.load(Ordering::SeqCst)
+        });
+        assert!(results.iter().all(|&c| c == 4));
+    }
+
+    #[test]
+    fn instrumentation_counts() {
+        let results = World::run(2, |mut ctx| {
+            if ctx.rank == 0 {
+                ctx.send(1, 0, vec![0.0; 10]);
+                ctx.send(1, 1, vec![0.0; 5]);
+                (ctx.sent_msgs, ctx.sent_values)
+            } else {
+                ctx.recv(0, 0);
+                ctx.recv(0, 1);
+                (0, 0)
+            }
+        });
+        assert_eq!(results[0], (2, 15));
+    }
+}

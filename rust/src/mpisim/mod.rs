@@ -1,0 +1,19 @@
+//! Simulated-MPI runtime (DESIGN.md §2 substitution for the paper's
+//! 64-core Opteron cluster + MPI).
+//!
+//! * [`comm`] — a rank world over OS threads and channels: tagged
+//!   send/recv with (source, tag) matching, barriers.
+//! * [`window`] — one-sided accumulation windows (`MPI_Accumulate`
+//!   substitute): lock-free atomic f64 `+=` into a shared output vector,
+//!   flushed by an epoch fence.
+//! * [`cost`] — an α-β-γ communication/computation cost model replaying
+//!   instrumented per-rank work to estimate makespans for rank counts
+//!   this box cannot physically run (Figure 9's P = 1..64).
+
+pub mod comm;
+pub mod cost;
+pub mod window;
+
+pub use comm::{RankCtx, World};
+pub use cost::CostModel;
+pub use window::Window;

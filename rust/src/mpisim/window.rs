@@ -1,0 +1,119 @@
+//! One-sided accumulation window (`MPI_Accumulate` substitute).
+//!
+//! The paper pushes symmetric-pair partial results (`mul2`, eqs. (2)-(6))
+//! into remote ranks' output slices with `MPI_Accumulate` — a
+//! non-blocking RMA `+=` that overlaps with computation and needs no
+//! receive posted by the target. The shared-memory equivalent is a
+//! lock-free atomic f64 add (CAS loop on the u64 bit pattern); the epoch
+//! fence maps to a barrier.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared accumulation window over an f64 vector.
+#[derive(Debug)]
+pub struct Window {
+    cells: Vec<AtomicU64>,
+}
+
+impl Window {
+    /// Zero-initialized window of length `n`.
+    pub fn new(n: usize) -> Arc<Self> {
+        Arc::new(Self { cells: (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect() })
+    }
+
+    /// Window length.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Atomic `window[idx] += v` (lock-free CAS loop).
+    #[inline]
+    pub fn add(&self, idx: usize, v: f64) {
+        if v == 0.0 {
+            return;
+        }
+        let cell = &self.cells[idx];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Accumulate a contiguous slice starting at `offset`
+    /// (one "MPI_Accumulate" call; batched for message efficiency).
+    pub fn accumulate(&self, offset: usize, vals: &[f64]) {
+        for (k, &v) in vals.iter().enumerate() {
+            self.add(offset + k, v);
+        }
+    }
+
+    /// Read one element (only meaningful after an epoch fence).
+    pub fn get(&self, idx: usize) -> f64 {
+        f64::from_bits(self.cells[idx].load(Ordering::Acquire))
+    }
+
+    /// Snapshot the whole window (after a fence).
+    pub fn to_vec(&self) -> Vec<f64> {
+        self.cells.iter().map(|c| f64::from_bits(c.load(Ordering::Acquire))).collect()
+    }
+
+    /// Reset all cells to zero (next epoch).
+    pub fn reset(&self) {
+        for c in &self.cells {
+            c.store(0f64.to_bits(), Ordering::Release);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpisim::World;
+
+    #[test]
+    fn concurrent_adds_are_lossless() {
+        let w = Window::new(8);
+        let w2 = w.clone();
+        World::run(4, move |ctx| {
+            for k in 0..1000 {
+                w2.add(k % 8, 1.0 + ctx.rank as f64 * 0.0);
+            }
+            ctx.barrier();
+        });
+        let total: f64 = w.to_vec().iter().sum();
+        assert_eq!(total, 4000.0);
+    }
+
+    #[test]
+    fn accumulate_slice() {
+        let w = Window::new(6);
+        w.accumulate(2, &[1.0, 2.0, 3.0]);
+        w.accumulate(3, &[10.0]);
+        assert_eq!(w.to_vec(), vec![0.0, 0.0, 1.0, 12.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let w = Window::new(3);
+        w.add(1, 5.0);
+        w.reset();
+        assert_eq!(w.to_vec(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn zero_add_is_noop_fastpath() {
+        let w = Window::new(2);
+        w.add(0, 0.0);
+        assert_eq!(w.get(0), 0.0);
+    }
+}

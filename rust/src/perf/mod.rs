@@ -1,0 +1,94 @@
+//! Timing, counters, and Amdahl analysis (§Perf instrumentation).
+
+use std::time::Instant;
+
+/// Simple repeated-run timer: median + min over `reps` runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    /// Median seconds per run.
+    pub median: f64,
+    /// Minimum seconds per run (least-noise estimate).
+    pub min: f64,
+    /// Mean seconds per run.
+    pub mean: f64,
+    /// Runs measured.
+    pub reps: usize,
+}
+
+/// Time `f` for `reps` runs after `warmup` unmeasured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Timing { median, min, mean, reps }
+}
+
+/// Throughput helpers for SpMV-style kernels.
+#[derive(Debug, Clone, Copy)]
+pub struct Throughput {
+    /// GFLOP/s.
+    pub gflops: f64,
+    /// Effective matrix-data GB/s.
+    pub gbytes: f64,
+}
+
+/// Compute throughput from a timing and per-run op counts.
+pub fn throughput(t: Timing, flops: u64, bytes: u64) -> Throughput {
+    Throughput {
+        gflops: flops as f64 / t.min / 1e9,
+        gbytes: bytes as f64 / t.min / 1e9,
+    }
+}
+
+/// Serial fraction estimate from measured speedup at `p` (inverse
+/// Amdahl): `s = (p/S - 1) / (p - 1)`.
+pub fn serial_fraction(speedup: f64, p: usize) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    ((p as f64 / speedup) - 1.0) / (p as f64 - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_something() {
+        let t = time_fn(1, 5, || {
+            let mut s = 0.0f64;
+            for i in 0..10_000 {
+                s += (i as f64).sqrt();
+            }
+            std::hint::black_box(s);
+        });
+        assert!(t.min > 0.0 && t.median >= t.min && t.reps == 5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let t = Timing { median: 1.0, min: 0.5, mean: 1.0, reps: 1 };
+        let th = throughput(t, 1_000_000_000, 2_000_000_000);
+        assert!((th.gflops - 2.0).abs() < 1e-12);
+        assert!((th.gbytes - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_fraction_inverse_of_amdahl() {
+        let p = 16;
+        let s = 0.05;
+        let speedup = crate::mpisim::CostModel::amdahl(s, p);
+        let est = serial_fraction(speedup, p);
+        assert!((est - s).abs() < 1e-12);
+    }
+}

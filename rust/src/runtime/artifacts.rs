@@ -1,0 +1,163 @@
+//! Artifact manifest: what `aot.py` exported, with shapes and kinds.
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::{anyhow, ensure, Context};
+use std::path::{Path, PathBuf};
+
+/// One tensor's shape/dtype in the artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// Dtype name (currently always `float32`).
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Unique name, e.g. `spmv_n4096_b32`.
+    pub name: String,
+    /// Kind: `spmv`, `mrs_step`, or `mrs_solve`.
+    pub kind: String,
+    /// HLO text file (relative to the manifest directory).
+    pub file: PathBuf,
+    /// Matrix dimension the artifact was lowered for.
+    pub n: usize,
+    /// Band half-bandwidth.
+    pub beta: usize,
+    /// Row-tile size used by the Pallas kernel.
+    pub tile: usize,
+    /// Iterations fused into the artifact (mrs_chunk / mrs_solve kinds).
+    pub iters: Option<usize>,
+    /// Input signatures in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output signatures in tuple order.
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest (and HLO files) live in.
+    pub dir: PathBuf,
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn tensor_list(j: &Json) -> Result<Vec<TensorSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|t| {
+            let shape = t
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { shape, dtype: t.req("dtype")?.as_str()?.to_string() })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text)?;
+        ensure!(j.req("version")?.as_usize()? == 1, "unsupported manifest version");
+        let artifacts = j
+            .req("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a.req("name")?.as_str()?.to_string(),
+                    kind: a.req("kind")?.as_str()?.to_string(),
+                    file: PathBuf::from(a.req("file")?.as_str()?),
+                    n: a.req("n")?.as_usize()?,
+                    beta: a.req("beta")?.as_usize()?,
+                    tile: a.req("tile")?.as_usize()?,
+                    iters: a.get("iters").map(|v| v.as_usize()).transpose()?,
+                    inputs: tensor_list(a.req("inputs")?)?,
+                    outputs: tensor_list(a.req("outputs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Smallest artifact of `kind` that fits a problem of size `n` with
+    /// bandwidth `beta` (the coordinator zero-pads up to it).
+    pub fn best_fit(&self, kind: &str, n: usize, beta: usize) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.n >= n && a.beta >= beta)
+            .min_by_key(|a| (a.n, a.beta))
+            .ok_or_else(|| {
+                anyhow!("no '{kind}' artifact fits n={n}, beta={beta}; re-export with larger configs")
+            })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, a: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 6);
+        let spmv = m.by_name("spmv_n1024_b16").unwrap();
+        assert_eq!(spmv.kind, "spmv");
+        assert_eq!(spmv.inputs[0].shape, vec![16, 1024]);
+        assert_eq!(spmv.outputs[0].shape, vec![1024]);
+        assert!(m.path_of(spmv).exists());
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_sufficient() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.best_fit("spmv", 900, 10).unwrap();
+        assert_eq!((a.n, a.beta), (1024, 16));
+        let b = m.best_fit("spmv", 1500, 10).unwrap();
+        assert_eq!((b.n, b.beta), (4096, 32));
+        assert!(m.best_fit("spmv", 1 << 20, 1).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Python never runs at request time: `make artifacts` lowers the L2/L1
+//! JAX+Pallas graph to HLO *text* once; this module compiles it on the
+//! PJRT CPU client (`xla` crate) and executes with concrete buffers.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use pjrt::{LoadedArtifact, PjrtRuntime};

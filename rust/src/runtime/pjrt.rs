@@ -1,0 +1,146 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax>=0.5 serialized protos with 64-bit instruction ids).
+
+use crate::runtime::artifacts::{ArtifactSpec, Manifest};
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::collections::HashMap;
+
+/// A compiled, ready-to-execute artifact.
+pub struct LoadedArtifact {
+    /// The artifact signature.
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with f32 input buffers (in manifest order); returns f32
+    /// outputs (in tuple order).
+    pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact '{}' expects {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (k, (buf, ts)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            ensure!(
+                buf.len() == ts.numel(),
+                "input {k} of '{}': expected {} elements, got {}",
+                self.spec.name,
+                ts.numel(),
+                buf.len()
+            );
+            let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "artifact '{}' returned {} outputs, manifest says {}",
+            self.spec.name,
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+
+    /// Build an input literal for position `k` of this artifact's
+    /// signature (validates shape). Use with [`Self::execute_literals`]
+    /// to hoist invariant inputs (e.g. the band matrix) out of a solver
+    /// loop — literal creation copies the host data, so doing it once
+    /// per solve instead of once per call removes the dominant per-
+    /// iteration transfer (§Perf).
+    pub fn literal_for(&self, k: usize, buf: &[f32]) -> Result<xla::Literal> {
+        let ts = &self.spec.inputs[k];
+        ensure!(
+            buf.len() == ts.numel(),
+            "input {k} of '{}': expected {} elements, got {}",
+            self.spec.name,
+            ts.numel(),
+            buf.len()
+        );
+        let dims: Vec<i64> = ts.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(buf).reshape(&dims)?)
+    }
+
+    /// Execute with pre-built literals (see [`Self::literal_for`]).
+    pub fn execute_literals(&self, inputs: &[&xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "artifact '{}' expects {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let result = self.exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// The PJRT CPU runtime with a compiled-artifact cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, LoadedArtifact>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU client over the given artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.by_name(name)?.clone();
+            let path = self.manifest.path_of(&spec);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            self.cache.insert(name.to_string(), LoadedArtifact { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Load the smallest artifact of `kind` fitting `(n, beta)`.
+    pub fn load_best(&mut self, kind: &str, n: usize, beta: usize) -> Result<&LoadedArtifact> {
+        let name = self.manifest.best_fit(kind, n, beta)?.name.clone();
+        self.load(&name)
+    }
+
+    /// Upload an f32 host slice to a device buffer with the given dims.
+    pub fn to_device(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// Read an f32 device buffer back to the host.
+pub fn from_device(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+}

@@ -1,0 +1,14 @@
+//! Iterative solvers — the consumers PARS3 accelerates (paper §1).
+//!
+//! * [`mrs`] — minimal-residual iteration for shifted skew-symmetric
+//!   systems (one SpMV + one inner product per iteration, the MRS-class
+//!   budget the paper highlights).
+//! * [`cg`] — Conjugate Gradient for SPD systems (the restrictive
+//!   comparison point the paper mentions).
+
+pub mod cg;
+pub mod mrs;
+pub mod mrs_krylov;
+
+pub use mrs::{mrs_solve, MrsOptions, MrsResult};
+pub use mrs_krylov::{mrs_krylov_solve, KrylovOptions};

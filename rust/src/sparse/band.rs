@@ -1,0 +1,119 @@
+//! Band-structure metrics: the quantities Figures 4-8 of the paper
+//! visualize (bandwidth, envelope/profile, per-diagonal-distance density).
+
+use crate::sparse::Sss;
+
+/// Structural profile of a (lower-triangle) band matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BandProfile {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Off-diagonal (lower) nonzeros.
+    pub nnz_lower: usize,
+    /// Max `i - j` over stored entries.
+    pub bandwidth: usize,
+    /// Envelope: `sum_i (i - min_col(i))` (the skyline profile).
+    pub profile: u64,
+    /// Histogram of nonzeros by diagonal distance `i - j` (index 0 = distance 1).
+    pub dist_hist: Vec<usize>,
+}
+
+impl BandProfile {
+    /// Compute the profile of an SSS matrix in one O(NNZ) pass.
+    pub fn of(s: &Sss) -> Self {
+        let mut bandwidth = 0usize;
+        let mut profile = 0u64;
+        let mut dist_hist = Vec::new();
+        for i in 0..s.n {
+            let mut min_col = i;
+            for (j, _) in s.row(i) {
+                let d = i - j as usize;
+                bandwidth = bandwidth.max(d);
+                min_col = min_col.min(j as usize);
+                if d > dist_hist.len() {
+                    dist_hist.resize(d, 0);
+                }
+                dist_hist[d - 1] += 1;
+            }
+            profile += (i - min_col) as u64;
+        }
+        Self { n: s.n, nnz_lower: s.nnz_lower(), bandwidth, profile, dist_hist }
+    }
+
+    /// Density of the band region: nnz / (slots inside the bandwidth).
+    ///
+    /// Slots = `sum_i min(i, bandwidth)`, i.e. the lower band area.
+    pub fn band_density(&self) -> f64 {
+        if self.bandwidth == 0 {
+            return 0.0;
+        }
+        let b = self.bandwidth as u64;
+        let n = self.n as u64;
+        // sum_{i=0}^{n-1} min(i, b) = b*(b+1)/2 + (n - b - 1) * b   (for n > b)
+        let slots = if n > b { b * (b + 1) / 2 + (n - b - 1) * b } else { n * (n - 1) / 2 };
+        self.nnz_lower as f64 / slots as f64
+    }
+
+    /// Nonzero counts with distance <= `k` vs distance > `k` — the
+    /// low/high bandwidth split of Fig. 6.
+    pub fn split_counts(&self, k: usize) -> (usize, usize) {
+        let near: usize = self.dist_hist.iter().take(k).sum();
+        (near, self.nnz_lower - near)
+    }
+
+    /// Mean diagonal distance of nonzeros (band "spread").
+    pub fn mean_distance(&self) -> f64 {
+        if self.nnz_lower == 0 {
+            return 0.0;
+        }
+        let sum: u64 = self
+            .dist_hist
+            .iter()
+            .enumerate()
+            .map(|(d, &c)| (d as u64 + 1) * c as u64)
+            .sum();
+        sum as f64 / self.nnz_lower as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::convert;
+    use crate::sparse::{Coo, Symmetry};
+
+    fn tridiag_plus(n: usize) -> Sss {
+        let mut c = Coo::new(n);
+        for i in 0..n as u32 {
+            c.push(i, i, 1.0);
+        }
+        for i in 1..n as u32 {
+            c.push(i, i - 1, 1.0);
+            c.push(i - 1, i, -1.0);
+        }
+        // one far entry
+        c.push((n - 1) as u32, 0, 7.0);
+        c.push(0, (n - 1) as u32, -7.0);
+        convert::coo_to_sss(&c, Symmetry::Skew).unwrap()
+    }
+
+    #[test]
+    fn profile_counts() {
+        let s = tridiag_plus(6);
+        let p = BandProfile::of(&s);
+        assert_eq!(p.bandwidth, 5);
+        assert_eq!(p.nnz_lower, 6);
+        assert_eq!(p.dist_hist[0], 5);
+        assert_eq!(p.dist_hist[4], 1);
+        let (near, far) = p.split_counts(2);
+        assert_eq!((near, far), (5, 1));
+    }
+
+    #[test]
+    fn mean_distance_and_density() {
+        let s = tridiag_plus(6);
+        let p = BandProfile::of(&s);
+        assert!((p.mean_distance() - (5.0 + 5.0) / 6.0).abs() < 1e-12);
+        assert!(p.band_density() > 0.0 && p.band_density() <= 1.0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Format conversions (the SPARSKIT substitute, paper §3.1.2).
+//!
+//! All conversions are O(NNZ) (plus a sort for unsorted COO input) and
+//! round-trip exactly; the tests below check every pair.
+
+use crate::sparse::{Coo, Csr, Sss, Symmetry};
+use crate::Result;
+use anyhow::ensure;
+
+/// COO -> CSR. Duplicates are summed; columns end up sorted per row.
+pub fn coo_to_csr(coo: &Coo) -> Csr {
+    let mut c = coo.clone();
+    c.sum_duplicates();
+    let mut row_ptr = vec![0usize; c.n + 1];
+    for &r in &c.rows {
+        row_ptr[r as usize + 1] += 1;
+    }
+    for i in 0..c.n {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    Csr { n: c.n, row_ptr, col_ind: c.cols, vals: c.vals }
+}
+
+/// CSR -> COO (already deduped/sorted).
+pub fn csr_to_coo(csr: &Csr) -> Coo {
+    let mut out = Coo::with_capacity(csr.n, csr.nnz());
+    for i in 0..csr.n {
+        for (j, v) in csr.row(i) {
+            out.push(i as u32, j, v);
+        }
+    }
+    out
+}
+
+/// COO (full matrix, both triangles stored) -> SSS.
+///
+/// Verifies the mirror convention: for every strictly-lower entry
+/// `(i, j, v)` the matching upper entry must equal `sign * v` (within
+/// 1e-12), and vice versa; the diagonal is stored densely.
+pub fn coo_to_sss(coo: &Coo, sym: Symmetry) -> Result<Sss> {
+    let csr = coo_to_csr(coo);
+    csr_to_sss(&csr, sym)
+}
+
+/// CSR (full matrix) -> SSS with mirror verification.
+pub fn csr_to_sss(csr: &Csr, sym: Symmetry) -> Result<Sss> {
+    let n = csr.n;
+    let sign = sym.sign();
+    let mut dvalues = vec![0.0f64; n];
+    let mut row_ptr = vec![0usize; n + 1];
+    let mut col_ind = Vec::new();
+    let mut vals = Vec::new();
+    for i in 0..n {
+        for (j, v) in csr.row(i) {
+            let j = j as usize;
+            match j.cmp(&i) {
+                std::cmp::Ordering::Equal => dvalues[i] = v,
+                std::cmp::Ordering::Less => {
+                    let mirror = csr.get(j, i);
+                    ensure!(
+                        (mirror - sign * v).abs() <= 1e-12 * (1.0 + v.abs()),
+                        "entry ({i},{j})={v} has mirror {mirror}, violates {sym:?}"
+                    );
+                    col_ind.push(j as u32);
+                    vals.push(v);
+                }
+                std::cmp::Ordering::Greater => {
+                    // upper entry: verify its lower mirror exists
+                    let mirror = csr.get(j, i);
+                    ensure!(
+                        (v - sign * mirror).abs() <= 1e-12 * (1.0 + v.abs()),
+                        "upper entry ({i},{j})={v} missing lower mirror"
+                    );
+                }
+            }
+        }
+        row_ptr[i + 1] = vals.len();
+    }
+    if sym == Symmetry::Skew {
+        // Skew part has zero diagonal; dvalues carries only the shift.
+        // (No check here: shifted skew-symmetric A = alpha*I + S stores alpha.)
+    }
+    Ok(Sss { n, dvalues, row_ptr, col_ind, vals, sym })
+}
+
+/// SSS -> COO, expanding the implied upper triangle and the diagonal.
+pub fn sss_to_coo(sss: &Sss) -> Coo {
+    let sign = sss.sym.sign();
+    let mut out = Coo::with_capacity(sss.n, sss.nnz_logical());
+    for i in 0..sss.n {
+        if sss.dvalues[i] != 0.0 {
+            out.push(i as u32, i as u32, sss.dvalues[i]);
+        }
+        for (j, v) in sss.row(i) {
+            out.push(i as u32, j, v);
+            out.push(j, i as u32, sign * v);
+        }
+    }
+    out
+}
+
+/// SSS -> CSR (full expansion).
+pub fn sss_to_csr(sss: &Sss) -> Csr {
+    coo_to_csr(&sss_to_coo(sss))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::skew;
+    use crate::util::SmallRng;
+        
+    fn random_skew(n: usize, seed: u64) -> Coo {
+        let mut rng = SmallRng::seed_from_u64(seed);
+        let pattern = crate::sparse::gen::random_banded_pattern(n, 3, 0.6, &mut rng);
+        skew::coo_from_pattern(n, &pattern, 1.5, &mut rng)
+    }
+
+    #[test]
+    fn coo_csr_roundtrip() {
+        let coo = random_skew(40, 1);
+        let csr = coo_to_csr(&coo);
+        csr.validate().unwrap();
+        let back = csr_to_coo(&csr);
+        assert_eq!(coo_to_csr(&back), csr);
+    }
+
+    #[test]
+    fn coo_sss_roundtrip() {
+        let coo = random_skew(40, 2);
+        let sss = coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        sss.validate().unwrap();
+        let back = sss_to_coo(&sss);
+        assert_eq!(coo_to_csr(&back), coo_to_csr(&coo));
+    }
+
+    #[test]
+    fn sss_to_csr_is_skew() {
+        let coo = random_skew(30, 3);
+        let sss = coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        let csr = sss_to_csr(&sss);
+        // remove the shift and check skew-symmetry
+        let mut s = csr.clone();
+        for i in 0..s.n {
+            let lo = s.row_ptr[i];
+            let hi = s.row_ptr[i + 1];
+            for k in lo..hi {
+                if s.col_ind[k] as usize == i {
+                    s.vals[k] = 0.0;
+                }
+            }
+        }
+        assert!(s.is_skew_symmetric(1e-12));
+    }
+
+    #[test]
+    fn symmetric_mirror_rejected_for_skew() {
+        let mut c = Coo::new(3);
+        c.push(1, 0, 2.0);
+        c.push(0, 1, 2.0); // symmetric, not skew
+        assert!(coo_to_sss(&c, Symmetry::Skew).is_err());
+        assert!(coo_to_sss(&c, Symmetry::Symmetric).is_ok());
+    }
+
+    #[test]
+    fn missing_mirror_rejected() {
+        let mut c = Coo::new(3);
+        c.push(1, 0, 2.0); // no (0,1) entry at all
+        assert!(coo_to_sss(&c, Symmetry::Skew).is_err());
+    }
+}

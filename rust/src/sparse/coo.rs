@@ -1,0 +1,221 @@
+//! Coordinate (COO) format: parallel triplet arrays.
+//!
+//! The ingestion format: MatrixMarket files and the synthetic generators
+//! produce COO, which is then converted to CSR/SSS. Also used for the
+//! tiny "outer split" of the 3-way decomposition, where the paper notes
+//! elements are few and scattered.
+
+use crate::Result;
+use anyhow::ensure;
+
+/// A sparse matrix in coordinate (triplet) form.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Coo {
+    /// Matrix dimension (square, `n x n`).
+    pub n: usize,
+    /// Row index of each entry.
+    pub rows: Vec<u32>,
+    /// Column index of each entry.
+    pub cols: Vec<u32>,
+    /// Value of each entry.
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Create an empty `n x n` COO matrix.
+    pub fn new(n: usize) -> Self {
+        Self { n, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Create with capacity for `nnz` entries.
+    pub fn with_capacity(n: usize, nnz: usize) -> Self {
+        Self {
+            n,
+            rows: Vec::with_capacity(nnz),
+            cols: Vec::with_capacity(nnz),
+            vals: Vec::with_capacity(nnz),
+        }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one entry (no dedup; see [`Coo::sum_duplicates`]).
+    pub fn push(&mut self, i: u32, j: u32, v: f64) {
+        debug_assert!((i as usize) < self.n && (j as usize) < self.n);
+        self.rows.push(i);
+        self.cols.push(j);
+        self.vals.push(v);
+    }
+
+    /// Validate structural invariants (indices in range, equal lengths).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.rows.len() == self.cols.len() && self.cols.len() == self.vals.len(),
+            "COO triplet arrays have mismatched lengths"
+        );
+        for k in 0..self.nnz() {
+            ensure!(
+                (self.rows[k] as usize) < self.n && (self.cols[k] as usize) < self.n,
+                "COO entry {k} ({}, {}) out of range for n={}",
+                self.rows[k],
+                self.cols[k],
+                self.n
+            );
+        }
+        Ok(())
+    }
+
+    /// Sort entries row-major (row, then column). Stable, O(nnz log nnz).
+    pub fn sort_row_major(&mut self) {
+        let mut order: Vec<usize> = (0..self.nnz()).collect();
+        order.sort_by_key(|&k| (self.rows[k], self.cols[k]));
+        self.permute_entries(&order);
+    }
+
+    /// Merge duplicate (i, j) entries by summing their values.
+    /// Sorts row-major as a side effect.
+    pub fn sum_duplicates(&mut self) {
+        if self.nnz() == 0 {
+            return;
+        }
+        self.sort_row_major();
+        let mut w = 0usize;
+        for k in 1..self.nnz() {
+            if self.rows[k] == self.rows[w] && self.cols[k] == self.cols[w] {
+                self.vals[w] += self.vals[k];
+            } else {
+                w += 1;
+                self.rows[w] = self.rows[k];
+                self.cols[w] = self.cols[k];
+                self.vals[w] = self.vals[k];
+            }
+        }
+        self.rows.truncate(w + 1);
+        self.cols.truncate(w + 1);
+        self.vals.truncate(w + 1);
+    }
+
+    /// Apply a symmetric permutation: entry (i, j) moves to
+    /// (perm[i], perm[j]). `perm[old] = new`.
+    pub fn permute_symmetric(&self, perm: &[u32]) -> Coo {
+        debug_assert_eq!(perm.len(), self.n);
+        let mut out = Coo::with_capacity(self.n, self.nnz());
+        for k in 0..self.nnz() {
+            out.push(perm[self.rows[k] as usize], perm[self.cols[k] as usize], self.vals[k]);
+        }
+        out
+    }
+
+    /// Matrix bandwidth: `max |i - j|` over stored entries.
+    pub fn bandwidth(&self) -> usize {
+        self.rows
+            .iter()
+            .zip(&self.cols)
+            .map(|(&i, &j)| (i as i64 - j as i64).unsigned_abs() as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Dense materialization (test/debug helper; O(n^2) memory).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut d = vec![vec![0.0; self.n]; self.n];
+        for k in 0..self.nnz() {
+            d[self.rows[k] as usize][self.cols[k] as usize] += self.vals[k];
+        }
+        d
+    }
+
+    /// `y = A x` directly from triplets (slow reference path).
+    pub fn spmv_ref(&self, x: &[f64], y: &mut [f64]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for k in 0..self.nnz() {
+            y[self.rows[k] as usize] += self.vals[k] * x[self.cols[k] as usize];
+        }
+    }
+
+    fn permute_entries(&mut self, order: &[usize]) {
+        self.rows = order.iter().map(|&k| self.rows[k]).collect();
+        self.cols = order.iter().map(|&k| self.cols[k]).collect();
+        self.vals = order.iter().map(|&k| self.vals[k]).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        let mut c = Coo::new(4);
+        c.push(2, 1, 3.0);
+        c.push(0, 0, 1.0);
+        c.push(2, 1, 2.0);
+        c.push(3, 0, -4.0);
+        c
+    }
+
+    #[test]
+    fn push_and_nnz() {
+        let c = sample();
+        assert_eq!(c.nnz(), 4);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn sort_row_major_orders_entries() {
+        let mut c = sample();
+        c.sort_row_major();
+        let pairs: Vec<_> = c.rows.iter().zip(&c.cols).collect();
+        let mut sorted = pairs.clone();
+        sorted.sort();
+        assert_eq!(pairs, sorted);
+    }
+
+    #[test]
+    fn sum_duplicates_merges() {
+        let mut c = sample();
+        c.sum_duplicates();
+        assert_eq!(c.nnz(), 3);
+        let d = c.to_dense();
+        assert_eq!(d[2][1], 5.0);
+        assert_eq!(d[0][0], 1.0);
+        assert_eq!(d[3][0], -4.0);
+    }
+
+    #[test]
+    fn permute_symmetric_moves_entries() {
+        let c = sample();
+        // reversal permutation
+        let perm: Vec<u32> = vec![3, 2, 1, 0];
+        let p = c.permute_symmetric(&perm);
+        let d0 = c.to_dense();
+        let d1 = p.to_dense();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(d0[i][j], d1[3 - i][3 - j]);
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_and_spmv() {
+        let mut c = sample();
+        c.sum_duplicates();
+        assert_eq!(c.bandwidth(), 3);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = [0.0; 4];
+        c.spmv_ref(&x, &mut y);
+        assert_eq!(y, [1.0, 0.0, 10.0, -4.0]);
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut c = Coo::new(2);
+        c.rows.push(5);
+        c.cols.push(0);
+        c.vals.push(1.0);
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! Compressed Row Storage (CRS/CSR).
+//!
+//! The general-matrix workhorse format (paper §1): row pointers into
+//! column-index/value arrays. Used as the non-symmetric sanity baseline
+//! and as the substrate the pattern graph is built from.
+
+use crate::Result;
+use anyhow::ensure;
+
+/// A sparse `n x n` matrix in CSR form.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Csr {
+    /// Matrix dimension.
+    pub n: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` indexes row `i`'s entries. Length `n+1`.
+    pub row_ptr: Vec<usize>,
+    /// Column index per entry, sorted ascending within a row.
+    pub col_ind: Vec<u32>,
+    /// Value per entry.
+    pub vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Entries of row `i` as `(col, val)` pairs.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        self.col_ind[lo..hi].iter().copied().zip(self.vals[lo..hi].iter().copied())
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.row_ptr.len() == self.n + 1, "row_ptr length != n+1");
+        ensure!(self.row_ptr[0] == 0, "row_ptr[0] != 0");
+        ensure!(*self.row_ptr.last().unwrap() == self.nnz(), "row_ptr end != nnz");
+        ensure!(self.col_ind.len() == self.vals.len(), "col/val length mismatch");
+        for i in 0..self.n {
+            ensure!(self.row_ptr[i] <= self.row_ptr[i + 1], "row_ptr not monotone at {i}");
+            let r = &self.col_ind[self.row_ptr[i]..self.row_ptr[i + 1]];
+            for w in r.windows(2) {
+                ensure!(w[0] < w[1], "row {i} columns not strictly ascending");
+            }
+            for &c in r {
+                ensure!((c as usize) < self.n, "row {i} column {c} out of range");
+            }
+        }
+        Ok(())
+    }
+
+    /// Value at (i, j), or 0.0 (binary search within the row).
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        match self.col_ind[lo..hi].binary_search(&(j as u32)) {
+            Ok(k) => self.vals[lo + k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Matrix bandwidth: `max |i - j|` over stored entries.
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for i in 0..self.n {
+            for (j, _) in self.row(i) {
+                bw = bw.max((i as i64 - j as i64).unsigned_abs() as usize);
+            }
+        }
+        bw
+    }
+
+    /// Transpose (O(nnz)).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.n + 1];
+        for &c in &self.col_ind {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.n {
+            counts[i + 1] += counts[i];
+        }
+        let row_ptr = counts.clone();
+        let mut col_ind = vec![0u32; self.nnz()];
+        let mut vals = vec![0.0f64; self.nnz()];
+        let mut next = counts;
+        for i in 0..self.n {
+            for (j, v) in self.row(i) {
+                let dst = next[j as usize];
+                col_ind[dst] = i as u32;
+                vals[dst] = v;
+                next[j as usize] += 1;
+            }
+        }
+        Csr { n: self.n, row_ptr, col_ind, vals }
+    }
+
+    /// Structural + numeric skew-symmetry check: `A == -A^T`.
+    pub fn is_skew_symmetric(&self, tol: f64) -> bool {
+        let t = self.transpose();
+        if t.row_ptr != self.row_ptr || t.col_ind != self.col_ind {
+            return false;
+        }
+        self.vals.iter().zip(&t.vals).all(|(a, b)| (a + b).abs() <= tol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::convert;
+    use crate::sparse::Coo;
+
+    fn sample() -> Csr {
+        // [ 0  2  0 ]
+        // [-2  0  5 ]
+        // [ 0 -5  0 ]
+        let mut c = Coo::new(3);
+        c.push(0, 1, 2.0);
+        c.push(1, 0, -2.0);
+        c.push(1, 2, 5.0);
+        c.push(2, 1, -5.0);
+        convert::coo_to_csr(&c)
+    }
+
+    #[test]
+    fn validate_ok() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn get_and_row() {
+        let a = sample();
+        assert_eq!(a.get(1, 0), -2.0);
+        assert_eq!(a.get(0, 0), 0.0);
+        assert_eq!(a.row(1).count(), 2);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = sample();
+        let tt = a.transpose().transpose();
+        assert_eq!(a, tt);
+    }
+
+    #[test]
+    fn skew_symmetry_detected() {
+        let a = sample();
+        assert!(a.is_skew_symmetric(0.0));
+        let mut b = a.clone();
+        b.vals[0] = 3.0;
+        assert!(!b.is_skew_symmetric(1e-12));
+    }
+
+    #[test]
+    fn bandwidth() {
+        assert_eq!(sample().bandwidth(), 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! DIA (diagonal) band storage for shifted skew-symmetric matrices.
+//!
+//! This is the interchange format with the L1 Pallas kernel (see
+//! `python/compile/kernels/band_spmv.py`): `A = alpha*I + S`, `S = -S^T`,
+//! and only the sub-diagonals of `S` are stored densely:
+//!
+//! `lo[d][j] = S[j + d + 1][j]` for `d in 0..beta`, zero-padded where
+//! `j + d + 1 >= n`.
+//!
+//! The dense-band layout wastes storage on explicit zeros inside the band
+//! (the LAPACK `dgbmv` trade-off the paper discusses in §2) but gives the
+//! PJRT/TPU path a fully regular access pattern.
+
+use crate::sparse::{Sss, Symmetry};
+use crate::Result;
+use anyhow::ensure;
+
+/// Dense banded shifted skew-symmetric matrix in DIA layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiaBand {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Half-bandwidth: number of stored sub-diagonals.
+    pub beta: usize,
+    /// Shift (constant diagonal of `A`).
+    pub alpha: f64,
+    /// Row-major `(beta, n)` sub-diagonal array (see module docs).
+    pub lo: Vec<f64>,
+}
+
+impl DiaBand {
+    /// All-zero band.
+    pub fn zeros(n: usize, beta: usize, alpha: f64) -> Self {
+        Self { n, beta, alpha, lo: vec![0.0; beta * n] }
+    }
+
+    /// Entry `lo[d][j]`.
+    #[inline]
+    pub fn get(&self, d: usize, j: usize) -> f64 {
+        self.lo[d * self.n + j]
+    }
+
+    /// Set `lo[d][j] = v` (i.e. `S[j+d+1][j] = v`).
+    #[inline]
+    pub fn set(&mut self, d: usize, j: usize, v: f64) {
+        self.lo[d * self.n + j] = v;
+    }
+
+    /// Build from a skew SSS matrix whose bandwidth fits in `beta`.
+    pub fn from_sss(s: &Sss, beta: usize) -> Result<Self> {
+        ensure!(s.sym == Symmetry::Skew, "DiaBand requires a skew SSS matrix");
+        let bw = s.bandwidth();
+        ensure!(bw <= beta, "matrix bandwidth {bw} exceeds beta {beta}");
+        let alpha = s.dvalues.first().copied().unwrap_or(0.0);
+        ensure!(
+            s.dvalues.iter().all(|&v| (v - alpha).abs() < 1e-12),
+            "shifted skew-symmetric form requires a constant diagonal"
+        );
+        let mut dia = DiaBand::zeros(s.n, beta, alpha);
+        for i in 0..s.n {
+            for (j, v) in s.row(i) {
+                let d = i - j as usize - 1; // i = j + d + 1
+                dia.set(d, j as usize, v);
+            }
+        }
+        Ok(dia)
+    }
+
+    /// Convert back to SSS (drops explicit zeros).
+    pub fn to_sss(&self) -> Sss {
+        let mut row_ptr = vec![0usize; self.n + 1];
+        let mut col_ind = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..self.n {
+            // row i has entries at columns j = i - d - 1 for d in 0..beta
+            for d in (0..self.beta.min(i)).rev() {
+                let j = i - d - 1;
+                let v = self.get(d, j);
+                if v != 0.0 {
+                    col_ind.push(j as u32);
+                    vals.push(v);
+                }
+            }
+            row_ptr[i + 1] = vals.len();
+        }
+        Sss {
+            n: self.n,
+            dvalues: vec![self.alpha; self.n],
+            row_ptr,
+            col_ind,
+            vals,
+            sym: Symmetry::Skew,
+        }
+    }
+
+    /// Reference `y = (alpha*I + S) x` (mirrors the Python oracle).
+    pub fn spmv_ref(&self, x: &[f64], y: &mut [f64]) {
+        let n = self.n;
+        for i in 0..n {
+            y[i] = self.alpha * x[i];
+        }
+        for d in 0..self.beta {
+            let k = d + 1;
+            if k >= n {
+                break;
+            }
+            let row = &self.lo[d * n..d * n + (n - k)];
+            for (j, &v) in row.iter().enumerate() {
+                y[j + k] += v * x[j];
+                y[j] -= v * x[j + k];
+            }
+        }
+    }
+
+    /// Flatten to f32 for the PJRT artifact input, zero-padding to
+    /// `(beta_pad, n_pad)` when the artifact config is larger.
+    pub fn to_f32_padded(&self, beta_pad: usize, n_pad: usize) -> Result<Vec<f32>> {
+        ensure!(beta_pad >= self.beta && n_pad >= self.n, "padding smaller than matrix");
+        let mut out = vec![0.0f32; beta_pad * n_pad];
+        for d in 0..self.beta {
+            for j in 0..self.n {
+                out[d * n_pad + j] = self.get(d, j) as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fraction of stored band slots that are nonzero (density of the band).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.lo.is_empty() {
+            return 0.0;
+        }
+        let nz = self.lo.iter().filter(|v| **v != 0.0).count();
+        nz as f64 / self.lo.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::convert;
+    use crate::sparse::Coo;
+
+    fn sample_sss() -> Sss {
+        let mut c = Coo::new(5);
+        for i in 0..5 {
+            c.push(i, i, 1.25);
+        }
+        for (i, j, v) in [(1, 0, 2.0), (3, 1, -1.0), (4, 2, 0.5)] {
+            c.push(i, j, v);
+            c.push(j, i, -v);
+        }
+        convert::coo_to_sss(&c, Symmetry::Skew).unwrap()
+    }
+
+    #[test]
+    fn from_sss_roundtrip() {
+        let s = sample_sss();
+        let dia = DiaBand::from_sss(&s, 2).unwrap();
+        assert_eq!(dia.alpha, 1.25);
+        assert_eq!(dia.to_sss(), s);
+    }
+
+    #[test]
+    fn beta_too_small_rejected() {
+        let s = sample_sss();
+        assert!(DiaBand::from_sss(&s, 1).is_err());
+    }
+
+    #[test]
+    fn spmv_matches_coo() {
+        let s = sample_sss();
+        let dia = DiaBand::from_sss(&s, 3).unwrap();
+        let coo = convert::sss_to_coo(&s);
+        let x: Vec<f64> = (0..5).map(|i| (i as f64) - 1.7).collect();
+        let mut y0 = vec![0.0; 5];
+        let mut y1 = vec![0.0; 5];
+        coo.spmv_ref(&x, &mut y0);
+        dia.spmv_ref(&x, &mut y1);
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn f32_padding() {
+        let s = sample_sss();
+        let dia = DiaBand::from_sss(&s, 2).unwrap();
+        let f = dia.to_f32_padded(4, 8).unwrap();
+        assert_eq!(f.len(), 32);
+        assert_eq!(f[0], 2.0); // lo[0][0] = S[1][0]
+        assert!(dia.to_f32_padded(1, 8).is_err());
+    }
+
+    #[test]
+    fn fill_ratio() {
+        let s = sample_sss();
+        let dia = DiaBand::from_sss(&s, 2).unwrap();
+        assert!((dia.fill_ratio() - 0.3).abs() < 1e-12); // 3 of 10 slots
+    }
+}

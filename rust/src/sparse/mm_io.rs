@@ -1,0 +1,166 @@
+//! MatrixMarket coordinate-format I/O.
+//!
+//! Supports `real general`, `real symmetric`, and `real skew-symmetric`
+//! headers (the SuiteSparse collection the paper draws from ships
+//! skew-symmetric relatives in this format). Symmetric/skew files store
+//! only one triangle; the reader expands to a full COO so the rest of the
+//! pipeline is uniform.
+
+use crate::sparse::Coo;
+use crate::Result;
+use anyhow::{anyhow, bail, ensure};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Symmetry field of the MatrixMarket header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmSymmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+/// Read a MatrixMarket coordinate file into a full (expanded) COO matrix.
+pub fn read_matrix_market<P: AsRef<Path>>(path: P) -> Result<(Coo, MmSymmetry)> {
+    let file = std::fs::File::open(path.as_ref())
+        .map_err(|e| anyhow!("open {:?}: {e}", path.as_ref()))?;
+    read_from(std::io::BufReader::new(file))
+}
+
+/// Reader-generic parse (unit-testable without touching disk).
+pub fn read_from<R: BufRead>(reader: R) -> Result<(Coo, MmSymmetry)> {
+    let mut lines = reader.lines();
+    let header = lines.next().ok_or_else(|| anyhow!("empty file"))??;
+    let h = header.to_ascii_lowercase();
+    ensure!(h.starts_with("%%matrixmarket"), "not a MatrixMarket file");
+    ensure!(h.contains("matrix") && h.contains("coordinate"), "only coordinate matrices supported");
+    ensure!(h.contains("real") || h.contains("integer"), "only real/integer values supported");
+    let sym = if h.contains("skew-symmetric") {
+        MmSymmetry::SkewSymmetric
+    } else if h.contains("symmetric") {
+        MmSymmetry::Symmetric
+    } else if h.contains("general") {
+        MmSymmetry::General
+    } else {
+        bail!("unsupported symmetry in header: {header}");
+    };
+
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| anyhow!("missing size line"))?;
+    let mut it = size_line.split_whitespace();
+    let nrows: usize = it.next().ok_or_else(|| anyhow!("bad size line"))?.parse()?;
+    let ncols: usize = it.next().ok_or_else(|| anyhow!("bad size line"))?.parse()?;
+    let nnz: usize = it.next().ok_or_else(|| anyhow!("bad size line"))?.parse()?;
+    ensure!(nrows == ncols, "only square matrices supported ({nrows}x{ncols})");
+
+    let mut coo = Coo::with_capacity(nrows, nnz * 2);
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().ok_or_else(|| anyhow!("bad entry line: {t}"))?.parse()?;
+        let j: usize = it.next().ok_or_else(|| anyhow!("bad entry line: {t}"))?.parse()?;
+        let v: f64 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+        ensure!(i >= 1 && i <= nrows && j >= 1 && j <= ncols, "entry ({i},{j}) out of range");
+        let (i, j) = (i as u32 - 1, j as u32 - 1);
+        coo.push(i, j, v);
+        match sym {
+            MmSymmetry::Symmetric if i != j => coo.push(j, i, v),
+            MmSymmetry::SkewSymmetric => {
+                ensure!(i != j, "skew-symmetric file stores no diagonal");
+                coo.push(j, i, -v);
+            }
+            _ => {}
+        }
+        seen += 1;
+    }
+    ensure!(seen == nnz, "header promised {nnz} entries, found {seen}");
+    Ok((coo, sym))
+}
+
+/// Write a full COO matrix as `general` (exact round-trip of all entries).
+pub fn write_matrix_market<P: AsRef<Path>>(path: P, coo: &Coo) -> Result<()> {
+    let file = std::fs::File::create(path.as_ref())?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by pars3")?;
+    writeln!(w, "{} {} {}", coo.n, coo.n, coo.nnz())?;
+    for k in 0..coo.nnz() {
+        writeln!(w, "{} {} {:.17e}", coo.rows[k] + 1, coo.cols[k] + 1, coo.vals[k])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general() {
+        let text = "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 2\n1 2 1.5\n3 1 -2.0\n";
+        let (coo, sym) = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(sym, MmSymmetry::General);
+        assert_eq!(coo.nnz(), 2);
+        assert_eq!(coo.to_dense()[0][1], 1.5);
+    }
+
+    #[test]
+    fn parse_skew_expands_mirror() {
+        let text = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n2 1 3.0\n";
+        let (coo, sym) = read_from(Cursor::new(text)).unwrap();
+        assert_eq!(sym, MmSymmetry::SkewSymmetric);
+        let d = coo.to_dense();
+        assert_eq!(d[1][0], 3.0);
+        assert_eq!(d[0][1], -3.0);
+    }
+
+    #[test]
+    fn parse_symmetric_expands_mirror() {
+        let text = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 1.0\n2 1 3.0\n";
+        let (coo, _) = read_from(Cursor::new(text)).unwrap();
+        let d = coo.to_dense();
+        assert_eq!(d[0][1], 3.0);
+        assert_eq!(d[1][0], 3.0);
+        assert_eq!(d[0][0], 1.0);
+        assert_eq!(coo.nnz(), 3);
+    }
+
+    #[test]
+    fn rejects_diagonal_in_skew() {
+        let text = "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n1 1 3.0\n";
+        assert!(read_from(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_count() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 3.0\n";
+        assert!(read_from(Cursor::new(text)).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let coo = crate::sparse::gen::small_test_matrix(20, 5, 1.0);
+        let path = std::env::temp_dir().join("pars3_mmio_test.mtx");
+        write_matrix_market(&path, &coo).unwrap();
+        let (back, _) = read_matrix_market(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(
+            crate::sparse::convert::coo_to_csr(&back),
+            crate::sparse::convert::coo_to_csr(&coo)
+        );
+    }
+}

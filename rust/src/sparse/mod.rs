@@ -1,0 +1,26 @@
+//! Sparse-matrix substrate: storage formats, conversions, I/O, generators.
+//!
+//! The paper leans on SPARSKIT for format plumbing and MATLAB for RCM;
+//! this module is the from-scratch replacement. All formats share the
+//! conventions:
+//!
+//! * indices are `u32` (column/row), pointers are `usize`;
+//! * values are `f64` (the paper's "double precision");
+//! * for skew-symmetric matrices only the **strictly lower triangle** is
+//!   stored explicitly plus the diagonal (`A[i][j] = v`, `A[j][i] = -v`).
+
+pub mod band;
+pub mod convert;
+pub mod coo;
+pub mod csr;
+pub mod dia;
+pub mod gen;
+pub mod mm_io;
+pub mod skew;
+pub mod sss;
+
+pub use band::BandProfile;
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dia::DiaBand;
+pub use sss::{Sss, Symmetry};

@@ -1,0 +1,130 @@
+//! Skew-symmetric construction helpers.
+//!
+//! The paper's systems are `A = alpha*I + S` with `S = -S^T` (shifted
+//! skew-symmetric), arising from Navier-Stokes, least squares, and
+//! skew-symmetrizer preconditioning [Mehrmann & Manguoğlu 2021]. The
+//! generators produce a *symmetric pattern* (a graph); this module turns
+//! patterns into concrete shifted skew-symmetric matrices.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::SmallRng;
+
+/// Build a full COO matrix `alpha*I + S` from a lower-triangle edge
+/// pattern: each `(i, j)` with `i > j` gets a random value `v` in
+/// `[-1, 1)` at `(i, j)` and `-v` at `(j, i)`.
+pub fn coo_from_pattern(
+    n: usize,
+    lower_edges: &[(u32, u32)],
+    alpha: f64,
+    rng: &mut SmallRng,
+) -> Coo {
+    let mut c = Coo::with_capacity(n, 2 * lower_edges.len() + n);
+    if alpha != 0.0 {
+        for i in 0..n as u32 {
+            c.push(i, i, alpha);
+        }
+    }
+    for &(i, j) in lower_edges {
+        debug_assert!(i > j, "pattern edge ({i},{j}) must be strictly lower");
+        let v = rng.gen_range_f64(-1.0, 1.0);
+        c.push(i, j, v);
+        c.push(j, i, -v);
+    }
+    c
+}
+
+/// Skew-symmetrize an arbitrary square CSR matrix: `S = (A - A^T) / 2`,
+/// returned as full COO. The paper notes general matrices can be
+/// preconditioned into near skew-symmetric form; this is the plain
+/// algebraic projection onto the skew part.
+pub fn skew_part(a: &Csr) -> Coo {
+    let t = a.transpose();
+    let mut out = Coo::with_capacity(a.n, 2 * a.nnz());
+    for i in 0..a.n {
+        for (j, v) in a.row(i) {
+            if (j as usize) != i {
+                out.push(i as u32, j, 0.5 * v);
+            }
+        }
+        for (j, v) in t.row(i) {
+            if (j as usize) != i {
+                out.push(i as u32, j, -0.5 * v);
+            }
+        }
+    }
+    out.sum_duplicates();
+    // drop numerically cancelled entries
+    let mut w = 0usize;
+    for k in 0..out.nnz() {
+        if out.vals[k] != 0.0 {
+            out.rows[w] = out.rows[k];
+            out.cols[w] = out.cols[k];
+            out.vals[w] = out.vals[k];
+            w += 1;
+        }
+    }
+    out.rows.truncate(w);
+    out.cols.truncate(w);
+    out.vals.truncate(w);
+    out
+}
+
+/// Max violation of `A == -A^T` ignoring the diagonal (0.0 = exactly skew).
+pub fn skew_violation(a: &Csr) -> f64 {
+    let t = a.transpose();
+    let mut worst = 0.0f64;
+    for i in 0..a.n {
+        for (j, v) in a.row(i) {
+            if (j as usize) == i {
+                continue;
+            }
+            worst = worst.max((v + t.get(i, j as usize)).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::convert;
+        
+    #[test]
+    fn pattern_produces_shifted_skew() {
+        let mut rng = SmallRng::seed_from_u64(7);
+        let edges = vec![(1u32, 0u32), (3, 1), (4, 0), (4, 3)];
+        let coo = coo_from_pattern(5, &edges, 2.0, &mut rng);
+        let csr = convert::coo_to_csr(&coo);
+        assert_eq!(skew_violation(&csr), 0.0);
+        for i in 0..5 {
+            assert_eq!(csr.get(i, i), 2.0);
+        }
+        assert_eq!(coo.nnz(), 13);
+    }
+
+    #[test]
+    fn skew_part_of_general_matrix() {
+        // A = [[1, 3], [1, 2]] -> S = [[0, 1], [-1, 0]]
+        let mut c = Coo::new(2);
+        c.push(0, 0, 1.0);
+        c.push(0, 1, 3.0);
+        c.push(1, 0, 1.0);
+        c.push(1, 1, 2.0);
+        let s = skew_part(&convert::coo_to_csr(&c));
+        let d = s.to_dense();
+        assert_eq!(d[0][1], 1.0);
+        assert_eq!(d[1][0], -1.0);
+        assert_eq!(d[0][0], 0.0);
+        let csr = convert::coo_to_csr(&s);
+        assert!(csr.is_skew_symmetric(1e-15));
+    }
+
+    #[test]
+    fn skew_part_cancels_symmetric_input() {
+        let mut c = Coo::new(3);
+        c.push(0, 1, 2.0);
+        c.push(1, 0, 2.0);
+        let s = skew_part(&convert::coo_to_csr(&c));
+        assert_eq!(s.nnz(), 0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Symmetric Sparse Skyline (SSS) storage.
+//!
+//! The paper's kernel format (Fig. 3 / Alg. 1): the main diagonal is a
+//! dense array `dvalues`, and only the strictly **lower** triangle is
+//! compressed row-wise. The implied upper triangle is the mirror:
+//! `A[j][i] = sign * A[i][j]` with `sign = +1` (symmetric) or `-1`
+//! (skew-symmetric) — the single structure serves both, matching the
+//! paper's remark that the approach "naturally applies" to symmetric
+//! SpMV.
+
+use crate::Result;
+use anyhow::ensure;
+
+/// Mirror convention for the implied upper triangle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Symmetry {
+    /// `A[j][i] = A[i][j]`.
+    Symmetric,
+    /// `A[j][i] = -A[i][j]` (and the stored diagonal is the shift `alpha`).
+    Skew,
+}
+
+impl Symmetry {
+    /// Sign applied to the mirrored entry.
+    #[inline]
+    pub fn sign(self) -> f64 {
+        match self {
+            Symmetry::Symmetric => 1.0,
+            Symmetry::Skew => -1.0,
+        }
+    }
+}
+
+/// Sparse matrix in SSS form (diagonal + strictly lower triangle).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sss {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Dense main diagonal (`alpha` per row for shifted skew-symmetric).
+    pub dvalues: Vec<f64>,
+    /// Row pointers into `col_ind`/`vals`, length `n+1`, lower triangle only.
+    pub row_ptr: Vec<usize>,
+    /// Column indices (each `< row`), ascending within a row.
+    pub col_ind: Vec<u32>,
+    /// Lower-triangle values.
+    pub vals: Vec<f64>,
+    /// Mirror convention.
+    pub sym: Symmetry,
+}
+
+impl Sss {
+    /// Stored off-diagonal entries (lower triangle only).
+    pub fn nnz_lower(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Logical nonzeros of the full matrix (both triangles + nonzero diag).
+    pub fn nnz_logical(&self) -> usize {
+        2 * self.nnz_lower() + self.dvalues.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Entries of lower-triangle row `i` as `(col, val)`.
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, f64)> + '_ {
+        let lo = self.row_ptr[i];
+        let hi = self.row_ptr[i + 1];
+        self.col_ind[lo..hi].iter().copied().zip(self.vals[lo..hi].iter().copied())
+    }
+
+    /// Bandwidth of the stored lower triangle: `max (i - j)`.
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for i in 0..self.n {
+            for (j, _) in self.row(i) {
+                bw = bw.max(i - j as usize);
+            }
+        }
+        bw
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.dvalues.len() == self.n, "dvalues length != n");
+        ensure!(self.row_ptr.len() == self.n + 1, "row_ptr length != n+1");
+        ensure!(self.row_ptr[0] == 0, "row_ptr[0] != 0");
+        ensure!(*self.row_ptr.last().unwrap() == self.nnz_lower(), "row_ptr end != nnz");
+        ensure!(self.col_ind.len() == self.vals.len(), "col/val length mismatch");
+        for i in 0..self.n {
+            ensure!(self.row_ptr[i] <= self.row_ptr[i + 1], "row_ptr not monotone at {i}");
+            let r = &self.col_ind[self.row_ptr[i]..self.row_ptr[i + 1]];
+            for w in r.windows(2) {
+                ensure!(w[0] < w[1], "row {i} columns not strictly ascending");
+            }
+            for &c in r {
+                ensure!((c as usize) < i, "row {i}: column {c} not strictly lower");
+            }
+        }
+        Ok(())
+    }
+
+    /// Count per-row lower nnz into `out` (used by distribution planning).
+    pub fn row_counts(&self) -> Vec<usize> {
+        (0..self.n).map(|i| self.row_ptr[i + 1] - self.row_ptr[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::convert;
+    use crate::sparse::Coo;
+
+    pub(crate) fn sample_skew() -> Sss {
+        // alpha = 2 on the diagonal, lower entries (2,0)=1.5, (3,1)=-0.5, (3,2)=4
+        let mut c = Coo::new(4);
+        for i in 0..4 {
+            c.push(i, i, 2.0);
+        }
+        c.push(2, 0, 1.5);
+        c.push(0, 2, -1.5);
+        c.push(3, 1, -0.5);
+        c.push(1, 3, 0.5);
+        c.push(3, 2, 4.0);
+        c.push(2, 3, -4.0);
+        convert::coo_to_sss(&c, Symmetry::Skew).unwrap()
+    }
+
+    #[test]
+    fn validate_and_counts() {
+        let s = sample_skew();
+        s.validate().unwrap();
+        assert_eq!(s.nnz_lower(), 3);
+        assert_eq!(s.nnz_logical(), 10);
+        assert_eq!(s.row_counts(), vec![0, 0, 1, 2]);
+    }
+
+    #[test]
+    fn bandwidth() {
+        assert_eq!(sample_skew().bandwidth(), 2);
+    }
+
+    #[test]
+    fn sign_convention() {
+        assert_eq!(Symmetry::Skew.sign(), -1.0);
+        assert_eq!(Symmetry::Symmetric.sign(), 1.0);
+    }
+}

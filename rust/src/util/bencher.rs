@@ -1,0 +1,87 @@
+//! Minimal benchmark harness (`criterion` substitute, offline
+//! environment). Benches are `harness = false` binaries that use this
+//! to get warmup + repeated timing + criterion-style output, and write
+//! a markdown report under `target/bench_reports/`.
+
+use crate::perf::{time_fn, Timing};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// A named group of measurements, rendered like criterion output.
+pub struct Bencher {
+    group: String,
+    lines: Vec<String>,
+    report: String,
+}
+
+impl Bencher {
+    /// Start a bench group (one per bench binary).
+    pub fn new(group: &str) -> Self {
+        println!("\nBenchmarking group: {group}");
+        Self { group: group.to_string(), lines: Vec::new(), report: String::new() }
+    }
+
+    /// Time `f` with warmup and `reps` measured runs.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, reps: usize, f: F) -> Timing {
+        let t = time_fn(warmup, reps, f);
+        let line = format!(
+            "{}/{name:<40} time: [min {} median {} mean {}]",
+            self.group,
+            fmt_t(t.min),
+            fmt_t(t.median),
+            fmt_t(t.mean)
+        );
+        println!("{line}");
+        self.lines.push(line);
+        t
+    }
+
+    /// Attach a pre-rendered markdown section to the report file.
+    pub fn section(&mut self, md: &str) {
+        println!("{md}");
+        self.report.push_str(md);
+        self.report.push('\n');
+    }
+
+    /// Write `target/bench_reports/<group>.md` with timings + sections.
+    pub fn finish(self) {
+        let dir = PathBuf::from("target/bench_reports");
+        let _ = std::fs::create_dir_all(&dir);
+        let mut out = format!("# bench: {}\n\n```\n", self.group);
+        for l in &self.lines {
+            let _ = writeln!(out, "{l}");
+        }
+        out.push_str("```\n\n");
+        out.push_str(&self.report);
+        let path = dir.join(format!("{}.md", self.group));
+        if std::fs::write(&path, out).is_ok() {
+            println!("\nreport written to {}", path.display());
+        }
+    }
+}
+
+fn fmt_t(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{secs:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_formats() {
+        let mut b = Bencher::new("selftest");
+        let t = b.bench("noop", 1, 3, || { std::hint::black_box(1 + 1); });
+        assert!(t.min >= 0.0);
+        assert_eq!(fmt_t(0.5e-7), "50.0 ns");
+        assert_eq!(fmt_t(2.0), "2.000 s");
+    }
+}

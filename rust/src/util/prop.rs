@@ -1,0 +1,59 @@
+//! Tiny property-test driver (`proptest` substitute, offline environment).
+//!
+//! Runs a property over many seeded random cases and reports the failing
+//! seed so a failure reproduces deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla rpath on this offline box)
+//! use pars3::util::prop::for_all;
+//! for_all("sum commutes", 64, |rng| {
+//!     let a = rng.gen_f64();
+//!     let b = rng.gen_f64();
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::SmallRng;
+
+/// Run `body` for `cases` seeds (0..cases). Panics with the failing seed
+/// embedded in the message on the first failure.
+pub fn for_all<F: Fn(&mut SmallRng) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: u64,
+    body: F,
+) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = SmallRng::seed_from_u64(seed);
+            body(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        for_all("addition commutes", 16, |rng| {
+            let a = rng.gen_f64();
+            let b = rng.gen_f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn reports_failing_seed() {
+        for_all("always fails", 4, |_| panic!("nope"));
+    }
+}

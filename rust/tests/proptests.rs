@@ -1,0 +1,239 @@
+//! Property-based tests over coordinator/kernel invariants.
+//!
+//! Uses the in-crate randomized driver `util::prop::for_all` (the
+//! offline registry has no proptest; failures reproduce by seed).
+
+use pars3::coordinator::{Backend, Config, Coordinator};
+use pars3::graph::coloring::{color_rows, verify_coloring};
+use pars3::graph::{rcm, Adjacency};
+use pars3::kernel::conflict::{BlockDist, ConflictMap};
+use pars3::kernel::serial_sss::sss_spmv;
+use pars3::kernel::Split3;
+use pars3::mpisim::Window;
+use pars3::sparse::{convert, gen, skew, Symmetry};
+use pars3::util::prop::for_all;
+use pars3::util::SmallRng;
+use std::sync::Arc;
+
+/// Random shifted skew-symmetric matrix + RCM-banded SSS form.
+fn random_banded(rng: &mut SmallRng) -> pars3::sparse::Sss {
+    let n = 20 + rng.gen_range_usize(0, 180);
+    let per_row = 1 + rng.gen_range_usize(0, 6);
+    let mut edges = gen::random_banded_pattern(n, per_row, 0.5, rng);
+    gen::add_long_range(&mut edges, n, 0.1 * rng.gen_f64(), rng);
+    let alpha = rng.gen_range_f64(0.5, 4.0);
+    let coo = skew::coo_from_pattern(n, &edges, alpha, rng);
+    let g = Adjacency::from_coo(&coo);
+    let perm = rcm(&g);
+    convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap()
+}
+
+#[test]
+fn prop_rcm_is_always_a_permutation() {
+    for_all("rcm permutation", 40, |rng| {
+        let n = 5 + rng.gen_range_usize(0, 200);
+        let edges = gen::random_banded_pattern(n, 1 + rng.gen_range_usize(0, 4), 0.4, rng);
+        let g = Adjacency::from_lower_edges(n, &edges);
+        let perm = rcm(&g);
+        let mut seen = vec![false; n];
+        for &p in &perm {
+            assert!(!seen[p as usize], "duplicate target {p}");
+            seen[p as usize] = true;
+        }
+    });
+}
+
+#[test]
+fn prop_split3_partitions_nnz_exactly() {
+    for_all("split3 partition", 40, |rng| {
+        let s = random_banded(rng);
+        let bw = s.bandwidth().max(1);
+        let split_bw = 1 + rng.gen_range_usize(0, bw + 2);
+        let sp = Split3::new(&s, split_bw).unwrap();
+        assert_eq!(sp.nnz_middle() + sp.nnz_outer(), s.nnz_lower());
+        assert_eq!(sp.unsplit(), s, "unsplit must roundtrip");
+        // every middle entry within split_bw, every outer beyond
+        for i in 0..sp.n {
+            for (j, _) in sp.middle.row(i) {
+                assert!(i - j as usize <= split_bw);
+            }
+        }
+        for e in &sp.outer {
+            assert!((e.row - e.col) as usize > split_bw);
+        }
+    });
+}
+
+#[test]
+fn prop_pars3_matches_serial_for_any_rank_count() {
+    for_all("pars3 == serial", 30, |rng| {
+        let s = random_banded(rng);
+        let n = s.n;
+        let p = 1 + rng.gen_range_usize(0, n.min(24));
+        let outer_bw = 1 + rng.gen_range_usize(0, 5);
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect();
+        let mut want = vec![0.0; n];
+        sss_spmv(&s, &x, &mut want);
+        let split = Split3::with_outer_bw(&s, outer_bw).unwrap();
+        let plan = pars3::kernel::pars3::Pars3Plan::new(split, p).unwrap();
+        let (got, _) = plan.execute_emulated(&x);
+        for (k, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-9, "row {k}: {a} vs {b} (n={n} p={p})");
+        }
+    });
+}
+
+#[test]
+fn prop_conflict_map_is_consistent() {
+    for_all("conflict accounting", 30, |rng| {
+        let s = random_banded(rng);
+        let p = 1 + rng.gen_range_usize(0, s.n.min(32));
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let cm = ConflictMap::analyze(&split, p);
+        // safe + conflicting covers everything exactly once
+        assert_eq!(
+            cm.total_safe() + cm.total_conflicts(),
+            split.nnz_middle() + split.nnz_outer()
+        );
+        // rank 0 never conflicts (paper §3)
+        assert_eq!(cm.rank0_conflicts(), 0);
+        // every conflict targets a strictly lower rank (lower triangle)
+        for (r, rc) in cm.per_rank.iter().enumerate() {
+            for &t in &rc.target_ranks {
+                assert!(t < r, "rank {r} targets {t}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_block_dist_covers_rows_exactly_once() {
+    for_all("block distribution", 60, |rng| {
+        let n = 1 + rng.gen_range_usize(0, 500);
+        let p = 1 + rng.gen_range_usize(0, 80);
+        let d = BlockDist::new(n, p);
+        let mut owner = vec![usize::MAX; n];
+        for r in 0..p {
+            let (a, b) = d.range(r);
+            for row in a..b {
+                assert_eq!(owner[row], usize::MAX, "row {row} double-owned");
+                owner[row] = r;
+                assert_eq!(d.rank_of(row), r);
+            }
+        }
+        assert!(owner.iter().all(|&o| o != usize::MAX));
+    });
+}
+
+#[test]
+fn prop_coloring_is_always_conflict_free() {
+    for_all("coloring valid", 25, |rng| {
+        let s = random_banded(rng);
+        let c = color_rows(&s);
+        assert!(verify_coloring(&s, &c));
+        assert_eq!(c.classes.iter().map(Vec::len).sum::<usize>(), s.n);
+    });
+}
+
+#[test]
+fn prop_window_accumulate_is_linear() {
+    for_all("window linearity", 20, |rng| {
+        let n = 1 + rng.gen_range_usize(0, 64);
+        let w = Window::new(n);
+        let mut expect = vec![0.0f64; n];
+        for _ in 0..200 {
+            let i = rng.gen_range_usize(0, n);
+            let v = rng.gen_range_f64(-1.0, 1.0);
+            w.add(i, v);
+            expect[i] += v;
+        }
+        for (a, b) in w.to_vec().iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_coordinator_spmv_backends_agree() {
+    for_all("coordinator backends", 15, |rng| {
+        let mut coord = Coordinator::new(Config::default());
+        let n = 50 + rng.gen_range_usize(0, 150);
+        let coo = gen::small_test_matrix(n, rng.next_u64(), 1.0 + rng.gen_f64());
+        let prep = coord.prepare("prop", &coo).unwrap();
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let y0 = coord.spmv(&prep, &x, Backend::Serial).unwrap();
+        let p = 1 + rng.gen_range_usize(0, 12);
+        let y1 = coord.spmv(&prep, &x, Backend::Pars3 { p }).unwrap();
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_skew_invariant_preserved_by_pipeline() {
+    // (x, Sx) = 0 must hold after reorder + split + parallel execution
+    for_all("skew invariant", 20, |rng| {
+        let s = random_banded(rng);
+        let alpha = s.dvalues[0];
+        let n = s.n;
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let p = 1 + rng.gen_range_usize(0, 8);
+        let plan = pars3::kernel::pars3::Pars3Plan::new(split, p).unwrap();
+        let (y, _) = plan.execute_emulated(&x);
+        let xay: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let xx: f64 = x.iter().map(|v| v * v).sum();
+        assert!(
+            (xay - alpha * xx).abs() < 1e-7 * (1.0 + xx),
+            "xAy={xay} alpha*xx={}",
+            alpha * xx
+        );
+    });
+}
+
+#[test]
+fn prop_threaded_pars3_matches_emulated() {
+    for_all("threaded == emulated", 8, |rng| {
+        let s = random_banded(rng);
+        let x: Vec<f64> = (0..s.n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let p = 1 + rng.gen_range_usize(0, s.n.min(6));
+        let plan = Arc::new(pars3::kernel::pars3::Pars3Plan::new(split, p).unwrap());
+        let (a, _) = plan.execute_threaded(&x);
+        let (b, _) = plan.execute_emulated(&x);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_symmetric_variant_works_through_pars3() {
+    // paper §1: "our approach also naturally applies to parallel sparse
+    // symmetric SpMVs" — same pipeline, sign = +1
+    for_all("symmetric pars3 == serial", 15, |rng| {
+        let n = 30 + rng.gen_range_usize(0, 120);
+        let edges = gen::random_banded_pattern(n, 1 + rng.gen_range_usize(0, 4), 0.5, rng);
+        let mut coo = pars3::sparse::Coo::new(n);
+        for i in 0..n as u32 {
+            coo.push(i, i, rng.gen_range_f64(1.0, 3.0));
+        }
+        for &(i, j) in &edges {
+            let v = rng.gen_range_f64(-1.0, 1.0);
+            coo.push(i, j, v);
+            coo.push(j, i, v); // symmetric mirror
+        }
+        let s = convert::coo_to_sss(&coo, Symmetry::Symmetric).unwrap();
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let mut want = vec![0.0; n];
+        sss_spmv(&s, &x, &mut want);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let p = 1 + rng.gen_range_usize(0, n.min(12));
+        let plan = pars3::kernel::pars3::Pars3Plan::new(split, p).unwrap();
+        let (got, _) = plan.execute_emulated(&x);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    });
+}

@@ -1,0 +1,157 @@
+//! PJRT runtime integration: AOT artifacts vs native Rust numerics.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! note) if the manifest is absent so `cargo test` works standalone.
+
+use pars3::coordinator::{Backend, Config, Coordinator};
+use pars3::runtime::{Manifest, PjrtRuntime};
+use pars3::solver::mrs::MrsOptions;
+use pars3::sparse::{convert, gen, DiaBand, Symmetry};
+use pars3::util::SmallRng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping PJRT test: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn banded_system(n: usize, beta_max: usize, alpha: f64, seed: u64) -> DiaBand {
+    let mut rng = SmallRng::seed_from_u64(seed);
+    let mut dia = DiaBand::zeros(n, beta_max, alpha);
+    for d in 0..beta_max {
+        for j in 0..n.saturating_sub(d + 1) {
+            if rng.gen_f64() < 0.4 {
+                dia.set(d, j, rng.gen_range_f64(-1.0, 1.0));
+            }
+        }
+    }
+    dia
+}
+
+#[test]
+fn spmv_artifact_matches_rust_dia_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let dia = banded_system(1024, 16, 1.7, 1);
+    let x: Vec<f64> = (0..1024).map(|i| (i as f64 * 0.031).sin()).collect();
+    let mut want = vec![0.0; 1024];
+    dia.spmv_ref(&x, &mut want);
+
+    let art = rt.load("spmv_n1024_b16").unwrap();
+    let lo = dia.to_f32_padded(16, 1024).unwrap();
+    let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+    let out = art.execute_f32(&[&lo, &x32, &[1.7f32]]).unwrap();
+    assert_eq!(out.len(), 1);
+    for (k, (a, b)) in out[0].iter().zip(&want).enumerate() {
+        assert!((*a as f64 - b).abs() < 1e-3, "row {k}: {a} vs {b}");
+    }
+}
+
+/// Narrow-band fixture whose RCM bandwidth fits the artifact configs.
+fn narrow_system(n: usize, alpha: f64, seed: u64) -> pars3::sparse::Coo {
+    let mut rng = SmallRng::seed_from_u64(seed);
+    let edges = gen::random_banded_pattern(n, 3, 0.4, &mut rng);
+    pars3::sparse::skew::coo_from_pattern(n, &edges, alpha, &mut rng)
+}
+
+#[test]
+fn padded_execution_matches_smaller_problem() {
+    // a n=700 problem runs on the n=1024 artifact via zero padding
+    let Some(dir) = artifacts_dir() else { return };
+    let coo = narrow_system(700, 2.0, 3);
+    let mut coord = Coordinator::new(Config { artifacts_dir: dir, ..Config::default() });
+    let prep = coord.prepare("pad", &coo).unwrap();
+    assert!(prep.rcm_bw <= 16 || prep.n <= 4096, "fixture fits an artifact");
+    let x: Vec<f64> = (0..700).map(|i| (i as f64 * 0.05).cos()).collect();
+    let y_serial = coord.spmv(&prep, &x, Backend::Serial).unwrap();
+    let y_pjrt = coord.spmv(&prep, &x, Backend::Pjrt).unwrap();
+    assert_eq!(y_pjrt.len(), 700);
+    for (k, (a, b)) in y_pjrt.iter().zip(&y_serial).enumerate() {
+        assert!((a - b).abs() < 1e-3, "row {k}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn mrs_step_artifact_consistent_with_native_iteration() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = PjrtRuntime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let dia = banded_system(1024, 16, 2.0, 7);
+    let b: Vec<f64> = (0..1024).map(|i| ((i % 17) as f64 - 8.0) * 0.1).collect();
+
+    // one native f64 iteration
+    let mut p = vec![0.0; 1024];
+    dia.spmv_ref(&b, &mut p);
+    let rr: f64 = b.iter().map(|v| v * v).sum();
+    let pp: f64 = p.iter().map(|v| v * v).sum();
+    let a = 2.0 * rr / pp;
+    let x1: Vec<f64> = b.iter().map(|&r| a * r).collect();
+    let r1: Vec<f64> = b.iter().zip(&p).map(|(r, p)| r - a * p).collect();
+
+    // one artifact iteration
+    let art = rt.load("mrs_step_n1024_b16").unwrap();
+    let lo = dia.to_f32_padded(16, 1024).unwrap();
+    let x32 = vec![0.0f32; 1024];
+    let r32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+    let out = art.execute_f32(&[&lo, &x32, &r32, &[2.0f32]]).unwrap();
+    assert_eq!(out.len(), 3);
+    // rr reported by the artifact is ||r||^2 before the update
+    assert!((out[2][0] as f64 - rr).abs() < 1e-2 * rr, "rr {} vs {rr}", out[2][0]);
+    for (k, (g, w)) in out[0].iter().zip(&x1).enumerate() {
+        assert!((*g as f64 - w).abs() < 1e-3, "x row {k}");
+    }
+    for (k, (g, w)) in out[1].iter().zip(&r1).enumerate() {
+        assert!((*g as f64 - w).abs() < 1e-3, "r row {k}");
+    }
+}
+
+#[test]
+fn pjrt_solve_converges_and_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let coo = narrow_system(900, 3.0, 13);
+    let mut coord = Coordinator::new(Config { artifacts_dir: dir, ..Config::default() });
+    let prep = coord.prepare("slv", &coo).unwrap();
+    let b: Vec<f64> = (0..900).map(|i| ((i * 3) % 11) as f64 * 0.1 - 0.5).collect();
+    let opts = MrsOptions { alpha: 3.0, max_iters: 400, tol: 1e-6 };
+    let r_native = coord.solve(&prep, &b, &opts, Backend::Serial).unwrap();
+    let r_pjrt = coord.solve(&prep, &b, &opts, Backend::Pjrt).unwrap();
+    assert!(r_native.converged && r_pjrt.converged);
+    let err = r_native
+        .x
+        .iter()
+        .zip(&r_pjrt.x)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(err < 1e-2, "f32 artifact path err {err}");
+}
+
+#[test]
+fn manifest_best_fit_and_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.by_name("nope").is_err());
+    let a = m.best_fit("mrs_step", 1024, 16).unwrap();
+    assert_eq!(a.name, "mrs_step_n1024_b16");
+    assert!(m.best_fit("spmv", 8193, 1).is_err());
+    // whole-solve artifact exists too
+    assert!(m.artifacts.iter().any(|a| a.kind == "mrs_solve"));
+}
+
+#[test]
+fn dia_conversion_guards() {
+    // non-constant diagonal must be rejected by the PJRT path
+    let mut coo = gen::small_test_matrix(100, 5, 2.0);
+    // perturb one diagonal entry
+    for k in 0..coo.nnz() {
+        if coo.rows[k] == coo.cols[k] {
+            coo.vals[k] = 9.0;
+            break;
+        }
+    }
+    let sss = convert::coo_to_sss(&coo, Symmetry::Skew).unwrap();
+    assert!(DiaBand::from_sss(&sss, sss.bandwidth().max(1)).is_err());
+}
