@@ -4,8 +4,8 @@
 
 use pars3::coordinator::Config;
 use pars3::graph::coloring::color_rows;
-use pars3::kernel::coloring_spmv::ColoringPlan;
-use pars3::kernel::pars3::Pars3Plan;
+use pars3::kernel::registry::{build_from_split, build_from_sss, KernelConfig};
+use pars3::kernel::Spmv;
 use pars3::mpisim::CostModel;
 use pars3::report::{self, md_table};
 use pars3::util::bencher::Bencher;
@@ -38,19 +38,24 @@ fn main() {
         md_table(&["Matrix", "phases", "coloring time s", "RCM bw"], &rows)
     ));
 
-    // real executor timings at p=4, single core (overhead comparison)
+    // real executor timings at p=4, single core (overhead comparison),
+    // both kernels constructed by name through the registry
     for (m, prep) in suite.iter().take(2) {
         let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.11).sin()).collect();
-        let pars3_plan = Pars3Plan::new(prep.split.clone(), 4).unwrap();
-        b.bench(&format!("pars3-emulated-p4/{}", m.name), 2, 5, || {
-            let (y, _) = pars3_plan.execute_emulated(&x);
-            std::hint::black_box(y.len());
-        });
-        let color_plan = ColoringPlan::new(prep.sss.clone(), 4).unwrap();
-        b.bench(&format!("coloring-emulated-p4/{}", m.name), 2, 5, || {
-            let y = color_plan.execute_emulated(&x);
-            std::hint::black_box(y.len());
-        });
+        let mut y = vec![0.0; prep.n];
+        let kcfg = KernelConfig { threads: 4, outer_bw: cfg.outer_bw, threaded: false };
+        // pars3 reuses the already-computed split; coloring needs the SSS
+        let mut kernels = vec![
+            build_from_split(prep.split.clone(), &kcfg).expect("pars3"),
+            build_from_sss("coloring", prep.sss.clone(), &kcfg).expect("coloring"),
+        ];
+        for k in &mut kernels {
+            let name = k.name();
+            b.bench(&format!("{name}-emulated-p4/{}", m.name), 2, 5, || {
+                k.apply(&x, &mut y);
+                std::hint::black_box(&y);
+            });
+        }
     }
 
     b.section(&report::coloring_compare(&suite, &cfg.ranks, &model));

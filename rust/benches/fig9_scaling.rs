@@ -4,6 +4,8 @@
 
 use pars3::coordinator::Config;
 use pars3::kernel::pars3::Pars3Plan;
+use pars3::kernel::registry::{build_from_split, KernelConfig};
+use pars3::kernel::Spmv;
 use pars3::mpisim::CostModel;
 use pars3::report;
 use pars3::util::bencher::Bencher;
@@ -31,13 +33,17 @@ fn main() {
         });
     }
 
-    // emulated kernel execution (the per-iteration hot path, 1 core)
+    // emulated kernel execution (the per-iteration hot path, 1 core),
+    // constructed by name through the unified registry
     for (m, prep) in &suite {
         let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.29).cos()).collect();
-        let plan = Pars3Plan::new(prep.split.clone(), 8.min(prep.n)).unwrap();
+        let mut y = vec![0.0; prep.n];
+        let kcfg = KernelConfig { threads: 8, outer_bw: cfg.outer_bw, threaded: false };
+        // reuse the split prepared_suite already computed
+        let mut k = build_from_split(prep.split.clone(), &kcfg).expect("pars3 kernel");
         b.bench(&format!("pars3-emulated-p8/{}", m.name), 2, 5, || {
-            let (y, _) = plan.execute_emulated(&x);
-            std::hint::black_box(y.len());
+            k.apply(&x, &mut y);
+            std::hint::black_box(&y);
         });
     }
 

@@ -1,13 +1,14 @@
-//! Bench: **Fig. 3 / Alg. 1** — the serial SSS kernel baseline, with the
-//! plain-CSR kernel and the split3 serial path for context (memory-bound
-//! roofline comparison; SSS touches half the matrix bytes of CSR).
+//! Bench: **Fig. 3 / Alg. 1** — the serial SSS kernel baseline, with
+//! the plain-CSR kernel and the LAPACK-style dgbmv band kernel for
+//! context (memory-bound roofline comparison; SSS touches half the
+//! matrix bytes of CSR). All kernels are constructed *by name* through
+//! the unified registry (`pars3::kernel::registry`), so this bench
+//! automatically covers any kernel added there.
 
 use pars3::coordinator::Config;
-use pars3::kernel::csr_spmv::csr_spmv;
-use pars3::kernel::serial_sss::sss_spmv;
-use pars3::kernel::{Spmv, Split3};
+use pars3::kernel::registry::{build_from_sss, KernelConfig};
+use pars3::kernel::Spmv;
 use pars3::report::{self, md_table};
-use pars3::sparse::convert;
 use pars3::util::bencher::Bencher;
 
 fn main() {
@@ -16,47 +17,47 @@ fn main() {
     let mut b = Bencher::new("serial_baseline");
     let mut rows = Vec::new();
 
+    // serial registry kernels; dgbmv only where the dense band array
+    // stays representative (its (2*bw+1)*n storage explodes on the
+    // widest analogues — the §2 trade-off the bench demonstrates)
     for (m, prep) in &suite {
         let n = prep.n;
         let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin()).collect();
         let mut y = vec![0.0; n];
+        let kcfg = KernelConfig { threads: 1, outer_bw: cfg.outer_bw, threaded: false };
 
-        let t_sss = b.bench(&format!("sss/{}", m.name), 2, 5, || {
-            sss_spmv(&prep.sss, &x, &mut y);
-            std::hint::black_box(&y);
-        });
-
-        let csr = convert::sss_to_csr(&prep.sss);
-        let t_csr = b.bench(&format!("csr/{}", m.name), 2, 5, || {
-            csr_spmv(&csr, &x, &mut y);
-            std::hint::black_box(&y);
-        });
-
-        let split = Split3::with_outer_bw(&prep.sss, cfg.outer_bw).unwrap();
-        let t_split = b.bench(&format!("split3-serial/{}", m.name), 2, 5, || {
-            split.spmv_serial(&x, &mut y);
-            std::hint::black_box(&y);
-        });
-
-        // LAPACK-style dgbmv baseline (§2): dense-band storage trade-off.
-        // Skip the widest analogues — their (2*bw+1)*n dense band array
-        // would not be representative (waste ratio ~1).
-        if prep.rcm_bw < 2_000 {
-            let dg = pars3::kernel::dgbmv::BandedDgbmv::from_sss(&prep.sss).unwrap();
-            let t_dg = b.bench(&format!("dgbmv/{}", m.name), 1, 3, || {
-                dg.spmv(&x, &mut y);
+        let mut timings = Vec::new();
+        for &name in &["serial_sss", "csr", "dgbmv"] {
+            if name == "dgbmv" && prep.rcm_bw >= 2_000 {
+                continue;
+            }
+            let mut k = build_from_sss(name, prep.sss.clone(), &kcfg).expect(name);
+            let t = b.bench(&format!("{name}/{}", m.name), 2, 5, || {
+                k.apply(&x, &mut y);
                 std::hint::black_box(&y);
             });
-            b.section(&format!(
-                "dgbmv {}: waste ratio {:.3}, {:.2}x vs SSS\n",
-                m.name,
-                dg.waste_ratio(),
-                t_dg.min / t_sss.min
-            ));
+            timings.push((name, t, k.flops(), k.bytes()));
         }
 
-        let k = pars3::kernel::serial_sss::SerialSss::new(prep.sss.clone());
-        let th = pars3::perf::throughput(t_sss, k.flops(), k.bytes());
+        // the split3 serial path (pars3's single-rank numerics) for the
+        // same matrix, via the registry's pars3 kernel at p=1
+        let mut k1 = build_from_sss("pars3", prep.sss.clone(), &kcfg).expect("pars3");
+        let t_split = b.bench(&format!("pars3-p1/{}", m.name), 2, 5, || {
+            k1.apply(&x, &mut y);
+            std::hint::black_box(&y);
+        });
+
+        let (t_sss, flops, bytes) = timings
+            .iter()
+            .find(|(n, ..)| *n == "serial_sss")
+            .map(|&(_, t, f, by)| (t, f, by))
+            .expect("serial_sss timing");
+        let t_csr = timings
+            .iter()
+            .find(|(n, ..)| *n == "csr")
+            .map(|&(_, t, ..)| t)
+            .expect("csr timing");
+        let th = pars3::perf::throughput(t_sss, flops, bytes);
         rows.push(vec![
             m.name.to_string(),
             format!("{:.3e}", t_sss.min),
@@ -69,11 +70,31 @@ fn main() {
     }
 
     b.section(&format!(
-        "## Serial kernels (Alg. 1 vs CSR vs split3-serial)\n\n{}",
+        "## Serial kernels via the registry (Alg. 1 vs CSR vs pars3-p1)\n\n{}",
         md_table(
-            &["Matrix", "SSS s", "CSR s", "split3 s", "CSR/SSS", "SSS GFLOP/s", "SSS GB/s"],
+            &["Matrix", "SSS s", "CSR s", "pars3-p1 s", "CSR/SSS", "SSS GFLOP/s", "SSS GB/s"],
             &rows
         )
     ));
+
+    // dgbmv waste-ratio context (§2): dense-band storage trade-off.
+    // Computed structurally — (2*bw+1)*n slots vs n diagonal + both
+    // mirrored triangles — instead of materializing the band again.
+    let mut waste_rows = Vec::new();
+    for (m, prep) in &suite {
+        if prep.rcm_bw >= 2_000 {
+            continue;
+        }
+        let slots = (2 * prep.rcm_bw + 1) * prep.n;
+        let filled = prep.n + 2 * prep.nnz_lower;
+        let waste = 1.0 - filled as f64 / slots as f64;
+        waste_rows.push(vec![m.name.to_string(), format!("{waste:.3}")]);
+    }
+    if !waste_rows.is_empty() {
+        b.section(&format!(
+            "## dgbmv wasted band slots (explicit zeros, §2)\n\n{}",
+            md_table(&["Matrix", "waste ratio"], &waste_rows)
+        ));
+    }
     b.finish();
 }

@@ -1,16 +1,28 @@
 //! The preprocessing + execution pipeline.
+//!
+//! Preprocessing (RCM → SSS → 3-way split) happens once per matrix in
+//! [`Coordinator::prepare`]; every multiply/solve after that constructs
+//! its kernel through the unified registry
+//! ([`crate::kernel::registry`]) — there is no per-backend construction
+//! logic here. The PJRT backend is additionally gated behind the `pjrt`
+//! feature; without it, [`Backend::Pjrt`] requests fail with a clear
+//! error instead of dragging XLA into the build.
 
 use crate::coordinator::Config;
-use crate::graph::{rcm, Adjacency};
-use crate::kernel::pars3::{Pars3Kernel, Pars3Plan};
-use crate::kernel::serial_sss::{sss_spmv, SerialSss};
-use crate::kernel::{ConflictMap, Split3};
-use crate::runtime::{Manifest, PjrtRuntime};
+use crate::kernel::pars3::Pars3Plan;
+use crate::kernel::registry::{self, KernelConfig};
+use crate::kernel::{ConflictMap, Split3, Spmv};
 use crate::solver::mrs::{mrs_solve, MrsOptions, MrsResult};
-use crate::sparse::{convert, Coo, DiaBand, Sss, Symmetry};
+use crate::sparse::{Coo, Sss};
 use crate::Result;
-use anyhow::{bail, Context};
-use std::sync::Arc;
+use anyhow::bail;
+
+#[cfg(feature = "pjrt")]
+use crate::runtime::{Manifest, PjrtRuntime};
+#[cfg(feature = "pjrt")]
+use crate::sparse::DiaBand;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 /// Which executor serves the repeated multiplies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,9 +30,24 @@ pub enum Backend {
     /// Paper Alg. 1 (serial SSS).
     Serial,
     /// PARS3 parallel kernel at a given rank count.
-    Pars3 { p: usize },
-    /// AOT Pallas band kernel via PJRT (dense-band path).
+    Pars3 {
+        /// Rank count.
+        p: usize,
+    },
+    /// AOT Pallas band kernel via PJRT (dense-band path; `pjrt` feature).
     Pjrt,
+}
+
+impl Backend {
+    /// Registry kernel name for the native backends (`None` for PJRT,
+    /// which executes outside the [`Spmv`] registry).
+    pub fn kernel_name(&self) -> Option<&'static str> {
+        match self {
+            Backend::Serial => Some("serial_sss"),
+            Backend::Pars3 { .. } => Some("pars3"),
+            Backend::Pjrt => None,
+        }
+    }
 }
 
 /// A matrix after one-time preprocessing (paper §3.1.2 stages).
@@ -56,10 +83,12 @@ impl Prepared {
     }
 }
 
-/// The coordinator: owns config + (lazily) the PJRT runtime.
+/// The coordinator: owns config + (lazily, behind the `pjrt` feature)
+/// the PJRT runtime.
 pub struct Coordinator {
     /// Active configuration.
     pub cfg: Config,
+    #[cfg(feature = "pjrt")]
     runtime: Option<PjrtRuntime>,
 }
 
@@ -67,7 +96,11 @@ impl Coordinator {
     /// Create from config. The PJRT runtime is created on first use so
     /// native-only flows never touch XLA.
     pub fn new(cfg: Config) -> Self {
-        Self { cfg, runtime: None }
+        Self {
+            cfg,
+            #[cfg(feature = "pjrt")]
+            runtime: None,
+        }
     }
 
     /// Preprocess a full COO matrix: RCM reorder (Θ(NNZ)), convert to
@@ -80,15 +113,7 @@ impl Coordinator {
     /// the permutation cost disappears from the pipeline.
     pub fn prepare(&self, name: &str, coo: &Coo) -> Result<Prepared> {
         let bw_before = coo.bandwidth();
-        let g = Adjacency::from_coo(coo);
-        let mut perm = rcm(&g);
-        if crate::graph::rcm::bandwidth_under(&g, &perm) >= bw_before {
-            // original pattern recognized as already-banded: keep it
-            perm = (0..coo.n as u32).collect();
-        }
-        let reordered = coo.permute_symmetric(&perm);
-        let sss = convert::coo_to_sss(&reordered, Symmetry::Skew)
-            .context("matrix is not (shifted) skew-symmetric")?;
+        let (perm, sss) = registry::reorder_to_sss(coo)?;
         let rcm_bw = sss.bandwidth();
         let split = Split3::with_outer_bw(&sss, self.cfg.outer_bw)?;
         Ok(Prepared {
@@ -103,24 +128,40 @@ impl Coordinator {
         })
     }
 
+    /// Construct the [`Spmv`] kernel serving a native backend, via the
+    /// unified registry (the single dispatch point — no per-call-site
+    /// kernel construction anywhere else in the crate).
+    pub fn kernel(&self, prep: &Prepared, backend: Backend) -> Result<Box<dyn Spmv>> {
+        let Some(name) = backend.kernel_name() else {
+            bail!("the PJRT backend executes outside the Spmv registry");
+        };
+        let threads = match backend {
+            Backend::Pars3 { p } => p,
+            _ => 1,
+        };
+        let cfg = KernelConfig {
+            threads,
+            outer_bw: self.cfg.outer_bw,
+            threaded: self.cfg.threaded,
+        };
+        match backend {
+            // reuse the 3-way split `prepare` already computed instead
+            // of re-deriving it from the SSS form
+            Backend::Pars3 { .. } => registry::build_from_split(prep.split.clone(), &cfg),
+            _ => registry::build_from_sss(name, prep.sss.clone(), &cfg),
+        }
+    }
+
     /// One multiply `y = A x` on the chosen backend (x/y in RCM order).
     pub fn spmv(&mut self, prep: &Prepared, x: &[f64], backend: Backend) -> Result<Vec<f64>> {
         match backend {
-            Backend::Serial => {
-                let mut y = vec![0.0; prep.n];
-                sss_spmv(&prep.sss, x, &mut y);
-                Ok(y)
-            }
-            Backend::Pars3 { p } => {
-                let plan = Arc::new(prep.plan(p)?);
-                let (y, _) = if self.cfg.threaded {
-                    plan.execute_threaded(x)
-                } else {
-                    plan.execute_emulated(x)
-                };
-                Ok(y)
-            }
             Backend::Pjrt => self.spmv_pjrt(prep, x),
+            _ => {
+                let mut k = self.kernel(prep, backend)?;
+                let mut y = vec![0.0; prep.n];
+                k.apply(x, &mut y);
+                Ok(y)
+            }
         }
     }
 
@@ -133,19 +174,16 @@ impl Coordinator {
         backend: Backend,
     ) -> Result<MrsResult> {
         match backend {
-            Backend::Serial => {
-                let mut k = SerialSss::new(prep.sss.clone());
-                Ok(mrs_solve(&mut k, b, opts))
-            }
-            Backend::Pars3 { p } => {
-                let mut k = Pars3Kernel::new(prep.split.clone(), p, self.cfg.threaded)?;
-                Ok(mrs_solve(&mut k, b, opts))
-            }
             Backend::Pjrt => self.solve_pjrt(prep, b, opts),
+            _ => {
+                let mut k = self.kernel(prep, backend)?;
+                Ok(mrs_solve(&mut *k, b, opts))
+            }
         }
     }
 
     /// Access (creating on demand) the PJRT runtime.
+    #[cfg(feature = "pjrt")]
     pub fn runtime(&mut self) -> Result<&mut PjrtRuntime> {
         if self.runtime.is_none() {
             let manifest = Manifest::load(&self.cfg.artifacts_dir)?;
@@ -155,6 +193,7 @@ impl Coordinator {
     }
 
     /// Pack a prepared band into the f32 DIA inputs of an artifact.
+    #[cfg(feature = "pjrt")]
     fn pack_dia(&mut self, prep: &Prepared, kind: &str) -> Result<(String, Vec<f32>, f64, usize)> {
         if prep.rcm_bw == 0 {
             bail!("matrix has empty band");
@@ -169,6 +208,7 @@ impl Coordinator {
     }
 
     /// `y = A x` through the AOT Pallas band kernel.
+    #[cfg(feature = "pjrt")]
     pub fn spmv_pjrt(&mut self, prep: &Prepared, x: &[f64]) -> Result<Vec<f64>> {
         let (name, lo, alpha, n_pad) = self.pack_dia(prep, "spmv")?;
         let mut x32 = vec![0.0f32; n_pad];
@@ -182,6 +222,12 @@ impl Coordinator {
         Ok(out[0][..prep.n].iter().map(|&v| v as f64).collect())
     }
 
+    /// Stub when built without the `pjrt` feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn spmv_pjrt(&mut self, _prep: &Prepared, _x: &[f64]) -> Result<Vec<f64>> {
+        bail!("built without the 'pjrt' feature: rebuild with `--features pjrt`")
+    }
+
     /// MRS solve through the AOT artifacts: the Rust driver owns the
     /// stopping rule; iterations run inside PJRT (one SpMV + fused
     /// update each).
@@ -190,6 +236,7 @@ impl Coordinator {
     /// iterations per call, amortizing dispatch + transfers) over the
     /// single-step one, and hoists the band literal — the dominant
     /// per-call copy — out of the loop.
+    #[cfg(feature = "pjrt")]
     pub fn solve_pjrt(
         &mut self,
         prep: &Prepared,
@@ -252,6 +299,17 @@ impl Coordinator {
             iters,
         })
     }
+
+    /// Stub when built without the `pjrt` feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn solve_pjrt(
+        &mut self,
+        _prep: &Prepared,
+        _b: &[f64],
+        _opts: &MrsOptions,
+    ) -> Result<MrsResult> {
+        bail!("built without the 'pjrt' feature: rebuild with `--features pjrt`")
+    }
 }
 
 #[cfg(test)]
@@ -307,5 +365,28 @@ mod tests {
         coo.push(0, 1, 2.0); // symmetric — must be rejected
         let c = coordinator();
         assert!(c.prepare("bad", &coo).is_err());
+    }
+
+    #[test]
+    fn backend_kernel_names_cover_the_registry() {
+        assert_eq!(Backend::Serial.kernel_name(), Some("serial_sss"));
+        assert_eq!(Backend::Pars3 { p: 4 }.kernel_name(), Some("pars3"));
+        assert_eq!(Backend::Pjrt.kernel_name(), None);
+        for name in [Backend::Serial, Backend::Pars3 { p: 2 }]
+            .iter()
+            .filter_map(Backend::kernel_name)
+        {
+            assert!(crate::kernel::KERNEL_NAMES.contains(&name));
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_fails_cleanly_without_feature() {
+        let coo = gen::small_test_matrix(50, 14, 2.0);
+        let mut c = coordinator();
+        let prep = c.prepare("t", &coo).unwrap();
+        let err = c.spmv(&prep, &vec![0.0; 50], Backend::Pjrt).unwrap_err();
+        assert!(format!("{err:#}").contains("pjrt"));
     }
 }

@@ -54,16 +54,14 @@ impl ColoringPlan {
     /// phase. Uses the atomic window for writes so the executor stays
     /// safe even if a future coloring bug violated disjointness — the
     /// *algorithmic* structure (phases + barriers) is what we model.
-    pub fn execute_threaded(self: &Arc<Self>, x: &[f64]) -> Vec<f64> {
+    pub fn execute_threaded(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.s.n);
         let window = Window::new(self.s.n);
-        let plan = self.clone();
-        let win = window.clone();
-        let x = Arc::new(x.to_vec());
+        let win = &window;
         World::run(self.p, move |ctx| {
-            let s = &*plan.s;
+            let s = &*self.s;
             let sign = s.sym.sign();
-            for per_rank in &plan.assign {
+            for per_rank in &self.assign {
                 for &i in &per_rank[ctx.rank] {
                     let i = i as usize;
                     let xi = x[i];
@@ -107,6 +105,53 @@ impl ColoringPlan {
     }
 }
 
+/// [`crate::kernel::Spmv`] adapter over a [`ColoringPlan`] at a fixed
+/// rank count (what the kernel registry hands to solvers and benches).
+pub struct ColoringKernel {
+    plan: ColoringPlan,
+    threaded: bool,
+}
+
+impl ColoringKernel {
+    /// Color `s` and distribute over `p` ranks. `threaded = false` uses
+    /// the deterministic rank-sequential emulation.
+    pub fn new(s: Sss, p: usize, threaded: bool) -> Result<Self> {
+        Ok(Self { plan: ColoringPlan::new(s, p)?, threaded })
+    }
+
+    /// The underlying phased plan.
+    pub fn plan(&self) -> &ColoringPlan {
+        &self.plan
+    }
+}
+
+impl crate::kernel::Spmv for ColoringKernel {
+    fn n(&self) -> usize {
+        self.plan.s.n
+    }
+
+    fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+        let out = if self.threaded {
+            self.plan.execute_threaded(x)
+        } else {
+            self.plan.execute_emulated(x)
+        };
+        y.copy_from_slice(&out);
+    }
+
+    fn flops(&self) -> u64 {
+        self.plan.s.spmv_flops()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.plan.s.spmv_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "coloring"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +191,23 @@ mod tests {
         for (a, b) in got.iter().zip(&want) {
             assert!((a - b).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn spmv_adapter_matches_serial() {
+        use crate::kernel::Spmv;
+        let s = banded(80, 4);
+        let x: Vec<f64> = (0..80).map(|i| (i as f64 * 0.23).sin()).collect();
+        let mut want = vec![0.0; 80];
+        sss_spmv(&s, &x, &mut want);
+        let mut k = ColoringKernel::new(s, 3, false).unwrap();
+        let mut got = vec![0.0; 80];
+        k.apply(&x, &mut got);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        assert_eq!(k.name(), "coloring");
+        assert!(k.plan().phases() >= 1);
     }
 
     #[test]

@@ -9,11 +9,13 @@ pub mod conflict;
 pub mod csr_spmv;
 pub mod dgbmv;
 pub mod pars3;
+pub mod registry;
 pub mod serial_sss;
 pub mod split3;
 pub mod traits;
 
 pub use conflict::{BlockDist, ConflictMap};
 pub use pars3::Pars3Plan;
+pub use registry::{KernelConfig, KERNEL_NAMES};
 pub use split3::Split3;
 pub use traits::Spmv;

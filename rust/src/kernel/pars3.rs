@@ -25,7 +25,7 @@
 
 use crate::kernel::conflict::BlockDist;
 use crate::kernel::split3::Split3;
-use crate::mpisim::{Window, World};
+use crate::mpisim::{PersistentWorld, RankCtx, RankReport, Window, World};
 use crate::Result;
 use anyhow::ensure;
 use std::sync::Arc;
@@ -204,46 +204,56 @@ impl Pars3Plan {
         }
     }
 
-    /// Threaded execution over real OS threads + channels + one-sided
-    /// window. Returns `(y, stats)`.
-    pub fn execute_threaded(self: &Arc<Self>, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
+    /// One rank's full apply: halo exchange + compute + one-sided
+    /// accumulate + epoch fence. Shared by the one-shot threaded
+    /// executor and the persistent [`Pars3Threaded`] executor.
+    fn rank_apply(&self, win: &Window, x: &[f64], ctx: &mut RankCtx) -> RankReport {
+        let t0 = std::time::Instant::now();
+        let (m0, v0) = (ctx.sent_msgs, ctx.sent_values);
+        let rp = &self.ranks[ctx.rank];
+        // stage 1: block distribution — rank owns x[r0..r1]
+        let x_block = &x[rp.r0..rp.r1];
+        // stage 2: halo exchange, paper's last-to-root order
+        for &(dest, a, b) in &rp.sends {
+            ctx.send(dest, TAG_HALO, x[a..b].to_vec());
+        }
+        // contiguous x window [halo_lo, r1): halo then local block
+        let mut xw = vec![0.0f64; rp.r1 - rp.halo_lo];
+        xw[rp.r0 - rp.halo_lo..].copy_from_slice(x_block);
+        for &(src, a, b) in &rp.recvs {
+            let data = ctx.recv(src, TAG_HALO);
+            debug_assert_eq!(data.len(), b - a);
+            xw[a - rp.halo_lo..b - rp.halo_lo].copy_from_slice(&data);
+        }
+        // compute into the matching y window
+        let mut yw = vec![0.0f64; rp.r1 - rp.halo_lo];
+        self.rank_compute(rp, &xw, &mut yw);
+        // one-sided epoch: one batched accumulate covers both the
+        // cross-boundary mirrors and the rank's own block
+        win.accumulate(rp.halo_lo, &yw);
+        ctx.barrier(); // epoch fence
+        RankReport {
+            msgs: ctx.sent_msgs - m0,
+            msg_values: ctx.sent_values - v0,
+            seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// One-shot threaded execution: spawns rank threads, runs one
+    /// multiply, joins. Returns `(y, stats)`. For the repeated-multiply
+    /// hot path use [`Pars3Threaded`] (or [`Pars3Kernel`] with
+    /// `threaded = true`), which reuses its rank threads.
+    pub fn execute_threaded(&self, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
         assert_eq!(x.len(), self.split.n);
-        let p = self.dist.p;
         let window = Window::new(self.split.n);
-        let x = Arc::new(x.to_vec());
-        let plan = self.clone();
-        let win = window.clone();
-        let results = World::run(p, move |mut ctx| {
-            let t0 = std::time::Instant::now();
-            let rp = &plan.ranks[ctx.rank];
-            // stage 1: block distribution — rank owns x[r0..r1]
-            let x_block = &x[rp.r0..rp.r1];
-            // stage 2: halo exchange, paper's last-to-root order
-            for &(dest, a, b) in &rp.sends {
-                ctx.send(dest, TAG_HALO, x[a..b].to_vec());
-            }
-            // contiguous x window [halo_lo, r1): halo then local block
-            let mut xw = vec![0.0f64; rp.r1 - rp.halo_lo];
-            xw[rp.r0 - rp.halo_lo..].copy_from_slice(x_block);
-            for &(src, a, b) in &rp.recvs {
-                let data = ctx.recv(src, TAG_HALO);
-                debug_assert_eq!(data.len(), b - a);
-                xw[a - rp.halo_lo..b - rp.halo_lo].copy_from_slice(&data);
-            }
-            // compute into the matching y window
-            let mut yw = vec![0.0f64; rp.r1 - rp.halo_lo];
-            plan.rank_compute(rp, &xw, &mut yw);
-            // one-sided epoch: one batched accumulate covers both the
-            // cross-boundary mirrors and the rank's own block
-            win.accumulate(rp.halo_lo, &yw);
-            ctx.barrier(); // epoch fence
-            (ctx.sent_msgs, ctx.sent_values, t0.elapsed().as_secs_f64())
-        });
+        let win = &window;
+        let results =
+            World::run(self.dist.p, |mut ctx| self.rank_apply(win, x, &mut ctx));
         let mut stats = Pars3Stats::default();
-        for (m, v, t) in results {
-            stats.msgs.push(m);
-            stats.msg_values.push(v);
-            stats.rank_seconds.push(t);
+        for r in results {
+            stats.msgs.push(r.msgs);
+            stats.msg_values.push(r.msg_values);
+            stats.rank_seconds.push(r.seconds);
         }
         (window.to_vec(), stats)
     }
@@ -274,18 +284,61 @@ impl Pars3Plan {
     }
 }
 
-/// [`crate::kernel::Spmv`] adapter running the threaded executor at a
-/// fixed rank count (the solver-facing interface).
+/// Persistent threaded executor: rank threads are spawned **once** here
+/// (over a [`PersistentWorld`]) and reused for every [`Self::apply`] —
+/// the iterative-solver hot path pays thread-spawn cost zero times per
+/// multiply. The one-sided window persists too and is reset (while all
+/// ranks are idle) at the start of each epoch.
+pub struct Pars3Threaded {
+    plan: Arc<Pars3Plan>,
+    world: PersistentWorld,
+    window: Arc<Window>,
+}
+
+impl Pars3Threaded {
+    /// Spawn the rank threads for this plan's distribution.
+    pub fn new(plan: Arc<Pars3Plan>) -> Self {
+        let world = PersistentWorld::new(plan.dist.p);
+        let window = Window::new(plan.split.n);
+        Self { plan, world, window }
+    }
+
+    /// `y = A x` on the persistent rank threads. Returns `(y, stats)`.
+    pub fn apply(&self, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
+        assert_eq!(x.len(), self.plan.split.n);
+        // All ranks are idle between jobs, so the epoch reset is safe;
+        // the job channel send/recv pair orders it before rank writes.
+        self.window.reset();
+        let x = Arc::new(x.to_vec());
+        let plan = self.plan.clone();
+        let win = self.window.clone();
+        let reports = self.world.run_job(move |ctx| plan.rank_apply(&win, &x, ctx));
+        let mut stats = Pars3Stats::default();
+        for r in reports {
+            stats.msgs.push(r.msgs);
+            stats.msg_values.push(r.msg_values);
+            stats.rank_seconds.push(r.seconds);
+        }
+        (self.window.to_vec(), stats)
+    }
+}
+
+/// [`crate::kernel::Spmv`] adapter at a fixed rank count (the
+/// solver-facing interface). `threaded = true` builds a
+/// [`Pars3Threaded`] once at construction, so repeated `apply` calls
+/// reuse the same rank threads.
 pub struct Pars3Kernel {
     plan: Arc<Pars3Plan>,
-    threaded: bool,
+    exec: Option<Pars3Threaded>,
 }
 
 impl Pars3Kernel {
     /// Build from a split at `p` ranks. `threaded = false` uses the
     /// emulated executor (deterministic; preferable on a 1-core box).
     pub fn new(split: Split3, p: usize, threaded: bool) -> Result<Self> {
-        Ok(Self { plan: Arc::new(Pars3Plan::new(split, p)?), threaded })
+        let plan = Arc::new(Pars3Plan::new(split, p)?);
+        let exec = if threaded { Some(Pars3Threaded::new(plan.clone())) } else { None };
+        Ok(Self { plan, exec })
     }
 
     /// The underlying plan.
@@ -300,10 +353,9 @@ impl crate::kernel::Spmv for Pars3Kernel {
     }
 
     fn apply(&mut self, x: &[f64], y: &mut [f64]) {
-        let (out, _) = if self.threaded {
-            self.plan.execute_threaded(x)
-        } else {
-            self.plan.execute_emulated(x)
+        let (out, _) = match &self.exec {
+            Some(exec) => exec.apply(x),
+            None => self.plan.execute_emulated(x),
         };
         y.copy_from_slice(&out);
     }
@@ -420,6 +472,47 @@ mod tests {
             for w in rp.sends.windows(2) {
                 assert!(w[0].0 >= w[1].0, "sends not descending by dest");
             }
+        }
+    }
+
+    #[test]
+    fn persistent_threaded_kernel_stable_across_repeated_applies() {
+        use crate::kernel::Spmv;
+        let s = banded(160, 10, 1.5);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        // threaded = true: rank threads spawn once, here.
+        let mut k = Pars3Kernel::new(split, 4, true).unwrap();
+        let mut got = vec![0.0; 160];
+        // >= 3 consecutive multiplies through the same executor must
+        // stay bit-stable vs the serial kernel (window reset + halo
+        // matching must not leak state between epochs).
+        for round in 0..4u64 {
+            let x: Vec<f64> =
+                (0..160).map(|i| ((i as u64 * 13 + round * 7) % 23) as f64 * 0.5 - 5.0).collect();
+            let mut want = vec![0.0; 160];
+            sss_spmv(&s, &x, &mut want);
+            k.apply(&x, &mut got);
+            for (c, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "round {round} row {c}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_executor_stats_are_per_apply_deltas() {
+        let s = banded(120, 11, 1.0);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Arc::new(Pars3Plan::new(split, 3).unwrap());
+        let exec = Pars3Threaded::new(plan.clone());
+        let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.3).sin()).collect();
+        let (_, s1) = exec.apply(&x);
+        let (_, s2) = exec.apply(&x);
+        // counters must not accumulate across applies
+        assert_eq!(s1.msgs, s2.msgs);
+        assert_eq!(s1.msg_values, s2.msg_values);
+        // and match the plan's send schedule exactly
+        for (r, rp) in plan.ranks.iter().enumerate() {
+            assert_eq!(s2.msgs[r], rp.sends.len());
         }
     }
 

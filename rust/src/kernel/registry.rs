@@ -1,0 +1,227 @@
+//! Unified kernel registry: construct any [`Spmv`] kernel **by name**.
+//!
+//! Every kernel in the crate — the serial SSS baseline (paper Alg. 1),
+//! plain CSR, the LAPACK-style dense band (`dgbmv`), the graph-coloring
+//! phased baseline (Elafrou et al. [3]), and PARS3 itself — implements
+//! the same [`Spmv`] trait; this module is the single construction
+//! point. Solvers, the coordinator, and the benches all go through it,
+//! so adding a kernel (or comparing an existing pair) never requires
+//! touching call sites: the set of kernels *is* [`KERNEL_NAMES`].
+//!
+//! All kernels built from one source matrix operate in the same (RCM)
+//! ordering, so for any input vector they produce identical outputs —
+//! the property the cross-kernel benches and tests rely on.
+
+use crate::graph::rcm::bandwidth_under;
+use crate::graph::{rcm, Adjacency};
+use crate::kernel::coloring_spmv::ColoringKernel;
+use crate::kernel::csr_spmv::CsrSpmv;
+use crate::kernel::dgbmv::BandedDgbmv;
+use crate::kernel::pars3::Pars3Kernel;
+use crate::kernel::serial_sss::SerialSss;
+use crate::kernel::split3::Split3;
+use crate::kernel::traits::Spmv;
+use crate::sparse::{convert, Coo, Sss, Symmetry};
+use crate::Result;
+use anyhow::{bail, Context};
+
+/// Names of every registered kernel, in bench display order.
+pub const KERNEL_NAMES: &[&str] = &["serial_sss", "csr", "dgbmv", "coloring", "pars3"];
+
+/// Construction parameters shared by all kernels (parallel kernels use
+/// `threads`/`threaded`; `pars3` additionally uses `outer_bw`).
+#[derive(Debug, Clone)]
+pub struct KernelConfig {
+    /// Rank count for the parallel kernels (clamped to the matrix size).
+    pub threads: usize,
+    /// Outer-split bandwidth for `pars3` (paper default 3).
+    pub outer_bw: usize,
+    /// Real threads (`true`) or the deterministic emulated executors.
+    pub threaded: bool,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        Self { threads: 8, outer_bw: 3, threaded: false }
+    }
+}
+
+impl KernelConfig {
+    /// Config for `p` ranks with everything else at defaults.
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads, ..Self::default() }
+    }
+}
+
+/// Shared preprocessing for every entry point that starts from a full
+/// COO matrix (this module's [`build`] and
+/// [`crate::coordinator::Coordinator::prepare`]): RCM reorder with the
+/// identity fallback for already-banded inputs (paper §4.1's
+/// pattern-recognition note), then SSS conversion. Returns the chosen
+/// permutation (`perm[old] = new`) and the reordered matrix.
+pub fn reorder_to_sss(coo: &Coo) -> Result<(Vec<u32>, Sss)> {
+    let bw_before = coo.bandwidth();
+    let g = Adjacency::from_coo(coo);
+    let mut perm = rcm(&g);
+    if bandwidth_under(&g, &perm) >= bw_before {
+        // already-banded input: keep the natural ordering
+        perm = (0..coo.n as u32).collect();
+    }
+    let sss = convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew)
+        .context("matrix is not (shifted) skew-symmetric")?;
+    Ok((perm, sss))
+}
+
+/// Build a kernel by name from a full (both-triangle) shifted
+/// skew-symmetric COO matrix (preprocessing via [`reorder_to_sss`]).
+/// The returned kernel operates in the reordered space — consistent
+/// across every kernel name for the same input matrix.
+pub fn build(name: &str, coo: &Coo, cfg: &KernelConfig) -> Result<Box<dyn Spmv>> {
+    let (_, sss) = reorder_to_sss(coo)?;
+    build_from_sss(name, sss, cfg)
+}
+
+/// Build a kernel by name from an already-ordered SSS matrix (the entry
+/// point for the coordinator and benches, which preprocess once and
+/// construct many kernels from the same [`Sss`]).
+pub fn build_from_sss(name: &str, sss: Sss, cfg: &KernelConfig) -> Result<Box<dyn Spmv>> {
+    let p = cfg.threads.clamp(1, sss.n.max(1));
+    Ok(match name {
+        "serial_sss" => Box::new(SerialSss::new(sss)),
+        "csr" => Box::new(CsrSpmv::new(convert::sss_to_csr(&sss))),
+        "dgbmv" => Box::new(BandedDgbmv::from_sss(&sss)?),
+        "coloring" => Box::new(ColoringKernel::new(sss, p, cfg.threaded)?),
+        "pars3" => {
+            let split = Split3::with_outer_bw(&sss, cfg.outer_bw)?;
+            return build_from_split(split, cfg);
+        }
+        other => bail!("unknown kernel '{other}'; available: {KERNEL_NAMES:?}"),
+    })
+}
+
+/// Build the `pars3` kernel from an existing 3-way split, reusing
+/// preprocessing a caller already did (e.g.
+/// [`crate::coordinator::Prepared::split`]) instead of recomputing it.
+pub fn build_from_split(split: Split3, cfg: &KernelConfig) -> Result<Box<dyn Spmv>> {
+    let p = cfg.threads.clamp(1, split.n.max(1));
+    Ok(Box::new(Pars3Kernel::new(split, p, cfg.threaded)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::serial_sss::sss_spmv;
+    use crate::solver::cg::cg_solve;
+    use crate::solver::mrs::{mrs_solve, MrsOptions};
+    use crate::sparse::gen;
+
+    fn fixture(n: usize, seed: u64, alpha: f64) -> (Coo, Sss) {
+        let coo = gen::small_test_matrix(n, seed, alpha);
+        let g = Adjacency::from_coo(&coo);
+        let perm = rcm(&g);
+        let sss =
+            convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap();
+        (coo, sss)
+    }
+
+    #[test]
+    fn every_registered_kernel_agrees_with_serial() {
+        let (_, sss) = fixture(120, 1, 2.0);
+        let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.19).cos()).collect();
+        let mut want = vec![0.0; 120];
+        sss_spmv(&sss, &x, &mut want);
+        for &name in KERNEL_NAMES {
+            let mut k =
+                build_from_sss(name, sss.clone(), &KernelConfig::with_threads(4)).unwrap();
+            assert_eq!(k.n(), 120, "{name}");
+            assert_eq!(k.name(), name);
+            assert!(k.flops() > 0 && k.bytes() > 0, "{name}");
+            let mut got = vec![0.0; 120];
+            k.apply(&x, &mut got);
+            for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-9, "{name} row {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn build_from_coo_reorders_consistently() {
+        let (coo, _) = fixture(150, 2, 1.5);
+        let cfg = KernelConfig::with_threads(3);
+        let x: Vec<f64> = (0..150).map(|i| ((i * 11) % 7) as f64 - 3.0).collect();
+        let mut y_serial = vec![0.0; 150];
+        build("serial_sss", &coo, &cfg).unwrap().apply(&x, &mut y_serial);
+        let mut y_pars3 = vec![0.0; 150];
+        build("pars3", &coo, &cfg).unwrap().apply(&x, &mut y_pars3);
+        for (a, b) in y_serial.iter().zip(&y_pars3) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_rejected_with_inventory() {
+        let (_, sss) = fixture(30, 3, 1.0);
+        let err = build_from_sss("nope", sss, &KernelConfig::default()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("nope") && msg.contains("pars3"), "{msg}");
+    }
+
+    #[test]
+    fn thread_count_is_clamped_to_matrix_size() {
+        let (_, sss) = fixture(20, 4, 1.0);
+        // 64 ranks on a 20-row matrix must not error
+        let mut k =
+            build_from_sss("pars3", sss.clone(), &KernelConfig::with_threads(64)).unwrap();
+        let x = vec![1.0; 20];
+        let mut y = vec![0.0; 20];
+        k.apply(&x, &mut y);
+        let mut want = vec![0.0; 20];
+        sss_spmv(&sss, &x, &mut want);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn mrs_solver_runs_through_registry_kernels() {
+        let (_, sss) = fixture(100, 5, 3.0);
+        let b: Vec<f64> = (0..100).map(|i| ((i * 7) % 5) as f64 - 2.0).collect();
+        let opts = MrsOptions { alpha: 3.0, max_iters: 400, tol: 1e-8 };
+        let mut reference: Option<Vec<f64>> = None;
+        for &name in KERNEL_NAMES {
+            let mut k =
+                build_from_sss(name, sss.clone(), &KernelConfig::with_threads(4)).unwrap();
+            let res = mrs_solve(&mut *k, &b, &opts);
+            assert!(res.converged, "{name}: {} iters", res.iters);
+            match &reference {
+                None => reference = Some(res.x),
+                Some(want) => {
+                    for (a, c) in res.x.iter().zip(want) {
+                        assert!((a - c).abs() < 1e-6, "{name}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cg_solver_runs_through_registry_kernel() {
+        // SPD symmetric tridiagonal system through the registry's
+        // serial kernel (the symmetric variant of the SSS path)
+        let n = 80;
+        let mut c = Coo::new(n);
+        for i in 0..n as u32 {
+            c.push(i, i, 4.0);
+        }
+        for i in 1..n as u32 {
+            c.push(i, i - 1, -1.0);
+            c.push(i - 1, i, -1.0);
+        }
+        let sss = convert::coo_to_sss(&c, Symmetry::Symmetric).unwrap();
+        let mut k =
+            build_from_sss("serial_sss", sss, &KernelConfig::default()).unwrap();
+        let b = vec![1.0; n];
+        let res = cg_solve(&mut *k, &b, 500, 1e-10);
+        assert!(res.converged);
+    }
+}

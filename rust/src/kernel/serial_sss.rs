@@ -63,13 +63,11 @@ impl Spmv for SerialSss {
     }
 
     fn flops(&self) -> u64 {
-        // diag: 1 mul; each lower nnz: 2 mul + 2 add
-        (self.s.n + 4 * self.s.nnz_lower()) as u64
+        self.s.spmv_flops()
     }
 
     fn bytes(&self) -> u64 {
-        // dvalues + vals + col_ind + row_ptr once each
-        (self.s.n * 8 + self.s.nnz_lower() * (8 + 4) + (self.s.n + 1) * 8) as u64
+        self.s.spmv_bytes()
     }
 
     fn name(&self) -> &'static str {

@@ -122,20 +122,29 @@ fn run() -> Result<()> {
 
 fn cmd_info(cfg: Config) -> Result<()> {
     println!("config: {cfg:?}");
-    let mut coord = Coordinator::new(cfg);
-    match coord.runtime() {
-        Ok(rt) => {
-            println!("PJRT platform: {}", rt.platform());
-            println!("artifacts:");
-            let arts: Vec<_> = rt.manifest().artifacts.clone();
-            for a in arts {
-                println!(
-                    "  {:28} kind={:9} n={:6} beta={:3} tile={}",
-                    a.name, a.kind, a.n, a.beta, a.tile
-                );
+    println!("kernels: {:?}", pars3::kernel::KERNEL_NAMES);
+    #[cfg(feature = "pjrt")]
+    {
+        let mut coord = Coordinator::new(cfg);
+        match coord.runtime() {
+            Ok(rt) => {
+                println!("PJRT platform: {}", rt.platform());
+                println!("artifacts:");
+                let arts: Vec<_> = rt.manifest().artifacts.clone();
+                for a in arts {
+                    println!(
+                        "  {:28} kind={:9} n={:6} beta={:3} tile={}",
+                        a.name, a.kind, a.n, a.beta, a.tile
+                    );
+                }
             }
+            Err(e) => println!("PJRT runtime unavailable: {e:#}"),
         }
-        Err(e) => println!("PJRT runtime unavailable: {e:#}"),
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = cfg;
+        println!("PJRT runtime: disabled (rebuild with `--features pjrt`)");
     }
     Ok(())
 }
@@ -220,23 +229,14 @@ fn cmd_solve(cfg: Config, args: &Args) -> Result<()> {
     let opts = MrsOptions { alpha, max_iters: iters, tol };
     let t0 = std::time::Instant::now();
     let res = if args.flags.get("solver").map(String::as_str) == Some("krylov") {
-        // full Krylov MRS (Idema-Vuik family) over the same kernel
+        // full Krylov MRS (Idema-Vuik family) over the same registry
+        // kernel the line-search solver uses
         let kopts = pars3::solver::KrylovOptions { alpha, max_iters: iters, tol };
-        match backend {
-            Backend::Serial => {
-                let mut k = pars3::kernel::serial_sss::SerialSss::new(prep.sss.clone());
-                pars3::solver::mrs_krylov_solve(&mut k, &b, &kopts)
-            }
-            Backend::Pars3 { p } => {
-                let mut k = pars3::kernel::pars3::Pars3Kernel::new(
-                    prep.split.clone(),
-                    p,
-                    coord.cfg.threaded,
-                )?;
-                pars3::solver::mrs_krylov_solve(&mut k, &b, &kopts)
-            }
-            Backend::Pjrt => anyhow::bail!("--solver krylov supports serial/pars3 backends"),
+        if backend == Backend::Pjrt {
+            anyhow::bail!("--solver krylov supports serial/pars3 backends");
         }
+        let mut k = coord.kernel(&prep, backend)?;
+        pars3::solver::mrs_krylov_solve(&mut *k, &b, &kopts)
     } else {
         coord.solve(&prep, &b, &opts, backend)?
     };

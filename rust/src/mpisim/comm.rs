@@ -10,7 +10,66 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A reusable rank barrier that can be **poisoned**: when a rank
+/// panics, its executor poisons the barrier so peers parked at the
+/// epoch fence wake up and panic too, letting the original panic
+/// propagate instead of deadlocking the world (plain
+/// `std::sync::Barrier` would park them forever).
+struct PoisonBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    count: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+impl PoisonBarrier {
+    fn new(n: usize) -> Self {
+        Self {
+            n,
+            state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn wait(&self) {
+        let mut s = self.state.lock().unwrap();
+        if s.poisoned {
+            panic!("rank barrier poisoned by a peer panic");
+        }
+        let gen = s.generation;
+        s.count += 1;
+        if s.count == self.n {
+            s.count = 0;
+            s.generation += 1;
+            self.cv.notify_all();
+        } else {
+            while s.generation == gen && !s.poisoned {
+                s = self.cv.wait(s).unwrap();
+            }
+            if s.poisoned {
+                panic!("rank barrier poisoned by a peer panic");
+            }
+        }
+    }
+
+    fn poison(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.state.lock().unwrap().poisoned
+    }
+}
 
 /// A tagged message between ranks.
 #[derive(Debug)]
@@ -29,7 +88,7 @@ pub struct RankCtx {
     senders: Vec<Sender<Msg>>,
     receiver: Receiver<Msg>,
     pending: HashMap<(usize, u32), VecDeque<Vec<f64>>>,
-    barrier: Arc<Barrier>,
+    barrier: Arc<PoisonBarrier>,
     /// Messages sent (count, payload f64s) — instrumentation.
     pub sent_msgs: usize,
     /// Total payload values sent.
@@ -47,7 +106,8 @@ impl RankCtx {
     }
 
     /// Blocking receive matching `(src, tag)`; out-of-order arrivals are
-    /// queued (MPI matching semantics).
+    /// queued (MPI matching semantics). Panics if the world is poisoned
+    /// by a peer panic while waiting (the sender may never send).
     pub fn recv(&mut self, src: usize, tag: u32) -> Vec<f64> {
         if let Some(q) = self.pending.get_mut(&(src, tag)) {
             if let Some(d) = q.pop_front() {
@@ -55,7 +115,18 @@ impl RankCtx {
             }
         }
         loop {
-            let m = self.receiver.recv().expect("rank channel closed");
+            let m = match self.receiver.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(m) => m,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if self.barrier.is_poisoned() {
+                        panic!("rank world poisoned by a peer panic while rank {} waited for ({src}, {tag})", self.rank);
+                    }
+                    continue;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    panic!("rank channel closed")
+                }
+            };
             if m.src == src && m.tag == tag {
                 return m.data;
             }
@@ -63,22 +134,24 @@ impl RankCtx {
         }
     }
 
-    /// World barrier.
+    /// World barrier. Panics if a peer rank panicked (poisoned epoch).
     pub fn barrier(&self) {
         self.barrier.wait();
     }
 }
 
-/// The rank world: spawns `p` threads and runs `f` on each.
+/// The rank world: runs `f` on `p` rank threads (spawn-per-call; see
+/// [`PersistentWorld`] for the reusable-thread executor).
 pub struct World;
 
 impl World {
     /// Run `f(rank_ctx)` on `p` ranks; returns per-rank results in rank
-    /// order. Panics in any rank propagate.
+    /// order. Panics in any rank propagate. Scoped threads: `f` may
+    /// borrow from the caller's stack (no `Arc`/`'static` plumbing).
     pub fn run<R, F>(p: usize, f: F) -> Vec<R>
     where
-        R: Send + 'static,
-        F: Fn(RankCtx) -> R + Send + Sync + 'static,
+        R: Send,
+        F: Fn(RankCtx) -> R + Send + Sync,
     {
         assert!(p >= 1);
         let mut senders = Vec::with_capacity(p);
@@ -88,25 +161,181 @@ impl World {
             senders.push(tx);
             receivers.push(rx);
         }
-        let barrier = Arc::new(Barrier::new(p));
-        let f = Arc::new(f);
+        let barrier = Arc::new(PoisonBarrier::new(p));
+        let f = &f;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(p);
+            for (rank, receiver) in receivers.into_iter().enumerate() {
+                let ctx = RankCtx {
+                    rank,
+                    p,
+                    senders: senders.clone(),
+                    receiver,
+                    pending: HashMap::new(),
+                    barrier: barrier.clone(),
+                    sent_msgs: 0,
+                    sent_values: 0,
+                };
+                let b = barrier.clone();
+                handles.push(s.spawn(move || {
+                    // poison the barrier on panic so peers parked at a
+                    // fence wake and die too — otherwise scope's
+                    // implicit join would deadlock before propagating
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(ctx))) {
+                        Ok(r) => r,
+                        Err(payload) => {
+                            b.poison();
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                }));
+            }
+            drop(senders);
+            handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+        })
+    }
+}
+
+/// Per-job instrumentation report from a rank body (deltas, not
+/// cumulative totals — [`RankCtx`] counters persist across jobs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankReport {
+    /// Messages sent during the job.
+    pub msgs: usize,
+    /// Payload f64 count sent during the job.
+    pub msg_values: usize,
+    /// Wallclock seconds spent in the job.
+    pub seconds: f64,
+}
+
+type Job = Arc<dyn Fn(&mut RankCtx) -> RankReport + Send + Sync>;
+
+/// Per-rank job outcome on the internal done channel.
+enum Done {
+    Ok(RankReport),
+    Panicked,
+}
+
+/// A rank world with **persistent** threads: ranks are spawned once at
+/// construction and reused for every [`PersistentWorld::run_job`] call.
+/// This is the executor behind [`crate::kernel::pars3::Pars3Kernel`]'s
+/// threaded mode — the iterative-solver hot path pays thread-spawn cost
+/// zero times per multiply. Rank state (channels, pending-message
+/// queues, the world barrier) also persists, so jobs keep full
+/// tagged send/recv semantics across calls.
+///
+/// A rank panicking inside a job poisons the world: `run_job` panics
+/// with the rank id (instead of deadlocking on the missing report),
+/// and drop skips joining — sibling ranks may be parked at the shared
+/// barrier and are deliberately leaked rather than hung on.
+pub struct PersistentWorld {
+    p: usize,
+    job_txs: Vec<Sender<Job>>,
+    done_rx: Receiver<(usize, Done)>,
+    handles: Vec<JoinHandle<()>>,
+    poisoned: std::cell::Cell<bool>,
+}
+
+impl PersistentWorld {
+    /// Spawn `p` rank threads, idle until the first job.
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1);
+        let mut msg_txs = Vec::with_capacity(p);
+        let mut msg_rxs = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = channel();
+            msg_txs.push(tx);
+            msg_rxs.push(rx);
+        }
+        let barrier = Arc::new(PoisonBarrier::new(p));
+        let (done_tx, done_rx) = channel();
+        let mut job_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
-        for (rank, receiver) in receivers.into_iter().enumerate() {
-            let ctx = RankCtx {
+        for (rank, receiver) in msg_rxs.into_iter().enumerate() {
+            let (job_tx, job_rx) = channel::<Job>();
+            job_txs.push(job_tx);
+            let mut ctx = RankCtx {
                 rank,
                 p,
-                senders: senders.clone(),
+                senders: msg_txs.clone(),
                 receiver,
                 pending: HashMap::new(),
                 barrier: barrier.clone(),
                 sent_msgs: 0,
                 sent_values: 0,
             };
-            let f = f.clone();
-            handles.push(std::thread::spawn(move || f(ctx)));
+            let b = barrier.clone();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(job) = job_rx.recv() {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || (*job)(&mut ctx),
+                    ));
+                    let (outcome, dead) = match result {
+                        Ok(report) => (Done::Ok(report), false),
+                        Err(_) => {
+                            // wake peers parked at the epoch fence
+                            b.poison();
+                            (Done::Panicked, true)
+                        }
+                    };
+                    if done.send((ctx.rank, outcome)).is_err() || dead {
+                        break;
+                    }
+                }
+            }));
         }
-        drop(senders);
-        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+        drop(done_tx);
+        Self { p, job_txs, done_rx, handles, poisoned: std::cell::Cell::new(false) }
+    }
+
+    /// World size.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Run one job on every rank; blocks until all ranks report.
+    /// Returns reports in rank order. Panics (poisoning the world) if
+    /// any rank panics inside the job.
+    pub fn run_job<F>(&self, f: F) -> Vec<RankReport>
+    where
+        F: Fn(&mut RankCtx) -> RankReport + Send + Sync + 'static,
+    {
+        assert!(!self.poisoned.get(), "PersistentWorld poisoned by an earlier rank panic");
+        let job: Job = Arc::new(f);
+        for tx in &self.job_txs {
+            tx.send(job.clone()).expect("rank thread died");
+        }
+        let mut out = vec![RankReport::default(); self.p];
+        for _ in 0..self.p {
+            let (rank, outcome) = self.done_rx.recv().expect("rank thread died");
+            match outcome {
+                Done::Ok(report) => out[rank] = report,
+                Done::Panicked => {
+                    // surviving ranks may be parked at the barrier;
+                    // poison so drop leaks instead of hanging on join
+                    self.poisoned.set(true);
+                    panic!("rank {rank} panicked during a PersistentWorld job");
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Drop for PersistentWorld {
+    fn drop(&mut self) {
+        // Closing the job channels makes every rank's recv() fail,
+        // ending its loop; then join for a clean shutdown. After a
+        // rank panic, peers can be blocked at the shared barrier —
+        // skip the join and leak them rather than hang.
+        self.job_txs.clear();
+        if self.poisoned.get() {
+            return;
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -173,6 +402,90 @@ mod tests {
             COUNT.load(Ordering::SeqCst)
         });
         assert!(results.iter().all(|&c| c == 4));
+    }
+
+    #[test]
+    #[should_panic(expected = "rank panicked")]
+    fn rank_panic_propagates_instead_of_hanging() {
+        // rank 2 panics; ranks 0/1 are parked at the barrier and must
+        // be woken by the poison so the scope can join and propagate.
+        World::run(3, |ctx| {
+            if ctx.rank == 2 {
+                panic!("boom");
+            }
+            ctx.barrier();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "rank panicked")]
+    fn rank_panic_wakes_peer_blocked_in_recv() {
+        // rank 1 dies before sending; rank 0's recv must observe the
+        // poison instead of blocking forever.
+        World::run(2, |mut ctx| {
+            if ctx.rank == 1 {
+                panic!("boom");
+            }
+            let _ = ctx.recv(1, 9);
+        });
+    }
+
+    #[test]
+    fn persistent_world_reuses_threads_across_jobs() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let w = PersistentWorld::new(3);
+        let ids = Arc::new(Mutex::new(HashSet::new()));
+        for _ in 0..5 {
+            let ids2 = ids.clone();
+            let reports = w.run_job(move |ctx| {
+                ids2.lock().unwrap().insert(std::thread::current().id());
+                ctx.barrier();
+                RankReport::default()
+            });
+            assert_eq!(reports.len(), 3);
+        }
+        // ThreadIds are never reused within a process: 5 jobs over 3
+        // persistent threads must observe exactly 3 distinct ids. A
+        // spawn-per-job executor would observe 15.
+        assert_eq!(ids.lock().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn persistent_world_messages_match_within_each_job() {
+        let w = PersistentWorld::new(2);
+        for round in 0..3usize {
+            let reports = w.run_job(move |ctx| {
+                let mut r = RankReport::default();
+                if ctx.rank == 0 {
+                    let m0 = ctx.sent_msgs;
+                    ctx.send(1, 4, vec![round as f64]);
+                    r.msgs = ctx.sent_msgs - m0;
+                } else {
+                    let d = ctx.recv(0, 4);
+                    assert_eq!(d, vec![round as f64]);
+                }
+                ctx.barrier();
+                r
+            });
+            assert_eq!(reports[0].msgs, 1);
+            assert_eq!(reports[1].msgs, 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked during a PersistentWorld job")]
+    fn persistent_world_rank_panic_surfaces_instead_of_hanging() {
+        let w = PersistentWorld::new(2);
+        // rank 1 panics before the (never reached) barrier; rank 0
+        // returns immediately. run_job must panic with the rank id,
+        // not block forever on the missing report.
+        w.run_job(|ctx| {
+            if ctx.rank == 1 {
+                panic!("boom");
+            }
+            RankReport::default()
+        });
     }
 
     #[test]

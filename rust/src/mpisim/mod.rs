@@ -14,6 +14,6 @@ pub mod comm;
 pub mod cost;
 pub mod window;
 
-pub use comm::{RankCtx, World};
+pub use comm::{PersistentWorld, RankCtx, RankReport, World};
 pub use cost::CostModel;
 pub use window::Window;

@@ -6,7 +6,9 @@
 //! PJRT CPU client (`xla` crate) and executes with concrete buffers.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifacts::{ArtifactSpec, Manifest};
+#[cfg(feature = "pjrt")]
 pub use pjrt::{LoadedArtifact, PjrtRuntime};

@@ -101,6 +101,19 @@ impl Sss {
     pub fn row_counts(&self) -> Vec<usize> {
         (0..self.n).map(|i| self.row_ptr[i + 1] - self.row_ptr[i]).collect()
     }
+
+    /// Floating-point ops of one SSS SpMV (Alg. 1): 1 diagonal multiply
+    /// per row, 2 mul + 2 add per stored lower entry. The single cost
+    /// model shared by every SSS-backed [`crate::kernel::Spmv`].
+    pub fn spmv_flops(&self) -> u64 {
+        (self.n + 4 * self.nnz_lower()) as u64
+    }
+
+    /// Matrix bytes touched by one SSS SpMV: dvalues + vals + col_ind
+    /// + row_ptr, once each.
+    pub fn spmv_bytes(&self) -> u64 {
+        (self.n * 8 + self.nnz_lower() * (8 + 4) + (self.n + 1) * 8) as u64
+    }
 }
 
 #[cfg(test)]

@@ -43,6 +43,83 @@ fn prop_rcm_is_always_a_permutation() {
     });
 }
 
+/// Random disconnected lower-edge pattern: several disjoint banded
+/// components plus trailing isolated vertices. Returns `(n, edges)`.
+fn disconnected_pattern(rng: &mut SmallRng) -> (usize, Vec<(u32, u32)>) {
+    let comps = 1 + rng.gen_range_usize(0, 5);
+    let mut edges = Vec::new();
+    let mut base = 0u32;
+    for _ in 0..comps {
+        let cn = 2 + rng.gen_range_usize(0, 40);
+        let per_row = 1 + rng.gen_range_usize(0, 3);
+        for (i, j) in gen::random_banded_pattern(cn, per_row, 0.5, rng) {
+            edges.push((i + base, j + base));
+        }
+        base += cn as u32;
+    }
+    let isolated = rng.gen_range_usize(0, 4);
+    (base as usize + isolated, edges)
+}
+
+#[test]
+fn prop_rcm_is_total_permutation_on_disconnected_graphs() {
+    // RCM must emit every vertex exactly once even when the graph has
+    // many components and isolated vertices (each component gets its
+    // own pseudo-peripheral start; isolated vertices are their own
+    // components).
+    for_all("rcm total on disconnected", 40, |rng| {
+        let (n, edges) = disconnected_pattern(rng);
+        let edges = gen::scramble(&edges, n, rng);
+        let g = Adjacency::from_lower_edges(n, &edges);
+        let perm = rcm(&g);
+        assert_eq!(perm.len(), n);
+        let mut seen = vec![false; n];
+        for &p in &perm {
+            assert!(!seen[p as usize], "target {p} assigned twice");
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "permutation is not total");
+    });
+}
+
+#[test]
+fn prop_prepare_permutation_never_increases_bandwidth() {
+    // The pipeline's reordering contract: `Coordinator::prepare` picks
+    // RCM when it helps and falls back to the identity when the input
+    // is already at least as tightly banded (raw RCM alone offers no
+    // bandwidth guarantee) — so `Coo::permute_symmetric` with the
+    // chosen permutation never increases the bandwidth, including on
+    // disconnected matrices.
+    for_all("prepare bandwidth guard", 25, |rng| {
+        let (n, edges) = disconnected_pattern(rng);
+        if n < 2 {
+            return;
+        }
+        let edges = gen::scramble(&edges, n, rng);
+        let alpha = rng.gen_range_f64(0.5, 3.0);
+        let coo = skew::coo_from_pattern(n, &edges, alpha, rng);
+        let coord = Coordinator::new(Config::default());
+        let prep = coord.prepare("prop", &coo).unwrap();
+        assert!(
+            prep.rcm_bw <= prep.bw_before,
+            "bandwidth grew: {} -> {}",
+            prep.bw_before,
+            prep.rcm_bw
+        );
+        // the permutation is total...
+        let mut seen = vec![false; n];
+        for &p in &prep.perm {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+        // ...and permute_symmetric under it reproduces exactly the
+        // bandwidth the pipeline reports
+        let permuted = coo.permute_symmetric(&prep.perm);
+        assert_eq!(permuted.bandwidth(), prep.rcm_bw);
+        assert!(permuted.bandwidth() <= coo.bandwidth());
+    });
+}
+
 #[test]
 fn prop_split3_partitions_nnz_exactly() {
     for_all("split3 partition", 40, |rng| {

@@ -1,7 +1,11 @@
 //! PJRT runtime integration: AOT artifacts vs native Rust numerics.
 //!
-//! These tests require `make artifacts` to have run; they skip (with a
-//! note) if the manifest is absent so `cargo test` works standalone.
+//! This file only compiles with the `pjrt` feature (see the
+//! `required-features` entry in `rust/Cargo.toml`), and every test
+//! additionally skips (with a note) unless both the AOT artifacts
+//! (`make artifacts`) and a working PJRT plugin are present — the
+//! default offline build vendors an API stub whose client creation
+//! fails, and that must read as "skipped", not "failed".
 
 use pars3::coordinator::{Backend, Config, Coordinator};
 use pars3::runtime::{Manifest, PjrtRuntime};
@@ -20,6 +24,25 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+/// Artifacts + a live PJRT client, or `None` (skip) with a note.
+fn live_runtime() -> Option<(PathBuf, PjrtRuntime)> {
+    let dir = artifacts_dir()?;
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping PJRT test: manifest unreadable: {e:#}");
+            return None;
+        }
+    };
+    match PjrtRuntime::new(manifest) {
+        Ok(rt) => Some((dir, rt)),
+        Err(e) => {
+            eprintln!("skipping PJRT test: no PJRT plugin ({e:#})");
+            None
+        }
+    }
+}
+
 fn banded_system(n: usize, beta_max: usize, alpha: f64, seed: u64) -> DiaBand {
     let mut rng = SmallRng::seed_from_u64(seed);
     let mut dia = DiaBand::zeros(n, beta_max, alpha);
@@ -35,8 +58,7 @@ fn banded_system(n: usize, beta_max: usize, alpha: f64, seed: u64) -> DiaBand {
 
 #[test]
 fn spmv_artifact_matches_rust_dia_reference() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut rt = PjrtRuntime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let Some((_dir, mut rt)) = live_runtime() else { return };
     let dia = banded_system(1024, 16, 1.7, 1);
     let x: Vec<f64> = (0..1024).map(|i| (i as f64 * 0.031).sin()).collect();
     let mut want = vec![0.0; 1024];
@@ -62,7 +84,7 @@ fn narrow_system(n: usize, alpha: f64, seed: u64) -> pars3::sparse::Coo {
 #[test]
 fn padded_execution_matches_smaller_problem() {
     // a n=700 problem runs on the n=1024 artifact via zero padding
-    let Some(dir) = artifacts_dir() else { return };
+    let Some((dir, _rt)) = live_runtime() else { return };
     let coo = narrow_system(700, 2.0, 3);
     let mut coord = Coordinator::new(Config { artifacts_dir: dir, ..Config::default() });
     let prep = coord.prepare("pad", &coo).unwrap();
@@ -78,8 +100,7 @@ fn padded_execution_matches_smaller_problem() {
 
 #[test]
 fn mrs_step_artifact_consistent_with_native_iteration() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut rt = PjrtRuntime::new(Manifest::load(&dir).unwrap()).unwrap();
+    let Some((_dir, mut rt)) = live_runtime() else { return };
     let dia = banded_system(1024, 16, 2.0, 7);
     let b: Vec<f64> = (0..1024).map(|i| ((i % 17) as f64 - 8.0) * 0.1).collect();
 
@@ -111,7 +132,7 @@ fn mrs_step_artifact_consistent_with_native_iteration() {
 
 #[test]
 fn pjrt_solve_converges_and_matches_native() {
-    let Some(dir) = artifacts_dir() else { return };
+    let Some((dir, _rt)) = live_runtime() else { return };
     let coo = narrow_system(900, 3.0, 13);
     let mut coord = Coordinator::new(Config { artifacts_dir: dir, ..Config::default() });
     let prep = coord.prepare("slv", &coo).unwrap();

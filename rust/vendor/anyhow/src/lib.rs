@@ -1,0 +1,264 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The pars3 build environment has no network and no crates.io registry
+//! (DESIGN.md §2), so the subset of the `anyhow` API the codebase uses
+//! is provided here as a vendored path dependency:
+//!
+//! * [`Error`] — a context-chain error type. `{e}` prints the outermost
+//!   message, `{e:#}` the full chain joined by `": "` (matching anyhow's
+//!   alternate formatting), `{e:?}` an anyhow-style "Caused by" report.
+//! * [`Result`] — `Result<T, Error>` with a defaulted error parameter.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — format-style constructors.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (both std errors and [`Error`] itself) and on `Option`.
+//!
+//! Swapping in the real crate is a one-line change in `rust/Cargo.toml`
+//! once registry access exists; no call sites need to change.
+
+use std::fmt;
+
+/// A context-chain error. `chain[0]` is the outermost (most recently
+/// attached) message; the last entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The `?` conversion from any std error. `Error` itself deliberately
+// does NOT implement `std::error::Error`, which keeps this blanket impl
+// coherent with the identity `From<Error> for Error` (the same design
+// choice the real anyhow makes).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `Result` with a defaulted boxed-free error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for std::result::Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+mod ext {
+    use super::Error;
+    use std::fmt::Display;
+
+    // Implemented for both std errors and `Error` so `.context(..)`
+    // works on `Result<_, io::Error>` and on `anyhow::Result` alike.
+    // Coherent because `Error: std::error::Error` never holds (above).
+    pub trait StdError {
+        fn ext_context<C: Display>(self, context: C) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            Error::from(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C: Display>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Attach context to errors (`Result`) or turn `None` into an error.
+pub trait Context<T, E>: private::Sealed {
+    /// Wrap the error with an outer message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily-built outer message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: ext::StdError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| ext::StdError::ext_context(e, context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| ext::StdError::ext_context(e, f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = anyhow!("outer {}", 7);
+        assert_eq!(format!("{e}"), "outer 7");
+        let e = e.context("ctx");
+        assert_eq!(format!("{e}"), "ctx");
+        assert_eq!(format!("{e:#}"), "ctx: outer 7");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn f() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "unlucky");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+
+        let o: Option<u8> = None;
+        assert_eq!(format!("{}", o.context("missing").unwrap_err()), "missing");
+    }
+}

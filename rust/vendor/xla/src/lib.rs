@@ -1,0 +1,153 @@
+//! Offline API stub of the `xla` crate surface that `pars3::runtime::pjrt`
+//! compiles against.
+//!
+//! The build environment has no network and no PJRT plugin, so this stub
+//! keeps the `pjrt` feature *compilable* while failing honestly at
+//! runtime: [`PjRtClient::cpu`] returns an error, so no downstream
+//! method is ever reached on a real code path. When a real PJRT-backed
+//! `xla` crate is available, point `rust/Cargo.toml` at it instead; the
+//! signatures here mirror the subset `runtime/pjrt.rs` uses
+//! (`PjRtClient::cpu` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`).
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (std-error so `?`/`.context()` interop works).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: the XLA/PJRT runtime is not available in this offline build \
+         (vendor/xla is an API stub; swap in a real xla crate to run artifacts)"
+    )))
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always errors in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub build.
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation into a loaded executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Upload a host buffer to the device.
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs; returns per-device output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A host-side tensor literal.
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_loudly() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub must not produce a client"),
+        };
+        assert!(err.to_string().contains("offline"));
+    }
+
+    #[test]
+    fn literal_plumbing_typechecks() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(l.to_tuple().is_err());
+    }
+}
