@@ -1,0 +1,60 @@
+//! Bench: **fused multi-vector `apply_batch` vs repeated `apply`** for
+//! every registered kernel. The fused path traverses the matrix once
+//! per batch (and, for `pars3`, exchanges halos once), so its win over
+//! the looped baseline is the measured value of the zero-copy batch
+//! engine on block-Krylov / multi-RHS workloads.
+//!
+//! `PARS3_BENCH_SCALE` (float) overrides the suite scale — the CI
+//! smoke job runs this bench at a tiny scale to keep the bench targets
+//! from bit-rotting without burning minutes.
+
+use pars3::coordinator::Config;
+use pars3::kernel::registry::{build_from_sss, KernelConfig};
+use pars3::kernel::{Spmv, VecBatch, KERNEL_NAMES};
+use pars3::report;
+use pars3::util::bencher::Bencher;
+
+fn main() {
+    let mut cfg = Config::default();
+    if let Ok(s) = std::env::var("PARS3_BENCH_SCALE") {
+        cfg.scale = s.parse().expect("PARS3_BENCH_SCALE must be a float");
+    }
+    let suite = report::prepared_suite(&cfg).expect("suite");
+    let mut b = Bencher::new("batch_apply");
+
+    for (m, prep) in suite.iter().take(3) {
+        let n = prep.n;
+        let kcfg = KernelConfig { threads: 4, outer_bw: cfg.outer_bw, threaded: cfg.threaded };
+        for &name in KERNEL_NAMES {
+            // dgbmv's dense band array explodes on wide analogues (§2)
+            if name == "dgbmv" && prep.rcm_bw >= 2_000 {
+                continue;
+            }
+            // prep.sss is Arc-shared: constructing a kernel per name no
+            // longer clones the matrix
+            let mut kern = build_from_sss(name, prep.sss.clone(), &kcfg).expect(name);
+            for &k in &[1usize, 8] {
+                let xs =
+                    VecBatch::from_fn(n, k, |i, c| ((i * 31 + c * 7) % 17) as f64 * 0.25 - 2.0);
+                let mut ys = VecBatch::zeros(n, k);
+                kern.prepare_hint(k);
+                b.bench(&format!("{name}/fused-k{k}/{}", m.name), 1, 3, || {
+                    kern.apply_batch(&xs, &mut ys);
+                    std::hint::black_box(ys.data());
+                });
+                let mut y = vec![0.0; n];
+                b.bench(&format!("{name}/looped-k{k}/{}", m.name), 1, 3, || {
+                    for c in 0..k {
+                        kern.apply(xs.col(c), &mut y);
+                    }
+                    std::hint::black_box(&y);
+                });
+            }
+        }
+    }
+    b.section(
+        "fused-k8 vs looped-k8 is the batch-fusion win: one matrix \
+         traversal (and one pars3 halo round) per batch instead of 8.\n",
+    );
+    b.finish();
+}

@@ -11,11 +11,12 @@
 use crate::coordinator::Config;
 use crate::kernel::pars3::Pars3Plan;
 use crate::kernel::registry::{self, KernelConfig};
-use crate::kernel::{ConflictMap, Split3, Spmv};
-use crate::solver::mrs::{mrs_solve, MrsOptions, MrsResult};
+use crate::kernel::{ConflictMap, Split3, Spmv, VecBatch};
+use crate::solver::mrs::{mrs_solve, mrs_solve_batch, MrsOptions, MrsResult};
 use crate::sparse::{Coo, Sss};
 use crate::Result;
 use anyhow::bail;
+use std::sync::Arc;
 
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Manifest, PjrtRuntime};
@@ -65,10 +66,11 @@ pub struct Prepared {
     pub rcm_bw: usize,
     /// The RCM permutation used (`perm[old] = new`).
     pub perm: Vec<u32>,
-    /// RCM-ordered matrix in SSS form.
-    pub sss: Sss,
-    /// The 3-way split of the band.
-    pub split: Split3,
+    /// RCM-ordered matrix in SSS form, shared (not cloned) with every
+    /// kernel built from this preparation.
+    pub sss: Arc<Sss>,
+    /// The 3-way split of the band, shared with every PARS3 plan.
+    pub split: Arc<Split3>,
 }
 
 impl Prepared {
@@ -115,7 +117,7 @@ impl Coordinator {
         let bw_before = coo.bandwidth();
         let (perm, sss) = registry::reorder_to_sss(coo)?;
         let rcm_bw = sss.bandwidth();
-        let split = Split3::with_outer_bw(&sss, self.cfg.outer_bw)?;
+        let split = Arc::new(Split3::with_outer_bw(&sss, self.cfg.outer_bw)?);
         Ok(Prepared {
             name: name.to_string(),
             n: sss.n,
@@ -123,7 +125,7 @@ impl Coordinator {
             bw_before,
             rcm_bw,
             perm,
-            sss,
+            sss: Arc::new(sss),
             split,
         })
     }
@@ -146,7 +148,8 @@ impl Coordinator {
         };
         match backend {
             // reuse the 3-way split `prepare` already computed instead
-            // of re-deriving it from the SSS form
+            // of re-deriving it from the SSS form; both hand-offs are
+            // Arc clones — the matrix data itself is never copied
             Backend::Pars3 { .. } => registry::build_from_split(prep.split.clone(), &cfg),
             _ => registry::build_from_sss(name, prep.sss.clone(), &cfg),
         }
@@ -163,6 +166,43 @@ impl Coordinator {
                 Ok(y)
             }
         }
+    }
+
+    /// One fused batch multiply `ys = A xs` (column-major `n × k`) on a
+    /// native backend: the matrix is traversed once for the whole
+    /// batch. PJRT executes single vectors only.
+    pub fn spmv_batch(
+        &mut self,
+        prep: &Prepared,
+        xs: &VecBatch,
+        backend: Backend,
+    ) -> Result<VecBatch> {
+        if backend == Backend::Pjrt {
+            bail!("the PJRT backend has no batch path; use spmv per column");
+        }
+        let mut k = self.kernel(prep, backend)?;
+        k.prepare_hint(xs.k());
+        let mut ys = VecBatch::zeros(prep.n, xs.k());
+        k.apply_batch(xs, &mut ys);
+        Ok(ys)
+    }
+
+    /// Multi-RHS MRS solve: every column of `bs` is solved against the
+    /// same prepared matrix with **one fused SpMV per sweep** (see
+    /// [`mrs_solve_batch`]) — the serving-path entry point for
+    /// block-Krylov / many-scenario workloads.
+    pub fn solve_batch(
+        &mut self,
+        prep: &Prepared,
+        bs: &VecBatch,
+        opts: &MrsOptions,
+        backend: Backend,
+    ) -> Result<Vec<MrsResult>> {
+        if backend == Backend::Pjrt {
+            bail!("the PJRT backend has no batch path; use solve per RHS");
+        }
+        let mut k = self.kernel(prep, backend)?;
+        Ok(mrs_solve_batch(&mut *k, bs, opts))
     }
 
     /// MRS solve with the chosen backend as the repeated-multiply kernel.
@@ -356,6 +396,57 @@ mod tests {
         for (a, b) in r0.x.iter().zip(&r1.x) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn batch_spmv_agrees_with_columnwise_spmv() {
+        let coo = gen::small_test_matrix(140, 15, 2.0);
+        let mut c = coordinator();
+        let prep = c.prepare("t", &coo).unwrap();
+        let xs = VecBatch::from_fn(140, 4, |i, col| ((i + col * 3) % 7) as f64 - 3.0);
+        for backend in [Backend::Serial, Backend::Pars3 { p: 4 }] {
+            let ys = c.spmv_batch(&prep, &xs, backend).unwrap();
+            for col in 0..4 {
+                let want = c.spmv(&prep, xs.col(col), backend).unwrap();
+                for (r, (a, b)) in ys.col(col).iter().zip(&want).enumerate() {
+                    assert!((a - b).abs() < 1e-9, "{backend:?} col {col} row {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_batch_matches_columnwise_solve() {
+        let coo = gen::small_test_matrix(120, 16, 2.0);
+        let mut c = coordinator();
+        let prep = c.prepare("t", &coo).unwrap();
+        let opts = MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 };
+        let bs = VecBatch::from_fn(120, 3, |i, col| ((i * (col + 2)) % 9) as f64 - 4.0);
+        let results = c.solve_batch(&prep, &bs, &opts, Backend::Pars3 { p: 3 }).unwrap();
+        assert_eq!(results.len(), 3);
+        for (col, res) in results.iter().enumerate() {
+            let want = c.solve(&prep, bs.col(col), &opts, Backend::Pars3 { p: 3 }).unwrap();
+            assert_eq!(res.converged, want.converged, "col {col}");
+            for (a, b) in res.x.iter().zip(&want.x) {
+                assert!((a - b).abs() < 1e-6, "col {col}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_matrix_is_shared_with_kernels_not_cloned() {
+        let coo = gen::small_test_matrix(80, 17, 1.5);
+        let c = coordinator();
+        let prep = c.prepare("t", &coo).unwrap();
+        let before_sss = Arc::strong_count(&prep.sss);
+        let before_split = Arc::strong_count(&prep.split);
+        let k_serial = c.kernel(&prep, Backend::Serial).unwrap();
+        assert_eq!(Arc::strong_count(&prep.sss), before_sss + 1, "serial shares the Sss");
+        let k_pars3 = c.kernel(&prep, Backend::Pars3 { p: 2 }).unwrap();
+        assert_eq!(Arc::strong_count(&prep.split), before_split + 1, "pars3 shares the split");
+        drop((k_serial, k_pars3));
+        assert_eq!(Arc::strong_count(&prep.sss), before_sss);
+        assert_eq!(Arc::strong_count(&prep.split), before_split);
     }
 
     #[test]

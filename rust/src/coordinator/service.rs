@@ -8,6 +8,7 @@
 //! the same single-owner async boundary.)
 
 use crate::coordinator::{Backend, Config, Coordinator, Prepared};
+use crate::kernel::VecBatch;
 use crate::solver::mrs::{MrsOptions, MrsResult};
 use crate::sparse::Coo;
 use std::collections::HashMap;
@@ -43,6 +44,28 @@ pub enum Request {
         /// Backend to run.
         backend: Backend,
     },
+    /// Fused batch multiply against a registered matrix (one matrix
+    /// traversal for all columns).
+    SpmvBatch {
+        /// Matrix key.
+        key: String,
+        /// Column-major `n × k` input batch (RCM order).
+        xs: VecBatch,
+        /// Backend to run.
+        backend: Backend,
+    },
+    /// Multi-RHS MRS-solve against a registered matrix (one fused SpMV
+    /// per sweep across all right-hand sides).
+    SolveBatch {
+        /// Matrix key.
+        key: String,
+        /// Column-major `n × k` right-hand-side batch.
+        bs: VecBatch,
+        /// Solver options (shared by every column).
+        opts: MrsOptions,
+        /// Backend to run.
+        backend: Backend,
+    },
     /// Stop the service loop.
     Shutdown,
 }
@@ -62,6 +85,10 @@ pub enum Response {
     Spmv(Vec<f64>),
     /// Solve result.
     Solve(MrsResult),
+    /// Batch SpMV result (column-major, same width as the request).
+    SpmvBatch(VecBatch),
+    /// Multi-RHS solve results, one per column.
+    SolveBatch(Vec<MrsResult>),
     /// Request failed.
     Error(String),
 }
@@ -107,6 +134,20 @@ impl Service {
                         None => Response::Error(format!("unknown matrix '{key}'")),
                         Some(p) => match coord.solve(p, &b, &opts, backend) {
                             Ok(r) => Response::Solve(r),
+                            Err(e) => Response::Error(format!("{e:#}")),
+                        },
+                    },
+                    Request::SpmvBatch { key, xs, backend } => match registry.get(&key) {
+                        None => Response::Error(format!("unknown matrix '{key}'")),
+                        Some(p) => match coord.spmv_batch(p, &xs, backend) {
+                            Ok(ys) => Response::SpmvBatch(ys),
+                            Err(e) => Response::Error(format!("{e:#}")),
+                        },
+                    },
+                    Request::SolveBatch { key, bs, opts, backend } => match registry.get(&key) {
+                        None => Response::Error(format!("unknown matrix '{key}'")),
+                        Some(p) => match coord.solve_batch(p, &bs, &opts, backend) {
+                            Ok(rs) => Response::SolveBatch(rs),
                             Err(e) => Response::Error(format!("{e:#}")),
                         },
                     },
@@ -181,6 +222,51 @@ mod tests {
             panic!("solve failed")
         };
         assert!(res.converged);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batch_requests_roundtrip() {
+        let svc = Service::start(Config::default());
+        let coo = gen::small_test_matrix(90, 22, 2.0);
+        let Response::Prepared { n, .. } =
+            svc.call(Request::Prepare { key: "m".into(), coo })
+        else {
+            panic!("prepare failed")
+        };
+        assert_eq!(n, 90);
+
+        let xs = VecBatch::from_fn(90, 3, |i, c| ((i + c * 7) % 5) as f64 - 2.0);
+        let Response::SpmvBatch(ys) = svc.call(Request::SpmvBatch {
+            key: "m".into(),
+            xs: xs.clone(),
+            backend: Backend::Pars3 { p: 3 },
+        }) else {
+            panic!("spmv batch failed")
+        };
+        assert_eq!((ys.n(), ys.k()), (90, 3));
+        // cross-check column 0 against the single-vector path
+        let Response::Spmv(y0) = svc.call(Request::Spmv {
+            key: "m".into(),
+            x: xs.col(0).to_vec(),
+            backend: Backend::Pars3 { p: 3 },
+        }) else {
+            panic!("spmv failed")
+        };
+        for (a, b) in ys.col(0).iter().zip(&y0) {
+            assert!((a - b).abs() < 1e-9);
+        }
+
+        let Response::SolveBatch(results) = svc.call(Request::SolveBatch {
+            key: "m".into(),
+            bs: xs,
+            opts: MrsOptions { alpha: 2.0, max_iters: 400, tol: 1e-8 },
+            backend: Backend::Serial,
+        }) else {
+            panic!("solve batch failed")
+        };
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| r.converged));
         svc.shutdown();
     }
 

@@ -8,6 +8,7 @@
 //! color badly — exactly the weakness PARS3's preprocessing removes.
 
 use crate::graph::coloring::{color_rows, RowColoring};
+use crate::kernel::batch::VecBatch;
 use crate::mpisim::{Window, World};
 use crate::sparse::Sss;
 use crate::Result;
@@ -30,7 +31,9 @@ pub struct ColoringPlan {
 
 impl ColoringPlan {
     /// Color the matrix and distribute each class round-robin over `p`.
-    pub fn new(s: Sss, p: usize) -> Result<Self> {
+    /// Accepts an owned or already-shared matrix (no clone either way).
+    pub fn new(s: impl Into<Arc<Sss>>, p: usize) -> Result<Self> {
+        let s: Arc<Sss> = s.into();
         ensure!(p >= 1, "need at least one rank");
         let coloring = color_rows(&s);
         let mut assign = Vec::with_capacity(coloring.num_colors);
@@ -41,7 +44,7 @@ impl ColoringPlan {
             }
             assign.push(per_rank);
         }
-        Ok(Self { s: Arc::new(s), coloring, p, assign })
+        Ok(Self { s, coloring, p, assign })
     }
 
     /// Number of phases (= colors = barriers per multiply).
@@ -80,6 +83,48 @@ impl ColoringPlan {
         window.to_vec()
     }
 
+    /// Fused threaded phased batch execution: one matrix traversal per
+    /// batch; each loaded `(j, v)` is reused across all `k` columns.
+    /// The accumulate window is widened to `n × k` (column-major, same
+    /// layout as [`VecBatch`]) so phases keep their disjoint-write
+    /// guarantee per column.
+    pub fn execute_threaded_batch(&self, xs: &VecBatch, ys: &mut VecBatch) {
+        let (n, kw) = (self.s.n, xs.k());
+        assert_eq!(xs.n(), n);
+        assert_eq!(ys.n(), n);
+        assert_eq!(ys.k(), kw);
+        let window = Window::new(n * kw);
+        let win = &window;
+        let xd = xs.data();
+        World::run(self.p, move |ctx| {
+            let s = &*self.s;
+            let sign = s.sym.sign();
+            let mut yi = vec![0.0f64; kw];
+            for per_rank in &self.assign {
+                for &i in &per_rank[ctx.rank] {
+                    let i = i as usize;
+                    for c in 0..kw {
+                        yi[c] = s.dvalues[i] * xd[c * n + i];
+                    }
+                    for k in s.row_ptr[i]..s.row_ptr[i + 1] {
+                        let j = s.col_ind[k] as usize;
+                        let v = s.vals[k];
+                        let sv = sign * v;
+                        for c in 0..kw {
+                            yi[c] += v * xd[c * n + j];
+                            win.add(c * n + j, sv * xd[c * n + i]);
+                        }
+                    }
+                    for c in 0..kw {
+                        win.add(c * n + i, yi[c]);
+                    }
+                }
+                ctx.barrier(); // phase synchronization point
+            }
+        });
+        window.read_into(ys.data_mut());
+    }
+
     /// Rank-sequential emulation (deterministic, any `p`).
     pub fn execute_emulated(&self, x: &[f64]) -> Vec<f64> {
         let s = &*self.s;
@@ -103,6 +148,44 @@ impl ColoringPlan {
         }
         y
     }
+
+    /// Rank-sequential fused batch emulation (deterministic, any `p`):
+    /// identical numerics to [`Self::execute_emulated`] column-by-column,
+    /// with one matrix traversal for the whole batch.
+    pub fn execute_emulated_batch(&self, xs: &VecBatch, ys: &mut VecBatch) {
+        let s = &*self.s;
+        let sign = s.sym.sign();
+        let (n, kw) = (s.n, xs.k());
+        assert_eq!(xs.n(), n);
+        assert_eq!(ys.n(), n);
+        assert_eq!(ys.k(), kw);
+        let xd = xs.data();
+        ys.fill_zero();
+        let yd = ys.data_mut();
+        let mut yi = vec![0.0f64; kw];
+        for per_rank in &self.assign {
+            for rows in per_rank {
+                for &i in rows {
+                    let i = i as usize;
+                    for c in 0..kw {
+                        yi[c] = s.dvalues[i] * xd[c * n + i];
+                    }
+                    for k in s.row_ptr[i]..s.row_ptr[i + 1] {
+                        let j = s.col_ind[k] as usize;
+                        let v = s.vals[k];
+                        let sv = sign * v;
+                        for c in 0..kw {
+                            yi[c] += v * xd[c * n + j];
+                            yd[c * n + j] += sv * xd[c * n + i];
+                        }
+                    }
+                    for c in 0..kw {
+                        yd[c * n + i] += yi[c];
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// [`crate::kernel::Spmv`] adapter over a [`ColoringPlan`] at a fixed
@@ -115,7 +198,7 @@ pub struct ColoringKernel {
 impl ColoringKernel {
     /// Color `s` and distribute over `p` ranks. `threaded = false` uses
     /// the deterministic rank-sequential emulation.
-    pub fn new(s: Sss, p: usize, threaded: bool) -> Result<Self> {
+    pub fn new(s: impl Into<Arc<Sss>>, p: usize, threaded: bool) -> Result<Self> {
         Ok(Self { plan: ColoringPlan::new(s, p)?, threaded })
     }
 
@@ -137,6 +220,14 @@ impl crate::kernel::Spmv for ColoringKernel {
             self.plan.execute_emulated(x)
         };
         y.copy_from_slice(&out);
+    }
+
+    fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) {
+        if self.threaded {
+            self.plan.execute_threaded_batch(xs, ys);
+        } else {
+            self.plan.execute_emulated_batch(xs, ys);
+        }
     }
 
     fn flops(&self) -> u64 {
@@ -208,6 +299,28 @@ mod tests {
         }
         assert_eq!(k.name(), "coloring");
         assert!(k.plan().phases() >= 1);
+    }
+
+    #[test]
+    fn batch_executors_match_columnwise_apply() {
+        use crate::kernel::Spmv;
+        let s = banded(70, 5);
+        let xs = VecBatch::from_fn(70, 3, |i, c| ((i + c * 13) % 9) as f64 * 0.5 - 2.0);
+        for threaded in [false, true] {
+            let mut k = ColoringKernel::new(s.clone(), 3, threaded).unwrap();
+            let mut ys = VecBatch::zeros(70, 3);
+            k.apply_batch(&xs, &mut ys);
+            for c in 0..3 {
+                let mut want = vec![0.0; 70];
+                k.apply(xs.col(c), &mut want);
+                for (r, (a, b)) in ys.col(c).iter().zip(&want).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-10,
+                        "threaded={threaded} col {c} row {r}: {a} vs {b}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! (Elafrou et al. [3]) it is compared against.
 
 pub mod balance;
+pub mod batch;
 pub mod coloring_spmv;
 pub mod conflict;
 pub mod csr_spmv;
@@ -14,6 +15,7 @@ pub mod serial_sss;
 pub mod split3;
 pub mod traits;
 
+pub use batch::VecBatch;
 pub use conflict::{BlockDist, ConflictMap};
 pub use pars3::Pars3Plan;
 pub use registry::{KernelConfig, KERNEL_NAMES};

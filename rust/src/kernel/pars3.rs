@@ -23,9 +23,10 @@
 //!    irregular communication);
 //! 6. **epoch fence** — barrier; the window now holds `y = A x`.
 
+use crate::kernel::batch::VecBatch;
 use crate::kernel::conflict::BlockDist;
 use crate::kernel::split3::Split3;
-use crate::mpisim::{PersistentWorld, RankCtx, RankReport, Window, World};
+use crate::mpisim::{InputSlot, PersistentWorld, RankCtx, RankReport, Window, World};
 use crate::Result;
 use anyhow::ensure;
 use std::sync::Arc;
@@ -82,10 +83,12 @@ pub struct Pars3Plan {
 
 impl Pars3Plan {
     /// Preprocess: Θ(NNZ) conflict/halo discovery for `p` ranks.
-    pub fn new(split: Split3, p: usize) -> Result<Self> {
+    /// Accepts an owned or already-shared split (no clone either way),
+    /// so many plans over one matrix share one `Split3`.
+    pub fn new(split: impl Into<Arc<Split3>>, p: usize) -> Result<Self> {
+        let split: Arc<Split3> = split.into();
         ensure!(p >= 1, "need at least one rank");
         ensure!(split.n >= p, "more ranks than rows ({} < {p})", split.n);
-        let split = Arc::new(split);
         let dist = BlockDist::new(split.n, p);
         let mut ranks: Vec<RankPlan> = (0..p)
             .map(|r| {
@@ -204,6 +207,52 @@ impl Pars3Plan {
         }
     }
 
+    /// Fused batch variant of [`Self::rank_compute`]: `xw`/`yw` are
+    /// **interleaved** `k`-wide windows over `[halo_lo, r1)` — element
+    /// `(row_idx, c)` lives at `row_idx * k + c` — so each loaded
+    /// `(j, a_ij)` drives `2k` contiguous multiply-accumulates. One
+    /// traversal of the rank's matrix slice serves the whole batch.
+    fn rank_compute_batch(&self, rp: &RankPlan, k: usize, xw: &[f64], yw: &mut [f64]) {
+        let split = &*self.split;
+        let sign = split.sym.sign();
+        let (r0, r1, base) = (rp.r0, rp.r1, rp.halo_lo);
+        debug_assert_eq!(xw.len(), (r1 - base) * k);
+        debug_assert_eq!(yw.len(), (r1 - base) * k);
+        // diagonal split
+        for i in r0..r1 {
+            let d = split.diag[i];
+            let o = (i - base) * k;
+            for c in 0..k {
+                yw[o + c] = d * xw[o + c];
+            }
+        }
+        // middle split — each (j, v) loaded once for all k columns
+        for i in r0..r1 {
+            let oi = (i - base) * k;
+            let lo = split.middle.row_ptr[i];
+            let hi = split.middle.row_ptr[i + 1];
+            for (&j, &v) in split.middle.col_ind[lo..hi].iter().zip(&split.middle.vals[lo..hi]) {
+                let oj = (j as usize - base) * k;
+                let sv = sign * v;
+                for c in 0..k {
+                    yw[oi + c] += v * xw[oj + c];
+                    yw[oj + c] += sv * xw[oi + c]; // safe or conflicting mirror
+                }
+            }
+        }
+        // outer split: sequential tail
+        for &e_idx in &self.outer_by_rank[rp.rank] {
+            let e = &split.outer[e_idx];
+            let oi = (e.row as usize - base) * k;
+            let oj = (e.col as usize - base) * k;
+            let sv = sign * e.val;
+            for c in 0..k {
+                yw[oi + c] += e.val * xw[oj + c];
+                yw[oj + c] += sv * xw[oi + c];
+            }
+        }
+    }
+
     /// One rank's full apply: halo exchange + compute + one-sided
     /// accumulate + epoch fence. Shared by the one-shot threaded
     /// executor and the persistent [`Pars3Threaded`] executor.
@@ -237,6 +286,98 @@ impl Pars3Plan {
             msg_values: ctx.sent_values - v0,
             seconds: t0.elapsed().as_secs_f64(),
         }
+    }
+
+    /// One rank's fused batch apply over a **column-major** `n × k`
+    /// output window. `xd` is the column-major batch input
+    /// (`xd[c * n + i]`). Exactly the same message schedule as the
+    /// scalar [`Self::rank_apply`] — one halo message per neighbour
+    /// range per batch, payload scaled by `k` — so an iterative block
+    /// solver pays one halo exchange round per batch, not per vector.
+    fn rank_apply_batch(&self, win: &Window, xd: &[f64], k: usize, ctx: &mut RankCtx) -> RankReport {
+        let t0 = std::time::Instant::now();
+        let (m0, v0) = (ctx.sent_msgs, ctx.sent_values);
+        let rp = &self.ranks[ctx.rank];
+        let n = self.split.n;
+        let (r0, r1, base) = (rp.r0, rp.r1, rp.halo_lo);
+        let w = r1 - base;
+        // stage 1: gather this rank's own block into the interleaved
+        // window (transpose from column-major to k-wide rows)
+        let mut xw = vec![0.0f64; w * k];
+        for i in r0..r1 {
+            let o = (i - base) * k;
+            for c in 0..k {
+                xw[o + c] = xd[c * n + i];
+            }
+        }
+        // stage 2: halo exchange, paper's last-to-root order — ONE
+        // k-wide message per neighbour range (same count as k = 1)
+        for &(dest, a, b) in &rp.sends {
+            ctx.send(dest, TAG_HALO, xw[(a - base) * k..(b - base) * k].to_vec());
+        }
+        for &(src, a, b) in &rp.recvs {
+            let data = ctx.recv(src, TAG_HALO);
+            debug_assert_eq!(data.len(), (b - a) * k);
+            xw[(a - base) * k..(b - base) * k].copy_from_slice(&data);
+        }
+        // fused compute: one matrix traversal for the whole batch
+        let mut yw = vec![0.0f64; w * k];
+        self.rank_compute_batch(rp, k, &xw, &mut yw);
+        // one-sided epoch: scatter the interleaved window into the
+        // column-major n×k accumulation window
+        for idx in 0..w {
+            for c in 0..k {
+                win.add(c * n + base + idx, yw[idx * k + c]);
+            }
+        }
+        ctx.barrier(); // epoch fence
+        RankReport {
+            msgs: ctx.sent_msgs - m0,
+            msg_values: ctx.sent_values - v0,
+            seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Rank-sequential fused batch emulation: identical numerics to the
+    /// threaded batch path and the same message accounting (`msgs` as
+    /// at `k = 1`, payload scaled by `k`) without spawning threads.
+    pub fn execute_emulated_batch(&self, xs: &VecBatch, ys: &mut VecBatch) -> Pars3Stats {
+        let n = self.split.n;
+        let k = xs.k();
+        assert_eq!(xs.n(), n);
+        assert_eq!(ys.n(), n);
+        assert_eq!(ys.k(), k);
+        let xd = xs.data();
+        ys.fill_zero();
+        let yd = ys.data_mut();
+        let mut stats = Pars3Stats::default();
+        let (mut xw, mut yw) = (Vec::new(), Vec::new());
+        for rp in &self.ranks {
+            let (base, r1) = (rp.halo_lo, rp.r1);
+            let w = r1 - base;
+            // gather the full [halo_lo, r1) window (emulation sees all
+            // of x, so the "halo" is a direct gather, not a message)
+            xw.clear();
+            xw.resize(w * k, 0.0);
+            for i in base..r1 {
+                let o = (i - base) * k;
+                for c in 0..k {
+                    xw[o + c] = xd[c * n + i];
+                }
+            }
+            yw.clear();
+            yw.resize(w * k, 0.0);
+            self.rank_compute_batch(rp, k, &xw, &mut yw);
+            for idx in 0..w {
+                for c in 0..k {
+                    yd[c * n + base + idx] += yw[idx * k + c];
+                }
+            }
+            stats.msgs.push(rp.sends.len());
+            stats.msg_values.push(rp.sends.iter().map(|&(_, a, b)| (b - a) * k).sum());
+            stats.rank_seconds.push(0.0);
+        }
+        stats
     }
 
     /// One-shot threaded execution: spawns rank threads, runs one
@@ -289,10 +430,20 @@ impl Pars3Plan {
 /// the iterative-solver hot path pays thread-spawn cost zero times per
 /// multiply. The one-sided window persists too and is reset (while all
 /// ranks are idle) at the start of each epoch.
+///
+/// Input hand-off is **zero-copy**: the caller's `x` (or batch) is
+/// published into a double-buffered [`InputSlot`] and rank threads read
+/// it in place — no per-apply `Arc<Vec<f64>>` clone. The borrow is
+/// sound because [`PersistentWorld::run_job`] blocks until every rank
+/// reports done, so the slice outlives all reads of its epoch.
 pub struct Pars3Threaded {
     plan: Arc<Pars3Plan>,
     world: PersistentWorld,
     window: Arc<Window>,
+    xslot: Arc<InputSlot>,
+    /// `n × k` column-major accumulate window for the fused batch path,
+    /// sized once per batch width (see [`Self::prepare_batch`]).
+    batch_window: Option<(usize, Arc<Window>)>,
 }
 
 impl Pars3Threaded {
@@ -300,26 +451,92 @@ impl Pars3Threaded {
     pub fn new(plan: Arc<Pars3Plan>) -> Self {
         let world = PersistentWorld::new(plan.dist.p);
         let window = Window::new(plan.split.n);
-        Self { plan, world, window }
+        Self { plan, world, window, xslot: InputSlot::new(), batch_window: None }
     }
 
-    /// `y = A x` on the persistent rank threads. Returns `(y, stats)`.
-    pub fn apply(&self, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
-        assert_eq!(x.len(), self.plan.split.n);
-        // All ranks are idle between jobs, so the epoch reset is safe;
-        // the job channel send/recv pair orders it before rank writes.
-        self.window.reset();
-        let x = Arc::new(x.to_vec());
-        let plan = self.plan.clone();
-        let win = self.window.clone();
-        let reports = self.world.run_job(move |ctx| plan.rank_apply(&win, &x, ctx));
+    fn collect(reports: Vec<RankReport>) -> Pars3Stats {
         let mut stats = Pars3Stats::default();
         for r in reports {
             stats.msgs.push(r.msgs);
             stats.msg_values.push(r.msg_values);
             stats.rank_seconds.push(r.seconds);
         }
-        (self.window.to_vec(), stats)
+        stats
+    }
+
+    /// `y = A x` into a caller buffer on the persistent rank threads.
+    /// Allocation-free on the executor side: ranks read `x` through the
+    /// input slot and `y` is filled straight from the window.
+    pub fn apply_into(&self, x: &[f64], y: &mut [f64]) -> Pars3Stats {
+        assert_eq!(x.len(), self.plan.split.n);
+        assert_eq!(y.len(), self.plan.split.n);
+        // All ranks are idle between jobs, so the epoch reset is safe;
+        // the job channel send/recv pair orders it before rank writes.
+        self.window.reset();
+        let epoch = self.xslot.publish(x);
+        let plan = self.plan.clone();
+        let win = self.window.clone();
+        let slot = self.xslot.clone();
+        let reports = self.world.run_job(move |ctx| {
+            // SAFETY: run_job returns only after every rank reports
+            // done, so the caller's `x` outlives all reads of `epoch`.
+            let x = unsafe { slot.read(epoch) };
+            plan.rank_apply(&win, x, ctx)
+        });
+        self.xslot.retire(epoch);
+        self.window.read_into(y);
+        Self::collect(reports)
+    }
+
+    /// `y = A x` on the persistent rank threads. Returns `(y, stats)`.
+    pub fn apply(&self, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
+        let mut y = vec![0.0f64; self.plan.split.n];
+        let stats = self.apply_into(x, &mut y);
+        (y, stats)
+    }
+
+    /// Size (or resize) the `n × k` batch window ahead of time so the
+    /// first batched multiply pays no allocation.
+    pub fn prepare_batch(&mut self, k: usize) -> Arc<Window> {
+        match &self.batch_window {
+            Some((bk, w)) if *bk == k => w.clone(),
+            _ => {
+                let w = Window::new(self.plan.split.n * k.max(1));
+                self.batch_window = Some((k.max(1), w.clone()));
+                w
+            }
+        }
+    }
+
+    /// Fused batch multiply `ys = A xs` on the persistent rank threads:
+    /// one matrix traversal and **one halo exchange round** per batch
+    /// (message count identical to a single apply; payload scaled by
+    /// `k`). The caller's column-major batch is read in place through
+    /// the input slot — no clone.
+    pub fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) -> Pars3Stats {
+        let n = self.plan.split.n;
+        let k = xs.k();
+        assert_eq!(xs.n(), n);
+        assert_eq!(ys.n(), n);
+        assert_eq!(ys.k(), k);
+        if k == 0 {
+            return Pars3Stats::default();
+        }
+        let win = self.prepare_batch(k);
+        win.reset();
+        let epoch = self.xslot.publish(xs.data());
+        let plan = self.plan.clone();
+        let slot = self.xslot.clone();
+        let wjob = win.clone();
+        let reports = self.world.run_job(move |ctx| {
+            // SAFETY: as in apply_into — run_job blocks until every
+            // rank reports, so the batch outlives all epoch reads.
+            let xd = unsafe { slot.read(epoch) };
+            plan.rank_apply_batch(&wjob, xd, k, ctx)
+        });
+        self.xslot.retire(epoch);
+        win.read_into(ys.data_mut());
+        Self::collect(reports)
     }
 }
 
@@ -330,20 +547,28 @@ impl Pars3Threaded {
 pub struct Pars3Kernel {
     plan: Arc<Pars3Plan>,
     exec: Option<Pars3Threaded>,
+    last_stats: Option<Pars3Stats>,
 }
 
 impl Pars3Kernel {
     /// Build from a split at `p` ranks. `threaded = false` uses the
     /// emulated executor (deterministic; preferable on a 1-core box).
-    pub fn new(split: Split3, p: usize, threaded: bool) -> Result<Self> {
+    pub fn new(split: impl Into<Arc<Split3>>, p: usize, threaded: bool) -> Result<Self> {
         let plan = Arc::new(Pars3Plan::new(split, p)?);
         let exec = if threaded { Some(Pars3Threaded::new(plan.clone())) } else { None };
-        Ok(Self { plan, exec })
+        Ok(Self { plan, exec, last_stats: None })
     }
 
     /// The underlying plan.
     pub fn plan(&self) -> &Pars3Plan {
         &self.plan
+    }
+
+    /// Execution statistics of the most recent `apply`/`apply_batch`
+    /// (message counts per rank; the batch-fusion acceptance tests
+    /// assert on these).
+    pub fn last_stats(&self) -> Option<&Pars3Stats> {
+        self.last_stats.as_ref()
     }
 }
 
@@ -353,11 +578,29 @@ impl crate::kernel::Spmv for Pars3Kernel {
     }
 
     fn apply(&mut self, x: &[f64], y: &mut [f64]) {
-        let (out, _) = match &self.exec {
-            Some(exec) => exec.apply(x),
-            None => self.plan.execute_emulated(x),
+        let stats = match &self.exec {
+            Some(exec) => exec.apply_into(x, y),
+            None => {
+                let (out, stats) = self.plan.execute_emulated(x);
+                y.copy_from_slice(&out);
+                stats
+            }
         };
-        y.copy_from_slice(&out);
+        self.last_stats = Some(stats);
+    }
+
+    fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) {
+        let stats = match &mut self.exec {
+            Some(exec) => exec.apply_batch(xs, ys),
+            None => self.plan.execute_emulated_batch(xs, ys),
+        };
+        self.last_stats = Some(stats);
+    }
+
+    fn prepare_hint(&mut self, k: usize) {
+        if let Some(exec) = &mut self.exec {
+            exec.prepare_batch(k);
+        }
     }
 
     fn flops(&self) -> u64 {
@@ -514,6 +757,142 @@ mod tests {
         for (r, rp) in plan.ranks.iter().enumerate() {
             assert_eq!(s2.msgs[r], rp.sends.len());
         }
+    }
+
+    #[test]
+    fn emulated_batch_matches_columnwise_apply() {
+        let s = banded(140, 12, 1.5);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Pars3Plan::new(split, 5).unwrap();
+        let k = 4;
+        let xs = VecBatch::from_fn(140, k, |i, c| ((i * 7 + c * 31) % 19) as f64 * 0.3 - 2.5);
+        let mut ys = VecBatch::zeros(140, k);
+        plan.execute_emulated_batch(&xs, &mut ys);
+        for c in 0..k {
+            let (want, _) = plan.execute_emulated(xs.col(c));
+            for (r, (a, b)) in ys.col(c).iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-9, "col {c} row {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_batch_matches_emulated_batch() {
+        let s = banded(160, 13, 2.0);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Arc::new(Pars3Plan::new(split, 4).unwrap());
+        let mut exec = Pars3Threaded::new(plan.clone());
+        let k = 3;
+        let xs = VecBatch::from_fn(160, k, |i, c| (i as f64 * 0.17 + c as f64).cos());
+        let mut got = VecBatch::zeros(160, k);
+        exec.apply_batch(&xs, &mut got);
+        let mut want = VecBatch::zeros(160, k);
+        plan.execute_emulated_batch(&xs, &mut want);
+        for c in 0..k {
+            for (r, (a, b)) in got.col(c).iter().zip(want.col(c)).enumerate() {
+                assert!((a - b).abs() < 1e-10, "col {c} row {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_fuses_halo_exchange_one_round_per_batch() {
+        // acceptance: msgs for a k=8 batch == msgs for k=1, payload ×8,
+        // on BOTH executors — the batch traverses the matrix once and
+        // exchanges halos once, not once per vector.
+        let s = banded(200, 14, 1.0);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Arc::new(Pars3Plan::new(split, 6).unwrap());
+        let k = 8;
+        let xs = VecBatch::from_fn(200, k, |i, c| ((i + c * 17) % 23) as f64 * 0.25 - 2.0);
+        let x1 = xs.col(0).to_vec();
+
+        // emulated executor
+        let (_, s_one) = plan.execute_emulated(&x1);
+        let mut ys = VecBatch::zeros(200, k);
+        let s_batch = plan.execute_emulated_batch(&xs, &mut ys);
+        assert_eq!(s_batch.msgs, s_one.msgs, "emulated: batch must not add messages");
+        for (r, (&bv, &ov)) in s_batch.msg_values.iter().zip(&s_one.msg_values).enumerate() {
+            assert_eq!(bv, ov * k, "emulated rank {r}: payload must scale by k");
+        }
+
+        // persistent threaded executor
+        let mut exec = Pars3Threaded::new(plan.clone());
+        let (_, t_one) = exec.apply(&x1);
+        let mut yt = VecBatch::zeros(200, k);
+        let t_batch = exec.apply_batch(&xs, &mut yt);
+        assert_eq!(t_batch.msgs, t_one.msgs, "threaded: batch must not add messages");
+        for (r, (&bv, &ov)) in t_batch.msg_values.iter().zip(&t_one.msg_values).enumerate() {
+            assert_eq!(bv, ov * k, "threaded rank {r}: payload must scale by k");
+        }
+    }
+
+    #[test]
+    fn threaded_apply_reads_x_in_place_zero_copy() {
+        // regression for the old per-apply `Arc<Vec<f64>>` clone: the
+        // executor must read the caller's buffer through the input
+        // slot, and repeated applies through the same executor must
+        // stay correct while the caller rewrites that same buffer.
+        use crate::kernel::Spmv;
+        let s = banded(100, 15, 1.0);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let mut k = Pars3Kernel::new(split, 3, true).unwrap();
+        let mut x = vec![0.0f64; 100];
+        let mut got = vec![0.0f64; 100];
+        for round in 0..3u64 {
+            for (i, v) in x.iter_mut().enumerate() {
+                *v = ((i as u64 * 5 + round * 11) % 17) as f64 * 0.5 - 3.0;
+            }
+            let mut want = vec![0.0; 100];
+            sss_spmv(&s, &x, &mut want);
+            k.apply(&x, &mut got);
+            for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "round {round} row {r}");
+            }
+        }
+        assert!(k.last_stats().is_some());
+    }
+
+    #[test]
+    fn persistent_executor_survives_interleaved_batch_widths() {
+        // k=1 applies and k=4/k=2 batches interleaved through ONE
+        // executor: the double-buffered slot and the resizable batch
+        // window must not leak state between epochs of different widths
+        let s = banded(110, 17, 1.5);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Arc::new(Pars3Plan::new(split, 4).unwrap());
+        let mut exec = Pars3Threaded::new(plan.clone());
+        for (round, &k) in [1usize, 4, 2, 4, 1].iter().enumerate() {
+            let xs = VecBatch::from_fn(110, k, |i, c| {
+                ((i * 3 + c * 13 + round * 7) % 19) as f64 * 0.4 - 3.0
+            });
+            let mut got = VecBatch::zeros(110, k);
+            exec.apply_batch(&xs, &mut got);
+            for c in 0..k {
+                let mut want = vec![0.0; 110];
+                sss_spmv(&s, xs.col(c), &mut want);
+                for (r, (a, b)) in got.col(c).iter().zip(&want).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-10,
+                        "round {round} k={k} col {c} row {r}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepare_hint_presizes_the_batch_window() {
+        let s = banded(90, 16, 1.0);
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Arc::new(Pars3Plan::new(split, 3).unwrap());
+        let mut exec = Pars3Threaded::new(plan);
+        let w1 = exec.prepare_batch(4);
+        let w2 = exec.prepare_batch(4);
+        assert!(Arc::ptr_eq(&w1, &w2), "same width must reuse the window");
+        assert_eq!(w1.len(), 90 * 4);
+        let w3 = exec.prepare_batch(2);
+        assert_eq!(w3.len(), 90 * 2);
     }
 
     #[test]

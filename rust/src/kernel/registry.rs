@@ -24,6 +24,7 @@ use crate::kernel::traits::Spmv;
 use crate::sparse::{convert, Coo, Sss, Symmetry};
 use crate::Result;
 use anyhow::{bail, Context};
+use std::sync::Arc;
 
 /// Names of every registered kernel, in bench display order.
 pub const KERNEL_NAMES: &[&str] = &["serial_sss", "csr", "dgbmv", "coloring", "pars3"];
@@ -84,7 +85,19 @@ pub fn build(name: &str, coo: &Coo, cfg: &KernelConfig) -> Result<Box<dyn Spmv>>
 /// Build a kernel by name from an already-ordered SSS matrix (the entry
 /// point for the coordinator and benches, which preprocess once and
 /// construct many kernels from the same [`Sss`]).
-pub fn build_from_sss(name: &str, sss: Sss, cfg: &KernelConfig) -> Result<Box<dyn Spmv>> {
+///
+/// Accepts an owned `Sss` or an `Arc<Sss>`; either way the matrix is
+/// **shared, not cloned** — kernels that keep the SSS form alive
+/// (`serial_sss`, `coloring`) hold the same allocation, and kernels
+/// that convert (`csr`, `dgbmv`, `pars3`) borrow it during
+/// construction. Many-kernels-per-matrix construction is O(1) in
+/// matrix copies.
+pub fn build_from_sss(
+    name: &str,
+    sss: impl Into<Arc<Sss>>,
+    cfg: &KernelConfig,
+) -> Result<Box<dyn Spmv>> {
+    let sss: Arc<Sss> = sss.into();
     let p = cfg.threads.clamp(1, sss.n.max(1));
     Ok(match name {
         "serial_sss" => Box::new(SerialSss::new(sss)),
@@ -102,7 +115,12 @@ pub fn build_from_sss(name: &str, sss: Sss, cfg: &KernelConfig) -> Result<Box<dy
 /// Build the `pars3` kernel from an existing 3-way split, reusing
 /// preprocessing a caller already did (e.g.
 /// [`crate::coordinator::Prepared::split`]) instead of recomputing it.
-pub fn build_from_split(split: Split3, cfg: &KernelConfig) -> Result<Box<dyn Spmv>> {
+/// Accepts owned or `Arc`-shared splits; never clones the split data.
+pub fn build_from_split(
+    split: impl Into<Arc<Split3>>,
+    cfg: &KernelConfig,
+) -> Result<Box<dyn Spmv>> {
+    let split: Arc<Split3> = split.into();
     let p = cfg.threads.clamp(1, split.n.max(1));
     Ok(Box::new(Pars3Kernel::new(split, p, cfg.threaded)?))
 }
@@ -140,6 +158,40 @@ mod tests {
             k.apply(&x, &mut got);
             for (r, (a, b)) in got.iter().zip(&want).enumerate() {
                 assert!((a - b).abs() < 1e-9, "{name} row {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn arc_shared_matrix_is_shared_not_cloned() {
+        let (_, sss) = fixture(80, 6, 1.0);
+        let sss = Arc::new(sss);
+        let k = build_from_sss("serial_sss", sss.clone(), &KernelConfig::default()).unwrap();
+        // the kernel holds the same allocation, not a deep copy
+        assert_eq!(Arc::strong_count(&sss), 2);
+        drop(k);
+        assert_eq!(Arc::strong_count(&sss), 1);
+    }
+
+    #[test]
+    fn every_registered_kernel_batch_matches_columnwise_apply() {
+        use crate::kernel::batch::VecBatch;
+        let (_, sss) = fixture(100, 7, 2.0);
+        let sss = Arc::new(sss);
+        let kw = 4;
+        let xs = VecBatch::from_fn(100, kw, |i, c| ((i * 13 + c * 7) % 11) as f64 * 0.3 - 1.5);
+        for &name in KERNEL_NAMES {
+            let mut k =
+                build_from_sss(name, sss.clone(), &KernelConfig::with_threads(4)).unwrap();
+            k.prepare_hint(kw);
+            let mut ys = VecBatch::zeros(100, kw);
+            k.apply_batch(&xs, &mut ys);
+            for c in 0..kw {
+                let mut want = vec![0.0; 100];
+                k.apply(xs.col(c), &mut want);
+                for (r, (a, b)) in ys.col(c).iter().zip(&want).enumerate() {
+                    assert!((a - b).abs() < 1e-9, "{name} col {c} row {r}: {a} vs {b}");
+                }
             }
         }
     }

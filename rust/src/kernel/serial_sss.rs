@@ -10,8 +10,10 @@
 //! y[j] += sign * v * x[i]   // mirrored (sign = -1 for skew)
 //! ```
 
+use crate::kernel::batch::VecBatch;
 use crate::kernel::traits::Spmv;
 use crate::sparse::Sss;
+use std::sync::Arc;
 
 /// Compute `y = A x` for an SSS matrix (Alg. 1). `y` is overwritten.
 pub fn sss_spmv(s: &Sss, x: &[f64], y: &mut [f64]) {
@@ -40,16 +42,55 @@ pub fn sss_spmv(s: &Sss, x: &[f64], y: &mut [f64]) {
     }
 }
 
-/// Owned serial SSS kernel implementing [`Spmv`].
+/// Fused batch Alg. 1: `ys = A xs` for an `n × k` column-major batch.
+/// One traversal of the SSS data serves all `k` columns — each stored
+/// `(j, v)` pair is loaded once and drives `2k` multiply-accumulates.
+/// Column-for-column the operation sequence is identical to
+/// [`sss_spmv`], so results match the unbatched kernel bit-for-bit.
+pub fn sss_spmv_batch(s: &Sss, xs: &VecBatch, ys: &mut VecBatch) {
+    assert_eq!(xs.n(), s.n);
+    assert_eq!(ys.n(), s.n);
+    assert_eq!(xs.k(), ys.k());
+    let (n, k) = (s.n, xs.k());
+    let sign = s.sym.sign();
+    let xd = xs.data();
+    let yd = ys.data_mut();
+    let mut yi = vec![0.0f64; k];
+    for i in 0..n {
+        let d = s.dvalues[i];
+        for c in 0..k {
+            yi[c] = d * xd[c * n + i];
+        }
+        let lo = s.row_ptr[i];
+        let hi = s.row_ptr[i + 1];
+        for (&j, &v) in s.col_ind[lo..hi].iter().zip(&s.vals[lo..hi]) {
+            let j = j as usize;
+            let sv = sign * v;
+            for c in 0..k {
+                let base = c * n;
+                yi[c] += v * xd[base + j];
+                yd[base + j] += sv * xd[base + i];
+            }
+        }
+        // same overwrite-last discipline as the scalar kernel: mirror
+        // writes into row i only come from rows > i, which run later
+        for c in 0..k {
+            yd[c * n + i] = yi[c];
+        }
+    }
+}
+
+/// Serial SSS kernel implementing [`Spmv`]. Holds the matrix behind an
+/// [`Arc`] so registry construction shares one `Sss` across kernels.
 pub struct SerialSss {
     /// The matrix.
-    pub s: Sss,
+    pub s: Arc<Sss>,
 }
 
 impl SerialSss {
-    /// Wrap an SSS matrix.
-    pub fn new(s: Sss) -> Self {
-        Self { s }
+    /// Wrap an SSS matrix (owned or already-shared).
+    pub fn new(s: impl Into<Arc<Sss>>) -> Self {
+        Self { s: s.into() }
     }
 }
 
@@ -60,6 +101,10 @@ impl Spmv for SerialSss {
 
     fn apply(&mut self, x: &[f64], y: &mut [f64]) {
         sss_spmv(&self.s, x, y);
+    }
+
+    fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) {
+        sss_spmv_batch(&self.s, xs, ys);
     }
 
     fn flops(&self) -> u64 {
@@ -127,6 +172,21 @@ mod tests {
         let xay: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
         let xx: f64 = x.iter().map(|a| a * a).sum();
         assert!((xay - 3.0 * xx).abs() < 1e-9 * xx.max(1.0));
+    }
+
+    #[test]
+    fn fused_batch_is_bit_identical_to_columnwise_apply() {
+        let coo = gen::small_test_matrix(96, 17, 1.5);
+        let sss = convert::coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        let k = 5;
+        let xs = VecBatch::from_fn(96, k, |i, c| ((i * 3 + c * 11) % 13) as f64 * 0.4 - 2.0);
+        let mut ys = VecBatch::zeros(96, k);
+        sss_spmv_batch(&sss, &xs, &mut ys);
+        for c in 0..k {
+            let mut want = vec![0.0; 96];
+            sss_spmv(&sss, xs.col(c), &mut want);
+            assert_eq!(ys.col(c), &want[..], "column {c}");
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Common kernel interface so solvers and benches swap kernels freely.
 
+use crate::kernel::batch::VecBatch;
+
 /// A repeated-multiply kernel `y = A x` (the iterative-solver hot path).
 pub trait Spmv {
     /// Matrix dimension.
@@ -7,6 +9,27 @@ pub trait Spmv {
 
     /// Compute `y = A x`. `x.len() == y.len() == n()`.
     fn apply(&mut self, x: &[f64], y: &mut [f64]);
+
+    /// Compute `ys = A xs` for an `n × k` column-major batch (the
+    /// multi-RHS / block-Krylov hot path). Kernels with a native fused
+    /// implementation traverse the matrix **once** per batch, reusing
+    /// each loaded `(j, a_ij)` across all `k` columns; this default
+    /// falls back to `k` independent [`Spmv::apply`] calls and is
+    /// numerically the reference the fused paths are tested against.
+    fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) {
+        assert_eq!(xs.n(), self.n(), "batch row count != kernel n");
+        assert_eq!(xs.n(), ys.n());
+        assert_eq!(xs.k(), ys.k(), "input/output batch widths differ");
+        for c in 0..xs.k() {
+            self.apply(xs.col(c), ys.col_mut(c));
+        }
+    }
+
+    /// Hint the batch width of upcoming [`Spmv::apply_batch`] calls so
+    /// plans can size scratch (windows, halo buffers) once instead of
+    /// on the first batched multiply. Optional; the default is a no-op
+    /// and kernels must still handle unhinted widths.
+    fn prepare_hint(&mut self, _k: usize) {}
 
     /// Floating-point ops per `apply` (for roofline/throughput reports).
     fn flops(&self) -> u64;

@@ -6,7 +6,7 @@
 //! pars3 info                          # artifact + platform info
 //! pars3 report <table1|rcm|conflicts|splits|fig9|coloring|complexity|all>
 //! pars3 spmv   [--matrix NAME] [--p N] [--backend serial|pars3|pjrt]
-//! pars3 solve  [--matrix NAME] [--p N] [--backend ...] [--tol T] [--iters K]
+//! pars3 solve  [--matrix NAME] [--p N] [--backend ...] [--tol T] [--iters K] [--rhs K]
 //! pars3 serve  [--demo]               # request-service loop demo
 //! ```
 //!
@@ -113,7 +113,7 @@ fn run() -> Result<()> {
                  usage: pars3 <info|report|spmv|solve|serve> [flags]\n\
                  report subcommands: table1 rcm conflicts splits fig9 coloring complexity all\n\
                  flags: --config F --scale S --ranks 1,2,4 --threaded --matrix NAME --p N\n\
-                        --backend serial|pars3|pjrt --tol T --iters K --artifacts DIR"
+                        --backend serial|pars3|pjrt --tol T --iters K --rhs K --artifacts DIR"
             );
             Ok(())
         }
@@ -220,13 +220,39 @@ fn cmd_solve(cfg: Config, args: &Args) -> Result<()> {
     let backend = backend_of(args, 8)?;
     let tol: f64 = args.flags.get("tol").map(|v| v.parse()).transpose()?.unwrap_or(1e-8);
     let iters: usize = args.flags.get("iters").map(|v| v.parse()).transpose()?.unwrap_or(500);
+    let rhs: usize = args.flags.get("rhs").map(|v| v.parse()).transpose()?.unwrap_or(1);
     let alpha = cfg.alpha;
     let (name, coo) = pick_matrix(&cfg, name)?;
     let mut coord = Coordinator::new(cfg);
     let prep = coord.prepare(&name, &coo)?;
     let mut rng = SmallRng::seed_from_u64(17);
-    let b: Vec<f64> = (0..prep.n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
     let opts = MrsOptions { alpha, max_iters: iters, tol };
+    if rhs > 1 {
+        // multi-RHS path: one fused SpMV per sweep serves every column
+        if backend == Backend::Pjrt {
+            anyhow::bail!("--rhs > 1 supports serial/pars3 backends");
+        }
+        let bs = pars3::kernel::VecBatch::from_fn(prep.n, rhs, |_, _| {
+            rng.gen_range_f64(-1.0, 1.0)
+        });
+        let t0 = std::time::Instant::now();
+        let results = if args.flags.get("solver").map(String::as_str) == Some("krylov") {
+            let kopts = pars3::solver::KrylovOptions { alpha, max_iters: iters, tol };
+            let mut k = coord.kernel(&prep, backend)?;
+            pars3::solver::mrs_krylov_solve_batch(&mut *k, &bs, &kopts)
+        } else {
+            coord.solve_batch(&prep, &bs, &opts, backend)?
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        let converged = results.iter().filter(|r| r.converged).count();
+        let max_iters_used = results.iter().map(|r| r.iters).max().unwrap_or(0);
+        println!(
+            "{name}: backend {backend:?} rhs={rhs} converged {converged}/{rhs} \
+             max_iters={max_iters_used} ({dt:.3}s, one fused SpMV per sweep)"
+        );
+        return Ok(());
+    }
+    let b: Vec<f64> = (0..prep.n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
     let t0 = std::time::Instant::now();
     let res = if args.flags.get("solver").map(String::as_str) == Some("krylov") {
         // full Krylov MRS (Idema-Vuik family) over the same registry

@@ -9,6 +9,7 @@
 //! instrumentation.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -196,6 +197,100 @@ impl World {
     }
 }
 
+/// A double-buffered **zero-copy input slot**: the executor publishes a
+/// borrowed slice for one epoch and persistent rank threads read it in
+/// place — no per-apply clone of the input vector, no `Arc<Vec<f64>>`
+/// allocation on the repeated-multiply hot path.
+///
+/// Protocol (enforced by [`PersistentWorld::run_job`]'s structure, not
+/// by this type):
+///
+/// 1. the caller `publish`es `x`, getting an epoch token;
+/// 2. the job fan-out hands the token to every rank, which `read`s the
+///    slice for the duration of the job;
+/// 3. `run_job` returns only after every rank has reported done, so
+///    the borrow ends before the caller regains control;
+/// 4. the caller `retire`s the epoch (a late read then fails loudly on
+///    a null pointer instead of dereferencing a dangling one).
+///
+/// Two cells, indexed by epoch parity, make the hand-off double
+/// buffered: publishing epoch `e+1` never overwrites the cell a
+/// straggling reader of epoch `e` might still be looking at.
+pub struct InputSlot {
+    slots: [SlotCell; 2],
+    epoch: AtomicU64,
+}
+
+struct SlotCell {
+    ptr: AtomicPtr<f64>,
+    len: AtomicUsize,
+    /// Epoch this cell was last published for — `read` verifies it so a
+    /// protocol-violating read after a same-parity republish fails
+    /// loudly instead of silently aliasing the wrong buffer.
+    epoch: AtomicU64,
+}
+
+impl SlotCell {
+    fn empty() -> Self {
+        Self {
+            ptr: AtomicPtr::new(std::ptr::null_mut()),
+            len: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
+        }
+    }
+}
+
+impl InputSlot {
+    /// A slot with no published epoch.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { slots: [SlotCell::empty(), SlotCell::empty()], epoch: AtomicU64::new(0) })
+    }
+
+    /// Publish `x` for the next epoch and return its token.
+    ///
+    /// Caller contract: `x` must stay alive and unmodified until every
+    /// reader of this epoch is done (see the type-level protocol).
+    pub fn publish(&self, x: &[f64]) -> u64 {
+        let e = self.epoch.load(Ordering::Relaxed).wrapping_add(1);
+        let cell = &self.slots[(e % 2) as usize];
+        cell.len.store(x.len(), Ordering::Release);
+        cell.ptr.store(x.as_ptr() as *mut f64, Ordering::Release);
+        cell.epoch.store(e, Ordering::Release);
+        self.epoch.store(e, Ordering::Release);
+        e
+    }
+
+    /// Read the slice published for `epoch`. Panics if the epoch was
+    /// retired, or if its cell has since been republished for a newer
+    /// epoch (a stale read must fail loudly, never alias the wrong
+    /// buffer).
+    ///
+    /// # Safety
+    /// The publisher must guarantee the slice published for `epoch`
+    /// outlives this borrow — [`PersistentWorld::run_job`] blocking
+    /// until all ranks report provides exactly that guarantee.
+    pub unsafe fn read(&self, epoch: u64) -> &[f64] {
+        let cell = &self.slots[(epoch % 2) as usize];
+        let cell_epoch = cell.epoch.load(Ordering::Acquire);
+        assert_eq!(
+            cell_epoch, epoch,
+            "InputSlot::read of a stale epoch: cell holds {cell_epoch}, caller asked for {epoch}"
+        );
+        let ptr = cell.ptr.load(Ordering::Acquire);
+        assert!(!ptr.is_null(), "InputSlot::read of a retired or never-published epoch");
+        let len = cell.len.load(Ordering::Acquire);
+        std::slice::from_raw_parts(ptr, len)
+    }
+
+    /// Retire `epoch`: null the cell so a protocol-violating late read
+    /// panics instead of touching freed memory.
+    pub fn retire(&self, epoch: u64) {
+        let cell = &self.slots[(epoch % 2) as usize];
+        cell.ptr.store(std::ptr::null_mut(), Ordering::Release);
+        cell.len.store(0, Ordering::Release);
+    }
+}
+
 /// Per-job instrumentation report from a rank body (deltas, not
 /// cumulative totals — [`RankCtx`] counters persist across jobs).
 #[derive(Debug, Clone, Copy, Default)]
@@ -224,10 +319,11 @@ enum Done {
 /// queues, the world barrier) also persists, so jobs keep full
 /// tagged send/recv semantics across calls.
 ///
-/// A rank panicking inside a job poisons the world: `run_job` panics
-/// with the rank id (instead of deadlocking on the missing report),
-/// and drop skips joining — sibling ranks may be parked at the shared
-/// barrier and are deliberately leaked rather than hung on.
+/// A rank panicking inside a job poisons the world: `run_job` drains
+/// every rank's report (the poison wakes parked peers, so all of them
+/// exit the job body) and then panics with the first panicking rank's
+/// id. Drop skips joining a poisoned world's threads rather than
+/// risking a hang on one that died mid-loop.
 pub struct PersistentWorld {
     p: usize,
     job_txs: Vec<Sender<Job>>,
@@ -294,9 +390,15 @@ impl PersistentWorld {
         self.p
     }
 
-    /// Run one job on every rank; blocks until all ranks report.
-    /// Returns reports in rank order. Panics (poisoning the world) if
-    /// any rank panics inside the job.
+    /// Run one job on every rank; blocks until all ranks report —
+    /// **including on the panic path**. A rank panicking poisons the
+    /// world, but `run_job` still drains all `p` reports before
+    /// re-panicking: the poisoned barrier/recv wake every surviving
+    /// rank, so each one is guaranteed to exit the job body and report.
+    /// This all-ranks-done fence is what makes borrowed-input hand-offs
+    /// ([`InputSlot`]) sound even when a job panics — no rank can still
+    /// be reading the caller's buffer once `run_job` unwinds.
+    /// Returns reports in rank order.
     pub fn run_job<F>(&self, f: F) -> Vec<RankReport>
     where
         F: Fn(&mut RankCtx) -> RankReport + Send + Sync + 'static,
@@ -307,17 +409,21 @@ impl PersistentWorld {
             tx.send(job.clone()).expect("rank thread died");
         }
         let mut out = vec![RankReport::default(); self.p];
+        let mut panicked: Option<usize> = None;
         for _ in 0..self.p {
             let (rank, outcome) = self.done_rx.recv().expect("rank thread died");
             match outcome {
                 Done::Ok(report) => out[rank] = report,
                 Done::Panicked => {
-                    // surviving ranks may be parked at the barrier;
-                    // poison so drop leaks instead of hanging on join
+                    // keep draining: peers woken by the poison will
+                    // report too; drop still skips joining the world
                     self.poisoned.set(true);
-                    panic!("rank {rank} panicked during a PersistentWorld job");
+                    panicked.get_or_insert(rank);
                 }
             }
+        }
+        if let Some(rank) = panicked {
+            panic!("rank {rank} panicked during a PersistentWorld job");
         }
         out
     }
@@ -486,6 +592,106 @@ mod tests {
             }
             RankReport::default()
         });
+    }
+
+    #[test]
+    fn persistent_world_rank_panic_waits_for_all_ranks_before_unwinding() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        // the soundness fence behind InputSlot: even when a rank
+        // panics, run_job must not unwind (freeing the caller's
+        // published buffer) until every sibling rank has left the job
+        // body. The slow rank sets SLOW_DONE as its last job action;
+        // it must be set by the time the panic reaches the caller.
+        static SLOW_DONE: AtomicBool = AtomicBool::new(false);
+        SLOW_DONE.store(false, Ordering::SeqCst);
+        let w = PersistentWorld::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            w.run_job(|ctx| {
+                if ctx.rank == 0 {
+                    panic!("boom");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                SLOW_DONE.store(true, Ordering::SeqCst);
+                RankReport::default()
+            });
+        }));
+        assert!(result.is_err(), "the rank panic must surface");
+        assert!(
+            SLOW_DONE.load(Ordering::SeqCst),
+            "run_job unwound before the slow rank finished its job body"
+        );
+    }
+
+    #[test]
+    fn input_slot_read_aliases_the_published_slice() {
+        let slot = InputSlot::new();
+        let data = vec![1.0, 2.0, 3.0];
+        let e = slot.publish(&data);
+        let got = unsafe { slot.read(e) };
+        assert_eq!(got.as_ptr(), data.as_ptr(), "read must be zero-copy");
+        assert_eq!(got, &data[..]);
+        slot.retire(e);
+    }
+
+    #[test]
+    #[should_panic(expected = "retired")]
+    fn input_slot_late_read_fails_loudly() {
+        let slot = InputSlot::new();
+        let data = vec![1.0];
+        let e = slot.publish(&data);
+        slot.retire(e);
+        let _ = unsafe { slot.read(e) };
+    }
+
+    #[test]
+    fn input_slot_double_buffer_keeps_previous_epoch_readable() {
+        let slot = InputSlot::new();
+        let a = vec![1.0; 4];
+        let b = vec![2.0; 8];
+        let ea = slot.publish(&a);
+        let eb = slot.publish(&b);
+        // parity-indexed cells: publishing b must not clobber a's cell
+        assert_eq!(unsafe { slot.read(ea) }.as_ptr(), a.as_ptr());
+        assert_eq!(unsafe { slot.read(eb) }.len(), 8);
+        slot.retire(ea);
+        slot.retire(eb);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale epoch")]
+    fn input_slot_same_parity_republish_invalidates_old_epoch() {
+        let slot = InputSlot::new();
+        let (a, b, c) = (vec![1.0], vec![2.0], vec![3.0]);
+        let ea = slot.publish(&a);
+        let _eb = slot.publish(&b);
+        let _ec = slot.publish(&c); // same parity as ea: overwrites its cell
+        let _ = unsafe { slot.read(ea) };
+    }
+
+    #[test]
+    fn persistent_world_slot_survives_interleaved_epoch_sizes() {
+        // the double-buffered slot must stay coherent when the published
+        // slice length changes every epoch (interleaved batch widths)
+        let w = PersistentWorld::new(3);
+        let slot = InputSlot::new();
+        for &len in &[4usize, 12, 8, 4, 12, 1] {
+            let x: Vec<f64> = (0..len).map(|i| i as f64 + len as f64).collect();
+            let expect_sum: f64 = x.iter().sum();
+            let e = slot.publish(&x);
+            let s2 = slot.clone();
+            let reports = w.run_job(move |ctx| {
+                // SAFETY: run_job blocks until all ranks report, so `x`
+                // outlives every read of this epoch.
+                let got = unsafe { s2.read(e) };
+                assert_eq!(got.len(), len);
+                let sum: f64 = got.iter().sum();
+                assert!((sum - expect_sum).abs() < 1e-12);
+                ctx.barrier();
+                RankReport::default()
+            });
+            slot.retire(e);
+            assert_eq!(reports.len(), 3);
+        }
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! 64-core Opteron cluster + MPI).
 //!
 //! * [`comm`] — a rank world over OS threads and channels: tagged
-//!   send/recv with (source, tag) matching, barriers.
+//!   send/recv with (source, tag) matching, barriers, and the
+//!   double-buffered zero-copy [`InputSlot`] used by the persistent
+//!   executors to hand borrowed input vectors to rank threads.
 //! * [`window`] — one-sided accumulation windows (`MPI_Accumulate`
 //!   substitute): lock-free atomic f64 `+=` into a shared output vector,
 //!   flushed by an epoch fence.
@@ -14,6 +16,6 @@ pub mod comm;
 pub mod cost;
 pub mod window;
 
-pub use comm::{PersistentWorld, RankCtx, RankReport, World};
+pub use comm::{InputSlot, PersistentWorld, RankCtx, RankReport, World};
 pub use cost::CostModel;
 pub use window::Window;

@@ -67,6 +67,15 @@ impl Window {
         self.cells.iter().map(|c| f64::from_bits(c.load(Ordering::Acquire))).collect()
     }
 
+    /// Snapshot into a caller-provided buffer (allocation-free read for
+    /// the repeated-multiply hot path). `out.len()` must equal `len()`.
+    pub fn read_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.cells.len());
+        for (o, c) in out.iter_mut().zip(&self.cells) {
+            *o = f64::from_bits(c.load(Ordering::Acquire));
+        }
+    }
+
     /// Reset all cells to zero (next epoch).
     pub fn reset(&self) {
         for c in &self.cells {
@@ -108,6 +117,15 @@ mod tests {
         w.add(1, 5.0);
         w.reset();
         assert_eq!(w.to_vec(), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn read_into_matches_to_vec() {
+        let w = Window::new(4);
+        w.accumulate(1, &[2.0, 3.0]);
+        let mut out = vec![f64::NAN; 4];
+        w.read_into(&mut out);
+        assert_eq!(out, w.to_vec());
     }
 
     #[test]

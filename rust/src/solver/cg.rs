@@ -5,7 +5,7 @@
 //! motivate the skew-symmetric MRS path. Included so the symmetric
 //! variant of the kernels has a native consumer too.
 
-use crate::kernel::Spmv;
+use crate::kernel::{Spmv, VecBatch};
 
 /// CG result.
 #[derive(Debug, Clone)]
@@ -56,6 +56,90 @@ pub fn cg_solve(kernel: &mut dyn Spmv, b: &[f64], max_iters: usize, tol: f64) ->
     CgResult { x, history, iters, converged: rr <= tol2 }
 }
 
+/// Multi-RHS CG: one fused [`Spmv::apply_batch`] per sweep serves all
+/// `k` right-hand sides (one matrix traversal instead of `k`). Every
+/// column runs its own scalar CG recurrence — step sizes, residual
+/// histories, and stopping are per-column, and column `c` matches what
+/// [`cg_solve`] would produce for `bs.col(c)` alone.
+pub fn cg_solve_batch(
+    kernel: &mut dyn Spmv,
+    bs: &VecBatch,
+    max_iters: usize,
+    tol: f64,
+) -> Vec<CgResult> {
+    let n = kernel.n();
+    assert_eq!(bs.n(), n);
+    let k = bs.k();
+    kernel.prepare_hint(k);
+
+    struct Col {
+        rr: f64,
+        tol2: f64,
+        history: Vec<f64>,
+        iters: usize,
+        active: bool,
+    }
+    let mut xs = VecBatch::zeros(n, k);
+    let mut rs = bs.clone();
+    let mut ps = bs.clone();
+    let mut aps = VecBatch::zeros(n, k);
+    let mut cols: Vec<Col> = (0..k)
+        .map(|c| {
+            let bb = dot(bs.col(c), bs.col(c));
+            let tol2 = tol * tol * bb;
+            Col { rr: bb, tol2, history: vec![bb], iters: 0, active: bb > tol2 }
+        })
+        .collect();
+
+    let mut sweeps = 0;
+    while sweeps < max_iters && cols.iter().any(|c| c.active) {
+        kernel.apply_batch(&ps, &mut aps);
+        for (c, st) in cols.iter_mut().enumerate() {
+            if !st.active {
+                continue;
+            }
+            let ap = aps.col(c);
+            let pap = dot(ps.col(c), ap);
+            if pap <= 0.0 {
+                st.active = false; // not SPD (or breakdown)
+                continue;
+            }
+            let a = st.rr / pap;
+            let xc = xs.col_mut(c);
+            for (x, &p) in xc.iter_mut().zip(ps.col(c)) {
+                *x += a * p;
+            }
+            let rc = rs.col_mut(c);
+            for (r, &apv) in rc.iter_mut().zip(ap) {
+                *r -= a * apv;
+            }
+            let rr_new = dot(rc, rc);
+            let beta = rr_new / st.rr;
+            let pc = ps.col_mut(c);
+            for (p, &r) in pc.iter_mut().zip(rs.col(c)) {
+                *p = r + beta * *p;
+            }
+            st.rr = rr_new;
+            st.history.push(st.rr);
+            st.iters += 1;
+            if st.rr <= st.tol2 {
+                st.active = false;
+            }
+        }
+        sweeps += 1;
+    }
+
+    cols.into_iter()
+        .enumerate()
+        .map(|(c, st)| CgResult {
+            x: xs.col(c).to_vec(),
+            history: st.history,
+            iters: st.iters,
+            converged: st.rr <= st.tol2,
+        })
+        .collect()
+}
+
 #[inline]
 fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
@@ -90,6 +174,22 @@ mod tests {
         k.apply(&res.x, &mut ax);
         let err: f64 = ax.iter().zip(&b).map(|(a, c)| (a - c).abs()).fold(0.0, f64::max);
         assert!(err < 1e-7, "err {err}");
+    }
+
+    #[test]
+    fn batch_solve_matches_independent_solves() {
+        let mut k = spd(120);
+        let bs = VecBatch::from_fn(120, 3, |i, c| ((i * (c + 3)) % 11) as f64 - 5.0);
+        let results = cg_solve_batch(&mut k, &bs, 500, 1e-10);
+        for (c, res) in results.iter().enumerate() {
+            let mut k1 = spd(120);
+            let want = cg_solve(&mut k1, bs.col(c), 500, 1e-10);
+            assert_eq!(res.converged, want.converged, "col {c}");
+            assert_eq!(res.iters, want.iters, "col {c}");
+            for (a, b) in res.x.iter().zip(&want.x) {
+                assert!((a - b).abs() < 1e-9, "col {c}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

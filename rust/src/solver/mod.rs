@@ -10,5 +10,5 @@ pub mod cg;
 pub mod mrs;
 pub mod mrs_krylov;
 
-pub use mrs::{mrs_solve, MrsOptions, MrsResult};
-pub use mrs_krylov::{mrs_krylov_solve, KrylovOptions};
+pub use mrs::{mrs_solve, mrs_solve_batch, MrsOptions, MrsResult};
+pub use mrs_krylov::{mrs_krylov_solve, mrs_krylov_solve_batch, KrylovOptions};

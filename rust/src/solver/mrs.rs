@@ -13,7 +13,7 @@
 //! and the AOT/PJRT artifact execute the same recurrence, and the
 //! integration tests cross-check them.
 
-use crate::kernel::Spmv;
+use crate::kernel::{Spmv, VecBatch};
 
 /// Options for [`mrs_solve`].
 #[derive(Debug, Clone)]
@@ -81,6 +81,87 @@ pub fn mrs_solve(kernel: &mut dyn Spmv, b: &[f64], opts: &MrsOptions) -> MrsResu
     MrsResult { x, r, converged: rr <= tol2, history, iters }
 }
 
+/// Multi-RHS minimal-residual iteration: solve `A x_c = b_c` for every
+/// column of `bs` **with one fused SpMV per sweep** — each sweep calls
+/// [`Spmv::apply_batch`] once, so the matrix is traversed (and, for
+/// `pars3`, halos exchanged) once for all `k` right-hand sides instead
+/// of once per RHS. Each column keeps its own line-search step,
+/// residual history, and stopping decision; columns that converge stop
+/// updating while the rest continue. Column `c` of the result is
+/// numerically the same iteration [`mrs_solve`] would run on `b_c`
+/// alone.
+pub fn mrs_solve_batch(
+    kernel: &mut dyn Spmv,
+    bs: &VecBatch,
+    opts: &MrsOptions,
+) -> Vec<MrsResult> {
+    let n = kernel.n();
+    assert_eq!(bs.n(), n);
+    let k = bs.k();
+    kernel.prepare_hint(k);
+
+    struct Col {
+        rr: f64,
+        tol2: f64,
+        history: Vec<f64>,
+        iters: usize,
+        active: bool,
+    }
+    let mut xs = VecBatch::zeros(n, k);
+    let mut rs = bs.clone();
+    let mut ps = VecBatch::zeros(n, k);
+    let mut cols: Vec<Col> = (0..k)
+        .map(|c| {
+            let bb = dot(bs.col(c), bs.col(c));
+            let tol2 = opts.tol * opts.tol * bb;
+            Col { rr: bb, tol2, history: vec![bb], iters: 0, active: bb > tol2 }
+        })
+        .collect();
+
+    let mut sweeps = 0;
+    while sweeps < opts.max_iters && cols.iter().any(|c| c.active) {
+        kernel.apply_batch(&rs, &mut ps); // the one fused hot-path SpMV
+        for (c, st) in cols.iter_mut().enumerate() {
+            if !st.active {
+                continue;
+            }
+            let p = ps.col(c);
+            let pp = dot(p, p);
+            if pp <= f64::MIN_POSITIVE {
+                st.active = false;
+                continue;
+            }
+            let a = opts.alpha * st.rr / pp;
+            let xc = xs.col_mut(c);
+            for (x, &r) in xc.iter_mut().zip(rs.col(c)) {
+                *x += a * r;
+            }
+            let rc = rs.col_mut(c);
+            for (r, &pv) in rc.iter_mut().zip(p) {
+                *r -= a * pv;
+            }
+            st.rr = dot(rc, rc);
+            st.history.push(st.rr);
+            st.iters += 1;
+            if st.rr <= st.tol2 {
+                st.active = false;
+            }
+        }
+        sweeps += 1;
+    }
+
+    cols.into_iter()
+        .enumerate()
+        .map(|(c, st)| MrsResult {
+            x: xs.col(c).to_vec(),
+            r: rs.col(c).to_vec(),
+            converged: st.rr <= st.tol2,
+            history: st.history,
+            iters: st.iters,
+        })
+        .collect()
+}
+
 #[inline]
 fn dot(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
@@ -135,11 +216,14 @@ mod tests {
 
     #[test]
     fn pars3_kernel_converges_same_as_serial() {
-        // the paper's end-to-end story: swap the kernel, same math
+        // the paper's end-to-end story: swap the kernel, same math.
+        // The matrix is Arc-shared between the two kernels — no clone.
         let coo = gen::small_test_matrix(150, 4, 2.0);
         let g = crate::graph::Adjacency::from_coo(&coo);
         let perm = crate::graph::rcm(&g);
-        let sss = convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap();
+        let sss = std::sync::Arc::new(
+            convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap(),
+        );
         let b: Vec<f64> = (0..150).map(|i| (i as f64 * 0.13).cos()).collect();
         let opts = MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 };
 
@@ -162,5 +246,35 @@ mod tests {
         let res = mrs_solve(&mut k, &vec![0.0; 50], &MrsOptions::default());
         assert!(res.converged);
         assert_eq!(res.iters, 0);
+    }
+
+    #[test]
+    fn batch_solve_matches_independent_solves() {
+        let (mut k, _) = system(100, 6, 2.5);
+        let opts = MrsOptions { alpha: 2.5, max_iters: 500, tol: 1e-9 };
+        let bs = VecBatch::from_fn(100, 3, |i, c| ((i * (c + 2) + 5) % 7) as f64 - 3.0);
+        let results = mrs_solve_batch(&mut k, &bs, &opts);
+        assert_eq!(results.len(), 3);
+        for (c, res) in results.iter().enumerate() {
+            let (mut k1, _) = system(100, 6, 2.5);
+            let want = mrs_solve(&mut k1, bs.col(c), &opts);
+            assert_eq!(res.converged, want.converged, "col {c}");
+            assert_eq!(res.iters, want.iters, "col {c}");
+            for (a, b) in res.x.iter().zip(&want.x) {
+                assert!((a - b).abs() < 1e-9, "col {c}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_solve_with_a_zero_column_leaves_it_untouched() {
+        let (mut k, b) = system(60, 7, 1.5);
+        let opts = MrsOptions { alpha: 1.5, max_iters: 400, tol: 1e-8 };
+        let bs = VecBatch::from_columns(&[b, vec![0.0; 60]]);
+        let results = mrs_solve_batch(&mut k, &bs, &opts);
+        assert!(results[0].converged && results[0].iters > 0);
+        assert!(results[1].converged);
+        assert_eq!(results[1].iters, 0);
+        assert!(results[1].x.iter().all(|&v| v == 0.0));
     }
 }

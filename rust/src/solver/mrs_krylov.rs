@@ -15,7 +15,7 @@
 //! convergence the simple line-search iteration ([`crate::solver::mrs`])
 //! lacks.
 
-use crate::kernel::Spmv;
+use crate::kernel::{Spmv, VecBatch};
 use crate::solver::mrs::MrsResult;
 
 /// Options for [`mrs_krylov_solve`].
@@ -136,6 +136,141 @@ pub fn mrs_krylov_solve(kernel: &mut dyn Spmv, b: &[f64], opts: &KrylovOptions) 
     MrsResult { x, converged: rn <= tol_abs * 1.5, r, history, iters }
 }
 
+/// Multi-RHS Krylov MRS: each column runs its own two-term skew
+/// Lanczos + Givens recurrence (scalars per column), but every sweep
+/// performs **one fused [`Spmv::apply_batch`]** over the `k` Lanczos
+/// vectors — the matrix is traversed once per sweep, not once per RHS.
+/// Column `c` matches [`mrs_krylov_solve`] run on `bs.col(c)` alone.
+pub fn mrs_krylov_solve_batch(
+    kernel: &mut dyn Spmv,
+    bs: &VecBatch,
+    opts: &KrylovOptions,
+) -> Vec<MrsResult> {
+    let n = kernel.n();
+    assert_eq!(bs.n(), n);
+    let k = bs.k();
+    kernel.prepare_hint(k);
+
+    struct Col {
+        beta_prev: f64,
+        c_prev: f64,
+        s_prev: f64,
+        c_pprev: f64,
+        s_pprev: f64,
+        phi_bar: f64,
+        tol_abs: f64,
+        history: Vec<f64>,
+        iters: usize,
+        active: bool,
+    }
+    let mut v_prev = VecBatch::zeros(n, k);
+    let mut vs = VecBatch::zeros(n, k);
+    let mut w1 = VecBatch::zeros(n, k);
+    let mut w2 = VecBatch::zeros(n, k);
+    let mut xs = VecBatch::zeros(n, k);
+    let mut avs = VecBatch::zeros(n, k);
+    let mut cols: Vec<Col> = (0..k)
+        .map(|c| {
+            let bnorm = norm(bs.col(c));
+            if bnorm > 0.0 {
+                let vc = vs.col_mut(c);
+                for (v, &b) in vc.iter_mut().zip(bs.col(c)) {
+                    *v = b / bnorm;
+                }
+            }
+            Col {
+                beta_prev: 0.0,
+                c_prev: 1.0,
+                s_prev: 0.0,
+                c_pprev: 1.0,
+                s_pprev: 0.0,
+                phi_bar: bnorm,
+                tol_abs: opts.tol * bnorm,
+                history: vec![bnorm * bnorm],
+                iters: 0,
+                active: bnorm > 0.0,
+            }
+        })
+        .collect();
+
+    let mut sweeps = 0;
+    while sweeps < opts.max_iters && cols.iter().any(|c| c.active && c.phi_bar.abs() > c.tol_abs)
+    {
+        kernel.apply_batch(&vs, &mut avs); // one fused SpMV per sweep
+        for (c, st) in cols.iter_mut().enumerate() {
+            if !st.active || st.phi_bar.abs() <= st.tol_abs {
+                continue;
+            }
+            let av = avs.col_mut(c);
+            // S v = A v - alpha v, then the two-term skew recurrence
+            for ((a, &v), &vp) in av.iter_mut().zip(vs.col(c)).zip(v_prev.col(c)) {
+                *a = *a - opts.alpha * v + st.beta_prev * vp;
+            }
+            let beta = norm(av);
+            let tau = st.s_pprev * (-st.beta_prev);
+            let mid = st.c_pprev * (-st.beta_prev);
+            let delta = st.c_prev * mid + st.s_prev * opts.alpha;
+            let gamma = -st.s_prev * mid + st.c_prev * opts.alpha;
+            let rho = (gamma * gamma + beta * beta).sqrt();
+            let (cr, sr) = if rho == 0.0 { (1.0, 0.0) } else { (gamma / rho, beta / rho) };
+
+            if rho > f64::MIN_POSITIVE {
+                let w1c = w1.col_mut(c);
+                let w2c = w2.col_mut(c);
+                for ((w1v, w2v), &v) in w1c.iter_mut().zip(w2c.iter_mut()).zip(vs.col(c)) {
+                    let w_new = (v - delta * *w1v - tau * *w2v) / rho;
+                    *w2v = *w1v;
+                    *w1v = w_new;
+                }
+                let step = cr * st.phi_bar;
+                let xc = xs.col_mut(c);
+                for (x, &w) in xc.iter_mut().zip(w1.col(c)) {
+                    *x += step * w;
+                }
+            }
+            st.phi_bar = -sr * st.phi_bar;
+            st.history.push(st.phi_bar * st.phi_bar);
+
+            if beta > 0.0 {
+                let vp = v_prev.col_mut(c);
+                let vc = vs.col_mut(c);
+                for ((pv, v), &a) in vp.iter_mut().zip(vc.iter_mut()).zip(av.iter()) {
+                    *pv = *v;
+                    *v = a / beta;
+                }
+            }
+            st.beta_prev = beta;
+            st.c_pprev = st.c_prev;
+            st.s_pprev = st.s_prev;
+            st.c_prev = cr;
+            st.s_prev = sr;
+            st.iters += 1;
+            if beta == 0.0 {
+                st.active = false; // invariant subspace found: exact solve
+            }
+        }
+        sweeps += 1;
+    }
+
+    // true residuals, one fused multiply for the whole batch
+    kernel.apply_batch(&xs, &mut avs);
+    cols.into_iter()
+        .enumerate()
+        .map(|(c, st)| {
+            let r: Vec<f64> =
+                bs.col(c).iter().zip(avs.col(c)).map(|(b, a)| b - a).collect();
+            let rn = norm(&r);
+            MrsResult {
+                x: xs.col(c).to_vec(),
+                converged: rn <= st.tol_abs * 1.5,
+                r,
+                history: st.history,
+                iters: st.iters,
+            }
+        })
+        .collect()
+}
+
 #[inline]
 fn norm(v: &[f64]) -> f64 {
     v.iter().map(|x| x * x).sum::<f64>().sqrt()
@@ -203,6 +338,35 @@ mod tests {
             res_kr.iters,
             res_ls.iters
         );
+    }
+
+    #[test]
+    fn batch_solve_matches_independent_solves() {
+        let (mut k, _) = system(130, 6, 2.0);
+        let opts = KrylovOptions { alpha: 2.0, max_iters: 500, tol: 1e-9 };
+        let bs = VecBatch::from_fn(130, 3, |i, c| ((i * 17 + c * 5) % 13) as f64 * 0.5 - 3.0);
+        let results = mrs_krylov_solve_batch(&mut k, &bs, &opts);
+        for (c, res) in results.iter().enumerate() {
+            let (mut k1, _) = system(130, 6, 2.0);
+            let want = mrs_krylov_solve(&mut k1, bs.col(c), &opts);
+            assert_eq!(res.converged, want.converged, "col {c}");
+            assert_eq!(res.iters, want.iters, "col {c}");
+            for (a, b) in res.x.iter().zip(&want.x) {
+                assert!((a - b).abs() < 1e-8, "col {c}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_zero_column_is_immediate_and_exact() {
+        let (mut k, b) = system(60, 7, 1.0);
+        let opts = KrylovOptions { alpha: 1.0, max_iters: 300, tol: 1e-9 };
+        let bs = VecBatch::from_columns(&[vec![0.0; 60], b]);
+        let results = mrs_krylov_solve_batch(&mut k, &bs, &opts);
+        assert!(results[0].converged);
+        assert_eq!(results[0].iters, 0);
+        assert!(results[0].x.iter().all(|&v| v == 0.0));
+        assert!(results[1].converged, "iters={}", results[1].iters);
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! Minimal benchmark harness (`criterion` substitute, offline
 //! environment). Benches are `harness = false` binaries that use this
 //! to get warmup + repeated timing + criterion-style output, and write
-//! a markdown report under `target/bench_reports/`.
+//! **two** reports under `target/bench_reports/`: a human-readable
+//! `<group>.md` and a machine-readable `<group>.json` (via
+//! [`crate::util::json`]) so per-PR speedup trajectories can be
+//! tracked by tooling instead of by eyeballing markdown diffs.
 
 use crate::perf::{time_fn, Timing};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
@@ -11,6 +16,7 @@ use std::path::PathBuf;
 pub struct Bencher {
     group: String,
     lines: Vec<String>,
+    measurements: Vec<(String, Timing)>,
     report: String,
 }
 
@@ -18,7 +24,12 @@ impl Bencher {
     /// Start a bench group (one per bench binary).
     pub fn new(group: &str) -> Self {
         println!("\nBenchmarking group: {group}");
-        Self { group: group.to_string(), lines: Vec::new(), report: String::new() }
+        Self {
+            group: group.to_string(),
+            lines: Vec::new(),
+            measurements: Vec::new(),
+            report: String::new(),
+        }
     }
 
     /// Time `f` with warmup and `reps` measured runs.
@@ -33,6 +44,7 @@ impl Bencher {
         );
         println!("{line}");
         self.lines.push(line);
+        self.measurements.push((name.to_string(), t));
         t
     }
 
@@ -43,7 +55,31 @@ impl Bencher {
         self.report.push('\n');
     }
 
-    /// Write `target/bench_reports/<group>.md` with timings + sections.
+    /// The machine-readable report document (what `finish` writes to
+    /// `<group>.json`): `{group, runs: [{name, min_s, median_s,
+    /// mean_s, reps}]}`.
+    pub fn to_json(&self) -> Json {
+        let runs: Vec<Json> = self
+            .measurements
+            .iter()
+            .map(|(name, t)| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(name.clone()));
+                m.insert("min_s".to_string(), Json::Num(t.min));
+                m.insert("median_s".to_string(), Json::Num(t.median));
+                m.insert("mean_s".to_string(), Json::Num(t.mean));
+                m.insert("reps".to_string(), Json::Num(t.reps as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("group".to_string(), Json::Str(self.group.clone()));
+        doc.insert("runs".to_string(), Json::Arr(runs));
+        Json::Obj(doc)
+    }
+
+    /// Write `target/bench_reports/<group>.md` (timings + sections) and
+    /// `target/bench_reports/<group>.json` (machine-readable runs).
     pub fn finish(self) {
         let dir = PathBuf::from("target/bench_reports");
         let _ = std::fs::create_dir_all(&dir);
@@ -56,6 +92,10 @@ impl Bencher {
         let path = dir.join(format!("{}.md", self.group));
         if std::fs::write(&path, out).is_ok() {
             println!("\nreport written to {}", path.display());
+        }
+        let jpath = dir.join(format!("{}.json", self.group));
+        if std::fs::write(&jpath, self.to_json().dump()).is_ok() {
+            println!("json report written to {}", jpath.display());
         }
     }
 }
@@ -83,5 +123,20 @@ mod tests {
         assert!(t.min >= 0.0);
         assert_eq!(fmt_t(0.5e-7), "50.0 ns");
         assert_eq!(fmt_t(2.0), "2.000 s");
+    }
+
+    #[test]
+    fn json_report_is_parseable_and_complete() {
+        let mut b = Bencher::new("selftest_json");
+        b.bench("first/run", 0, 2, || { std::hint::black_box(3 * 7); });
+        b.bench("second/run", 0, 2, || { std::hint::black_box(5 + 5); });
+        let doc = b.to_json();
+        let parsed = Json::parse(&doc.dump()).unwrap();
+        assert_eq!(parsed.req("group").unwrap().as_str().unwrap(), "selftest_json");
+        let runs = parsed.req("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].req("name").unwrap().as_str().unwrap(), "first/run");
+        assert_eq!(runs[0].req("reps").unwrap().as_usize().unwrap(), 2);
+        assert!(runs[1].req("min_s").unwrap().as_f64().unwrap() >= 0.0);
     }
 }

@@ -1,8 +1,10 @@
-//! Minimal JSON parser (`serde_json` substitute, offline environment).
+//! Minimal JSON parser **and writer** (`serde_json` substitute, offline
+//! environment).
 //!
 //! Parses the artifact manifest written by `python/compile/aot.py` and
-//! the coordinator config. Supports the full JSON value grammar except
-//! exotic number formats; strings support the standard escapes.
+//! the coordinator config; writes the machine-readable bench reports
+//! ([`crate::util::bencher`]). Supports the full JSON value grammar
+//! except exotic number formats; strings support the standard escapes.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -74,6 +76,66 @@ impl Json {
         match self {
             Json::Arr(a) => Ok(a),
             _ => bail!("expected array, got {self:?}"),
+        }
+    }
+
+    /// Serialize to compact JSON text. Round-trips through
+    /// [`Json::parse`]; non-finite numbers (which JSON cannot
+    /// represent) are written as `null`.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) if !x.is_finite() => out.push_str("null"),
+            Json::Num(x) => {
+                let _ = write!(out, "{x}");
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for ch in s.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
         }
     }
 }
@@ -258,6 +320,21 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("{'a': 1}").is_err());
+    }
+
+    #[test]
+    fn dump_round_trips_through_parse() {
+        let doc = r#"{"group": "bench", "runs": [{"name": "a/b", "min_s": 1.5e-6, "reps": 5}], "note": "line\nbreak \"quoted\"", "ok": true, "none": null}"#;
+        let v = Json::parse(doc).unwrap();
+        let dumped = v.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_writes_non_finite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(2.5).dump(), "2.5");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Small self-contained utilities standing in for crates unavailable in
 //! this offline environment (DESIGN.md §2): a deterministic PRNG
-//! (`rand` substitute), a minimal JSON parser (`serde_json` substitute),
-//! and a property-test driver (`proptest` substitute).
+//! (`rand` substitute), a minimal JSON parser/writer (`serde_json`
+//! substitute), and a property-test driver (`proptest` substitute).
 
 pub mod bencher;
 pub mod json;

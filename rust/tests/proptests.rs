@@ -270,6 +270,74 @@ fn prop_skew_invariant_preserved_by_pipeline() {
 }
 
 #[test]
+fn prop_apply_batch_matches_columnwise_apply_for_every_kernel() {
+    use pars3::kernel::registry::{build_from_sss, KernelConfig};
+    use pars3::kernel::{Spmv, VecBatch, KERNEL_NAMES};
+    for_all("apply_batch == k applies (all kernels)", 10, |rng| {
+        let s = Arc::new(random_banded(rng));
+        let n = s.n;
+        let k = 1 + rng.gen_range_usize(0, 7);
+        let xs = VecBatch::from_fn(n, k, |_, _| rng.gen_range_f64(-2.0, 2.0));
+        let cfg = KernelConfig {
+            threads: 1 + rng.gen_range_usize(0, 8),
+            outer_bw: 1 + rng.gen_range_usize(0, 4),
+            threaded: false,
+        };
+        for &name in KERNEL_NAMES {
+            let mut kern = build_from_sss(name, s.clone(), &cfg).unwrap();
+            kern.prepare_hint(k);
+            let mut ys = VecBatch::zeros(n, k);
+            kern.apply_batch(&xs, &mut ys);
+            for c in 0..k {
+                let mut want = vec![0.0; n];
+                kern.apply(xs.col(c), &mut want);
+                for (r, (a, b)) in ys.col(c).iter().zip(&want).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-9,
+                        "{name} col {c} row {r}: {a} vs {b} (n={n} k={k})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_pars3_batch_modes_agree_and_fuse_halos() {
+    use pars3::kernel::pars3::{Pars3Plan, Pars3Threaded};
+    use pars3::kernel::VecBatch;
+    for_all("pars3 batch: emulated == threaded, one halo round", 6, |rng| {
+        let s = random_banded(rng);
+        let n = s.n;
+        let p = 1 + rng.gen_range_usize(0, n.min(6));
+        let k = 1 + rng.gen_range_usize(0, 5);
+        let xs = VecBatch::from_fn(n, k, |_, _| rng.gen_range_f64(-1.0, 1.0));
+        let split = Split3::with_outer_bw(&s, 3).unwrap();
+        let plan = Arc::new(Pars3Plan::new(split, p).unwrap());
+        let mut want = VecBatch::zeros(n, k);
+        let se = plan.execute_emulated_batch(&xs, &mut want);
+        let mut exec = Pars3Threaded::new(plan.clone());
+        let mut got = VecBatch::zeros(n, k);
+        let st = exec.apply_batch(&xs, &mut got);
+        // both modes: identical message accounting and numerics
+        assert_eq!(se.msgs, st.msgs);
+        assert_eq!(se.msg_values, st.msg_values);
+        for c in 0..k {
+            for (r, (a, b)) in got.col(c).iter().zip(want.col(c)).enumerate() {
+                assert!((a - b).abs() < 1e-9, "col {c} row {r} (n={n} p={p} k={k})");
+            }
+        }
+        // fusion invariant: a k-wide batch sends exactly as many halo
+        // messages as a single apply, with payload scaled by k
+        let (_, s1) = plan.execute_emulated(xs.col(0));
+        assert_eq!(se.msgs, s1.msgs);
+        for (bv, ov) in se.msg_values.iter().zip(&s1.msg_values) {
+            assert_eq!(*bv, ov * k);
+        }
+    });
+}
+
+#[test]
 fn prop_threaded_pars3_matches_emulated() {
     for_all("threaded == emulated", 8, |rng| {
         let s = random_banded(rng);
