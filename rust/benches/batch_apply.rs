@@ -24,7 +24,12 @@ fn main() {
 
     for (m, prep) in suite.iter().take(3) {
         let n = prep.n;
-        let kcfg = KernelConfig { threads: 4, outer_bw: cfg.outer_bw, threaded: cfg.threaded };
+        let kcfg = KernelConfig {
+            threads: 4,
+            outer_bw: cfg.outer_bw,
+            threaded: cfg.threaded,
+            ..KernelConfig::default()
+        };
         for &name in KERNEL_NAMES {
             // dgbmv's dense band array explodes on wide analogues (§2)
             if name == "dgbmv" && prep.rcm_bw >= 2_000 {

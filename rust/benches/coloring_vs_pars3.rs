@@ -43,7 +43,8 @@ fn main() {
     for (m, prep) in suite.iter().take(2) {
         let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.11).sin()).collect();
         let mut y = vec![0.0; prep.n];
-        let kcfg = KernelConfig { threads: 4, outer_bw: cfg.outer_bw, threaded: false };
+        let kcfg =
+            KernelConfig { threads: 4, outer_bw: cfg.outer_bw, ..KernelConfig::default() };
         // pars3 reuses the already-computed split; coloring needs the SSS
         let mut kernels = vec![
             build_from_split(prep.split.clone(), &kcfg).expect("pars3"),

@@ -1,0 +1,73 @@
+//! Bench: **hybrid DIA vs pure SSS middle-split** applies at k = 1 and
+//! k = 8, for the kernels whose inner loop walks the band interior
+//! (`serial_sss`, `pars3`). The DIA rows replace the per-entry
+//! `col_ind` gather with two unit-stride passes per dense diagonal, so
+//! `dia-k*` vs `sss-k*` on the same matrix is the measured value of the
+//! diagonal-major storage — the fill-ratio heuristic (`--format auto`)
+//! picks whichever side wins per matrix.
+//!
+//! `PARS3_BENCH_SCALE` (float) overrides the suite scale — the CI
+//! smoke job runs this bench at a tiny scale to keep the bench targets
+//! from bit-rotting without burning minutes.
+
+use pars3::coordinator::Config;
+use pars3::kernel::registry::{build_from_sss, KernelConfig};
+use pars3::kernel::{FormatPolicy, Split3, Spmv, VecBatch};
+use pars3::report;
+use pars3::util::bencher::Bencher;
+
+fn main() {
+    let mut cfg = Config::default();
+    if let Ok(s) = std::env::var("PARS3_BENCH_SCALE") {
+        cfg.scale = s.parse().expect("PARS3_BENCH_SCALE must be a float");
+    }
+    let suite = report::prepared_suite(&cfg).expect("suite");
+    let mut b = Bencher::new("dia_middle");
+
+    for (m, prep) in suite.iter().take(3) {
+        let n = prep.n;
+        // record what the Auto heuristic would pick for this matrix
+        let auto = Split3::with_outer_bw_format(&prep.sss, cfg.outer_bw, FormatPolicy::Auto)
+            .expect("split");
+        let auto_note = match &auto.dia {
+            Some(dia) => format!(
+                "{}: auto picks dia ({} dense diagonals, fill {:.2}, {} nnz in remainder)\n",
+                m.name,
+                dia.diags.len(),
+                dia.fill_ratio(),
+                dia.rest.nnz_lower()
+            ),
+            None => format!("{}: auto picks sss (no diagonal clears the fill threshold)\n", m.name),
+        };
+        b.section(&auto_note);
+        for (fmt, policy) in [("dia", FormatPolicy::Dia), ("sss", FormatPolicy::Sss)] {
+            let kcfg = KernelConfig {
+                threads: 4,
+                outer_bw: cfg.outer_bw,
+                threaded: cfg.threaded,
+                format: policy,
+            };
+            for name in ["serial_sss", "pars3"] {
+                let mut kern = build_from_sss(name, prep.sss.clone(), &kcfg).expect(name);
+                for &k in &[1usize, 8] {
+                    let xs = VecBatch::from_fn(n, k, |i, c| {
+                        ((i * 29 + c * 11) % 19) as f64 * 0.25 - 2.0
+                    });
+                    let mut ys = VecBatch::zeros(n, k);
+                    kern.prepare_hint(k);
+                    b.bench(&format!("{name}/{fmt}-k{k}/{}", m.name), 1, 3, || {
+                        kern.apply_batch(&xs, &mut ys);
+                        std::hint::black_box(ys.data());
+                    });
+                }
+            }
+        }
+    }
+    b.section(
+        "dia-k* vs sss-k* is the middle-split storage win: unit-stride \
+         FMA passes over dense diagonals (zero index loads) vs the \
+         col_ind gather loop. DIA loses when the band is scattered — \
+         which is exactly when `--format auto` keeps SSS.\n",
+    );
+    b.finish();
+}

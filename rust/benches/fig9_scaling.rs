@@ -38,7 +38,8 @@ fn main() {
     for (m, prep) in &suite {
         let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.29).cos()).collect();
         let mut y = vec![0.0; prep.n];
-        let kcfg = KernelConfig { threads: 8, outer_bw: cfg.outer_bw, threaded: false };
+        let kcfg =
+            KernelConfig { threads: 8, outer_bw: cfg.outer_bw, ..KernelConfig::default() };
         // reuse the split prepared_suite already computed
         let mut k = build_from_split(prep.split.clone(), &kcfg).expect("pars3 kernel");
         b.bench(&format!("pars3-emulated-p8/{}", m.name), 2, 5, || {

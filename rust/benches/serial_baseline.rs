@@ -24,7 +24,8 @@ fn main() {
         let n = prep.n;
         let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin()).collect();
         let mut y = vec![0.0; n];
-        let kcfg = KernelConfig { threads: 1, outer_bw: cfg.outer_bw, threaded: false };
+        let kcfg =
+            KernelConfig { threads: 1, outer_bw: cfg.outer_bw, ..KernelConfig::default() };
 
         let mut timings = Vec::new();
         for &name in &["serial_sss", "csr", "dgbmv"] {

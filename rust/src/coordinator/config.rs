@@ -12,9 +12,11 @@
 //! ranks = [1, 2, 4, 8, 16, 32, 64]
 //! artifacts_dir = "artifacts"
 //! threaded = false
+//! format = "auto"
 //! seed = 42
 //! ```
 
+use crate::kernel::FormatPolicy;
 use crate::Result;
 use anyhow::{bail, Context};
 use std::path::{Path, PathBuf};
@@ -34,6 +36,9 @@ pub struct Config {
     pub artifacts_dir: PathBuf,
     /// Use real threads (true) or the deterministic emulated executor.
     pub threaded: bool,
+    /// Band-interior storage policy: `auto` (fill-ratio heuristic),
+    /// `dia` (force hybrid diagonal-major) or `sss` (paper layout).
+    pub format: FormatPolicy,
     /// Generator seed.
     pub seed: u64,
 }
@@ -47,6 +52,7 @@ impl Default for Config {
             ranks: vec![1, 2, 4, 8, 16, 32, 64],
             artifacts_dir: PathBuf::from("artifacts"),
             threaded: false,
+            format: FormatPolicy::Auto,
             seed: 42,
         }
     }
@@ -80,6 +86,9 @@ impl Config {
                 "alpha" => cfg.alpha = value.parse().context("alpha")?,
                 "outer_bw" => cfg.outer_bw = value.parse().context("outer_bw")?,
                 "threaded" => cfg.threaded = value.parse().context("threaded")?,
+                "format" => {
+                    cfg.format = value.trim_matches('"').parse().context("format")?;
+                }
                 "seed" => cfg.seed = value.parse().context("seed")?,
                 "artifacts_dir" => {
                     cfg.artifacts_dir = PathBuf::from(value.trim_matches('"'));
@@ -118,7 +127,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let c = Config::parse(
-            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nseed = 7\n",
+            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nseed = 7\n",
         )
         .unwrap();
         assert_eq!(c.scale, 0.5);
@@ -127,7 +136,10 @@ mod tests {
         assert_eq!(c.ranks, vec![1, 2, 4]);
         assert_eq!(c.artifacts_dir, PathBuf::from("art"));
         assert!(c.threaded);
+        assert_eq!(c.format, FormatPolicy::Dia);
         assert_eq!(c.seed, 7);
+        // bare (unquoted) values parse too
+        assert_eq!(Config::parse("format = sss").unwrap().format, FormatPolicy::Sss);
     }
 
     #[test]
@@ -136,6 +148,7 @@ mod tests {
         assert!(Config::parse("ranks = [0]").is_err());
         assert!(Config::parse("ranks = []").is_err());
         assert!(Config::parse("scale 0.5").is_err());
+        assert!(Config::parse("format = \"csr\"").is_err());
     }
 
     #[test]

@@ -11,11 +11,12 @@
 use crate::coordinator::Config;
 use crate::kernel::pars3::Pars3Plan;
 use crate::kernel::registry::{self, KernelConfig};
-use crate::kernel::{ConflictMap, Split3, Spmv, VecBatch};
+use crate::kernel::{ConflictMap, FormatPolicy, Split3, Spmv, VecBatch};
 use crate::solver::mrs::{mrs_solve, mrs_solve_batch, MrsOptions, MrsResult};
 use crate::sparse::{Coo, Sss};
 use crate::Result;
 use anyhow::bail;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 #[cfg(feature = "pjrt")]
@@ -26,7 +27,7 @@ use crate::sparse::DiaBand;
 use anyhow::Context;
 
 /// Which executor serves the repeated multiplies.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Backend {
     /// Paper Alg. 1 (serial SSS).
     Serial,
@@ -85,11 +86,38 @@ impl Prepared {
     }
 }
 
-/// The coordinator: owns config + (lazily, behind the `pjrt` feature)
-/// the PJRT runtime.
+/// Kernel-cache key: `Sss` allocation address, backend, and the config
+/// knobs (`threaded`, `format`, `outer_bw`) that affect construction.
+type CacheKey = (usize, Backend, bool, FormatPolicy, usize);
+
+/// One kernel-cache entry: the built kernel plus the `Arc<Sss>` whose
+/// pointer is the entry's identity key. Pinning the `Arc` here makes
+/// the pointer key sound: a `pars3` kernel only retains the
+/// `Arc<Split3>`, so without the pin the `Sss` allocation could be
+/// dropped and its address handed to a later `prepare` (ABA), silently
+/// aliasing this entry.
+struct CachedKernel {
+    kernel: Box<dyn Spmv>,
+    _identity: Arc<Sss>,
+}
+
+/// The coordinator: owns config, the per-matrix kernel cache and
+/// (lazily, behind the `pjrt` feature) the PJRT runtime.
 pub struct Coordinator {
     /// Active configuration.
     pub cfg: Config,
+    /// Built kernels keyed by (matrix identity, backend). The matrix
+    /// identity is the `Arc<Sss>` pointer of the [`Prepared`] handle;
+    /// each entry also **pins** that `Arc`, so the allocation (and
+    /// therefore its address) cannot be freed and recycled by a later
+    /// `prepare` while the entry lives — the key can never alias a
+    /// different matrix. Repeated `spmv`/`solve` calls against the same
+    /// preparation reuse the kernel (for `pars3`'s threaded mode: the
+    /// same persistent rank threads) instead of paying the Θ(NNZ) plan
+    /// + thread spawns per request.
+    kernels: HashMap<CacheKey, CachedKernel>,
+    /// Total kernels ever constructed through the cache (test/metric).
+    kernel_builds: usize,
     #[cfg(feature = "pjrt")]
     runtime: Option<PjrtRuntime>,
 }
@@ -100,6 +128,8 @@ impl Coordinator {
     pub fn new(cfg: Config) -> Self {
         Self {
             cfg,
+            kernels: HashMap::new(),
+            kernel_builds: 0,
             #[cfg(feature = "pjrt")]
             runtime: None,
         }
@@ -117,7 +147,11 @@ impl Coordinator {
         let bw_before = coo.bandwidth();
         let (perm, sss) = registry::reorder_to_sss(coo)?;
         let rcm_bw = sss.bandwidth();
-        let split = Arc::new(Split3::with_outer_bw(&sss, self.cfg.outer_bw)?);
+        let split = Arc::new(Split3::with_outer_bw_format(
+            &sss,
+            self.cfg.outer_bw,
+            self.cfg.format,
+        )?);
         Ok(Prepared {
             name: name.to_string(),
             n: sss.n,
@@ -145,22 +179,88 @@ impl Coordinator {
             threads,
             outer_bw: self.cfg.outer_bw,
             threaded: self.cfg.threaded,
+            format: self.cfg.format,
         };
         match backend {
             // reuse the 3-way split `prepare` already computed instead
-            // of re-deriving it from the SSS form; both hand-offs are
-            // Arc clones — the matrix data itself is never copied
+            // of re-deriving it from the SSS form (its middle-split
+            // format was selected there); both hand-offs are Arc
+            // clones — the matrix data itself is never copied
             Backend::Pars3 { .. } => registry::build_from_split(prep.split.clone(), &cfg),
             _ => registry::build_from_sss(name, prep.sss.clone(), &cfg),
         }
     }
 
+    /// Cache key for a preparation: the `Arc<Sss>` allocation identity,
+    /// the backend, and every [`Config`] knob that changes what
+    /// [`Self::kernel`] builds — so mutating the public `cfg` between
+    /// requests builds a new kernel instead of silently serving one
+    /// constructed under the old settings.
+    fn cache_key(&self, prep: &Prepared, backend: Backend) -> CacheKey {
+        (
+            Arc::as_ptr(&prep.sss) as usize,
+            backend,
+            self.cfg.threaded,
+            self.cfg.format,
+            self.cfg.outer_bw,
+        )
+    }
+
+    /// The cached kernel for `(prep, backend)`, building it on first
+    /// use. Every native `spmv`/`solve` entry point goes through here,
+    /// so a request stream against one prepared matrix constructs each
+    /// backend's kernel exactly once. An unhealthy kernel (a threaded
+    /// `pars3` executor poisoned by a rank panic) is evicted and
+    /// rebuilt instead of wedging the `(matrix, backend)` pair forever.
+    pub fn cached_kernel(&mut self, prep: &Prepared, backend: Backend) -> Result<&mut dyn Spmv> {
+        let key = self.cache_key(prep, backend);
+        if self.kernels.get(&key).is_some_and(|e| !e.kernel.healthy()) {
+            self.kernels.remove(&key);
+        }
+        // entry() is unusable here: building the kernel re-borrows
+        // `self` while an entry guard would hold `self.kernels`
+        #[allow(clippy::map_entry)]
+        if !self.kernels.contains_key(&key) {
+            let built = self.kernel(prep, backend)?;
+            self.kernels
+                .insert(key, CachedKernel { kernel: built, _identity: prep.sss.clone() });
+            self.kernel_builds += 1;
+        }
+        Ok(self.kernels.get_mut(&key).expect("just inserted").kernel.as_mut())
+    }
+
+    /// `(currently cached, ever built)` kernel counts.
+    pub fn kernel_cache_stats(&self) -> (usize, usize) {
+        (self.kernels.len(), self.kernel_builds)
+    }
+
+    /// Drop every cached kernel for this preparation (all backends and
+    /// config variants). Call when a matrix registration is replaced so
+    /// dead kernels don't pin the old matrix's memory (and, for
+    /// threaded `pars3`, its persistent rank threads). [`Service`] does
+    /// this on re-`Prepare`; direct `Coordinator` users discarding a
+    /// [`Prepared`] should too — `prepare` itself takes `&self` and
+    /// cannot evict (see ROADMAP: cache eviction policy).
+    pub fn evict(&mut self, prep: &Prepared) {
+        let id = Arc::as_ptr(&prep.sss) as usize;
+        self.kernels.retain(|&(p, ..), _| p != id);
+    }
+
+    /// Drop the entire kernel cache (every matrix, backend and config
+    /// variant). The coarse recovery hatch for long-lived coordinators.
+    pub fn clear_kernel_cache(&mut self) {
+        self.kernels.clear();
+    }
+
     /// One multiply `y = A x` on the chosen backend (x/y in RCM order).
+    /// Uses the kernel cache: repeated calls against the same
+    /// preparation reuse one kernel (and, when threaded, its persistent
+    /// rank threads).
     pub fn spmv(&mut self, prep: &Prepared, x: &[f64], backend: Backend) -> Result<Vec<f64>> {
         match backend {
             Backend::Pjrt => self.spmv_pjrt(prep, x),
             _ => {
-                let mut k = self.kernel(prep, backend)?;
+                let k = self.cached_kernel(prep, backend)?;
                 let mut y = vec![0.0; prep.n];
                 k.apply(x, &mut y);
                 Ok(y)
@@ -180,7 +280,7 @@ impl Coordinator {
         if backend == Backend::Pjrt {
             bail!("the PJRT backend has no batch path; use spmv per column");
         }
-        let mut k = self.kernel(prep, backend)?;
+        let k = self.cached_kernel(prep, backend)?;
         k.prepare_hint(xs.k());
         let mut ys = VecBatch::zeros(prep.n, xs.k());
         k.apply_batch(xs, &mut ys);
@@ -201,8 +301,8 @@ impl Coordinator {
         if backend == Backend::Pjrt {
             bail!("the PJRT backend has no batch path; use solve per RHS");
         }
-        let mut k = self.kernel(prep, backend)?;
-        Ok(mrs_solve_batch(&mut *k, bs, opts))
+        let k = self.cached_kernel(prep, backend)?;
+        Ok(mrs_solve_batch(k, bs, opts))
     }
 
     /// MRS solve with the chosen backend as the repeated-multiply kernel.
@@ -216,8 +316,8 @@ impl Coordinator {
         match backend {
             Backend::Pjrt => self.solve_pjrt(prep, b, opts),
             _ => {
-                let mut k = self.kernel(prep, backend)?;
-                Ok(mrs_solve(&mut *k, b, opts))
+                let k = self.cached_kernel(prep, backend)?;
+                Ok(mrs_solve(k, b, opts))
             }
         }
     }
@@ -447,6 +547,86 @@ mod tests {
         drop((k_serial, k_pars3));
         assert_eq!(Arc::strong_count(&prep.sss), before_sss);
         assert_eq!(Arc::strong_count(&prep.split), before_split);
+    }
+
+    #[test]
+    fn repeated_requests_build_each_kernel_exactly_once() {
+        let coo = gen::small_test_matrix(120, 18, 2.0);
+        let mut c = coordinator();
+        let prep = c.prepare("t", &coo).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (0, 0));
+        let x: Vec<f64> = (0..120).map(|i| (i as f64 * 0.11).sin()).collect();
+        for _ in 0..3 {
+            c.spmv(&prep, &x, Backend::Pars3 { p: 4 }).unwrap();
+        }
+        assert_eq!(c.kernel_cache_stats(), (1, 1), "3 spmvs, one pars3 build");
+        let opts = MrsOptions { alpha: 2.0, max_iters: 50, tol: 1e-6 };
+        c.solve(&prep, &x, &opts, Backend::Pars3 { p: 4 }).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (1, 1), "solve reuses the spmv kernel");
+        c.spmv(&prep, &x, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (2, 2), "serial is a second entry");
+        c.spmv(&prep, &x, Backend::Pars3 { p: 2 }).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (3, 3), "different p = different kernel");
+        c.evict(&prep);
+        assert_eq!(c.kernel_cache_stats(), (0, 3), "evict drops this matrix's kernels");
+    }
+
+    #[test]
+    fn cache_distinguishes_config_changes() {
+        use crate::kernel::FormatPolicy;
+        let coo = gen::small_test_matrix(90, 24, 1.5);
+        let mut c = coordinator();
+        let prep = c.prepare("t", &coo).unwrap();
+        let x = vec![1.0; 90];
+        c.spmv(&prep, &x, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (1, 1));
+        // mutating the public cfg must build a fresh kernel, not serve
+        // the one constructed under the old settings
+        c.cfg.format = FormatPolicy::Sss;
+        c.spmv(&prep, &x, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (2, 2));
+        c.clear_kernel_cache();
+        assert_eq!(c.kernel_cache_stats(), (0, 2));
+    }
+
+    #[test]
+    fn cache_distinguishes_matrices_by_identity() {
+        let mut c = coordinator();
+        let prep_a = c.prepare("a", &gen::small_test_matrix(80, 19, 1.5)).unwrap();
+        let prep_b = c.prepare("b", &gen::small_test_matrix(90, 20, 1.5)).unwrap();
+        let xa = vec![1.0; 80];
+        let xb = vec![1.0; 90];
+        c.spmv(&prep_a, &xa, Backend::Serial).unwrap();
+        c.spmv(&prep_b, &xb, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (2, 2));
+        // evicting one matrix leaves the other's kernel cached
+        c.evict(&prep_a);
+        assert_eq!(c.kernel_cache_stats().0, 1);
+        c.spmv(&prep_b, &xb, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (1, 2), "b's kernel survived the evict");
+    }
+
+    #[test]
+    fn format_policies_agree_through_the_coordinator() {
+        use crate::kernel::FormatPolicy;
+        let coo = gen::small_test_matrix(160, 21, 2.0);
+        let x: Vec<f64> = (0..160).map(|i| (i as f64 * 0.19).cos()).collect();
+        let mut outs = Vec::new();
+        for format in [FormatPolicy::Sss, FormatPolicy::Dia] {
+            let mut c = Coordinator::new(Config { format, ..Config::default() });
+            let prep = c.prepare("t", &coo).unwrap();
+            assert_eq!(
+                prep.split.format_name(),
+                if format == FormatPolicy::Dia { "dia" } else { "sss" }
+            );
+            outs.push(c.spmv(&prep, &x, Backend::Pars3 { p: 4 }).unwrap());
+            outs.push(c.spmv(&prep, &x, Backend::Serial).unwrap());
+        }
+        for y in &outs[1..] {
+            for (r, (a, b)) in y.iter().zip(&outs[0]).enumerate() {
+                assert!((a - b).abs() < 1e-9, "row {r}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -66,6 +66,9 @@ pub enum Request {
         /// Backend to run.
         backend: Backend,
     },
+    /// Report the worker's kernel-cache counters (how many kernels are
+    /// cached and how many were ever built — the amortization metric).
+    CacheStats,
     /// Stop the service loop.
     Shutdown,
 }
@@ -89,6 +92,13 @@ pub enum Response {
     SpmvBatch(VecBatch),
     /// Multi-RHS solve results, one per column.
     SolveBatch(Vec<MrsResult>),
+    /// Kernel-cache counters.
+    CacheStats {
+        /// Kernels currently cached.
+        cached: usize,
+        /// Kernels ever constructed (cache misses).
+        built: usize,
+    },
     /// Request failed.
     Error(String),
 }
@@ -118,7 +128,12 @@ impl Service {
                                 nnz: p.nnz_lower,
                                 rcm_bw: p.rcm_bw,
                             };
-                            registry.insert(key, p);
+                            // replacing a registration drops its cached
+                            // kernels — they'd pin the old matrix and
+                            // never be hit again (new Arc identity)
+                            if let Some(old) = registry.insert(key, p) {
+                                coord.evict(&old);
+                            }
                             r
                         }
                         Err(e) => Response::Error(format!("{e:#}")),
@@ -151,6 +166,10 @@ impl Service {
                             Err(e) => Response::Error(format!("{e:#}")),
                         },
                     },
+                    Request::CacheStats => {
+                        let (cached, built) = coord.kernel_cache_stats();
+                        Response::CacheStats { cached, built }
+                    }
                 };
                 let _ = reply.send(resp);
             }
@@ -267,6 +286,48 @@ mod tests {
         };
         assert_eq!(results.len(), 3);
         assert!(results.iter().all(|r| r.converged));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn repeated_solves_construct_the_kernel_exactly_once() {
+        let svc = Service::start(Config::default());
+        let coo = gen::small_test_matrix(100, 23, 2.0);
+        let Response::Prepared { .. } =
+            svc.call(Request::Prepare { key: "m".into(), coo: coo.clone() })
+        else {
+            panic!("prepare failed")
+        };
+        let Response::CacheStats { cached, built } = svc.call(Request::CacheStats) else {
+            panic!("cache stats failed")
+        };
+        assert_eq!((cached, built), (0, 0));
+        let b: Vec<f64> = (0..100).map(|i| ((i % 7) as f64) - 3.0).collect();
+        for _ in 0..4 {
+            let Response::Solve(res) = svc.call(Request::Solve {
+                key: "m".into(),
+                b: b.clone(),
+                opts: MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 },
+                backend: Backend::Pars3 { p: 3 },
+            }) else {
+                panic!("solve failed")
+            };
+            assert!(res.converged);
+        }
+        let Response::CacheStats { cached, built } = svc.call(Request::CacheStats) else {
+            panic!("cache stats failed")
+        };
+        assert_eq!((cached, built), (1, 1), "4 solves must build the kernel once");
+
+        // re-preparing under the same key evicts the stale kernels
+        let Response::Prepared { .. } = svc.call(Request::Prepare { key: "m".into(), coo })
+        else {
+            panic!("re-prepare failed")
+        };
+        let Response::CacheStats { cached, built } = svc.call(Request::CacheStats) else {
+            panic!("cache stats failed")
+        };
+        assert_eq!((cached, built), (0, 1), "re-prepare must drop the old kernel");
         svc.shutdown();
     }
 

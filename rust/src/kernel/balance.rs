@@ -25,18 +25,16 @@ impl RowPartition {
         Self { starts }
     }
 
-    /// Equal-NNZ blocks: greedy prefix cut at `total/p` stored entries
-    /// per rank (rows stay contiguous).
+    /// Equal-work blocks: greedy prefix cut at `total/p` work units per
+    /// rank (rows stay contiguous). Work units come from
+    /// [`Split3::row_work`]: stored middle + outer entries for a pure
+    /// SSS split; with the hybrid DIA middle the cut instead counts
+    /// dense-diagonal **slots** (explicit zeros stream too) plus the
+    /// SSS remainder and outer entries, so the partition balances what
+    /// the DIA kernel actually executes.
     pub fn by_nnz(split: &Split3, p: usize) -> Self {
         let n = split.n;
-        // per-row stored entries (middle + outer)
-        let mut row_nnz = vec![0usize; n];
-        for i in 0..n {
-            row_nnz[i] = split.middle.row_ptr[i + 1] - split.middle.row_ptr[i];
-        }
-        for e in &split.outer {
-            row_nnz[e.row as usize] += 1;
-        }
+        let row_nnz = split.row_work();
         let total: usize = row_nnz.iter().sum();
         let target = (total as f64 / p as f64).max(1.0);
         let mut starts = Vec::with_capacity(p + 1);
@@ -176,6 +174,25 @@ mod tests {
             by_nnz.nnz_imbalance,
             by_rows.nnz_imbalance
         );
+    }
+
+    #[test]
+    fn nnz_cuts_count_dia_slots_and_remainder() {
+        let split = split_fixture(300, 4);
+        let mut split_dia = split.clone();
+        split_dia.select_format(crate::kernel::FormatPolicy::Dia);
+        let dia = split_dia.dia.as_ref().expect("forced DIA must build");
+        // the cut's work total is slots + remainder + outer, not raw nnz
+        let work: usize = split_dia.row_work().iter().sum();
+        assert_eq!(work, dia.dense_slots() + dia.rest.nnz_lower() + split_dia.nnz_outer());
+        assert!(work >= split_dia.nnz_middle() + split_dia.nnz_outer());
+        // and the partition still covers all rows for both formats
+        for sp in [&split, &split_dia] {
+            let part = RowPartition::by_nnz(sp, 6);
+            assert_eq!(part.p(), 6);
+            assert_eq!(part.starts[0], 0);
+            assert_eq!(*part.starts.last().unwrap(), 300);
+        }
     }
 
     #[test]

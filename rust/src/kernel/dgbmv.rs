@@ -8,14 +8,30 @@
 //! (`benches/serial_baseline.rs`): for dense bands it wins on locality,
 //! for the sparse post-RCM middle split it loses on wasted traffic —
 //! which is exactly why PARS3 splits the band instead.
+//!
+//! A [`FormatPolicy`] can additionally promote this kernel to the
+//! **hybrid** layout ([`crate::kernel::dia::DiaBand`]): only lower
+//! sub-diagonals that clear the fill heuristic are stored densely (the
+//! skew/symmetric mirror is applied by sign on the fly, halving the
+//! classic both-triangle storage), and the scattered remainder rides an
+//! SSS gather loop instead of wasting dense slots.
 
 use crate::kernel::batch::VecBatch;
+use crate::kernel::dia::{DiaBand, FormatPolicy};
 use crate::kernel::traits::Spmv;
 use crate::sparse::{Sss, Symmetry};
 use crate::Result;
 use anyhow::ensure;
 
-/// Full (both-triangle) LAPACK-style banded matrix.
+/// Hybrid-mode storage: main diagonal + diagonal-major lower band.
+#[derive(Debug, Clone)]
+struct HybridBand {
+    diag: Vec<f64>,
+    dia: DiaBand,
+}
+
+/// LAPACK-style banded matrix: classic dense both-triangle band, or the
+/// hybrid diagonal-major layout when a [`FormatPolicy`] selects it.
 #[derive(Debug, Clone)]
 pub struct BandedDgbmv {
     /// Matrix dimension.
@@ -24,12 +40,15 @@ pub struct BandedDgbmv {
     pub beta: usize,
     /// Column-major LAPACK band storage: `ab[d * n + j] = A[j + d - beta][j]`
     /// for `d in 0..=2*beta` (rows `beta` above to `beta` below).
+    /// Empty in hybrid mode.
     pub ab: Vec<f64>,
+    /// Hybrid diagonal-major mode (`None` = classic dense band).
+    hybrid: Option<HybridBand>,
 }
 
 impl BandedDgbmv {
-    /// Build from an SSS matrix (expands the implied triangle; errors if
-    /// the band would be empty).
+    /// Build the classic dense band from an SSS matrix (expands the
+    /// implied triangle; errors if the matrix is empty).
     pub fn from_sss(s: &Sss) -> Result<Self> {
         let beta = s.bandwidth();
         ensure!(s.n > 0, "empty matrix");
@@ -47,12 +66,41 @@ impl BandedDgbmv {
                 ab[(beta + j - i) * s.n + i] = sign * v;
             }
         }
-        Ok(Self { n: s.n, beta, ab })
+        Ok(Self { n: s.n, beta, ab, hybrid: None })
     }
 
-    /// `y = A x` over the dense band (touches every band slot, zeros
-    /// included — the dgbmv trade-off).
+    /// Build per the storage policy: the hybrid diagonal-major layout
+    /// when the policy (or its fill heuristic) selects dense diagonals,
+    /// the classic dense band otherwise.
+    pub fn from_sss_format(s: &Sss, policy: FormatPolicy) -> Result<Self> {
+        ensure!(s.n > 0, "empty matrix");
+        match DiaBand::from_policy(s, policy) {
+            Some(dia) => Ok(Self {
+                n: s.n,
+                beta: s.bandwidth(),
+                ab: Vec::new(),
+                hybrid: Some(HybridBand { diag: s.dvalues.clone(), dia }),
+            }),
+            None => Self::from_sss(s),
+        }
+    }
+
+    /// True when the hybrid diagonal-major layout is active.
+    pub fn is_hybrid(&self) -> bool {
+        self.hybrid.is_some()
+    }
+
+    /// `y = A x`. The classic band touches every slot, zeros included
+    /// (the dgbmv trade-off); hybrid mode runs two unit-stride passes
+    /// per selected diagonal plus the SSS remainder.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        if let Some(h) = &self.hybrid {
+            for (yi, (&d, &xi)) in y.iter_mut().zip(h.diag.iter().zip(x)) {
+                *yi = d * xi;
+            }
+            h.dia.apply_add(x, y);
+            return;
+        }
         let (n, beta) = (self.n, self.beta);
         y.iter_mut().for_each(|v| *v = 0.0);
         for d in 0..=2 * beta {
@@ -76,6 +124,19 @@ impl BandedDgbmv {
         assert_eq!(xs.n(), n);
         assert_eq!(ys.n(), n);
         assert_eq!(ys.k(), kw);
+        if let Some(h) = &self.hybrid {
+            {
+                let xd = xs.data();
+                let yd = ys.data_mut();
+                for c in 0..kw {
+                    for i in 0..n {
+                        yd[c * n + i] = h.diag[i] * xd[c * n + i];
+                    }
+                }
+            }
+            h.dia.apply_add_batch(xs, ys);
+            return;
+        }
         let xd = xs.data();
         let yd = ys.data_mut();
         yd.iter_mut().for_each(|v| *v = 0.0);
@@ -95,8 +156,16 @@ impl BandedDgbmv {
     }
 
     /// Fraction of stored band slots that are explicit zeros (the wasted
-    /// storage §2 points out).
+    /// storage §2 points out). Hybrid mode only pays for the selected
+    /// dense diagonals, so its waste is bounded by their fill.
     pub fn waste_ratio(&self) -> f64 {
+        if let Some(h) = &self.hybrid {
+            let stored = h.dia.dense_slots() + h.dia.rest.nnz_lower();
+            if stored == 0 {
+                return 0.0;
+            }
+            return (h.dia.dense_slots() - h.dia.dense_nnz) as f64 / stored as f64;
+        }
         if self.ab.is_empty() {
             return 0.0;
         }
@@ -119,11 +188,19 @@ impl Spmv for BandedDgbmv {
     }
 
     fn flops(&self) -> u64 {
-        (2 * (2 * self.beta + 1) * self.n) as u64
+        match &self.hybrid {
+            // each stored slot/entry drives both the forward and the
+            // mirrored multiply-accumulate
+            Some(h) => (self.n + 4 * (h.dia.dense_slots() + h.dia.rest.nnz_lower())) as u64,
+            None => (2 * (2 * self.beta + 1) * self.n) as u64,
+        }
     }
 
     fn bytes(&self) -> u64 {
-        ((2 * self.beta + 1) * self.n * 8) as u64
+        match &self.hybrid {
+            Some(h) => (self.n * 8) as u64 + h.dia.bytes(),
+            None => ((2 * self.beta + 1) * self.n * 8) as u64,
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -197,6 +274,55 @@ mod tests {
         for (a, c) in got.iter().zip(&want) {
             assert!((a - c).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn hybrid_mode_matches_classic_dense_band() {
+        let s = banded(150, 5);
+        let classic = BandedDgbmv::from_sss(&s).unwrap();
+        let hybrid = BandedDgbmv::from_sss_format(&s, FormatPolicy::Dia).unwrap();
+        assert!(hybrid.is_hybrid());
+        assert!(!classic.is_hybrid());
+        let x: Vec<f64> = (0..150).map(|i| (i as f64 * 0.23).sin()).collect();
+        let (mut a, mut b) = (vec![0.0; 150], vec![0.0; 150]);
+        classic.spmv(&x, &mut a);
+        hybrid.spmv(&x, &mut b);
+        for (r, (u, v)) in a.iter().zip(&b).enumerate() {
+            assert!((u - v).abs() < 1e-10, "row {r}: {u} vs {v}");
+        }
+        // batch path too
+        let xs = VecBatch::from_fn(150, 3, |i, c| ((i * 3 + c * 5) % 7) as f64 * 0.5 - 1.5);
+        let mut ya = VecBatch::zeros(150, 3);
+        let mut yb = VecBatch::zeros(150, 3);
+        classic.spmv_batch(&xs, &mut ya);
+        hybrid.spmv_batch(&xs, &mut yb);
+        for c in 0..3 {
+            for (r, (u, v)) in ya.col(c).iter().zip(yb.col(c)).enumerate() {
+                assert!((u - v).abs() < 1e-10, "col {c} row {r}");
+            }
+        }
+        // hybrid stores strictly less than the full both-triangle band
+        assert!(hybrid.bytes() < classic.bytes());
+        assert!(hybrid.waste_ratio() <= classic.waste_ratio() + 1e-12);
+    }
+
+    #[test]
+    fn sss_policy_and_unqualified_auto_fall_back_to_classic() {
+        let s = banded(100, 6);
+        assert!(!BandedDgbmv::from_sss_format(&s, FormatPolicy::Sss).unwrap().is_hybrid());
+        // a scattered band where no diagonal clears the Auto threshold
+        let mut coo = crate::sparse::Coo::new(60);
+        for i in 0..60u32 {
+            coo.push(i, i, 2.0);
+        }
+        for (i, j) in [(20u32, 2u32), (40, 21), (59, 37)] {
+            coo.push(i, j, 1.0);
+            coo.push(j, i, -1.0);
+        }
+        let scattered = convert::coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        assert!(!BandedDgbmv::from_sss_format(&scattered, FormatPolicy::Auto)
+            .unwrap()
+            .is_hybrid());
     }
 
     #[test]

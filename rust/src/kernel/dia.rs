@@ -1,0 +1,521 @@
+//! Hybrid diagonal-major (DIA) storage for the band interior.
+//!
+//! Post-RCM, the diagonals inside `split_bw` are mostly *filled* — the
+//! whole point of the reordering is that the nonzeros collapse onto a
+//! narrow band. The pure SSS middle split still walks them through
+//! `col_ind` indirection: one index load + one gather per stored entry.
+//! This module stores the **dense** diagonals (fill ratio above a
+//! threshold) as contiguous per-diagonal value arrays instead, so the
+//! hot inner loop becomes two unit-stride, FMA-vectorizable passes per
+//! diagonal with **zero per-entry index loads**:
+//!
+//! ```text
+//! forward : y[j + d] +=        v[j] * x[j]        (j = 0 .. n-d)
+//! mirrored: y[j]     += sign * v[j] * x[j + d]
+//! ```
+//!
+//! Sparse diagonals stay in an SSS remainder (`rest`) and ride the
+//! existing gather loop — the format is a *hybrid*: dense where the
+//! band is dense, compressed where it is not. Selection is per matrix
+//! via [`FormatPolicy`] (the `Auto` fill-ratio heuristic, or forced).
+//!
+//! Not to be confused with [`crate::sparse::DiaBand`], the fully dense
+//! f32 interchange layout for the PJRT/Pallas path: that one stores
+//! *every* sub-diagonal slot unconditionally; this one is an adaptive
+//! f64 execution format for the native kernels.
+
+use crate::kernel::batch::VecBatch;
+use crate::sparse::{Sss, Symmetry};
+
+/// Fill ratio above which [`FormatPolicy::Auto`] stores a diagonal
+/// densely. Below it, explicit-zero slots would cost more bandwidth
+/// than the `col_ind` loads they replace.
+pub const DEFAULT_FILL_THRESHOLD: f64 = 0.5;
+
+/// Which middle-split storage the registry / coordinator should build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum FormatPolicy {
+    /// Per-matrix fill-ratio heuristic: diagonals filled above
+    /// [`DEFAULT_FILL_THRESHOLD`] go dense; if none qualify the matrix
+    /// stays pure SSS.
+    #[default]
+    Auto,
+    /// Force the hybrid DIA storage (every nonempty diagonal dense).
+    Dia,
+    /// Force the pure SSS middle split (the paper's layout).
+    Sss,
+}
+
+impl FormatPolicy {
+    /// Dense-diagonal fill threshold this policy applies
+    /// (`None` = never store a diagonal densely).
+    pub fn threshold(self) -> Option<f64> {
+        match self {
+            FormatPolicy::Auto => Some(DEFAULT_FILL_THRESHOLD),
+            FormatPolicy::Dia => Some(0.0),
+            FormatPolicy::Sss => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FormatPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FormatPolicy::Auto => "auto",
+            FormatPolicy::Dia => "dia",
+            FormatPolicy::Sss => "sss",
+        })
+    }
+}
+
+impl std::str::FromStr for FormatPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(t: &str) -> std::result::Result<Self, Self::Err> {
+        Ok(match t {
+            "auto" => FormatPolicy::Auto,
+            "dia" => FormatPolicy::Dia,
+            "sss" => FormatPolicy::Sss,
+            other => anyhow::bail!("unknown format '{other}' (expected auto|dia|sss)"),
+        })
+    }
+}
+
+/// One densely stored sub-diagonal: `vals[j] = A[j + d][j]`, length
+/// `n - d`, explicit zeros where the band has holes.
+#[derive(Debug, Clone)]
+pub struct DenseDiag {
+    /// Diagonal distance (`row - col`), always `>= 1`.
+    pub d: usize,
+    /// Contiguous values, indexed by **column**.
+    pub vals: Vec<f64>,
+}
+
+/// Hybrid diagonal-major storage of a strictly-lower-triangle matrix
+/// (a [`Sss`] whose diagonal is handled elsewhere): dense per-diagonal
+/// arrays for well-filled diagonals plus an SSS remainder for the rest.
+#[derive(Debug, Clone)]
+pub struct DiaBand {
+    /// Matrix dimension.
+    pub n: usize,
+    /// Mirror convention (sign of the implied upper triangle).
+    pub sym: Symmetry,
+    /// Dense diagonals, ascending by distance.
+    pub diags: Vec<DenseDiag>,
+    /// Sparse remainder (entries on non-dense diagonals), SSS-compressed
+    /// with a zero diagonal.
+    pub rest: Sss,
+    /// True nonzeros carried by the dense diagonals.
+    pub dense_nnz: usize,
+    /// The fill threshold the selection used (for reports).
+    pub threshold: f64,
+}
+
+impl DiaBand {
+    /// Build per the policy: `None` means "stay SSS" (either the policy
+    /// forces it or no diagonal clears the `Auto` threshold).
+    pub fn from_policy(lower: &Sss, policy: FormatPolicy) -> Option<Self> {
+        policy.threshold().and_then(|t| Self::build(lower, t))
+    }
+
+    /// Build with an explicit fill threshold; `None` if no nonempty
+    /// diagonal has `nnz / (n - d) >= threshold`.
+    pub fn build(lower: &Sss, threshold: f64) -> Option<Self> {
+        let n = lower.n;
+        let bw = lower.bandwidth();
+        if bw == 0 {
+            return None;
+        }
+        // fill count per diagonal distance
+        let mut count = vec![0usize; bw + 1];
+        for i in 0..n {
+            for (j, _) in lower.row(i) {
+                count[i - j as usize] += 1;
+            }
+        }
+        // pos[d] = index into `diags` for dense distances
+        let mut pos = vec![usize::MAX; bw + 1];
+        let mut diags = Vec::new();
+        for d in 1..=bw {
+            if count[d] > 0 && count[d] as f64 >= threshold * (n - d) as f64 {
+                pos[d] = diags.len();
+                diags.push(DenseDiag { d, vals: vec![0.0; n - d] });
+            }
+        }
+        if diags.is_empty() {
+            return None;
+        }
+        // scatter entries: dense diagonals get slots, the rest stays SSS
+        let mut row_ptr = vec![0usize; n + 1];
+        let mut col_ind = Vec::new();
+        let mut vals = Vec::new();
+        let mut dense_nnz = 0usize;
+        for i in 0..n {
+            for (j, v) in lower.row(i) {
+                let d = i - j as usize;
+                if pos[d] != usize::MAX {
+                    diags[pos[d]].vals[j as usize] = v;
+                    dense_nnz += 1;
+                } else {
+                    col_ind.push(j);
+                    vals.push(v);
+                }
+            }
+            row_ptr[i + 1] = vals.len();
+        }
+        let rest = Sss {
+            n,
+            dvalues: vec![0.0; n],
+            row_ptr,
+            col_ind,
+            vals,
+            sym: lower.sym,
+        };
+        Some(Self { n, sym: lower.sym, diags, rest, dense_nnz, threshold })
+    }
+
+    /// Total dense slots (including explicit zeros).
+    pub fn dense_slots(&self) -> usize {
+        self.diags.iter().map(|dd| dd.vals.len()).sum()
+    }
+
+    /// Fraction of dense slots holding a true nonzero.
+    pub fn fill_ratio(&self) -> f64 {
+        let slots = self.dense_slots();
+        if slots == 0 {
+            0.0
+        } else {
+            self.dense_nnz as f64 / slots as f64
+        }
+    }
+
+    /// Stored entries (dense nonzeros + remainder).
+    pub fn nnz(&self) -> usize {
+        self.dense_nnz + self.rest.nnz_lower()
+    }
+
+    /// Matrix bytes touched per apply: dense slots (values only — no
+    /// index arrays, the point of the layout) + remainder SSS traffic.
+    pub fn bytes(&self) -> u64 {
+        (self.dense_slots() * 8 + self.rest.nnz_lower() * 12 + (self.n + 1) * 8) as u64
+    }
+
+    /// Add this matrix's contribution (both triangles via the sign
+    /// mirror) into `y`: two unit-stride passes per dense diagonal, the
+    /// SSS gather loop for the remainder. `y` is **accumulated**, not
+    /// overwritten. This is exactly [`Self::apply_window`] over the
+    /// full row range with an empty halo.
+    pub fn apply_add(&self, x: &[f64], y: &mut [f64]) {
+        self.apply_window(0, self.n, 0, x, y);
+    }
+
+    /// Batch variant of [`Self::apply_add`] over column-major `n × k`
+    /// batches. Each SSS **remainder** entry is loaded once and reused
+    /// across all `k` columns; dense diagonals instead run their two
+    /// unit-stride passes once **per column** — the column-major layout
+    /// makes per-column passes contiguous, while fusing across columns
+    /// would turn every access into a stride-`n` gather. (The
+    /// interleaved rank-window variant [`Self::apply_window_batch`]
+    /// does reuse each dense slot across all `k` columns.)
+    pub fn apply_add_batch(&self, xs: &VecBatch, ys: &mut VecBatch) {
+        let n = self.n;
+        let k = xs.k();
+        debug_assert_eq!(xs.n(), n);
+        debug_assert_eq!(ys.n(), n);
+        debug_assert_eq!(ys.k(), k);
+        let sign = self.sym.sign();
+        let xd = xs.data();
+        let yd = ys.data_mut();
+        for dd in &self.diags {
+            let d = dd.d;
+            let m = n - d;
+            let vals = &dd.vals[..m];
+            for c in 0..k {
+                let xcol = &xd[c * n..(c + 1) * n];
+                let ycol = &mut yd[c * n..(c + 1) * n];
+                for ((yv, &v), &xv) in ycol[d..].iter_mut().zip(vals).zip(&xcol[..m]) {
+                    *yv += v * xv;
+                }
+                for ((yv, &v), &xv) in ycol[..m].iter_mut().zip(vals).zip(&xcol[d..]) {
+                    *yv += sign * v * xv;
+                }
+            }
+        }
+        for i in 0..n {
+            let lo = self.rest.row_ptr[i];
+            let hi = self.rest.row_ptr[i + 1];
+            for (&j, &v) in self.rest.col_ind[lo..hi].iter().zip(&self.rest.vals[lo..hi]) {
+                let j = j as usize;
+                let sv = sign * v;
+                for c in 0..k {
+                    let base = c * n;
+                    yd[base + i] += v * xd[base + j];
+                    yd[base + j] += sv * xd[base + i];
+                }
+            }
+        }
+    }
+
+    /// Rank-window variant for the PARS3 middle split: add the
+    /// contribution of rows `r0..r1` (forward **and** mirrored writes)
+    /// into the window `yw` covering `[base, r1)`, reading `xw` over the
+    /// same range. Mirror writes below `r0` land in the window's halo
+    /// prefix, exactly like the SSS path. Dense-diagonal slots whose
+    /// column falls below `base` are skipped — by construction of
+    /// `halo_lo` those slots are explicit zeros, so the clamp drops only
+    /// no-op work, never a contribution.
+    pub fn apply_window(&self, r0: usize, r1: usize, base: usize, xw: &[f64], yw: &mut [f64]) {
+        debug_assert_eq!(xw.len(), r1 - base);
+        debug_assert_eq!(yw.len(), r1 - base);
+        let sign = self.sym.sign();
+        for dd in &self.diags {
+            let d = dd.d;
+            let lo_i = r0.max(base + d); // first row with col >= base
+            if lo_i >= r1 {
+                continue;
+            }
+            let j0 = lo_i - d; // absolute column start (>= base)
+            let m = r1 - lo_i;
+            let vals = &dd.vals[j0..j0 + m];
+            let w = j0 - base; // window offset of the column start
+            // forward: y[i] += v * x[i - d]
+            for ((yv, &v), &xv) in yw[w + d..w + d + m].iter_mut().zip(vals).zip(&xw[w..w + m]) {
+                *yv += v * xv;
+            }
+            // mirrored: y[i - d] += sign * v * x[i]
+            for ((yv, &v), &xv) in yw[w..w + m].iter_mut().zip(vals).zip(&xw[w + d..w + d + m]) {
+                *yv += sign * v * xv;
+            }
+        }
+        // sparse remainder: same gather loop as the SSS middle split
+        for i in r0..r1 {
+            let xi = xw[i - base];
+            let sxi = sign * xi;
+            let mut yi = 0.0;
+            let lo = self.rest.row_ptr[i];
+            let hi = self.rest.row_ptr[i + 1];
+            for (&j, &v) in self.rest.col_ind[lo..hi].iter().zip(&self.rest.vals[lo..hi]) {
+                let j = j as usize;
+                yi += v * xw[j - base];
+                yw[j - base] += v * sxi;
+            }
+            yw[i - base] += yi;
+        }
+    }
+
+    /// Fused batch rank-window variant: `xw`/`yw` are **interleaved**
+    /// `k`-wide windows over `[base, r1)` (element `(row, c)` at
+    /// `(row - base) * k + c`), matching the PARS3 batch layout.
+    pub fn apply_window_batch(
+        &self,
+        r0: usize,
+        r1: usize,
+        base: usize,
+        k: usize,
+        xw: &[f64],
+        yw: &mut [f64],
+    ) {
+        debug_assert_eq!(xw.len(), (r1 - base) * k);
+        debug_assert_eq!(yw.len(), (r1 - base) * k);
+        let sign = self.sym.sign();
+        for dd in &self.diags {
+            let d = dd.d;
+            let lo_i = r0.max(base + d);
+            if lo_i >= r1 {
+                continue;
+            }
+            let j0 = lo_i - d;
+            let m = r1 - lo_i;
+            let vals = &dd.vals[j0..j0 + m];
+            let w = j0 - base;
+            for (t, &v) in vals.iter().enumerate() {
+                let oj = (w + t) * k;
+                let oi = (w + t + d) * k;
+                let sv = sign * v;
+                for c in 0..k {
+                    yw[oi + c] += v * xw[oj + c];
+                    yw[oj + c] += sv * xw[oi + c];
+                }
+            }
+        }
+        for i in r0..r1 {
+            let oi = (i - base) * k;
+            let lo = self.rest.row_ptr[i];
+            let hi = self.rest.row_ptr[i + 1];
+            for (&j, &v) in self.rest.col_ind[lo..hi].iter().zip(&self.rest.vals[lo..hi]) {
+                let oj = (j as usize - base) * k;
+                let sv = sign * v;
+                for c in 0..k {
+                    yw[oi + c] += v * xw[oj + c];
+                    yw[oj + c] += sv * xw[oi + c];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::serial_sss::sss_spmv;
+    use crate::sparse::{convert, gen, Coo};
+
+    fn banded(n: usize, seed: u64, alpha: f64) -> Sss {
+        let coo = gen::small_test_matrix(n, seed, alpha);
+        let g = crate::graph::Adjacency::from_coo(&coo);
+        let perm = crate::graph::rcm(&g);
+        convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap()
+    }
+
+    /// Off-diagonal (mirror-expanded) reference: `sss_spmv` with the
+    /// diagonal zeroed out.
+    fn offdiag_ref(s: &Sss, x: &[f64]) -> Vec<f64> {
+        let mut z = s.clone();
+        z.dvalues = vec![0.0; s.n];
+        let mut y = vec![0.0; s.n];
+        sss_spmv(&z, x, &mut y);
+        y
+    }
+
+    #[test]
+    fn forced_dia_covers_every_entry_and_matches_sss() {
+        let s = banded(120, 1, 1.5);
+        let dia = DiaBand::from_policy(&s, FormatPolicy::Dia).unwrap();
+        // threshold 0: every nonempty diagonal goes dense, no remainder
+        assert_eq!(dia.dense_nnz, s.nnz_lower());
+        assert_eq!(dia.rest.nnz_lower(), 0);
+        assert_eq!(dia.nnz(), s.nnz_lower());
+        let x: Vec<f64> = (0..120).map(|i| ((i * 31) % 17) as f64 * 0.25 - 2.0).collect();
+        let want = offdiag_ref(&s, &x);
+        let mut got = vec![0.0; 120];
+        dia.apply_add(&x, &mut got);
+        for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-10, "row {r}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn partial_threshold_splits_between_dense_and_rest() {
+        let s = banded(150, 2, 1.0);
+        if let Some(dia) = DiaBand::build(&s, 0.3) {
+            assert_eq!(dia.dense_nnz + dia.rest.nnz_lower(), s.nnz_lower());
+            let x: Vec<f64> = (0..150).map(|i| (i as f64 * 0.17).cos()).collect();
+            let want = offdiag_ref(&s, &x);
+            let mut got = vec![0.0; 150];
+            dia.apply_add(&x, &mut got);
+            for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn heuristic_picks_sss_for_scattered_and_dia_for_dense_bands() {
+        let n = 64u32;
+        // dense: a completely filled first sub-diagonal
+        let mut c = Coo::new(n as usize);
+        for i in 0..n {
+            c.push(i, i, 2.0);
+        }
+        for i in 1..n {
+            c.push(i, i - 1, 1.0);
+            c.push(i - 1, i, -1.0);
+        }
+        let dense = convert::coo_to_sss(&c, Symmetry::Skew).unwrap();
+        let picked = DiaBand::from_policy(&dense, FormatPolicy::Auto).unwrap();
+        assert_eq!(picked.diags.len(), 1);
+        assert_eq!(picked.diags[0].d, 1);
+        assert!((picked.fill_ratio() - 1.0).abs() < 1e-12);
+        assert_eq!(picked.rest.nnz_lower(), 0);
+        // scattered: one entry per wide diagonal — every fill ratio tiny
+        let mut c2 = Coo::new(n as usize);
+        for i in 0..n {
+            c2.push(i, i, 2.0);
+        }
+        for (i, j) in [(20u32, 3u32), (41, 22), (63, 40)] {
+            c2.push(i, j, 1.0);
+            c2.push(j, i, -1.0);
+        }
+        let scattered = convert::coo_to_sss(&c2, Symmetry::Skew).unwrap();
+        assert!(DiaBand::from_policy(&scattered, FormatPolicy::Auto).is_none());
+        // policy Sss never builds
+        assert!(DiaBand::from_policy(&dense, FormatPolicy::Sss).is_none());
+    }
+
+    #[test]
+    fn window_partition_sums_to_full_apply() {
+        let s = banded(100, 3, 1.0);
+        let dia = DiaBand::from_policy(&s, FormatPolicy::Dia).unwrap();
+        let bw = s.bandwidth();
+        let x: Vec<f64> = (0..100).map(|i| ((i * 7) % 13) as f64 * 0.5 - 3.0).collect();
+        let mut want = vec![0.0; 100];
+        dia.apply_add(&x, &mut want);
+        let mut got = vec![0.0; 100];
+        for (r0, r1) in [(0usize, 34usize), (34, 67), (67, 100)] {
+            let base = r0.saturating_sub(bw);
+            let xw = &x[base..r1];
+            let mut yw = vec![0.0; r1 - base];
+            dia.apply_window(r0, r1, base, xw, &mut yw);
+            for (t, v) in yw.iter().enumerate() {
+                got[base + t] += v;
+            }
+        }
+        for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-10, "row {r}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batch_apply_matches_columnwise() {
+        let s = banded(90, 4, 1.5);
+        let dia = DiaBand::from_policy(&s, FormatPolicy::Dia).unwrap();
+        let k = 4;
+        let xs = VecBatch::from_fn(90, k, |i, c| ((i * 5 + c * 11) % 9) as f64 * 0.4 - 1.5);
+        let mut ys = VecBatch::zeros(90, k);
+        dia.apply_add_batch(&xs, &mut ys);
+        for c in 0..k {
+            let mut want = vec![0.0; 90];
+            dia.apply_add(xs.col(c), &mut want);
+            for (r, (a, b)) in ys.col(c).iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "col {c} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn window_batch_matches_scalar_window() {
+        let s = banded(80, 5, 1.0);
+        let dia = DiaBand::from_policy(&s, FormatPolicy::Dia).unwrap();
+        let bw = s.bandwidth();
+        let (r0, r1) = (30usize, 60usize);
+        let base = r0.saturating_sub(bw);
+        let k = 3;
+        let w = r1 - base;
+        // interleaved k-wide input window
+        let mut xw = vec![0.0f64; w * k];
+        for t in 0..w {
+            for c in 0..k {
+                xw[t * k + c] = ((t * 3 + c * 7) % 11) as f64 * 0.3 - 1.0;
+            }
+        }
+        let mut yw = vec![0.0f64; w * k];
+        dia.apply_window_batch(r0, r1, base, k, &xw, &mut yw);
+        for c in 0..k {
+            let xc: Vec<f64> = (0..w).map(|t| xw[t * k + c]).collect();
+            let mut want = vec![0.0f64; w];
+            dia.apply_window(r0, r1, base, &xc, &mut want);
+            for t in 0..w {
+                assert!((yw[t * k + c] - want[t]).abs() < 1e-10, "col {c} slot {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn policy_parsing_roundtrips() {
+        for p in [FormatPolicy::Auto, FormatPolicy::Dia, FormatPolicy::Sss] {
+            assert_eq!(p.to_string().parse::<FormatPolicy>().unwrap(), p);
+        }
+        assert!("nope".parse::<FormatPolicy>().is_err());
+        assert_eq!(FormatPolicy::default(), FormatPolicy::Auto);
+    }
+}

@@ -9,6 +9,7 @@ pub mod coloring_spmv;
 pub mod conflict;
 pub mod csr_spmv;
 pub mod dgbmv;
+pub mod dia;
 pub mod pars3;
 pub mod registry;
 pub mod serial_sss;
@@ -17,6 +18,7 @@ pub mod traits;
 
 pub use batch::VecBatch;
 pub use conflict::{BlockDist, ConflictMap};
+pub use dia::FormatPolicy;
 pub use pars3::Pars3Plan;
 pub use registry::{KernelConfig, KERNEL_NAMES};
 pub use split3::Split3;

@@ -66,6 +66,12 @@ pub struct Pars3Stats {
     pub msg_values: Vec<usize>,
     /// Wallclock seconds per rank (threaded mode only).
     pub rank_seconds: Vec<f64>,
+    /// Dense diagonals in the middle split's hybrid DIA storage
+    /// (0 = pure SSS middle — the fill-ratio heuristic's record).
+    pub dia_diagonals: usize,
+    /// Middle-split nnz served by the dense diagonals (the remainder
+    /// rides the SSS gather loop).
+    pub dia_nnz: usize,
 }
 
 /// The preprocessed parallel kernel.
@@ -166,6 +172,15 @@ impl Pars3Plan {
         Ok(Self { split, dist, ranks, outer_by_rank })
     }
 
+    /// Record the middle-split storage choice (the fill-ratio
+    /// heuristic's outcome) on a stats object.
+    fn note_format(&self, stats: &mut Pars3Stats) {
+        if let Some(dia) = &self.split.dia {
+            stats.dia_diagonals = dia.diags.len();
+            stats.dia_nnz = dia.dense_nnz;
+        }
+    }
+
     /// Rank-local compute shared by both executors. Adds this rank's
     /// contributions into `yw`, a window covering `[halo_lo, r1)`:
     /// `yw[..r0-halo_lo]` receives the cross-boundary (conflicting)
@@ -184,19 +199,27 @@ impl Pars3Plan {
         for i in r0..r1 {
             yw[i - base] = split.diag[i] * xw[i - base];
         }
-        // middle split
-        for i in r0..r1 {
-            let xi = xw[i - base];
-            let sxi = sign * xi;
-            let mut yi = 0.0;
-            let lo = split.middle.row_ptr[i];
-            let hi = split.middle.row_ptr[i + 1];
-            for (&j, &v) in split.middle.col_ind[lo..hi].iter().zip(&split.middle.vals[lo..hi]) {
-                let j = j as usize;
-                yi += v * xw[j - base];
-                yw[j - base] += v * sxi; // safe or conflicting mirror
+        // middle split: unit-stride DIA passes when the hybrid view is
+        // selected, the col_ind gather loop otherwise
+        match &split.dia {
+            Some(dia) => dia.apply_window(r0, r1, base, xw, yw),
+            None => {
+                for i in r0..r1 {
+                    let xi = xw[i - base];
+                    let sxi = sign * xi;
+                    let mut yi = 0.0;
+                    let lo = split.middle.row_ptr[i];
+                    let hi = split.middle.row_ptr[i + 1];
+                    for (&j, &v) in
+                        split.middle.col_ind[lo..hi].iter().zip(&split.middle.vals[lo..hi])
+                    {
+                        let j = j as usize;
+                        yi += v * xw[j - base];
+                        yw[j - base] += v * sxi; // safe or conflicting mirror
+                    }
+                    yw[i - base] += yi;
+                }
             }
-            yw[i - base] += yi;
         }
         // outer split: sequential tail
         for &k in &self.outer_by_rank[rp.rank] {
@@ -226,17 +249,25 @@ impl Pars3Plan {
                 yw[o + c] = d * xw[o + c];
             }
         }
-        // middle split — each (j, v) loaded once for all k columns
-        for i in r0..r1 {
-            let oi = (i - base) * k;
-            let lo = split.middle.row_ptr[i];
-            let hi = split.middle.row_ptr[i + 1];
-            for (&j, &v) in split.middle.col_ind[lo..hi].iter().zip(&split.middle.vals[lo..hi]) {
-                let oj = (j as usize - base) * k;
-                let sv = sign * v;
-                for c in 0..k {
-                    yw[oi + c] += v * xw[oj + c];
-                    yw[oj + c] += sv * xw[oi + c]; // safe or conflicting mirror
+        // middle split — each (j, v) loaded once for all k columns;
+        // DIA dense diagonals additionally skip the col_ind loads
+        match &split.dia {
+            Some(dia) => dia.apply_window_batch(r0, r1, base, k, xw, yw),
+            None => {
+                for i in r0..r1 {
+                    let oi = (i - base) * k;
+                    let lo = split.middle.row_ptr[i];
+                    let hi = split.middle.row_ptr[i + 1];
+                    for (&j, &v) in
+                        split.middle.col_ind[lo..hi].iter().zip(&split.middle.vals[lo..hi])
+                    {
+                        let oj = (j as usize - base) * k;
+                        let sv = sign * v;
+                        for c in 0..k {
+                            yw[oi + c] += v * xw[oj + c];
+                            yw[oj + c] += sv * xw[oi + c]; // safe or conflicting mirror
+                        }
+                    }
                 }
             }
         }
@@ -351,6 +382,7 @@ impl Pars3Plan {
         ys.fill_zero();
         let yd = ys.data_mut();
         let mut stats = Pars3Stats::default();
+        self.note_format(&mut stats);
         let (mut xw, mut yw) = (Vec::new(), Vec::new());
         for rp in &self.ranks {
             let (base, r1) = (rp.halo_lo, rp.r1);
@@ -391,6 +423,7 @@ impl Pars3Plan {
         let results =
             World::run(self.dist.p, |mut ctx| self.rank_apply(win, x, &mut ctx));
         let mut stats = Pars3Stats::default();
+        self.note_format(&mut stats);
         for r in results {
             stats.msgs.push(r.msgs);
             stats.msg_values.push(r.msg_values);
@@ -406,6 +439,7 @@ impl Pars3Plan {
         assert_eq!(x.len(), self.split.n);
         let mut y = vec![0.0f64; self.split.n];
         let mut stats = Pars3Stats::default();
+        self.note_format(&mut stats);
         let mut yw = Vec::new();
         for rp in &self.ranks {
             // zero-copy x window; reused y window buffer (§Perf:
@@ -454,8 +488,9 @@ impl Pars3Threaded {
         Self { plan, world, window, xslot: InputSlot::new(), batch_window: None }
     }
 
-    fn collect(reports: Vec<RankReport>) -> Pars3Stats {
+    fn collect(&self, reports: Vec<RankReport>) -> Pars3Stats {
         let mut stats = Pars3Stats::default();
+        self.plan.note_format(&mut stats);
         for r in reports {
             stats.msgs.push(r.msgs);
             stats.msg_values.push(r.msg_values);
@@ -485,7 +520,7 @@ impl Pars3Threaded {
         });
         self.xslot.retire(epoch);
         self.window.read_into(y);
-        Self::collect(reports)
+        self.collect(reports)
     }
 
     /// `y = A x` on the persistent rank threads. Returns `(y, stats)`.
@@ -493,6 +528,13 @@ impl Pars3Threaded {
         let mut y = vec![0.0f64; self.plan.split.n];
         let stats = self.apply_into(x, &mut y);
         (y, stats)
+    }
+
+    /// False once a rank panic has poisoned the persistent world: any
+    /// further job submission fails loudly instead of hanging peers at
+    /// the barrier (the poisoned-epoch guard).
+    pub fn healthy(&self) -> bool {
+        !self.world.is_poisoned()
     }
 
     /// Size (or resize) the `n × k` batch window ahead of time so the
@@ -536,7 +578,7 @@ impl Pars3Threaded {
         });
         self.xslot.retire(epoch);
         win.read_into(ys.data_mut());
-        Self::collect(reports)
+        self.collect(reports)
     }
 }
 
@@ -603,14 +645,26 @@ impl crate::kernel::Spmv for Pars3Kernel {
         }
     }
 
+    fn healthy(&self) -> bool {
+        self.exec.as_ref().is_none_or(Pars3Threaded::healthy)
+    }
+
     fn flops(&self) -> u64 {
         let s = &self.plan.split;
-        (s.n + 4 * (s.nnz_middle() + s.nnz_outer())) as u64
+        let middle = match &s.dia {
+            // dense slots are streamed and multiplied, zeros included
+            Some(dia) => dia.dense_slots() + dia.rest.nnz_lower(),
+            None => s.nnz_middle(),
+        };
+        (s.n + 4 * (middle + s.nnz_outer())) as u64
     }
 
     fn bytes(&self) -> u64 {
         let s = &self.plan.split;
-        (s.n * 8 + (s.nnz_middle() + s.nnz_outer()) * 12) as u64
+        match &s.dia {
+            Some(dia) => (s.n * 8 + s.nnz_outer() * 12) as u64 + dia.bytes(),
+            None => (s.n * 8 + (s.nnz_middle() + s.nnz_outer()) * 12) as u64,
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -739,6 +793,8 @@ mod tests {
                 assert!((a - b).abs() < 1e-10, "round {round} row {c}: {a} vs {b}");
             }
         }
+        // a live executor reports healthy (the kernel cache's evict probe)
+        assert!(k.healthy());
     }
 
     #[test]
@@ -893,6 +949,69 @@ mod tests {
         assert_eq!(w1.len(), 90 * 4);
         let w3 = exec.prepare_batch(2);
         assert_eq!(w3.len(), 90 * 2);
+    }
+
+    #[test]
+    fn dia_middle_split_matches_sss_on_both_executors_and_is_recorded() {
+        use crate::kernel::FormatPolicy;
+        let s = banded(170, 21, 1.5);
+        let x: Vec<f64> = (0..170).map(|i| ((i * 19) % 23) as f64 * 0.3 - 2.5).collect();
+        let split_sss = Split3::with_outer_bw(&s, 3).unwrap();
+        let split_dia = Split3::with_outer_bw_format(&s, 3, FormatPolicy::Dia).unwrap();
+        assert!(split_dia.dia.is_some(), "forced DIA must build");
+        for p in [1, 3, 6] {
+            let plan_s = Pars3Plan::new(split_sss.clone(), p).unwrap();
+            let plan_d = Arc::new(Pars3Plan::new(split_dia.clone(), p).unwrap());
+            let (want, stats_s) = plan_s.execute_emulated(&x);
+            let (got, stats_d) = plan_d.execute_emulated(&x);
+            // heuristic outcome is recorded on the stats
+            assert_eq!(stats_s.dia_diagonals, 0);
+            assert!(stats_d.dia_diagonals > 0);
+            assert_eq!(stats_d.dia_nnz, split_dia.dia.as_ref().unwrap().dense_nnz);
+            // identical message schedule (format changes compute, not
+            // communication), same numerics to rounding
+            assert_eq!(stats_s.msgs, stats_d.msgs);
+            for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "p={p} row {r}: {a} vs {b}");
+            }
+            // threaded executor over the DIA split
+            let (got_t, _) = plan_d.execute_threaded(&x);
+            for (r, (a, b)) in got_t.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "threaded p={p} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn dia_batch_matches_sss_batch() {
+        use crate::kernel::FormatPolicy;
+        let s = banded(140, 22, 1.0);
+        let k = 5;
+        let xs = VecBatch::from_fn(140, k, |i, c| ((i * 7 + c * 13) % 17) as f64 * 0.25 - 2.0);
+        let split_sss = Split3::with_outer_bw(&s, 3).unwrap();
+        let split_dia = Split3::with_outer_bw_format(&s, 3, FormatPolicy::Dia).unwrap();
+        let plan_s = Pars3Plan::new(split_sss, 4).unwrap();
+        let plan_d = Arc::new(Pars3Plan::new(split_dia, 4).unwrap());
+        let mut want = VecBatch::zeros(140, k);
+        plan_s.execute_emulated_batch(&xs, &mut want);
+        let mut got = VecBatch::zeros(140, k);
+        let st = plan_d.execute_emulated_batch(&xs, &mut got);
+        assert!(st.dia_diagonals > 0);
+        for c in 0..k {
+            for (r, (a, b)) in got.col(c).iter().zip(want.col(c)).enumerate() {
+                assert!((a - b).abs() < 1e-10, "col {c} row {r}");
+            }
+        }
+        // persistent threaded batch path over the DIA split
+        let mut exec = Pars3Threaded::new(plan_d);
+        let mut got_t = VecBatch::zeros(140, k);
+        let st_t = exec.apply_batch(&xs, &mut got_t);
+        assert_eq!(st_t.dia_diagonals, st.dia_diagonals);
+        for c in 0..k {
+            for (r, (a, b)) in got_t.col(c).iter().zip(want.col(c)).enumerate() {
+                assert!((a - b).abs() < 1e-10, "threaded col {c} row {r}");
+            }
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@ use crate::graph::{rcm, Adjacency};
 use crate::kernel::coloring_spmv::ColoringKernel;
 use crate::kernel::csr_spmv::CsrSpmv;
 use crate::kernel::dgbmv::BandedDgbmv;
+use crate::kernel::dia::FormatPolicy;
 use crate::kernel::pars3::Pars3Kernel;
 use crate::kernel::serial_sss::SerialSss;
 use crate::kernel::split3::Split3;
@@ -30,7 +31,9 @@ use std::sync::Arc;
 pub const KERNEL_NAMES: &[&str] = &["serial_sss", "csr", "dgbmv", "coloring", "pars3"];
 
 /// Construction parameters shared by all kernels (parallel kernels use
-/// `threads`/`threaded`; `pars3` additionally uses `outer_bw`).
+/// `threads`/`threaded`; `pars3` additionally uses `outer_bw`; the
+/// band-interior kernels — `serial_sss`, `dgbmv`, `pars3` — honor
+/// `format`).
 #[derive(Debug, Clone)]
 pub struct KernelConfig {
     /// Rank count for the parallel kernels (clamped to the matrix size).
@@ -39,11 +42,14 @@ pub struct KernelConfig {
     pub outer_bw: usize,
     /// Real threads (`true`) or the deterministic emulated executors.
     pub threaded: bool,
+    /// Band-interior storage: hybrid diagonal-major (DIA) vs pure SSS,
+    /// with `Auto` deciding per matrix by fill ratio.
+    pub format: FormatPolicy,
 }
 
 impl Default for KernelConfig {
     fn default() -> Self {
-        Self { threads: 8, outer_bw: 3, threaded: false }
+        Self { threads: 8, outer_bw: 3, threaded: false, format: FormatPolicy::Auto }
     }
 }
 
@@ -100,12 +106,12 @@ pub fn build_from_sss(
     let sss: Arc<Sss> = sss.into();
     let p = cfg.threads.clamp(1, sss.n.max(1));
     Ok(match name {
-        "serial_sss" => Box::new(SerialSss::new(sss)),
+        "serial_sss" => Box::new(SerialSss::with_format(sss, cfg.format)),
         "csr" => Box::new(CsrSpmv::new(convert::sss_to_csr(&sss))),
-        "dgbmv" => Box::new(BandedDgbmv::from_sss(&sss)?),
+        "dgbmv" => Box::new(BandedDgbmv::from_sss_format(&sss, cfg.format)?),
         "coloring" => Box::new(ColoringKernel::new(sss, p, cfg.threaded)?),
         "pars3" => {
-            let split = Split3::with_outer_bw(&sss, cfg.outer_bw)?;
+            let split = Split3::with_outer_bw_format(&sss, cfg.outer_bw, cfg.format)?;
             return build_from_split(split, cfg);
         }
         other => bail!("unknown kernel '{other}'; available: {KERNEL_NAMES:?}"),
@@ -116,6 +122,9 @@ pub fn build_from_sss(
 /// preprocessing a caller already did (e.g.
 /// [`crate::coordinator::Prepared::split`]) instead of recomputing it.
 /// Accepts owned or `Arc`-shared splits; never clones the split data.
+/// The split's middle storage (DIA vs SSS) is whatever the caller
+/// selected at split construction — `cfg.format` is not re-applied
+/// (an `Arc`-shared split cannot be mutated).
 pub fn build_from_split(
     split: impl Into<Arc<Split3>>,
     cfg: &KernelConfig,
@@ -207,6 +216,28 @@ mod tests {
         build("pars3", &coo, &cfg).unwrap().apply(&x, &mut y_pars3);
         for (a, b) in y_serial.iter().zip(&y_pars3) {
             assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn every_registered_kernel_agrees_across_format_policies() {
+        let (_, sss) = fixture(130, 8, 1.5);
+        let sss = Arc::new(sss);
+        let x: Vec<f64> = (0..130).map(|i| ((i * 17) % 19) as f64 * 0.3 - 2.5).collect();
+        for &name in KERNEL_NAMES {
+            let mut outs = Vec::new();
+            for format in [FormatPolicy::Sss, FormatPolicy::Dia, FormatPolicy::Auto] {
+                let cfg = KernelConfig { threads: 4, format, ..KernelConfig::default() };
+                let mut k = build_from_sss(name, sss.clone(), &cfg).unwrap();
+                let mut y = vec![0.0; 130];
+                k.apply(&x, &mut y);
+                outs.push(y);
+            }
+            for y in &outs[1..] {
+                for (r, (a, b)) in y.iter().zip(&outs[0]).enumerate() {
+                    assert!((a - b).abs() < 1e-9, "{name} row {r}: {a} vs {b}");
+                }
+            }
         }
     }
 

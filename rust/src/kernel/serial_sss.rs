@@ -11,6 +11,7 @@
 //! ```
 
 use crate::kernel::batch::VecBatch;
+use crate::kernel::dia::{DiaBand, FormatPolicy};
 use crate::kernel::traits::Spmv;
 use crate::sparse::Sss;
 use std::sync::Arc;
@@ -82,15 +83,42 @@ pub fn sss_spmv_batch(s: &Sss, xs: &VecBatch, ys: &mut VecBatch) {
 
 /// Serial SSS kernel implementing [`Spmv`]. Holds the matrix behind an
 /// [`Arc`] so registry construction shares one `Sss` across kernels.
+///
+/// With a [`FormatPolicy`] selecting DIA (see
+/// [`crate::kernel::dia::DiaBand`]), the strictly-lower triangle is
+/// additionally held in hybrid diagonal-major form and `apply` runs two
+/// unit-stride passes per dense diagonal instead of the Alg. 1 gather —
+/// same math, diagonal-major accumulation order (rounding-level
+/// differences only).
 pub struct SerialSss {
     /// The matrix.
     pub s: Arc<Sss>,
+    /// Hybrid diagonal-major view of the lower triangle (`None` = the
+    /// paper's pure row-wise Alg. 1).
+    dia: Option<DiaBand>,
 }
 
 impl SerialSss {
-    /// Wrap an SSS matrix (owned or already-shared).
+    /// Wrap an SSS matrix (owned or already-shared); pure Alg. 1 layout.
     pub fn new(s: impl Into<Arc<Sss>>) -> Self {
-        Self { s: s.into() }
+        Self::with_format(s, FormatPolicy::Sss)
+    }
+
+    /// Wrap with a middle-storage policy (`Auto` builds the DIA view
+    /// only when the fill-ratio heuristic finds dense diagonals).
+    pub fn with_format(s: impl Into<Arc<Sss>>, policy: FormatPolicy) -> Self {
+        let s: Arc<Sss> = s.into();
+        let dia = DiaBand::from_policy(&s, policy);
+        Self { s, dia }
+    }
+
+    /// Name of the active lower-triangle storage (for reports/tests).
+    pub fn format_name(&self) -> &'static str {
+        if self.dia.is_some() {
+            "dia"
+        } else {
+            "sss"
+        }
     }
 }
 
@@ -100,19 +128,52 @@ impl Spmv for SerialSss {
     }
 
     fn apply(&mut self, x: &[f64], y: &mut [f64]) {
-        sss_spmv(&self.s, x, y);
+        match &self.dia {
+            None => sss_spmv(&self.s, x, y),
+            Some(dia) => {
+                for (yi, (&d, &xi)) in y.iter_mut().zip(self.s.dvalues.iter().zip(x)) {
+                    *yi = d * xi;
+                }
+                dia.apply_add(x, y);
+            }
+        }
     }
 
     fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) {
-        sss_spmv_batch(&self.s, xs, ys);
+        match &self.dia {
+            None => sss_spmv_batch(&self.s, xs, ys),
+            Some(dia) => {
+                let (n, k) = (self.s.n, xs.k());
+                assert_eq!(xs.n(), n);
+                assert_eq!(ys.n(), n);
+                assert_eq!(ys.k(), k);
+                let xd = xs.data();
+                let yd = ys.data_mut();
+                for c in 0..k {
+                    for i in 0..n {
+                        yd[c * n + i] = self.s.dvalues[i] * xd[c * n + i];
+                    }
+                }
+                dia.apply_add_batch(xs, ys);
+            }
+        }
     }
 
     fn flops(&self) -> u64 {
-        self.s.spmv_flops()
+        match &self.dia {
+            // dense slots (explicit zeros included) are streamed and
+            // multiplied like any entry: 4 flops per slot + remainder
+            Some(dia) => (self.s.n + 4 * (dia.dense_slots() + dia.rest.nnz_lower())) as u64,
+            None => self.s.spmv_flops(),
+        }
     }
 
     fn bytes(&self) -> u64 {
-        self.s.spmv_bytes()
+        match &self.dia {
+            // dvalues once + dense slots (no index arrays) + remainder
+            Some(dia) => (self.s.n * 8) as u64 + dia.bytes(),
+            None => self.s.spmv_bytes(),
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -186,6 +247,39 @@ mod tests {
             let mut want = vec![0.0; 96];
             sss_spmv(&sss, xs.col(c), &mut want);
             assert_eq!(ys.col(c), &want[..], "column {c}");
+        }
+    }
+
+    #[test]
+    fn dia_format_matches_pure_sss_kernel() {
+        let coo = gen::small_test_matrix(110, 23, 2.0);
+        let g = crate::graph::Adjacency::from_coo(&coo);
+        let perm = crate::graph::rcm(&g);
+        let sss = std::sync::Arc::new(
+            convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap(),
+        );
+        let mut plain = SerialSss::new(sss.clone());
+        let mut hybrid = SerialSss::with_format(sss.clone(), FormatPolicy::Dia);
+        assert_eq!(plain.format_name(), "sss");
+        assert_eq!(hybrid.format_name(), "dia");
+        let x: Vec<f64> = (0..110).map(|i| ((i * 29) % 13) as f64 * 0.4 - 2.0).collect();
+        let (mut a, mut b) = (vec![0.0; 110], vec![0.0; 110]);
+        plain.apply(&x, &mut a);
+        hybrid.apply(&x, &mut b);
+        for (r, (u, v)) in a.iter().zip(&b).enumerate() {
+            assert!((u - v).abs() < 1e-10, "row {r}: {u} vs {v}");
+        }
+        // fused batch path agrees column-for-column too
+        let k = 3;
+        let xs = VecBatch::from_fn(110, k, |i, c| ((i + c * 7) % 11) as f64 * 0.3 - 1.5);
+        let mut ya = VecBatch::zeros(110, k);
+        let mut yb = VecBatch::zeros(110, k);
+        plain.apply_batch(&xs, &mut ya);
+        hybrid.apply_batch(&xs, &mut yb);
+        for c in 0..k {
+            for (r, (u, v)) in ya.col(c).iter().zip(yb.col(c)).enumerate() {
+                assert!((u - v).abs() < 1e-10, "col {c} row {r}");
+            }
         }
     }
 

@@ -13,6 +13,7 @@
 //! `split_bw` is the user bandwidth parameter; the paper's default puts
 //! the outermost `outer_bw = 3` diagonals in the outer split.
 
+use crate::kernel::dia::{DiaBand, FormatPolicy};
 use crate::sparse::{Sss, Symmetry};
 use crate::Result;
 use anyhow::ensure;
@@ -37,8 +38,15 @@ pub struct Split3 {
     pub sym: Symmetry,
     /// Diagonal split.
     pub diag: Vec<f64>,
-    /// Middle split (distance `1..=split_bw`), SSS-compressed.
+    /// Middle split (distance `1..=split_bw`), SSS-compressed. Always
+    /// present — the authoritative entry set (`unsplit`, conflict and
+    /// halo analysis all read it) even when a DIA view is selected.
     pub middle: Sss,
+    /// Hybrid diagonal-major view of the middle split (dense diagonals
+    /// + SSS remainder), present when a [`FormatPolicy`] selected it.
+    /// Kernels that see `Some` run the unit-stride DIA loops instead of
+    /// the `col_ind` gather over `middle`.
+    pub dia: Option<DiaBand>,
     /// Outer split (distance `> split_bw`), row-major COO.
     pub outer: Vec<OuterEntry>,
     /// The split boundary (user bandwidth parameter).
@@ -48,8 +56,15 @@ pub struct Split3 {
 }
 
 impl Split3 {
-    /// Split `s` at diagonal distance `split_bw`.
+    /// Split `s` at diagonal distance `split_bw` with the pure SSS
+    /// middle split (the paper's layout).
     pub fn new(s: &Sss, split_bw: usize) -> Result<Self> {
+        Self::with_format(s, split_bw, FormatPolicy::Sss)
+    }
+
+    /// Split `s` at diagonal distance `split_bw`, selecting the
+    /// middle-split storage per `policy`.
+    pub fn with_format(s: &Sss, split_bw: usize, policy: FormatPolicy) -> Result<Self> {
         ensure!(split_bw >= 1, "split_bw must be >= 1");
         let total_bw = s.bandwidth();
         let mut row_ptr = vec![0usize; s.n + 1];
@@ -76,23 +91,75 @@ impl Split3 {
             vals,
             sym: s.sym,
         };
-        Ok(Self {
+        let mut split = Self {
             n: s.n,
             sym: s.sym,
             diag: s.dvalues.clone(),
             middle,
+            dia: None,
             outer,
             split_bw,
             total_bw,
-        })
+        };
+        split.select_format(policy);
+        Ok(split)
     }
 
     /// Paper default: outer split = the outermost `outer_bw` diagonals of
-    /// the actual band (`split_bw = total_bw - outer_bw`).
+    /// the actual band (`split_bw = total_bw - outer_bw`), pure SSS middle.
     pub fn with_outer_bw(s: &Sss, outer_bw: usize) -> Result<Self> {
+        Self::with_outer_bw_format(s, outer_bw, FormatPolicy::Sss)
+    }
+
+    /// Like [`Self::with_outer_bw`] with a middle-split storage policy.
+    pub fn with_outer_bw_format(s: &Sss, outer_bw: usize, policy: FormatPolicy) -> Result<Self> {
         let total = s.bandwidth();
         let split_bw = total.saturating_sub(outer_bw).max(1);
-        Self::new(s, split_bw)
+        Self::with_format(s, split_bw, policy)
+    }
+
+    /// (Re)select the middle-split storage: builds the DIA view when the
+    /// policy (or its fill heuristic) picks it, clears it otherwise.
+    pub fn select_format(&mut self, policy: FormatPolicy) {
+        self.dia = DiaBand::from_policy(&self.middle, policy);
+    }
+
+    /// Name of the active middle-split storage (for stats/reports).
+    pub fn format_name(&self) -> &'static str {
+        if self.dia.is_some() {
+            "dia"
+        } else {
+            "sss"
+        }
+    }
+
+    /// Per-row work units for load balancing. With the DIA view active a
+    /// row pays for its dense-diagonal **slots** (explicit zeros
+    /// included — they are streamed regardless) plus remainder and outer
+    /// entries; pure SSS rows pay middle + outer entries.
+    pub fn row_work(&self) -> Vec<usize> {
+        let mut w = vec![0usize; self.n];
+        match &self.dia {
+            Some(dia) => {
+                for dd in &dia.diags {
+                    for cost in w.iter_mut().skip(dd.d) {
+                        *cost += 1;
+                    }
+                }
+                for (i, cost) in w.iter_mut().enumerate() {
+                    *cost += dia.rest.row_ptr[i + 1] - dia.rest.row_ptr[i];
+                }
+            }
+            None => {
+                for (i, cost) in w.iter_mut().enumerate() {
+                    *cost += self.middle.row_ptr[i + 1] - self.middle.row_ptr[i];
+                }
+            }
+        }
+        for e in &self.outer {
+            w[e.row as usize] += 1;
+        }
+        w
     }
 
     /// NNZ partition invariant check: middle + outer == source lower NNZ.
@@ -105,9 +172,10 @@ impl Split3 {
         self.outer.len()
     }
 
-    /// Serial SpMV over the three splits (must agree exactly with
-    /// [`crate::kernel::serial_sss::sss_spmv`] on the unsplit matrix —
-    /// same per-row accumulation order).
+    /// Serial SpMV over the three splits. With the pure SSS middle this
+    /// agrees *exactly* with [`crate::kernel::serial_sss::sss_spmv`] on
+    /// the unsplit matrix (same per-row accumulation order); the DIA
+    /// view accumulates diagonal-major, so it agrees to rounding only.
     pub fn spmv_serial(&self, x: &[f64], y: &mut [f64]) {
         let sign = self.sym.sign();
         // diagonal split
@@ -115,16 +183,21 @@ impl Split3 {
             y[i] = self.diag[i] * x[i];
         }
         // middle split
-        for i in 0..self.n {
-            let xi = x[i];
-            let mut yi = 0.0;
-            for k in self.middle.row_ptr[i]..self.middle.row_ptr[i + 1] {
-                let j = self.middle.col_ind[k] as usize;
-                let v = self.middle.vals[k];
-                yi += v * x[j];
-                y[j] += sign * v * xi;
+        match &self.dia {
+            Some(dia) => dia.apply_add(x, y),
+            None => {
+                for i in 0..self.n {
+                    let xi = x[i];
+                    let mut yi = 0.0;
+                    for k in self.middle.row_ptr[i]..self.middle.row_ptr[i + 1] {
+                        let j = self.middle.col_ind[k] as usize;
+                        let v = self.middle.vals[k];
+                        yi += v * x[j];
+                        y[j] += sign * v * xi;
+                    }
+                    y[i] += yi;
+                }
             }
-            y[i] += yi;
         }
         // outer split (sequential tail, paper §3.1.2)
         for e in &self.outer {
@@ -289,5 +362,48 @@ mod tests {
     fn rejects_zero_split_bw() {
         let s = band_fixture(30, 7);
         assert!(Split3::new(&s, 0).is_err());
+    }
+
+    #[test]
+    fn dia_format_spmv_matches_sss_format() {
+        let s = band_fixture(90, 8);
+        let x: Vec<f64> = (0..90).map(|i| ((i * 13) % 11) as f64 * 0.5 - 2.0).collect();
+        for split_bw in [2, 5, 20] {
+            let sp_sss = Split3::new(&s, split_bw).unwrap();
+            assert_eq!(sp_sss.format_name(), "sss");
+            let sp_dia =
+                Split3::with_format(&s, split_bw, crate::kernel::FormatPolicy::Dia).unwrap();
+            assert_eq!(sp_dia.format_name(), "dia");
+            let dia = sp_dia.dia.as_ref().unwrap();
+            // the DIA view partitions exactly the middle entries
+            assert_eq!(dia.nnz(), sp_dia.nnz_middle());
+            let mut want = vec![0.0; 90];
+            sp_sss.spmv_serial(&x, &mut want);
+            let mut got = vec![0.0; 90];
+            sp_dia.spmv_serial(&x, &mut got);
+            for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "split_bw={split_bw} row {r}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_work_counts_dia_slots_and_remainder() {
+        let s = band_fixture(120, 9);
+        let sp = Split3::with_outer_bw(&s, 3).unwrap();
+        // pure SSS: work == actual entries
+        assert_eq!(
+            sp.row_work().iter().sum::<usize>(),
+            sp.nnz_middle() + sp.nnz_outer()
+        );
+        let mut sp_dia = sp.clone();
+        sp_dia.select_format(crate::kernel::FormatPolicy::Dia);
+        let dia = sp_dia.dia.as_ref().unwrap();
+        // DIA: dense slots (zeros included) + remainder + outer
+        assert_eq!(
+            sp_dia.row_work().iter().sum::<usize>(),
+            dia.dense_slots() + dia.rest.nnz_lower() + sp_dia.nnz_outer()
+        );
+        assert!(dia.dense_slots() >= dia.dense_nnz);
     }
 }

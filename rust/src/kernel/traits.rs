@@ -3,7 +3,12 @@
 use crate::kernel::batch::VecBatch;
 
 /// A repeated-multiply kernel `y = A x` (the iterative-solver hot path).
-pub trait Spmv {
+///
+/// `Send` is a supertrait so built kernels (`Box<dyn Spmv>`) can be
+/// cached inside the service worker thread and handed across threads;
+/// every kernel in the crate is a value type over `Arc`s, channels and
+/// atomics, so the bound costs nothing.
+pub trait Spmv: Send {
     /// Matrix dimension.
     fn n(&self) -> usize;
 
@@ -30,6 +35,14 @@ pub trait Spmv {
     /// on the first batched multiply. Optional; the default is a no-op
     /// and kernels must still handle unhinted widths.
     fn prepare_hint(&mut self, _k: usize) {}
+
+    /// False when the kernel can no longer serve applies (e.g. a
+    /// threaded executor whose rank world was poisoned by a panic).
+    /// Caches consult this to evict and rebuild instead of handing a
+    /// wedged kernel back to every later request. Default: healthy.
+    fn healthy(&self) -> bool {
+        true
+    }
 
     /// Floating-point ops per `apply` (for roofline/throughput reports).
     fn flops(&self) -> u64;

@@ -11,7 +11,8 @@
 //! ```
 //!
 //! Global flags: `--config FILE` (default `pars3.toml`), `--scale S`,
-//! `--ranks a,b,c`, `--threaded`.
+//! `--ranks a,b,c`, `--threaded`, `--format auto|dia|sss` (band-interior
+//! storage: hybrid diagonal-major vs pure SSS, `auto` = fill heuristic).
 
 use pars3::coordinator::{Backend, Config, Coordinator, Request, Response, Service};
 use pars3::mpisim::CostModel;
@@ -67,6 +68,9 @@ fn load_config(args: &Args) -> Result<Config> {
     if args.flags.contains_key("threaded") {
         cfg.threaded = true;
     }
+    if let Some(f) = args.flags.get("format") {
+        cfg.format = f.parse()?;
+    }
     if let Some(d) = args.flags.get("artifacts") {
         cfg.artifacts_dir = d.into();
     }
@@ -113,7 +117,8 @@ fn run() -> Result<()> {
                  usage: pars3 <info|report|spmv|solve|serve> [flags]\n\
                  report subcommands: table1 rcm conflicts splits fig9 coloring complexity all\n\
                  flags: --config F --scale S --ranks 1,2,4 --threaded --matrix NAME --p N\n\
-                        --backend serial|pars3|pjrt --tol T --iters K --rhs K --artifacts DIR"
+                        --backend serial|pars3|pjrt --format auto|dia|sss --tol T --iters K\n\
+                        --rhs K --artifacts DIR"
             );
             Ok(())
         }
@@ -199,8 +204,12 @@ fn cmd_spmv(cfg: Config, args: &Args) -> Result<()> {
     let mut coord = Coordinator::new(cfg);
     let prep = coord.prepare(&name, &coo)?;
     println!(
-        "{name}: n={} nnz_lower={} bw {} -> {} (RCM)",
-        prep.n, prep.nnz_lower, prep.bw_before, prep.rcm_bw
+        "{name}: n={} nnz_lower={} bw {} -> {} (RCM), middle format {}",
+        prep.n,
+        prep.nnz_lower,
+        prep.bw_before,
+        prep.rcm_bw,
+        prep.split.format_name()
     );
     let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.37).sin()).collect();
     let t0 = std::time::Instant::now();

@@ -322,8 +322,10 @@ enum Done {
 /// A rank panicking inside a job poisons the world: `run_job` drains
 /// every rank's report (the poison wakes parked peers, so all of them
 /// exit the job body) and then panics with the first panicking rank's
-/// id. Drop skips joining a poisoned world's threads rather than
-/// risking a hang on one that died mid-loop.
+/// id. The world stays poisoned afterwards — any later `run_job` fails
+/// fast at submission ([`Self::is_poisoned`]) instead of leaving peers
+/// blocked on the shared barrier waiting for the dead rank, and Drop
+/// can always join cleanly because no rank is ever left inside a job.
 pub struct PersistentWorld {
     p: usize,
     job_txs: Vec<Sender<Job>>,
@@ -390,6 +392,16 @@ impl PersistentWorld {
         self.p
     }
 
+    /// True once a rank panic has poisoned the world. A poisoned world
+    /// rejects further jobs loudly ([`Self::run_job`] panics up front)
+    /// instead of letting surviving ranks block on the shared barrier
+    /// waiting for a dead peer — the poisoned-**epoch** detection: the
+    /// panic is caught in the epoch it happened, and every later epoch
+    /// fails fast at submission.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.get()
+    }
+
     /// Run one job on every rank; blocks until all ranks report —
     /// **including on the panic path**. A rank panicking poisons the
     /// world, but `run_job` still drains all `p` reports before
@@ -416,7 +428,8 @@ impl PersistentWorld {
                 Done::Ok(report) => out[rank] = report,
                 Done::Panicked => {
                     // keep draining: peers woken by the poison will
-                    // report too; drop still skips joining the world
+                    // report too, so every rank leaves its job body
+                    // before we unwind (and Drop can later join all)
                     self.poisoned.set(true);
                     panicked.get_or_insert(rank);
                 }
@@ -432,13 +445,13 @@ impl PersistentWorld {
 impl Drop for PersistentWorld {
     fn drop(&mut self) {
         // Closing the job channels makes every rank's recv() fail,
-        // ending its loop; then join for a clean shutdown. After a
-        // rank panic, peers can be blocked at the shared barrier —
-        // skip the join and leak them rather than hang.
+        // ending its loop; then join for a clean shutdown. This is safe
+        // after a rank panic too: `run_job` drains ALL rank reports
+        // before setting the poison, so by the time a poisoned world is
+        // dropped every rank has left its job body — the panicked rank
+        // broke out of its loop, and the survivors are parked on the
+        // (now closed) job channel, not the barrier.
         self.job_txs.clear();
-        if self.poisoned.get() {
-            return;
-        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -620,6 +633,39 @@ mod tests {
             SLOW_DONE.load(Ordering::SeqCst),
             "run_job unwound before the slow rank finished its job body"
         );
+    }
+
+    #[test]
+    fn persistent_world_poisoned_epoch_fails_next_job_loudly() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        // epoch 1: rank 0 panics mid-job; the caller catches it.
+        let w = PersistentWorld::new(3);
+        assert!(!w.is_poisoned());
+        let first = catch_unwind(AssertUnwindSafe(|| {
+            w.run_job(|ctx| {
+                if ctx.rank == 0 {
+                    panic!("boom");
+                }
+                RankReport::default()
+            });
+        }));
+        assert!(first.is_err());
+        assert!(w.is_poisoned(), "the rank panic must poison the world");
+        // epoch 2: submission must fail fast with a clear message, not
+        // hand the job to surviving ranks that would then block on the
+        // barrier waiting for the dead rank.
+        let second = catch_unwind(AssertUnwindSafe(|| {
+            w.run_job(|_| RankReport::default());
+        }));
+        let payload = second.expect_err("second job must be rejected");
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| payload.downcast_ref::<&str>().copied())
+            .unwrap_or("");
+        assert!(msg.contains("poisoned"), "unexpected panic message: {msg}");
+        // dropping the poisoned world must not hang (all ranks have
+        // left their job bodies) — implicit in the test returning.
     }
 
     #[test]

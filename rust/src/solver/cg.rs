@@ -61,6 +61,12 @@ pub fn cg_solve(kernel: &mut dyn Spmv, b: &[f64], max_iters: usize, tol: f64) ->
 /// column runs its own scalar CG recurrence — step sizes, residual
 /// histories, and stopping are per-column, and column `c` matches what
 /// [`cg_solve`] would produce for `bs.col(c)` alone.
+///
+/// **Converged-column compaction:** when the active set shrinks below
+/// half the current SpMV width, the working set is repacked (the
+/// surviving direction columns are gathered into a narrower batch) so
+/// converged columns stop riding the fused multiply. Per-column
+/// numerics are unchanged.
 pub fn cg_solve_batch(
     kernel: &mut dyn Spmv,
     bs: &VecBatch,
@@ -91,14 +97,39 @@ pub fn cg_solve_batch(
         })
         .collect();
 
+    // SpMV working set: original column indices still riding the fused
+    // multiply; compacted when the active set drops below half.
+    let mut work: Vec<usize> = (0..k).collect();
+    let mut ps_g = VecBatch::zeros(n, 0); // gathered directions
+    let mut aps_c = VecBatch::zeros(n, 0);
+
     let mut sweeps = 0;
-    while sweeps < max_iters && cols.iter().any(|c| c.active) {
-        kernel.apply_batch(&ps, &mut aps);
-        for (c, st) in cols.iter_mut().enumerate() {
+    while sweeps < max_iters {
+        let live: Vec<usize> = work.iter().copied().filter(|&c| cols[c].active).collect();
+        if live.is_empty() {
+            break;
+        }
+        if live.len() * 2 <= work.len() && live.len() < work.len() {
+            work = live;
+            kernel.prepare_hint(work.len());
+            ps_g = VecBatch::zeros(n, work.len());
+            aps_c = VecBatch::zeros(n, work.len());
+        }
+        let compacted = work.len() < k;
+        if compacted {
+            for (j, &c) in work.iter().enumerate() {
+                ps_g.col_mut(j).copy_from_slice(ps.col(c));
+            }
+            kernel.apply_batch(&ps_g, &mut aps_c);
+        } else {
+            kernel.apply_batch(&ps, &mut aps);
+        }
+        for (j, &c) in work.iter().enumerate() {
+            let st = &mut cols[c];
             if !st.active {
                 continue;
             }
-            let ap = aps.col(c);
+            let ap = if compacted { aps_c.col(j) } else { aps.col(c) };
             let pap = dot(ps.col(c), ap);
             if pap <= 0.0 {
                 st.active = false; // not SPD (or breakdown)
@@ -189,6 +220,30 @@ mod tests {
             for (a, b) in res.x.iter().zip(&want.x) {
                 assert!((a - b).abs() < 1e-9, "col {c}: {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn batch_solve_compaction_preserves_per_column_numerics() {
+        // 5 columns, 3 zero: the active set (2) drops below half the
+        // width after the first liveness check, forcing a repack.
+        let mut k = spd(100);
+        let mut cols = vec![vec![0.0; 100]; 5];
+        cols[0] = (0..100).map(|i| ((i % 9) as f64) - 4.0).collect();
+        cols[3] = (0..100).map(|i| ((i * 5) % 11) as f64 - 5.0).collect();
+        let bs = VecBatch::from_columns(&cols);
+        let results = cg_solve_batch(&mut k, &bs, 500, 1e-10);
+        for (c, res) in results.iter().enumerate() {
+            let mut k1 = spd(100);
+            let want = cg_solve(&mut k1, bs.col(c), 500, 1e-10);
+            assert_eq!(res.converged, want.converged, "col {c}");
+            assert_eq!(res.iters, want.iters, "col {c}");
+            for (a, b) in res.x.iter().zip(&want.x) {
+                assert!((a - b).abs() < 1e-9, "col {c}: {a} vs {b}");
+            }
+        }
+        for c in [1usize, 2, 4] {
+            assert!(results[c].x.iter().all(|&v| v == 0.0), "col {c}");
         }
     }
 

@@ -90,6 +90,13 @@ pub fn mrs_solve(kernel: &mut dyn Spmv, b: &[f64], opts: &MrsOptions) -> MrsResu
 /// updating while the rest continue. Column `c` of the result is
 /// numerically the same iteration [`mrs_solve`] would run on `b_c`
 /// alone.
+///
+/// **Converged-column compaction:** when the active set shrinks below
+/// half the current SpMV width, the working set is repacked so
+/// converged columns stop riding the fused multiply (their `2k`-wide
+/// multiply-accumulates per matrix entry are pure waste). Repacking
+/// gathers the surviving residual columns into a narrower batch before
+/// each sweep; per-column numerics are unchanged.
 pub fn mrs_solve_batch(
     kernel: &mut dyn Spmv,
     bs: &VecBatch,
@@ -118,14 +125,40 @@ pub fn mrs_solve_batch(
         })
         .collect();
 
+    // SpMV working set: the original column indices still riding the
+    // fused multiply. Starts as all k columns; compacted when the
+    // active set drops below half the current width.
+    let mut work: Vec<usize> = (0..k).collect();
+    let mut rs_c = VecBatch::zeros(n, 0); // gather buffer (compacted mode)
+    let mut ps_c = VecBatch::zeros(n, 0);
+
     let mut sweeps = 0;
-    while sweeps < opts.max_iters && cols.iter().any(|c| c.active) {
-        kernel.apply_batch(&rs, &mut ps); // the one fused hot-path SpMV
-        for (c, st) in cols.iter_mut().enumerate() {
+    while sweeps < opts.max_iters {
+        let live: Vec<usize> = work.iter().copied().filter(|&c| cols[c].active).collect();
+        if live.is_empty() {
+            break;
+        }
+        if live.len() * 2 <= work.len() && live.len() < work.len() {
+            work = live;
+            kernel.prepare_hint(work.len());
+            rs_c = VecBatch::zeros(n, work.len());
+            ps_c = VecBatch::zeros(n, work.len());
+        }
+        let compacted = work.len() < k;
+        if compacted {
+            for (j, &c) in work.iter().enumerate() {
+                rs_c.col_mut(j).copy_from_slice(rs.col(c));
+            }
+            kernel.apply_batch(&rs_c, &mut ps_c); // narrower fused SpMV
+        } else {
+            kernel.apply_batch(&rs, &mut ps); // the one fused hot-path SpMV
+        }
+        for (j, &c) in work.iter().enumerate() {
+            let st = &mut cols[c];
             if !st.active {
                 continue;
             }
-            let p = ps.col(c);
+            let p = if compacted { ps_c.col(j) } else { ps.col(c) };
             let pp = dot(p, p);
             if pp <= f64::MIN_POSITIVE {
                 st.active = false;
@@ -263,6 +296,36 @@ mod tests {
             for (a, b) in res.x.iter().zip(&want.x) {
                 assert!((a - b).abs() < 1e-9, "col {c}: {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn batch_solve_compaction_preserves_per_column_numerics() {
+        // 6 columns, 4 of them zero: after sweep 0 only 2 are active
+        // (2*2 <= 6), so the working set compacts to width 2 — every
+        // column must still match its independent solve exactly.
+        let (mut k, b) = system(90, 8, 2.0);
+        let opts = MrsOptions { alpha: 2.0, max_iters: 500, tol: 1e-9 };
+        let mut cols = vec![vec![0.0; 90]; 6];
+        cols[1] = b.clone();
+        cols[4] = (0..90).map(|i| ((i * 3) % 7) as f64 - 3.0).collect();
+        let bs = VecBatch::from_columns(&cols);
+        let results = mrs_solve_batch(&mut k, &bs, &opts);
+        assert_eq!(results.len(), 6);
+        for (c, res) in results.iter().enumerate() {
+            let (mut k1, _) = system(90, 8, 2.0);
+            let want = mrs_solve(&mut k1, bs.col(c), &opts);
+            assert_eq!(res.converged, want.converged, "col {c}");
+            assert_eq!(res.iters, want.iters, "col {c}");
+            assert_eq!(res.history.len(), want.history.len(), "col {c}");
+            for (a, b) in res.x.iter().zip(&want.x) {
+                assert!((a - b).abs() < 1e-9, "col {c}: {a} vs {b}");
+            }
+        }
+        // the zero columns stayed untouched through the repacks
+        for c in [0usize, 2, 3, 5] {
+            assert!(results[c].x.iter().all(|&v| v == 0.0), "col {c}");
+            assert_eq!(results[c].iters, 0, "col {c}");
         }
     }
 

@@ -282,6 +282,7 @@ fn prop_apply_batch_matches_columnwise_apply_for_every_kernel() {
             threads: 1 + rng.gen_range_usize(0, 8),
             outer_bw: 1 + rng.gen_range_usize(0, 4),
             threaded: false,
+            ..KernelConfig::default()
         };
         for &name in KERNEL_NAMES {
             let mut kern = build_from_sss(name, s.clone(), &cfg).unwrap();
@@ -296,6 +297,74 @@ fn prop_apply_batch_matches_columnwise_apply_for_every_kernel() {
                         (a - b).abs() < 1e-9,
                         "{name} col {c} row {r}: {a} vs {b} (n={n} k={k})"
                     );
+                }
+            }
+        }
+    });
+}
+
+/// Random banded *symmetric* matrix (positive mirror) in SSS form.
+fn random_banded_symmetric(rng: &mut SmallRng) -> pars3::sparse::Sss {
+    let n = 30 + rng.gen_range_usize(0, 120);
+    let edges = gen::random_banded_pattern(n, 1 + rng.gen_range_usize(0, 4), 0.5, rng);
+    let mut coo = pars3::sparse::Coo::new(n);
+    for i in 0..n as u32 {
+        coo.push(i, i, rng.gen_range_f64(1.0, 3.0));
+    }
+    for &(i, j) in &edges {
+        let v = rng.gen_range_f64(-1.0, 1.0);
+        coo.push(i, j, v);
+        coo.push(j, i, v);
+    }
+    convert::coo_to_sss(&coo, Symmetry::Symmetric).unwrap()
+}
+
+#[test]
+fn prop_dia_format_matches_sss_for_every_kernel() {
+    // the middle-split storage is an execution detail: for ANY banded
+    // skew or symmetric matrix, every registered kernel must produce
+    // the same result (within rounding) under FormatPolicy::Dia and
+    // FormatPolicy::Sss, at k = 1 and at k > 1.
+    use pars3::kernel::registry::{build_from_sss, KernelConfig};
+    use pars3::kernel::{FormatPolicy, Spmv, VecBatch, KERNEL_NAMES};
+    for_all("dia == sss for every kernel", 6, |rng| {
+        for skew in [true, false] {
+            let s =
+                Arc::new(if skew { random_banded(rng) } else { random_banded_symmetric(rng) });
+            let n = s.n;
+            let kw = 2 + rng.gen_range_usize(0, 5);
+            let threads = 1 + rng.gen_range_usize(0, 8);
+            let outer_bw = 1 + rng.gen_range_usize(0, 4);
+            let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect();
+            let xs = VecBatch::from_fn(n, kw, |_, _| rng.gen_range_f64(-2.0, 2.0));
+            for &name in KERNEL_NAMES {
+                let mk = |format| KernelConfig { threads, outer_bw, threaded: false, format };
+                let mut k_sss = build_from_sss(name, s.clone(), &mk(FormatPolicy::Sss)).unwrap();
+                let mut k_dia = build_from_sss(name, s.clone(), &mk(FormatPolicy::Dia)).unwrap();
+                // k = 1
+                let (mut ya, mut yb) = (vec![0.0; n], vec![0.0; n]);
+                k_sss.apply(&x, &mut ya);
+                k_dia.apply(&x, &mut yb);
+                for (r, (a, b)) in ya.iter().zip(&yb).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-9,
+                        "{name} skew={skew} row {r}: {a} vs {b} (n={n})"
+                    );
+                }
+                // k > 1 (fused batch)
+                k_sss.prepare_hint(kw);
+                k_dia.prepare_hint(kw);
+                let mut za = VecBatch::zeros(n, kw);
+                let mut zb = VecBatch::zeros(n, kw);
+                k_sss.apply_batch(&xs, &mut za);
+                k_dia.apply_batch(&xs, &mut zb);
+                for c in 0..kw {
+                    for (r, (a, b)) in za.col(c).iter().zip(zb.col(c)).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-9,
+                            "{name} skew={skew} col {c} row {r} (n={n} k={kw})"
+                        );
+                    }
                 }
             }
         }
