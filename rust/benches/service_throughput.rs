@@ -1,0 +1,91 @@
+//! Bench: **pipelined vs serialized** request streams through the
+//! sharded service, at 1 shard and at W shards.
+//!
+//! `serialized` is the old one-in-flight `call()` pattern: submit,
+//! block, repeat — every request pays a full client↔worker round trip
+//! of latency and the shards can never overlap. `pipelined` submits the
+//! whole burst as tickets first and collects afterwards, so requests
+//! queue back-to-back on each shard and **different shards execute
+//! concurrently** — `pipelined/shards4` vs `serialized/shards1` is the
+//! measured value of the handle-based ticket API. Matrices are placed
+//! round-robin, so the burst spreads across every shard.
+//!
+//! `PARS3_BENCH_SCALE` (float) overrides the suite scale — the CI
+//! smoke job runs this bench at a tiny scale to keep the bench targets
+//! from bit-rotting without burning minutes.
+
+use pars3::coordinator::{Backend, Config, Service};
+use pars3::sparse::{gen, skew};
+use pars3::util::bencher::Bencher;
+use pars3::util::SmallRng;
+
+fn main() {
+    let mut cfg = Config::default();
+    if let Ok(s) = std::env::var("PARS3_BENCH_SCALE") {
+        cfg.scale = s.parse().expect("PARS3_BENCH_SCALE must be a float");
+    }
+    let suite = gen::paper_suite(cfg.scale);
+    // four matrices so a 4-shard pool has one per shard
+    let matrices: Vec<(String, pars3::sparse::Coo, Vec<f64>)> = suite
+        .iter()
+        .take(4)
+        .map(|m| {
+            let mut rng = SmallRng::seed_from_u64(cfg.seed ^ m.n as u64);
+            let coo = skew::coo_from_pattern(m.n, &m.lower_edges, cfg.alpha, &mut rng);
+            let x: Vec<f64> = (0..m.n).map(|i| (i as f64 * 0.13).sin()).collect();
+            (m.name.to_string(), coo, x)
+        })
+        .collect();
+
+    let mut b = Bencher::new("service_throughput");
+    let backend = Backend::Pars3 { p: 4 };
+    let requests = 32usize; // per measured run (fits the default queue)
+
+    for shards in [1usize, 4] {
+        let svc = Service::start(Config { shards, ..cfg.clone() });
+        let client = svc.client();
+        let handles: Vec<_> = matrices
+            .iter()
+            .map(|(name, coo, _)| client.prepare(name, coo.clone()).wait().expect("prepare"))
+            .collect();
+        // warm every shard's kernel cache so both patterns measure the
+        // serving path, not first-touch kernel construction
+        for (h, (_, _, x)) in handles.iter().zip(&matrices) {
+            client.spmv(h, x.clone(), backend).wait().expect("warmup spmv");
+        }
+
+        b.bench(&format!("serialized/shards{shards}"), 1, 3, || {
+            for r in 0..requests {
+                let i = r % handles.len();
+                let y = client
+                    .spmv(&handles[i], matrices[i].2.clone(), backend)
+                    .wait()
+                    .expect("spmv");
+                std::hint::black_box(y.len());
+            }
+        });
+
+        b.bench(&format!("pipelined/shards{shards}"), 1, 3, || {
+            let tickets: Vec<_> = (0..requests)
+                .map(|r| {
+                    let i = r % handles.len();
+                    client.spmv(&handles[i], matrices[i].2.clone(), backend)
+                })
+                .collect();
+            for t in tickets {
+                std::hint::black_box(t.wait().expect("spmv").len());
+            }
+        });
+
+        svc.shutdown();
+    }
+
+    b.section(
+        "pipelined vs serialized is the ticket-API win: submissions \
+         queue back-to-back instead of paying one client<->worker round \
+         trip of latency each, and with W shards the per-matrix streams \
+         execute concurrently. Submission applies backpressure only when \
+         a shard's bounded queue fills (queue_depth).\n",
+    );
+    b.finish();
+}

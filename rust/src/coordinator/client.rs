@@ -1,0 +1,447 @@
+//! Typed, handle-based, pipelined client API for the sharded service.
+//!
+//! The deployment model the paper targets is an iterative solver (or
+//! many) repeatedly hitting one preprocessed matrix; preprocessing is
+//! expensive, so it must amortize across a *stream* of requests — and
+//! at service scale, across many concurrent streams. This module is
+//! that surface:
+//!
+//! * [`MatrixHandle`] — a generational handle returned by `prepare`.
+//!   It replaces string keys: the slot + generation pair makes a
+//!   replaced registration detectable, so a request racing a
+//!   re-`prepare` fails loudly with
+//!   [`Pars3Error::StaleHandle`](crate::coordinator::Pars3Error)
+//!   instead of silently computing against the wrong matrix.
+//! * [`Ticket<T>`] — a one-shot future for a submitted request.
+//!   Submission is non-blocking (up to the shard's bounded-queue
+//!   backpressure), so one client can pipeline many requests and
+//!   overlap a `prepare` on one shard with serving on another;
+//!   [`Ticket::wait`]/[`Ticket::try_wait`] collect typed results.
+//! * [`Client`] — a cheaply clonable front end over the service's
+//!   shard queues. Clone it into as many threads as you like; all
+//!   clones share the same shard pool and round-robin placement
+//!   counter.
+//!
+//! ```no_run
+//! # use pars3::coordinator::{Backend, Config, Service};
+//! # fn demo(coo_a: pars3::sparse::Coo, x: Vec<f64>) -> Result<(), pars3::coordinator::Pars3Error> {
+//! let svc = Service::start(Config::default());
+//! let client = svc.client();
+//! let h = client.prepare("a", coo_a).wait()?; // RCM + split, once
+//! // pipelined: both requests are in flight before either wait
+//! let t1 = client.spmv(&h, x.clone(), Backend::Pars3 { p: 4 });
+//! let t2 = client.spmv(&h, x, Backend::Serial);
+//! let (y1, y2) = (t1.wait()?, t2.wait()?);
+//! # let _ = (y1, y2); Ok(()) }
+//! ```
+
+use crate::coordinator::error::Pars3Error;
+use crate::coordinator::service::{CacheStats, MatrixInfo, ShardMsg};
+use crate::coordinator::Backend;
+use crate::kernel::VecBatch;
+use crate::solver::mrs::{MrsOptions, MrsResult};
+use crate::sparse::Coo;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::Arc;
+
+/// Generational handle to a matrix prepared by the service.
+///
+/// `Copy` on purpose: handles are tokens, not resources. A handle stays
+/// valid until the matrix under it is re-prepared
+/// ([`Client::prepare_replace`]) or released ([`Client::release`]), at
+/// which point every older-generation handle — including ones inside
+/// in-flight tickets — resolves to [`Pars3Error::StaleHandle`]. Handles
+/// are also stamped with the minting service's process-unique id, so
+/// using one against a *different* service fails
+/// [`Pars3Error::ForeignHandle`] instead of silently resolving against
+/// the wrong slot table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MatrixHandle {
+    pub(crate) service: u64,
+    pub(crate) shard: usize,
+    pub(crate) slot: usize,
+    pub(crate) generation: u64,
+}
+
+impl MatrixHandle {
+    /// The shard whose worker owns this matrix.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// The handle's generation (bumped by each re-`prepare` of the
+    /// same slot; generation 1 is the first registration).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+}
+
+enum TicketState<T> {
+    /// Awaiting the shard worker's reply.
+    Pending(Receiver<Result<T, Pars3Error>>),
+    /// Resolved at submission time (dead shard, bad handle).
+    Ready(Result<T, Pars3Error>),
+    /// `try_wait` already surrendered the result.
+    Taken,
+}
+
+/// A one-shot future for a submitted request.
+///
+/// Obtained from the submission methods on [`Client`]; the request is
+/// already queued (and possibly executing) the moment the ticket
+/// exists. [`wait`](Self::wait) blocks for the typed result;
+/// [`try_wait`](Self::try_wait) polls without blocking so a client can
+/// interleave submission, polling, and other work. Dropping a ticket
+/// abandons the result (the worker still computes it; the reply is
+/// discarded).
+#[must_use = "the request is in flight; wait() or try_wait() collects its result"]
+pub struct Ticket<T> {
+    shard: usize,
+    state: TicketState<T>,
+}
+
+impl<T> Ticket<T> {
+    pub(crate) fn pending(shard: usize, rx: Receiver<Result<T, Pars3Error>>) -> Self {
+        Self { shard, state: TicketState::Pending(rx) }
+    }
+
+    pub(crate) fn ready(shard: usize, result: Result<T, Pars3Error>) -> Self {
+        Self { shard, state: TicketState::Ready(result) }
+    }
+
+    /// The shard serving this request.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Block until the result arrives. A dead worker (panicked shard or
+    /// shut-down service) resolves to [`Pars3Error::WorkerPoisoned`];
+    /// waiting after `try_wait` already returned the result resolves to
+    /// [`Pars3Error::TicketConsumed`].
+    pub fn wait(mut self) -> Result<T, Pars3Error> {
+        match std::mem::replace(&mut self.state, TicketState::Taken) {
+            TicketState::Pending(rx) => rx
+                .recv()
+                .unwrap_or(Err(Pars3Error::WorkerPoisoned { shard: self.shard })),
+            TicketState::Ready(result) => result,
+            TicketState::Taken => Err(Pars3Error::TicketConsumed),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight,
+    /// `Some(result)` exactly once when it resolves (subsequent polls
+    /// return `Some(Err(TicketConsumed))`).
+    pub fn try_wait(&mut self) -> Option<Result<T, Pars3Error>> {
+        match std::mem::replace(&mut self.state, TicketState::Taken) {
+            TicketState::Pending(rx) => match rx.try_recv() {
+                Ok(result) => Some(result),
+                Err(TryRecvError::Empty) => {
+                    self.state = TicketState::Pending(rx);
+                    None
+                }
+                Err(TryRecvError::Disconnected) => {
+                    Some(Err(Pars3Error::WorkerPoisoned { shard: self.shard }))
+                }
+            },
+            TicketState::Ready(result) => Some(result),
+            TicketState::Taken => Some(Err(Pars3Error::TicketConsumed)),
+        }
+    }
+}
+
+/// One-shot reply channel for a single request.
+type ReplyPair<T> = (Sender<Result<T, Pars3Error>>, Receiver<Result<T, Pars3Error>>);
+
+/// Shared state between the [`Service`](crate::coordinator::Service)
+/// and every [`Client`] clone: the shard request queues and the
+/// round-robin placement counter for new matrices.
+pub(crate) struct ServiceShared {
+    pub(crate) shards: Vec<SyncSender<ShardMsg>>,
+    /// Process-unique id stamped into every handle this service mints.
+    pub(crate) service_id: u64,
+    next_shard: AtomicUsize,
+}
+
+impl ServiceShared {
+    pub(crate) fn new(shards: Vec<SyncSender<ShardMsg>>, service_id: u64) -> Self {
+        Self { shards, service_id, next_shard: AtomicUsize::new(0) }
+    }
+}
+
+/// Cheaply clonable, thread-safe front end to the sharded service.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<ServiceShared>,
+}
+
+impl Client {
+    pub(crate) fn new(inner: Arc<ServiceShared>) -> Self {
+        Self { inner }
+    }
+
+    /// Number of shards behind this client.
+    pub fn num_shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Route a message to `shard`, producing a ticket for its reply.
+    /// Submission applies backpressure: it blocks while the shard's
+    /// bounded queue is full (and only then).
+    fn dispatch<T>(
+        &self,
+        shard: usize,
+        msg: ShardMsg,
+        rx: Receiver<Result<T, Pars3Error>>,
+    ) -> Ticket<T> {
+        let Some(queue) = self.inner.shards.get(shard) else {
+            return Ticket::ready(
+                shard,
+                Err(Pars3Error::UnknownShard { shard, shards: self.inner.shards.len() }),
+            );
+        };
+        match queue.send(msg) {
+            Ok(()) => Ticket::pending(shard, rx),
+            Err(_) => Ticket::ready(shard, Err(Pars3Error::WorkerPoisoned { shard })),
+        }
+    }
+
+    fn reply<T>() -> ReplyPair<T> {
+        channel()
+    }
+
+    /// Reject handles minted by a different service before they can
+    /// resolve against this service's (unrelated) slot tables.
+    fn guard<T>(&self, handle: &MatrixHandle) -> Result<(), Ticket<T>> {
+        if handle.service != self.inner.service_id {
+            return Err(Ticket::ready(
+                handle.shard,
+                Err(Pars3Error::ForeignHandle {
+                    handle_service: handle.service,
+                    service: self.inner.service_id,
+                }),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Preprocess and register a matrix (RCM reorder → SSS → 3-way
+    /// split) on a round-robin-chosen shard. The ticket resolves to the
+    /// new [`MatrixHandle`] — submission returns immediately, so a
+    /// client can overlap the (expensive) prepare with serving requests
+    /// against already-registered matrices.
+    pub fn prepare(&self, name: &str, coo: Coo) -> Ticket<MatrixHandle> {
+        let shard = self.inner.next_shard.fetch_add(1, Ordering::Relaxed)
+            % self.inner.shards.len().max(1);
+        let (tx, rx) = Self::reply();
+        let msg = ShardMsg::Prepare {
+            replace: None,
+            name: name.to_string(),
+            coo: Box::new(coo),
+            reply: tx,
+        };
+        self.dispatch(shard, msg, rx)
+    }
+
+    /// Re-prepare the matrix under an existing handle **in place**: the
+    /// slot's generation is bumped, so every handle (and in-flight
+    /// ticket) of the old generation resolves to
+    /// [`Pars3Error::StaleHandle`] from that point on. Resolves to the
+    /// fresh handle; a stale `handle` (someone replaced it first) is
+    /// itself rejected with `StaleHandle`.
+    pub fn prepare_replace(
+        &self,
+        handle: &MatrixHandle,
+        name: &str,
+        coo: Coo,
+    ) -> Ticket<MatrixHandle> {
+        if let Err(t) = self.guard(handle) {
+            return t;
+        }
+        let (tx, rx) = Self::reply();
+        let msg = ShardMsg::Prepare {
+            replace: Some((handle.slot, handle.generation)),
+            name: name.to_string(),
+            coo: Box::new(coo),
+            reply: tx,
+        };
+        self.dispatch(handle.shard, msg, rx)
+    }
+
+    /// Submit one multiply `y = A x` (RCM order, like
+    /// [`Coordinator::spmv`](crate::coordinator::Coordinator::spmv)).
+    pub fn spmv(&self, handle: &MatrixHandle, x: Vec<f64>, backend: Backend) -> Ticket<Vec<f64>> {
+        if let Err(t) = self.guard(handle) {
+            return t;
+        }
+        let (tx, rx) = Self::reply();
+        let msg = ShardMsg::Spmv {
+            slot: handle.slot,
+            generation: handle.generation,
+            x,
+            backend,
+            reply: tx,
+        };
+        self.dispatch(handle.shard, msg, rx)
+    }
+
+    /// Submit an MRS solve.
+    pub fn solve(
+        &self,
+        handle: &MatrixHandle,
+        b: Vec<f64>,
+        opts: MrsOptions,
+        backend: Backend,
+    ) -> Ticket<MrsResult> {
+        if let Err(t) = self.guard(handle) {
+            return t;
+        }
+        let (tx, rx) = Self::reply();
+        let msg = ShardMsg::Solve {
+            slot: handle.slot,
+            generation: handle.generation,
+            b,
+            opts,
+            backend,
+            reply: tx,
+        };
+        self.dispatch(handle.shard, msg, rx)
+    }
+
+    /// Submit a fused batch multiply (one matrix traversal for all
+    /// columns of `xs`).
+    pub fn spmv_batch(
+        &self,
+        handle: &MatrixHandle,
+        xs: VecBatch,
+        backend: Backend,
+    ) -> Ticket<VecBatch> {
+        if let Err(t) = self.guard(handle) {
+            return t;
+        }
+        let (tx, rx) = Self::reply();
+        let msg = ShardMsg::SpmvBatch {
+            slot: handle.slot,
+            generation: handle.generation,
+            xs,
+            backend,
+            reply: tx,
+        };
+        self.dispatch(handle.shard, msg, rx)
+    }
+
+    /// Submit a multi-RHS MRS solve (one fused SpMV per sweep).
+    pub fn solve_batch(
+        &self,
+        handle: &MatrixHandle,
+        bs: VecBatch,
+        opts: MrsOptions,
+        backend: Backend,
+    ) -> Ticket<Vec<MrsResult>> {
+        if let Err(t) = self.guard(handle) {
+            return t;
+        }
+        let (tx, rx) = Self::reply();
+        let msg = ShardMsg::SolveBatch {
+            slot: handle.slot,
+            generation: handle.generation,
+            bs,
+            opts,
+            backend,
+            reply: tx,
+        };
+        self.dispatch(handle.shard, msg, rx)
+    }
+
+    /// Query the preprocessing metadata of the matrix under `handle`
+    /// (dimension, stored NNZ, pre/post-RCM bandwidth — what the old
+    /// prepare response reported inline).
+    pub fn describe(&self, handle: &MatrixHandle) -> Ticket<MatrixInfo> {
+        if let Err(t) = self.guard(handle) {
+            return t;
+        }
+        let (tx, rx) = Self::reply();
+        let msg = ShardMsg::Describe {
+            slot: handle.slot,
+            generation: handle.generation,
+            reply: tx,
+        };
+        self.dispatch(handle.shard, msg, rx)
+    }
+
+    /// Unregister the matrix under `handle`: its cached kernels are
+    /// evicted, the `Prepared` matrix memory is dropped, and the slot
+    /// is freed for reuse by a later `prepare` (without this, a
+    /// long-running service accumulates one retained matrix per
+    /// `prepare`, forever). Releasing bumps the slot generation, so the
+    /// released handle — and every copy of it — resolves to
+    /// [`Pars3Error::StaleHandle`] from then on; a slot reused by a
+    /// later `prepare` continues the generation sequence, so old
+    /// handles can never alias the new occupant.
+    pub fn release(&self, handle: &MatrixHandle) -> Ticket<()> {
+        if let Err(t) = self.guard(handle) {
+            return t;
+        }
+        let (tx, rx) = Self::reply();
+        let msg = ShardMsg::Release {
+            slot: handle.slot,
+            generation: handle.generation,
+            reply: tx,
+        };
+        self.dispatch(handle.shard, msg, rx)
+    }
+
+    /// Query one shard's kernel-cache counters (the amortization
+    /// metric: `built` stalling while requests flow means cache hits).
+    pub fn cache_stats(&self, shard: usize) -> Ticket<CacheStats> {
+        let (tx, rx) = Self::reply();
+        self.dispatch(shard, ShardMsg::CacheStats { reply: tx }, rx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_wait_and_try_wait_semantics() {
+        // resolved at submission
+        let t: Ticket<u32> = Ticket::ready(0, Ok(7));
+        assert_eq!(t.wait(), Ok(7));
+
+        // pending -> try_wait None -> value arrives -> Some -> consumed
+        let (tx, rx) = channel();
+        let mut t: Ticket<u32> = Ticket::pending(1, rx);
+        assert_eq!(t.shard(), 1);
+        assert!(t.try_wait().is_none());
+        tx.send(Ok(9)).unwrap();
+        assert_eq!(t.try_wait(), Some(Ok(9)));
+        assert_eq!(t.try_wait(), Some(Err(Pars3Error::TicketConsumed)));
+        assert_eq!(t.wait(), Err(Pars3Error::TicketConsumed));
+
+        // dead worker: sender dropped before replying
+        let (tx, rx) = channel::<Result<u32, Pars3Error>>();
+        drop(tx);
+        let t = Ticket::pending(3, rx);
+        assert_eq!(t.wait(), Err(Pars3Error::WorkerPoisoned { shard: 3 }));
+    }
+
+    #[test]
+    fn out_of_range_shard_resolves_to_unknown_shard() {
+        let shared = Arc::new(ServiceShared::new(Vec::new(), 7));
+        let client = Client::new(shared);
+        let fake = MatrixHandle { service: 7, shard: 5, slot: 0, generation: 1 };
+        let err = client.spmv(&fake, vec![1.0], Backend::Serial).wait().unwrap_err();
+        assert_eq!(err, Pars3Error::UnknownShard { shard: 5, shards: 0 });
+    }
+
+    #[test]
+    fn foreign_handles_are_rejected_before_dispatch() {
+        let client = Client::new(Arc::new(ServiceShared::new(Vec::new(), 7)));
+        let alien = MatrixHandle { service: 8, shard: 0, slot: 0, generation: 1 };
+        let err = client.spmv(&alien, vec![1.0], Backend::Serial).wait().unwrap_err();
+        assert_eq!(err, Pars3Error::ForeignHandle { handle_service: 8, service: 7 });
+        let err = client.release(&alien).wait().unwrap_err();
+        assert_eq!(err, Pars3Error::ForeignHandle { handle_service: 8, service: 7 });
+    }
+}

@@ -13,6 +13,9 @@
 //! artifacts_dir = "artifacts"
 //! threaded = false
 //! format = "auto"
+//! shards = 2
+//! queue_depth = 64
+//! max_cached_kernels = 32
 //! seed = 42
 //! ```
 
@@ -39,6 +42,16 @@ pub struct Config {
     /// Band-interior storage policy: `auto` (fill-ratio heuristic),
     /// `dia` (force hybrid diagonal-major) or `sss` (paper layout).
     pub format: FormatPolicy,
+    /// Worker shards in the request service (each owns a `Coordinator`
+    /// and its kernel cache; matrices are assigned round-robin).
+    pub shards: usize,
+    /// Bounded request-queue depth per shard (backpressure: submission
+    /// blocks when a shard's queue is full).
+    pub queue_depth: usize,
+    /// Per-coordinator (= per-shard) kernel-cache cap: past this many
+    /// cached kernels the least-recently-used entry is evicted.
+    /// `0` = unbounded.
+    pub max_cached_kernels: usize,
     /// Generator seed.
     pub seed: u64,
 }
@@ -53,6 +66,9 @@ impl Default for Config {
             artifacts_dir: PathBuf::from("artifacts"),
             threaded: false,
             format: FormatPolicy::Auto,
+            shards: 2,
+            queue_depth: 64,
+            max_cached_kernels: 32,
             seed: 42,
         }
     }
@@ -89,6 +105,11 @@ impl Config {
                 "format" => {
                     cfg.format = value.trim_matches('"').parse().context("format")?;
                 }
+                "shards" => cfg.shards = value.parse().context("shards")?,
+                "queue_depth" => cfg.queue_depth = value.parse().context("queue_depth")?,
+                "max_cached_kernels" => {
+                    cfg.max_cached_kernels = value.parse().context("max_cached_kernels")?;
+                }
                 "seed" => cfg.seed = value.parse().context("seed")?,
                 "artifacts_dir" => {
                     cfg.artifacts_dir = PathBuf::from(value.trim_matches('"'));
@@ -110,6 +131,12 @@ impl Config {
         if cfg.ranks.is_empty() || cfg.ranks.contains(&0) {
             bail!("ranks must be non-empty and positive");
         }
+        if cfg.shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        if cfg.queue_depth == 0 {
+            bail!("queue_depth must be >= 1");
+        }
         Ok(cfg)
     }
 }
@@ -127,7 +154,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let c = Config::parse(
-            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nseed = 7\n",
+            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
         )
         .unwrap();
         assert_eq!(c.scale, 0.5);
@@ -137,6 +164,9 @@ mod tests {
         assert_eq!(c.artifacts_dir, PathBuf::from("art"));
         assert!(c.threaded);
         assert_eq!(c.format, FormatPolicy::Dia);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.queue_depth, 16);
+        assert_eq!(c.max_cached_kernels, 8);
         assert_eq!(c.seed, 7);
         // bare (unquoted) values parse too
         assert_eq!(Config::parse("format = sss").unwrap().format, FormatPolicy::Sss);
@@ -149,6 +179,8 @@ mod tests {
         assert!(Config::parse("ranks = []").is_err());
         assert!(Config::parse("scale 0.5").is_err());
         assert!(Config::parse("format = \"csr\"").is_err());
+        assert!(Config::parse("shards = 0").is_err());
+        assert!(Config::parse("queue_depth = 0").is_err());
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! `Pars3Error` — the crate-wide typed error surface.
+//!
+//! Every failure a client can observe through the service
+//! ([`crate::coordinator::Client`]), the coordinator, or the kernel
+//! registry is one of these variants, so consumers match on structure
+//! instead of scraping formatted strings (the old
+//! `Response::Error(String)` surface). The type implements
+//! `std::error::Error`, so `?` still converts it into the vendored
+//! `anyhow::Error` wherever a caller keeps the loose [`crate::Result`]
+//! (CLI, examples, reports); the reverse conversion exists too, so the
+//! coordinator can absorb `anyhow`-producing internals (kernel
+//! constructors, PJRT packing) without re-wrapping at every call site.
+
+use crate::kernel::KERNEL_NAMES;
+use std::fmt;
+
+/// Typed failure of a prepare / multiply / solve request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Pars3Error {
+    /// The handle's slot was never allocated on its shard. (A
+    /// *released* matrix reports [`Self::StaleHandle`] instead — the
+    /// release bumped its slot's generation.)
+    UnknownMatrix {
+        /// Shard the handle routes to.
+        shard: usize,
+        /// Slot index that was not found.
+        slot: usize,
+    },
+    /// The handle's shard index exceeds the service's shard count.
+    UnknownShard {
+        /// Shard the handle routes to.
+        shard: usize,
+        /// Number of shards this service runs.
+        shards: usize,
+    },
+    /// The handle was minted by a *different* `Service` instance
+    /// (every service stamps its handles with a process-unique id, so
+    /// cross-service use fails here instead of silently resolving
+    /// against the wrong service's slot table).
+    ForeignHandle {
+        /// Service id stamped into the handle.
+        handle_service: u64,
+        /// Id of the service the request was sent to.
+        service: u64,
+    },
+    /// The matrix under this handle was re-prepared: the slot is at a
+    /// newer generation, so results computed for the held generation
+    /// would silently target the wrong matrix. Re-`prepare` and retry
+    /// with the fresh handle.
+    StaleHandle {
+        /// Shard the handle routes to.
+        shard: usize,
+        /// Slot index.
+        slot: usize,
+        /// Generation the caller's handle holds.
+        held: u64,
+        /// Generation the slot is currently at.
+        current: u64,
+    },
+    /// Input vector/batch length does not match the prepared matrix.
+    DimensionMismatch {
+        /// The prepared matrix dimension.
+        expected: usize,
+        /// The caller's vector length (or batch row count).
+        got: usize,
+    },
+    /// The requested backend cannot serve this request (feature not
+    /// compiled in, no batch path, runtime failure).
+    BackendUnavailable {
+        /// Backend name (e.g. `"pjrt"`).
+        backend: &'static str,
+        /// Why it is unavailable.
+        reason: String,
+    },
+    /// A kernel name outside [`KERNEL_NAMES`] was requested from the
+    /// registry.
+    UnknownKernel {
+        /// The rejected name.
+        name: String,
+    },
+    /// The input matrix failed preprocessing (e.g. not shifted
+    /// skew-symmetric, empty band where one is required).
+    InvalidMatrix(String),
+    /// The shard's worker thread is gone — it panicked or the service
+    /// shut down while the request was in flight.
+    WorkerPoisoned {
+        /// The dead shard.
+        shard: usize,
+    },
+    /// `Ticket::wait` after `try_wait` already returned the result.
+    TicketConsumed,
+    /// Escape hatch for internal failures with no dedicated variant
+    /// (kernel construction details, artifact I/O, ...). The payload is
+    /// the full `anyhow`-style context chain.
+    Internal(String),
+}
+
+impl fmt::Display for Pars3Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::UnknownMatrix { shard, slot } => {
+                write!(f, "unknown matrix: shard {shard} has no slot {slot}")
+            }
+            Self::UnknownShard { shard, shards } => {
+                write!(f, "unknown shard {shard}: this service runs {shards} shard(s)")
+            }
+            Self::ForeignHandle { handle_service, service } => write!(
+                f,
+                "foreign handle: minted by service {handle_service}, \
+                 but this client serves service {service}"
+            ),
+            Self::StaleHandle { shard, slot, held, current } => write!(
+                f,
+                "stale handle: shard {shard} slot {slot} was re-prepared \
+                 (handle holds generation {held}, slot is at {current})"
+            ),
+            Self::DimensionMismatch { expected, got } => {
+                write!(f, "dimension mismatch: matrix expects length {expected}, got {got}")
+            }
+            Self::BackendUnavailable { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            Self::UnknownKernel { name } => {
+                write!(f, "unknown kernel '{name}'; available: {KERNEL_NAMES:?}")
+            }
+            Self::InvalidMatrix(why) => write!(f, "invalid matrix: {why}"),
+            Self::WorkerPoisoned { shard } => write!(
+                f,
+                "service worker for shard {shard} is gone (panicked or shut down)"
+            ),
+            Self::TicketConsumed => {
+                write!(f, "ticket already consumed (try_wait returned its result)")
+            }
+            Self::Internal(why) => write!(f, "{why}"),
+        }
+    }
+}
+
+// Gives `?`-conversion INTO `anyhow::Error` (via its blanket
+// `From<E: std::error::Error>`) for callers on the loose `crate::Result`.
+impl std::error::Error for Pars3Error {}
+
+// Absorb `anyhow`-producing internals. The chain is flattened with the
+// alternate (`{:#}`) formatting so no context is lost.
+impl From<anyhow::Error> for Pars3Error {
+    fn from(e: anyhow::Error) -> Self {
+        Self::Internal(format!("{e:#}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_failure() {
+        let e = Pars3Error::StaleHandle { shard: 1, slot: 2, held: 3, current: 5 };
+        let s = e.to_string();
+        assert!(s.contains("stale") && s.contains("generation 3") && s.contains("at 5"), "{s}");
+        assert!(Pars3Error::UnknownKernel { name: "nope".into() }
+            .to_string()
+            .contains("pars3"));
+        assert!(Pars3Error::BackendUnavailable { backend: "pjrt", reason: "x".into() }
+            .to_string()
+            .contains("pjrt"));
+    }
+
+    #[test]
+    fn converts_both_ways_with_anyhow() {
+        // anyhow -> Pars3Error keeps the context chain
+        let a: anyhow::Error = anyhow::anyhow!("inner").context("outer");
+        let p = Pars3Error::from(a);
+        assert_eq!(p, Pars3Error::Internal("outer: inner".into()));
+        // Pars3Error -> anyhow (what `?` does in CLI/report contexts)
+        fn through() -> crate::Result<()> {
+            Err(Pars3Error::DimensionMismatch { expected: 4, got: 7 })?;
+            Ok(())
+        }
+        let msg = format!("{:#}", through().unwrap_err());
+        assert!(msg.contains("expects length 4"), "{msg}");
+    }
+}

@@ -1,17 +1,25 @@
 //! L3 coordinator: the end-to-end pipeline
 //! (ingest → RCM reorder → 3-way split → conflict analysis → distribute
-//! → repeated SpMV / MRS solve), plus config and a request-service loop.
+//! → repeated SpMV / MRS solve), plus config, the crate-wide typed
+//! error, and the sharded request service with its handle-based,
+//! pipelined client API.
 //!
 //! This is the paper's system glued together: preprocessing is done once
 //! per matrix ([`Coordinator::prepare`]); the returned [`Prepared`]
 //! handle then serves arbitrarily many multiplies/solves — the
 //! amortization argument of §4 ("this overhead typically can be
-//! amortized in many repeated runs with the same matrix").
+//! amortized in many repeated runs with the same matrix"). At service
+//! scale the same story is [`Client::prepare`] → [`MatrixHandle`] →
+//! pipelined [`Ticket`]s against a pool of shard workers.
 
+pub mod client;
 pub mod config;
+pub mod error;
 pub mod pipeline;
 pub mod service;
 
+pub use client::{Client, MatrixHandle, Ticket};
 pub use config::Config;
+pub use error::Pars3Error;
 pub use pipeline::{Backend, Coordinator, Prepared};
-pub use service::{Request, Response, Service};
+pub use service::{CacheStats, MatrixInfo, Service};

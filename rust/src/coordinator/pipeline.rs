@@ -8,6 +8,7 @@
 //! feature; without it, [`Backend::Pjrt`] requests fail with a clear
 //! error instead of dragging XLA into the build.
 
+use crate::coordinator::error::Pars3Error;
 use crate::coordinator::Config;
 use crate::kernel::pars3::Pars3Plan;
 use crate::kernel::registry::{self, KernelConfig};
@@ -26,11 +27,23 @@ use crate::sparse::DiaBand;
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
-/// Which executor serves the repeated multiplies.
+/// Which executor serves the repeated multiplies. Every registry kernel
+/// ([`crate::kernel::KERNEL_NAMES`]) has a variant, so the typed client
+/// API reaches the full kernel inventory; PJRT executes outside the
+/// registry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Backend {
     /// Paper Alg. 1 (serial SSS).
     Serial,
+    /// Plain CSR baseline.
+    Csr,
+    /// LAPACK-style dense band (`dgbmv`).
+    Dgbmv,
+    /// Graph-coloring phased baseline (Elafrou et al.) at `p` ranks.
+    Coloring {
+        /// Rank count.
+        p: usize,
+    },
     /// PARS3 parallel kernel at a given rank count.
     Pars3 {
         /// Rank count.
@@ -46,6 +59,9 @@ impl Backend {
     pub fn kernel_name(&self) -> Option<&'static str> {
         match self {
             Backend::Serial => Some("serial_sss"),
+            Backend::Csr => Some("csr"),
+            Backend::Dgbmv => Some("dgbmv"),
+            Backend::Coloring { .. } => Some("coloring"),
             Backend::Pars3 { .. } => Some("pars3"),
             Backend::Pjrt => None,
         }
@@ -99,6 +115,8 @@ type CacheKey = (usize, Backend, bool, FormatPolicy, usize);
 struct CachedKernel {
     kernel: Box<dyn Spmv>,
     _identity: Arc<Sss>,
+    /// Tick of the most recent `cached_kernel` hit (LRU eviction order).
+    last_used: u64,
 }
 
 /// The coordinator: owns config, the per-matrix kernel cache and
@@ -118,6 +136,8 @@ pub struct Coordinator {
     kernels: HashMap<CacheKey, CachedKernel>,
     /// Total kernels ever constructed through the cache (test/metric).
     kernel_builds: usize,
+    /// Monotone access clock for LRU ordering.
+    tick: u64,
     #[cfg(feature = "pjrt")]
     runtime: Option<PjrtRuntime>,
 }
@@ -130,6 +150,7 @@ impl Coordinator {
             cfg,
             kernels: HashMap::new(),
             kernel_builds: 0,
+            tick: 0,
             #[cfg(feature = "pjrt")]
             runtime: None,
         }
@@ -143,7 +164,7 @@ impl Coordinator {
     /// input is *already* banded at least as tightly as RCM achieves
     /// (Fig. 5's pre-banded case), the identity ordering is kept and
     /// the permutation cost disappears from the pipeline.
-    pub fn prepare(&self, name: &str, coo: &Coo) -> Result<Prepared> {
+    pub fn prepare(&self, name: &str, coo: &Coo) -> Result<Prepared, Pars3Error> {
         let bw_before = coo.bandwidth();
         let (perm, sss) = registry::reorder_to_sss(coo)?;
         let rcm_bw = sss.bandwidth();
@@ -167,12 +188,15 @@ impl Coordinator {
     /// Construct the [`Spmv`] kernel serving a native backend, via the
     /// unified registry (the single dispatch point — no per-call-site
     /// kernel construction anywhere else in the crate).
-    pub fn kernel(&self, prep: &Prepared, backend: Backend) -> Result<Box<dyn Spmv>> {
+    pub fn kernel(&self, prep: &Prepared, backend: Backend) -> Result<Box<dyn Spmv>, Pars3Error> {
         let Some(name) = backend.kernel_name() else {
-            bail!("the PJRT backend executes outside the Spmv registry");
+            return Err(Pars3Error::BackendUnavailable {
+                backend: "pjrt",
+                reason: "executes outside the Spmv registry; call spmv/solve directly".into(),
+            });
         };
         let threads = match backend {
-            Backend::Pars3 { p } => p,
+            Backend::Pars3 { p } | Backend::Coloring { p } => p,
             _ => 1,
         };
         let cfg = KernelConfig {
@@ -212,21 +236,53 @@ impl Coordinator {
     /// backend's kernel exactly once. An unhealthy kernel (a threaded
     /// `pars3` executor poisoned by a rank panic) is evicted and
     /// rebuilt instead of wedging the `(matrix, backend)` pair forever.
-    pub fn cached_kernel(&mut self, prep: &Prepared, backend: Backend) -> Result<&mut dyn Spmv> {
+    ///
+    /// The cache is capped at [`Config::max_cached_kernels`] entries
+    /// (`0` = unbounded): inserting past the cap evicts the
+    /// least-recently-used entry, so a coordinator serving thousands of
+    /// matrices holds a bounded working set and a re-requested evictee
+    /// is transparently rebuilt (one extra `kernel_builds` tick — the
+    /// metric the service's cache-stats report exposes).
+    pub fn cached_kernel(
+        &mut self,
+        prep: &Prepared,
+        backend: Backend,
+    ) -> Result<&mut dyn Spmv, Pars3Error> {
         let key = self.cache_key(prep, backend);
         if self.kernels.get(&key).is_some_and(|e| !e.kernel.healthy()) {
             self.kernels.remove(&key);
         }
+        self.tick += 1;
         // entry() is unusable here: building the kernel re-borrows
         // `self` while an entry guard would hold `self.kernels`
         #[allow(clippy::map_entry)]
         if !self.kernels.contains_key(&key) {
             let built = self.kernel(prep, backend)?;
-            self.kernels
-                .insert(key, CachedKernel { kernel: built, _identity: prep.sss.clone() });
+            self.kernels.insert(
+                key,
+                CachedKernel {
+                    kernel: built,
+                    _identity: prep.sss.clone(),
+                    last_used: self.tick,
+                },
+            );
             self.kernel_builds += 1;
+            let cap = self.cfg.max_cached_kernels;
+            while cap > 0 && self.kernels.len() > cap {
+                // evict the least-recently-used entry; the one just
+                // inserted holds the newest tick so it never goes
+                let lru = self
+                    .kernels
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(&k, _)| k)
+                    .expect("cache is non-empty past the cap");
+                self.kernels.remove(&lru);
+            }
         }
-        Ok(self.kernels.get_mut(&key).expect("just inserted").kernel.as_mut())
+        let entry = self.kernels.get_mut(&key).expect("just inserted");
+        entry.last_used = self.tick;
+        Ok(entry.kernel.as_mut())
     }
 
     /// `(currently cached, ever built)` kernel counts.
@@ -256,9 +312,19 @@ impl Coordinator {
     /// Uses the kernel cache: repeated calls against the same
     /// preparation reuse one kernel (and, when threaded, its persistent
     /// rank threads).
-    pub fn spmv(&mut self, prep: &Prepared, x: &[f64], backend: Backend) -> Result<Vec<f64>> {
+    pub fn spmv(
+        &mut self,
+        prep: &Prepared,
+        x: &[f64],
+        backend: Backend,
+    ) -> Result<Vec<f64>, Pars3Error> {
+        if x.len() != prep.n {
+            return Err(Pars3Error::DimensionMismatch { expected: prep.n, got: x.len() });
+        }
         match backend {
-            Backend::Pjrt => self.spmv_pjrt(prep, x),
+            Backend::Pjrt => self.spmv_pjrt(prep, x).map_err(|e| {
+                Pars3Error::BackendUnavailable { backend: "pjrt", reason: format!("{e:#}") }
+            }),
             _ => {
                 let k = self.cached_kernel(prep, backend)?;
                 let mut y = vec![0.0; prep.n];
@@ -276,9 +342,15 @@ impl Coordinator {
         prep: &Prepared,
         xs: &VecBatch,
         backend: Backend,
-    ) -> Result<VecBatch> {
+    ) -> Result<VecBatch, Pars3Error> {
         if backend == Backend::Pjrt {
-            bail!("the PJRT backend has no batch path; use spmv per column");
+            return Err(Pars3Error::BackendUnavailable {
+                backend: "pjrt",
+                reason: "no batch path; use spmv per column".into(),
+            });
+        }
+        if xs.n() != prep.n {
+            return Err(Pars3Error::DimensionMismatch { expected: prep.n, got: xs.n() });
         }
         let k = self.cached_kernel(prep, backend)?;
         k.prepare_hint(xs.k());
@@ -297,9 +369,15 @@ impl Coordinator {
         bs: &VecBatch,
         opts: &MrsOptions,
         backend: Backend,
-    ) -> Result<Vec<MrsResult>> {
+    ) -> Result<Vec<MrsResult>, Pars3Error> {
         if backend == Backend::Pjrt {
-            bail!("the PJRT backend has no batch path; use solve per RHS");
+            return Err(Pars3Error::BackendUnavailable {
+                backend: "pjrt",
+                reason: "no batch path; use solve per RHS".into(),
+            });
+        }
+        if bs.n() != prep.n {
+            return Err(Pars3Error::DimensionMismatch { expected: prep.n, got: bs.n() });
         }
         let k = self.cached_kernel(prep, backend)?;
         Ok(mrs_solve_batch(k, bs, opts))
@@ -312,9 +390,14 @@ impl Coordinator {
         b: &[f64],
         opts: &MrsOptions,
         backend: Backend,
-    ) -> Result<MrsResult> {
+    ) -> Result<MrsResult, Pars3Error> {
+        if b.len() != prep.n {
+            return Err(Pars3Error::DimensionMismatch { expected: prep.n, got: b.len() });
+        }
         match backend {
-            Backend::Pjrt => self.solve_pjrt(prep, b, opts),
+            Backend::Pjrt => self.solve_pjrt(prep, b, opts).map_err(|e| {
+                Pars3Error::BackendUnavailable { backend: "pjrt", reason: format!("{e:#}") }
+            }),
             _ => {
                 let k = self.cached_kernel(prep, backend)?;
                 Ok(mrs_solve(k, b, opts))
@@ -477,10 +560,48 @@ mod tests {
         let prep = c.prepare("t", &coo).unwrap();
         let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.21).sin()).collect();
         let y0 = c.spmv(&prep, &x, Backend::Serial).unwrap();
-        let y1 = c.spmv(&prep, &x, Backend::Pars3 { p: 4 }).unwrap();
-        for (a, b) in y0.iter().zip(&y1) {
-            assert!((a - b).abs() < 1e-10);
+        for backend in
+            [Backend::Csr, Backend::Dgbmv, Backend::Coloring { p: 3 }, Backend::Pars3 { p: 4 }]
+        {
+            let y1 = c.spmv(&prep, &x, backend).unwrap();
+            for (a, b) in y0.iter().zip(&y1) {
+                assert!((a - b).abs() < 1e-10, "{backend:?}");
+            }
         }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_typed() {
+        use crate::coordinator::Pars3Error;
+        let coo = gen::small_test_matrix(60, 25, 2.0);
+        let mut c = coordinator();
+        let prep = c.prepare("t", &coo).unwrap();
+        let err = c.spmv(&prep, &vec![0.0; 59], Backend::Serial).unwrap_err();
+        assert_eq!(err, Pars3Error::DimensionMismatch { expected: 60, got: 59 });
+        let opts = MrsOptions { alpha: 2.0, max_iters: 10, tol: 1e-8 };
+        let err = c.solve(&prep, &vec![0.0; 7], &opts, Backend::Serial).unwrap_err();
+        assert_eq!(err, Pars3Error::DimensionMismatch { expected: 60, got: 7 });
+        let xs = VecBatch::zeros(10, 2);
+        let err = c.spmv_batch(&prep, &xs, Backend::Serial).unwrap_err();
+        assert_eq!(err, Pars3Error::DimensionMismatch { expected: 60, got: 10 });
+    }
+
+    #[test]
+    fn lru_cap_evicts_least_recently_used_kernel() {
+        let coo = gen::small_test_matrix(90, 26, 2.0);
+        let mut c = Coordinator::new(Config { max_cached_kernels: 2, ..Config::default() });
+        let prep = c.prepare("t", &coo).unwrap();
+        let x = vec![1.0; 90];
+        c.spmv(&prep, &x, Backend::Serial).unwrap(); // build serial
+        c.spmv(&prep, &x, Backend::Csr).unwrap(); // build csr
+        c.spmv(&prep, &x, Backend::Serial).unwrap(); // touch serial: csr is now LRU
+        assert_eq!(c.kernel_cache_stats(), (2, 2));
+        c.spmv(&prep, &x, Backend::Dgbmv).unwrap(); // past the cap: evicts csr
+        assert_eq!(c.kernel_cache_stats(), (2, 3));
+        c.spmv(&prep, &x, Backend::Serial).unwrap(); // serial survived the evict
+        assert_eq!(c.kernel_cache_stats(), (2, 3), "touched entry must not be evicted");
+        c.spmv(&prep, &x, Backend::Csr).unwrap(); // evictee rebuilds transparently
+        assert_eq!(c.kernel_cache_stats(), (2, 4));
     }
 
     #[test]
@@ -641,13 +762,26 @@ mod tests {
     #[test]
     fn backend_kernel_names_cover_the_registry() {
         assert_eq!(Backend::Serial.kernel_name(), Some("serial_sss"));
+        assert_eq!(Backend::Csr.kernel_name(), Some("csr"));
+        assert_eq!(Backend::Dgbmv.kernel_name(), Some("dgbmv"));
+        assert_eq!(Backend::Coloring { p: 2 }.kernel_name(), Some("coloring"));
         assert_eq!(Backend::Pars3 { p: 4 }.kernel_name(), Some("pars3"));
         assert_eq!(Backend::Pjrt.kernel_name(), None);
-        for name in [Backend::Serial, Backend::Pars3 { p: 2 }]
-            .iter()
-            .filter_map(Backend::kernel_name)
-        {
-            assert!(crate::kernel::KERNEL_NAMES.contains(&name));
+        // every registry kernel is reachable from a Backend, and every
+        // native Backend maps into the registry inventory
+        let native = [
+            Backend::Serial,
+            Backend::Csr,
+            Backend::Dgbmv,
+            Backend::Coloring { p: 2 },
+            Backend::Pars3 { p: 2 },
+        ];
+        let names: Vec<_> = native.iter().filter_map(Backend::kernel_name).collect();
+        for name in &names {
+            assert!(crate::kernel::KERNEL_NAMES.contains(name));
+        }
+        for name in crate::kernel::KERNEL_NAMES {
+            assert!(names.contains(name), "{name} has no Backend variant");
         }
     }
 

@@ -1,208 +1,334 @@
-//! Request-service loop: the long-running leader process.
+//! Sharded request service: a pool of worker threads, each owning a
+//! [`Coordinator`] (and therefore its own kernel cache), serving the
+//! typed handle-based client API ([`crate::coordinator::Client`]).
 //!
-//! Models the deployment the paper targets — an iterative solver (or
-//! several) repeatedly hitting the same preprocessed matrix. A worker
-//! thread owns the [`Coordinator`]; clients submit requests over a
-//! channel and receive results over a per-request reply channel. (The
-//! offline environment has no tokio; a std::thread + mpsc loop provides
-//! the same single-owner async boundary.)
+//! Matrices are assigned to shards round-robin at `prepare` time and
+//! stay put — the handle carries the shard, so every request for one
+//! matrix lands on the worker whose cache holds its kernels (and, for
+//! threaded `pars3`, its persistent rank threads). Independent request
+//! streams on different shards execute concurrently; within one shard,
+//! requests execute in submission order. Each shard's queue is bounded
+//! ([`Config::queue_depth`]), so a flood of submissions blocks the
+//! producer instead of growing memory without bound. (The offline
+//! environment has no tokio; std threads + sync channels provide the
+//! same ownership boundary.)
+//!
+//! Slots are generational: re-preparing under an existing handle bumps
+//! the slot's generation, so older handles — including ones inside
+//! in-flight tickets queued behind the re-prepare — fail with
+//! [`Pars3Error::StaleHandle`] instead of computing against the wrong
+//! matrix.
 
+use crate::coordinator::client::{Client, MatrixHandle, ServiceShared};
+use crate::coordinator::error::Pars3Error;
 use crate::coordinator::{Backend, Config, Coordinator, Prepared};
 use crate::kernel::VecBatch;
 use crate::solver::mrs::{MrsOptions, MrsResult};
 use crate::sparse::Coo;
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// A request to the service.
-pub enum Request {
-    /// Preprocess and register a matrix under a key.
+/// Process-unique service ids: stamped into every [`MatrixHandle`] so a
+/// handle minted by one service can never resolve against another's
+/// slot table (it fails `ForeignHandle` at the client instead).
+static NEXT_SERVICE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One shard's kernel-cache counters (`built` stalling while requests
+/// flow is the amortization metric: kernels are being reused, not
+/// reconstructed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// The reporting shard.
+    pub shard: usize,
+    /// Kernels currently cached.
+    pub cached: usize,
+    /// Kernels ever constructed (cache misses, including rebuilds
+    /// after LRU eviction).
+    pub built: usize,
+}
+
+/// Preprocessing metadata for a registered matrix (what the one-time
+/// `prepare` computed: dimension, stored NNZ, and the RCM bandwidth
+/// reduction — Table 1's headline numbers). Query via
+/// [`Client::describe`](crate::coordinator::Client::describe).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatrixInfo {
+    /// Registration name.
+    pub name: String,
+    /// Dimension.
+    pub n: usize,
+    /// Stored lower-triangle NNZ.
+    pub nnz_lower: usize,
+    /// Bandwidth before RCM.
+    pub bw_before: usize,
+    /// Bandwidth after RCM.
+    pub rcm_bw: usize,
+}
+
+/// A request routed to one shard worker. Each variant carries its own
+/// typed reply channel — the wire format of the `Client`/`Ticket` API.
+pub(crate) enum ShardMsg {
     Prepare {
-        /// Registration key.
-        key: String,
-        /// Full COO matrix (shifted skew-symmetric).
-        coo: Coo,
+        /// `None`: allocate a fresh slot. `Some((slot, generation))`:
+        /// replace the matrix under an existing handle, bumping its
+        /// generation (the caller's generation must still be current).
+        replace: Option<(usize, u64)>,
+        name: String,
+        coo: Box<Coo>,
+        reply: Sender<Result<MatrixHandle, Pars3Error>>,
     },
-    /// Multiply against a registered matrix.
     Spmv {
-        /// Matrix key.
-        key: String,
-        /// Input vector (RCM order).
+        slot: usize,
+        generation: u64,
         x: Vec<f64>,
-        /// Backend to run.
         backend: Backend,
+        reply: Sender<Result<Vec<f64>, Pars3Error>>,
     },
-    /// MRS-solve against a registered matrix.
     Solve {
-        /// Matrix key.
-        key: String,
-        /// Right-hand side.
+        slot: usize,
+        generation: u64,
         b: Vec<f64>,
-        /// Solver options.
         opts: MrsOptions,
-        /// Backend to run.
         backend: Backend,
+        reply: Sender<Result<MrsResult, Pars3Error>>,
     },
-    /// Fused batch multiply against a registered matrix (one matrix
-    /// traversal for all columns).
     SpmvBatch {
-        /// Matrix key.
-        key: String,
-        /// Column-major `n × k` input batch (RCM order).
+        slot: usize,
+        generation: u64,
         xs: VecBatch,
-        /// Backend to run.
         backend: Backend,
+        reply: Sender<Result<VecBatch, Pars3Error>>,
     },
-    /// Multi-RHS MRS-solve against a registered matrix (one fused SpMV
-    /// per sweep across all right-hand sides).
     SolveBatch {
-        /// Matrix key.
-        key: String,
-        /// Column-major `n × k` right-hand-side batch.
+        slot: usize,
+        generation: u64,
         bs: VecBatch,
-        /// Solver options (shared by every column).
         opts: MrsOptions,
-        /// Backend to run.
         backend: Backend,
+        reply: Sender<Result<Vec<MrsResult>, Pars3Error>>,
     },
-    /// Report the worker's kernel-cache counters (how many kernels are
-    /// cached and how many were ever built — the amortization metric).
-    CacheStats,
-    /// Stop the service loop.
+    Describe {
+        slot: usize,
+        generation: u64,
+        reply: Sender<Result<MatrixInfo, Pars3Error>>,
+    },
+    Release {
+        slot: usize,
+        generation: u64,
+        reply: Sender<Result<(), Pars3Error>>,
+    },
+    CacheStats {
+        reply: Sender<Result<CacheStats, Pars3Error>>,
+    },
     Shutdown,
 }
 
-/// Service responses.
-pub enum Response {
-    /// Matrix registered; reports (n, nnz_lower, rcm_bw).
-    Prepared {
-        /// Dimension.
-        n: usize,
-        /// Stored lower NNZ.
-        nnz: usize,
-        /// Post-RCM bandwidth.
-        rcm_bw: usize,
-    },
-    /// SpMV result.
-    Spmv(Vec<f64>),
-    /// Solve result.
-    Solve(MrsResult),
-    /// Batch SpMV result (column-major, same width as the request).
-    SpmvBatch(VecBatch),
-    /// Multi-RHS solve results, one per column.
-    SolveBatch(Vec<MrsResult>),
-    /// Kernel-cache counters.
-    CacheStats {
-        /// Kernels currently cached.
-        cached: usize,
-        /// Kernels ever constructed (cache misses).
-        built: usize,
-    },
-    /// Request failed.
-    Error(String),
+/// A shard-local matrix slot. `prep` is `None` once released; the
+/// generation is monotone across the slot's whole lifetime (bumped by
+/// replace, release, and re-occupation), so no historical handle can
+/// ever alias a later occupant.
+struct Slot {
+    generation: u64,
+    prep: Option<Prepared>,
 }
 
-type Envelope = (Request, Sender<Response>);
+/// Look a handle up in a shard's slot table, rejecting unknown slots,
+/// released slots, and stale generations.
+fn resolve<'s>(
+    slots: &'s [Slot],
+    shard: usize,
+    slot: usize,
+    generation: u64,
+) -> Result<&'s Prepared, Pars3Error> {
+    let s = slots
+        .get(slot)
+        .ok_or(Pars3Error::UnknownMatrix { shard, slot })?;
+    if s.generation != generation {
+        return Err(Pars3Error::StaleHandle {
+            shard,
+            slot,
+            held: generation,
+            current: s.generation,
+        });
+    }
+    s.prep.as_ref().ok_or(Pars3Error::UnknownMatrix { shard, slot })
+}
 
-/// Handle to a running service.
+fn shard_worker(shard: usize, service: u64, cfg: Config, rx: Receiver<ShardMsg>) {
+    let mut coord = Coordinator::new(cfg);
+    let mut slots: Vec<Slot> = Vec::new();
+    // released slot indices, reused by later prepares (their generation
+    // sequence continues, so freed handles never alias the new matrix)
+    let mut free: Vec<usize> = Vec::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Shutdown => break,
+            ShardMsg::Prepare { replace, name, coo, reply } => {
+                let result = (|| {
+                    // validate the replace target BEFORE the expensive
+                    // preprocessing (fail fast on stale handles) — the
+                    // same slot -> generation -> occupancy checks every
+                    // other handle lookup runs
+                    if let Some((slot, held)) = replace {
+                        resolve(&slots, shard, slot, held)?;
+                    }
+                    let prep = coord.prepare(&name, &coo)?;
+                    let slot = match replace {
+                        Some((slot, _)) => slot,
+                        None => match free.pop() {
+                            Some(slot) => slot,
+                            None => {
+                                slots.push(Slot { generation: 0, prep: None });
+                                slots.len() - 1
+                            }
+                        },
+                    };
+                    let generation = slots[slot].generation + 1;
+                    // replacing a registration drops its cached
+                    // kernels — they'd pin the old matrix and never
+                    // be hit again (new Arc identity)
+                    let old =
+                        std::mem::replace(&mut slots[slot], Slot { generation, prep: Some(prep) });
+                    if let Some(old_prep) = old.prep {
+                        coord.evict(&old_prep);
+                    }
+                    Ok(MatrixHandle { service, shard, slot, generation })
+                })();
+                let _ = reply.send(result);
+            }
+            ShardMsg::Describe { slot, generation, reply } => {
+                let result = resolve(&slots, shard, slot, generation).map(|prep| MatrixInfo {
+                    name: prep.name.clone(),
+                    n: prep.n,
+                    nnz_lower: prep.nnz_lower,
+                    bw_before: prep.bw_before,
+                    rcm_bw: prep.rcm_bw,
+                });
+                let _ = reply.send(result);
+            }
+            ShardMsg::Release { slot, generation, reply } => {
+                let result = (|| {
+                    let s = slots
+                        .get_mut(slot)
+                        .ok_or(Pars3Error::UnknownMatrix { shard, slot })?;
+                    if s.generation != generation {
+                        // double release lands here: the first release
+                        // bumped the generation, so the handle is stale
+                        return Err(Pars3Error::StaleHandle {
+                            shard,
+                            slot,
+                            held: generation,
+                            current: s.generation,
+                        });
+                    }
+                    let Some(prep) = s.prep.take() else {
+                        // current generation but empty slot: cannot
+                        // happen under the monotone-bump protocol;
+                        // defensively report unknown
+                        return Err(Pars3Error::UnknownMatrix { shard, slot });
+                    };
+                    // bump the generation so every copy of the released
+                    // handle is stale from here on, then free the slot
+                    s.generation += 1;
+                    coord.evict(&prep);
+                    free.push(slot);
+                    Ok(())
+                })();
+                let _ = reply.send(result);
+            }
+            ShardMsg::Spmv { slot, generation, x, backend, reply } => {
+                let result = resolve(&slots, shard, slot, generation)
+                    .and_then(|prep| coord.spmv(prep, &x, backend));
+                let _ = reply.send(result);
+            }
+            ShardMsg::Solve { slot, generation, b, opts, backend, reply } => {
+                let result = resolve(&slots, shard, slot, generation)
+                    .and_then(|prep| coord.solve(prep, &b, &opts, backend));
+                let _ = reply.send(result);
+            }
+            ShardMsg::SpmvBatch { slot, generation, xs, backend, reply } => {
+                let result = resolve(&slots, shard, slot, generation)
+                    .and_then(|prep| coord.spmv_batch(prep, &xs, backend));
+                let _ = reply.send(result);
+            }
+            ShardMsg::SolveBatch { slot, generation, bs, opts, backend, reply } => {
+                let result = resolve(&slots, shard, slot, generation)
+                    .and_then(|prep| coord.solve_batch(prep, &bs, &opts, backend));
+                let _ = reply.send(result);
+            }
+            ShardMsg::CacheStats { reply } => {
+                let (cached, built) = coord.kernel_cache_stats();
+                let _ = reply.send(Ok(CacheStats { shard, cached, built }));
+            }
+        }
+    }
+}
+
+/// Handle to a running sharded service. [`Service::client`] mints
+/// [`Client`]s; dropping (or [`Service::shutdown`]) stops every shard
+/// worker — tickets still in flight then resolve to
+/// [`Pars3Error::WorkerPoisoned`], so drain your tickets first.
 pub struct Service {
-    tx: Sender<Envelope>,
-    worker: Option<JoinHandle<()>>,
+    shared: Arc<ServiceShared>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl Service {
-    /// Spawn the worker thread.
+    /// Spawn `cfg.shards` worker threads, each with its own
+    /// [`Coordinator`] and a bounded queue of `cfg.queue_depth`
+    /// requests.
     pub fn start(cfg: Config) -> Self {
-        let (tx, rx) = channel::<Envelope>();
-        let worker = std::thread::spawn(move || {
-            let mut coord = Coordinator::new(cfg);
-            let mut registry: HashMap<String, Prepared> = HashMap::new();
-            while let Ok((req, reply)) = rx.recv() {
-                let resp = match req {
-                    Request::Shutdown => break,
-                    Request::Prepare { key, coo } => match coord.prepare(&key, &coo) {
-                        Ok(p) => {
-                            let r = Response::Prepared {
-                                n: p.n,
-                                nnz: p.nnz_lower,
-                                rcm_bw: p.rcm_bw,
-                            };
-                            // replacing a registration drops its cached
-                            // kernels — they'd pin the old matrix and
-                            // never be hit again (new Arc identity)
-                            if let Some(old) = registry.insert(key, p) {
-                                coord.evict(&old);
-                            }
-                            r
-                        }
-                        Err(e) => Response::Error(format!("{e:#}")),
-                    },
-                    Request::Spmv { key, x, backend } => match registry.get(&key) {
-                        None => Response::Error(format!("unknown matrix '{key}'")),
-                        Some(p) => match coord.spmv(p, &x, backend) {
-                            Ok(y) => Response::Spmv(y),
-                            Err(e) => Response::Error(format!("{e:#}")),
-                        },
-                    },
-                    Request::Solve { key, b, opts, backend } => match registry.get(&key) {
-                        None => Response::Error(format!("unknown matrix '{key}'")),
-                        Some(p) => match coord.solve(p, &b, &opts, backend) {
-                            Ok(r) => Response::Solve(r),
-                            Err(e) => Response::Error(format!("{e:#}")),
-                        },
-                    },
-                    Request::SpmvBatch { key, xs, backend } => match registry.get(&key) {
-                        None => Response::Error(format!("unknown matrix '{key}'")),
-                        Some(p) => match coord.spmv_batch(p, &xs, backend) {
-                            Ok(ys) => Response::SpmvBatch(ys),
-                            Err(e) => Response::Error(format!("{e:#}")),
-                        },
-                    },
-                    Request::SolveBatch { key, bs, opts, backend } => match registry.get(&key) {
-                        None => Response::Error(format!("unknown matrix '{key}'")),
-                        Some(p) => match coord.solve_batch(p, &bs, &opts, backend) {
-                            Ok(rs) => Response::SolveBatch(rs),
-                            Err(e) => Response::Error(format!("{e:#}")),
-                        },
-                    },
-                    Request::CacheStats => {
-                        let (cached, built) = coord.kernel_cache_stats();
-                        Response::CacheStats { cached, built }
-                    }
-                };
-                let _ = reply.send(resp);
-            }
-        });
-        Self { tx, worker: Some(worker) }
-    }
-
-    /// Submit a request and block for the response.
-    pub fn call(&self, req: Request) -> Response {
-        let (rtx, rrx) = channel();
-        if self.tx.send((req, rtx)).is_err() {
-            return Response::Error("service stopped".into());
+        let service_id = NEXT_SERVICE_ID.fetch_add(1, Ordering::Relaxed);
+        let shards = cfg.shards.max(1);
+        let depth = cfg.queue_depth.max(1);
+        let mut senders = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = sync_channel::<ShardMsg>(depth);
+            let worker_cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                shard_worker(shard, service_id, worker_cfg, rx)
+            }));
+            senders.push(tx);
         }
-        rrx.recv().unwrap_or(Response::Error("service dropped reply".into()))
+        Self { shared: Arc::new(ServiceShared::new(senders, service_id)), workers }
     }
 
-    /// Stop the worker.
-    pub fn shutdown(mut self) {
-        let (rtx, _rrx) = channel();
-        let _ = self.tx.send((Request::Shutdown, rtx));
-        if let Some(w) = self.worker.take() {
+    /// A new client over this service's shard pool. Clients (and their
+    /// clones) are independent; all share the round-robin placement
+    /// counter for `prepare`.
+    pub fn client(&self) -> Client {
+        Client::new(self.shared.clone())
+    }
+
+    /// Number of shard workers.
+    pub fn num_shards(&self) -> usize {
+        self.shared.shards.len()
+    }
+
+    fn stop(&mut self) {
+        for tx in &self.shared.shards {
+            // blocks only while the worker is alive and its queue is
+            // full (it is draining); errors mean the worker already
+            // exited — both are fine
+            let _ = tx.send(ShardMsg::Shutdown);
+        }
+        for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
         }
+    }
+
+    /// Stop every shard worker and join them.
+    pub fn shutdown(mut self) {
+        self.stop();
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        let (rtx, _rrx) = channel();
-        let _ = self.tx.send((Request::Shutdown, rtx));
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
@@ -211,35 +337,32 @@ mod tests {
     use super::*;
     use crate::sparse::gen;
 
+    fn one_shard_cfg() -> Config {
+        Config { shards: 1, ..Config::default() }
+    }
+
     #[test]
     fn prepare_then_spmv_and_solve() {
         let svc = Service::start(Config::default());
+        let client = svc.client();
         let coo = gen::small_test_matrix(120, 21, 2.0);
-        let Response::Prepared { n, .. } =
-            svc.call(Request::Prepare { key: "m".into(), coo: coo.clone() })
-        else {
-            panic!("prepare failed")
-        };
-        assert_eq!(n, 120);
+        let h = client.prepare("m", coo).wait().unwrap();
+        assert_eq!(h.generation(), 1);
+
+        // the prepare metadata the old enum response carried inline is
+        // queryable through the handle
+        let info = client.describe(&h).wait().unwrap();
+        assert_eq!((info.name.as_str(), info.n), ("m", 120));
+        assert!(info.nnz_lower > 0 && info.rcm_bw <= info.bw_before);
 
         let x: Vec<f64> = (0..120).map(|i| i as f64 * 0.01).collect();
-        let Response::Spmv(y) = svc.call(Request::Spmv {
-            key: "m".into(),
-            x: x.clone(),
-            backend: Backend::Pars3 { p: 4 },
-        }) else {
-            panic!("spmv failed")
-        };
+        let y = client.spmv(&h, x.clone(), Backend::Pars3 { p: 4 }).wait().unwrap();
         assert_eq!(y.len(), 120);
 
-        let Response::Solve(res) = svc.call(Request::Solve {
-            key: "m".into(),
-            b: x,
-            opts: MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 },
-            backend: Backend::Serial,
-        }) else {
-            panic!("solve failed")
-        };
+        let res = client
+            .solve(&h, x, MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 }, Backend::Serial)
+            .wait()
+            .unwrap();
         assert!(res.converged);
         svc.shutdown();
     }
@@ -247,98 +370,218 @@ mod tests {
     #[test]
     fn batch_requests_roundtrip() {
         let svc = Service::start(Config::default());
+        let client = svc.client();
         let coo = gen::small_test_matrix(90, 22, 2.0);
-        let Response::Prepared { n, .. } =
-            svc.call(Request::Prepare { key: "m".into(), coo })
-        else {
-            panic!("prepare failed")
-        };
-        assert_eq!(n, 90);
+        let h = client.prepare("m", coo).wait().unwrap();
 
         let xs = VecBatch::from_fn(90, 3, |i, c| ((i + c * 7) % 5) as f64 - 2.0);
-        let Response::SpmvBatch(ys) = svc.call(Request::SpmvBatch {
-            key: "m".into(),
-            xs: xs.clone(),
-            backend: Backend::Pars3 { p: 3 },
-        }) else {
-            panic!("spmv batch failed")
-        };
+        let ys = client.spmv_batch(&h, xs.clone(), Backend::Pars3 { p: 3 }).wait().unwrap();
         assert_eq!((ys.n(), ys.k()), (90, 3));
         // cross-check column 0 against the single-vector path
-        let Response::Spmv(y0) = svc.call(Request::Spmv {
-            key: "m".into(),
-            x: xs.col(0).to_vec(),
-            backend: Backend::Pars3 { p: 3 },
-        }) else {
-            panic!("spmv failed")
-        };
+        let y0 = client.spmv(&h, xs.col(0).to_vec(), Backend::Pars3 { p: 3 }).wait().unwrap();
         for (a, b) in ys.col(0).iter().zip(&y0) {
             assert!((a - b).abs() < 1e-9);
         }
 
-        let Response::SolveBatch(results) = svc.call(Request::SolveBatch {
-            key: "m".into(),
-            bs: xs,
-            opts: MrsOptions { alpha: 2.0, max_iters: 400, tol: 1e-8 },
-            backend: Backend::Serial,
-        }) else {
-            panic!("solve batch failed")
-        };
+        let results = client
+            .solve_batch(
+                &h,
+                xs,
+                MrsOptions { alpha: 2.0, max_iters: 400, tol: 1e-8 },
+                Backend::Serial,
+            )
+            .wait()
+            .unwrap();
         assert_eq!(results.len(), 3);
         assert!(results.iter().all(|r| r.converged));
         svc.shutdown();
     }
 
     #[test]
-    fn repeated_solves_construct_the_kernel_exactly_once() {
-        let svc = Service::start(Config::default());
-        let coo = gen::small_test_matrix(100, 23, 2.0);
-        let Response::Prepared { .. } =
-            svc.call(Request::Prepare { key: "m".into(), coo: coo.clone() })
-        else {
-            panic!("prepare failed")
-        };
-        let Response::CacheStats { cached, built } = svc.call(Request::CacheStats) else {
-            panic!("cache stats failed")
-        };
-        assert_eq!((cached, built), (0, 0));
-        let b: Vec<f64> = (0..100).map(|i| ((i % 7) as f64) - 3.0).collect();
-        for _ in 0..4 {
-            let Response::Solve(res) = svc.call(Request::Solve {
-                key: "m".into(),
-                b: b.clone(),
-                opts: MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 },
-                backend: Backend::Pars3 { p: 3 },
-            }) else {
-                panic!("solve failed")
-            };
-            assert!(res.converged);
-        }
-        let Response::CacheStats { cached, built } = svc.call(Request::CacheStats) else {
-            panic!("cache stats failed")
-        };
-        assert_eq!((cached, built), (1, 1), "4 solves must build the kernel once");
-
-        // re-preparing under the same key evicts the stale kernels
-        let Response::Prepared { .. } = svc.call(Request::Prepare { key: "m".into(), coo })
-        else {
-            panic!("re-prepare failed")
-        };
-        let Response::CacheStats { cached, built } = svc.call(Request::CacheStats) else {
-            panic!("cache stats failed")
-        };
-        assert_eq!((cached, built), (0, 1), "re-prepare must drop the old kernel");
+    fn pipelined_tickets_resolve_without_wait_ordering() {
+        // the pipelining contract: a ticket submitted while another is
+        // unresolved completes without anyone wait()ing on the first
+        let svc = Service::start(one_shard_cfg());
+        let client = svc.client();
+        let coo = gen::small_test_matrix(100, 2, 2.0);
+        let h = client.prepare("m", coo).wait().unwrap();
+        let x: Vec<f64> = (0..100).map(|i| (i as f64 * 0.2).sin()).collect();
+        let t1 = client.spmv(&h, x.clone(), Backend::Serial);
+        let t2 = client.spmv(&h, x.clone(), Backend::Serial);
+        let mut t1 = t1;
+        // wait on the LATER ticket first; FIFO within a shard means t1's
+        // result is then already in its channel without t1.wait() ever
+        // having been the thing that drove it
+        let y2 = t2.wait().unwrap();
+        let y1 = t1.try_wait().expect("t1 completed before t2 was even collected").unwrap();
+        assert_eq!(y1, y2);
         svc.shutdown();
     }
 
     #[test]
-    fn unknown_key_errors() {
+    fn repeated_solves_hit_the_shard_local_kernel_cache() {
+        let svc = Service::start(one_shard_cfg());
+        let client = svc.client();
+        let coo = gen::small_test_matrix(100, 23, 2.0);
+        let h = client.prepare("m", coo.clone()).wait().unwrap();
+        let stats = client.cache_stats(0).wait().unwrap();
+        assert_eq!((stats.cached, stats.built), (0, 0));
+
+        let b: Vec<f64> = (0..100).map(|i| ((i % 7) as f64) - 3.0).collect();
+        // pipeline all four solves before collecting any result
+        let opts = MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 };
+        let tickets: Vec<_> = (0..4)
+            .map(|_| client.solve(&h, b.clone(), opts.clone(), Backend::Pars3 { p: 3 }))
+            .collect();
+        for t in tickets {
+            assert!(t.wait().unwrap().converged);
+        }
+        let stats = client.cache_stats(0).wait().unwrap();
+        assert_eq!((stats.cached, stats.built), (1, 1), "4 solves must build the kernel once");
+
+        // re-preparing under the handle evicts the stale kernels
+        let h2 = client.prepare_replace(&h, "m", coo).wait().unwrap();
+        assert_eq!(h2.generation(), 2);
+        let stats = client.cache_stats(0).wait().unwrap();
+        assert_eq!((stats.cached, stats.built), (0, 1), "re-prepare must drop the old kernel");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stale_and_unknown_handles_are_typed_errors() {
+        let svc = Service::start(one_shard_cfg());
+        let client = svc.client();
+        let coo = gen::small_test_matrix(80, 24, 2.0);
+        let h1 = client.prepare("m", coo.clone()).wait().unwrap();
+
+        // submit the replace FIRST, then a request with the old handle:
+        // FIFO guarantees the worker sees the replace before the spmv,
+        // which must then fail stale instead of touching the new matrix
+        let replace = client.prepare_replace(&h1, "m", coo.clone());
+        let against_old = client.spmv(&h1, vec![0.0; 80], Backend::Serial);
+        let h2 = replace.wait().unwrap();
+        assert_eq!((h2.slot, h2.generation), (h1.slot, h1.generation + 1));
+        assert_eq!(
+            against_old.wait().unwrap_err(),
+            Pars3Error::StaleHandle { shard: h1.shard, slot: h1.slot, held: 1, current: 2 }
+        );
+        // the fresh handle works
+        assert!(client.spmv(&h2, vec![0.0; 80], Backend::Serial).wait().is_ok());
+
+        // replacing through the dead handle is itself rejected
+        let err = client.prepare_replace(&h1, "m", coo).wait().unwrap_err();
+        assert!(matches!(err, Pars3Error::StaleHandle { held: 1, current: 2, .. }), "{err}");
+
+        // a slot that never existed (same service, so it reaches the
+        // worker's slot table and fails there)
+        let fake = MatrixHandle { slot: 99, ..h2 };
+        let err = client.spmv(&fake, vec![0.0; 80], Backend::Serial).wait().unwrap_err();
+        assert_eq!(err, Pars3Error::UnknownMatrix { shard: h2.shard, slot: 99 });
+        svc.shutdown();
+    }
+
+    #[test]
+    fn release_frees_the_slot_for_reuse_and_stales_the_handle() {
+        let svc = Service::start(one_shard_cfg());
+        let client = svc.client();
+        let h1 = client.prepare("a", gen::small_test_matrix(70, 30, 2.0)).wait().unwrap();
+        client.spmv(&h1, vec![1.0; 70], Backend::Serial).wait().unwrap();
+        let stats = client.cache_stats(0).wait().unwrap();
+        assert_eq!((stats.cached, stats.built), (1, 1));
+
+        client.release(&h1).wait().unwrap();
+        // the matrix memory and its kernels are gone...
+        let stats = client.cache_stats(0).wait().unwrap();
+        assert_eq!((stats.cached, stats.built), (0, 1), "release must evict the kernels");
+        // ...every copy of the handle is stale...
+        let err = client.spmv(&h1, vec![1.0; 70], Backend::Serial).wait().unwrap_err();
+        assert!(matches!(err, Pars3Error::StaleHandle { held: 1, current: 2, .. }), "{err}");
+        // ...double release is stale too...
+        let err = client.release(&h1).wait().unwrap_err();
+        assert!(matches!(err, Pars3Error::StaleHandle { .. }), "{err}");
+        // ...and the next prepare REUSES the freed slot, generation
+        // continuing past the released one (no aliasing possible)
+        let h2 = client.prepare("b", gen::small_test_matrix(80, 31, 2.0)).wait().unwrap();
+        assert_eq!(h2.slot, h1.slot, "freed slot must be reused");
+        assert_eq!(h2.generation(), 3);
+        client.spmv(&h2, vec![1.0; 80], Backend::Serial).wait().unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn handles_from_another_service_are_rejected() {
+        let svc_a = Service::start(one_shard_cfg());
+        let svc_b = Service::start(one_shard_cfg());
+        let coo = gen::small_test_matrix(60, 32, 2.0);
+        let ha = svc_a.client().prepare("a", coo.clone()).wait().unwrap();
+        // same shard/slot/generation exist on B, but the handle must
+        // not resolve against B's (unrelated) slot table
+        let hb = svc_b.client().prepare("b", coo).wait().unwrap();
+        assert_eq!((ha.shard, ha.slot, ha.generation), (hb.shard, hb.slot, hb.generation));
+        let err = svc_b.client().spmv(&ha, vec![0.0; 60], Backend::Serial).wait().unwrap_err();
+        assert!(matches!(err, Pars3Error::ForeignHandle { .. }), "{err}");
+        // and a foreign prepare_replace cannot bump B's generations
+        let err = svc_b
+            .client()
+            .prepare_replace(&ha, "evil", gen::small_test_matrix(60, 33, 2.0))
+            .wait()
+            .unwrap_err();
+        assert!(matches!(err, Pars3Error::ForeignHandle { .. }), "{err}");
+        assert!(svc_b.client().spmv(&hb, vec![0.0; 60], Backend::Serial).wait().is_ok());
+        svc_a.shutdown();
+        svc_b.shutdown();
+    }
+
+    #[test]
+    fn lru_cap_evicts_and_rebuilds_in_the_service_path() {
+        // cap each shard's cache at 1 kernel: alternating matrices must
+        // evict each other and rebuild on return (built keeps climbing),
+        // while a single-matrix stream stays at one build
+        let svc = Service::start(Config { shards: 1, max_cached_kernels: 1, ..Config::default() });
+        let client = svc.client();
+        let ha = client.prepare("a", gen::small_test_matrix(80, 27, 2.0)).wait().unwrap();
+        let hb = client.prepare("b", gen::small_test_matrix(90, 28, 2.0)).wait().unwrap();
+        let xa = vec![1.0; 80];
+        let xb = vec![1.0; 90];
+
+        client.spmv(&ha, xa.clone(), Backend::Serial).wait().unwrap();
+        client.spmv(&ha, xa.clone(), Backend::Serial).wait().unwrap();
+        let s = client.cache_stats(0).wait().unwrap();
+        assert_eq!((s.cached, s.built), (1, 1), "one matrix: cache hit");
+
+        client.spmv(&hb, xb, Backend::Serial).wait().unwrap(); // evicts a's kernel
+        let s = client.cache_stats(0).wait().unwrap();
+        assert_eq!((s.cached, s.built), (1, 2));
+
+        client.spmv(&ha, xa, Backend::Serial).wait().unwrap(); // rebuild after eviction
+        let s = client.cache_stats(0).wait().unwrap();
+        assert_eq!((s.cached, s.built), (1, 3), "evicted kernel must rebuild");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_matrix_is_a_typed_prepare_error() {
         let svc = Service::start(Config::default());
-        let resp = svc.call(Request::Spmv {
-            key: "nope".into(),
-            x: vec![],
-            backend: Backend::Serial,
-        });
-        assert!(matches!(resp, Response::Error(_)));
+        let client = svc.client();
+        let mut coo = Coo::new(4);
+        coo.push(1, 0, 2.0);
+        coo.push(0, 1, 2.0); // symmetric — must be rejected
+        let err = client.prepare("bad", coo).wait().unwrap_err();
+        assert!(matches!(err, Pars3Error::InvalidMatrix(_)), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn round_robin_spreads_matrices_across_shards() {
+        let svc = Service::start(Config { shards: 2, ..Config::default() });
+        let client = svc.client();
+        let h0 = client.prepare("a", gen::small_test_matrix(60, 1, 2.0)).wait().unwrap();
+        let h1 = client.prepare("b", gen::small_test_matrix(60, 2, 2.0)).wait().unwrap();
+        let h2 = client.prepare("c", gen::small_test_matrix(60, 3, 2.0)).wait().unwrap();
+        assert_ne!(h0.shard(), h1.shard());
+        assert_eq!(h0.shard(), h2.shard(), "round-robin wraps");
+        assert_eq!(svc.num_shards(), 2);
+        assert_eq!(client.num_shards(), 2);
+        svc.shutdown();
     }
 }

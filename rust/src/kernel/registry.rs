@@ -12,6 +12,7 @@
 //! ordering, so for any input vector they produce identical outputs —
 //! the property the cross-kernel benches and tests rely on.
 
+use crate::coordinator::error::Pars3Error;
 use crate::graph::rcm::bandwidth_under;
 use crate::graph::{rcm, Adjacency};
 use crate::kernel::coloring_spmv::ColoringKernel;
@@ -23,8 +24,6 @@ use crate::kernel::serial_sss::SerialSss;
 use crate::kernel::split3::Split3;
 use crate::kernel::traits::Spmv;
 use crate::sparse::{convert, Coo, Sss, Symmetry};
-use crate::Result;
-use anyhow::{bail, Context};
 use std::sync::Arc;
 
 /// Names of every registered kernel, in bench display order.
@@ -66,7 +65,7 @@ impl KernelConfig {
 /// identity fallback for already-banded inputs (paper §4.1's
 /// pattern-recognition note), then SSS conversion. Returns the chosen
 /// permutation (`perm[old] = new`) and the reordered matrix.
-pub fn reorder_to_sss(coo: &Coo) -> Result<(Vec<u32>, Sss)> {
+pub fn reorder_to_sss(coo: &Coo) -> Result<(Vec<u32>, Sss), Pars3Error> {
     let bw_before = coo.bandwidth();
     let g = Adjacency::from_coo(coo);
     let mut perm = rcm(&g);
@@ -75,7 +74,9 @@ pub fn reorder_to_sss(coo: &Coo) -> Result<(Vec<u32>, Sss)> {
         perm = (0..coo.n as u32).collect();
     }
     let sss = convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew)
-        .context("matrix is not (shifted) skew-symmetric")?;
+        .map_err(|e| {
+            Pars3Error::InvalidMatrix(format!("matrix is not (shifted) skew-symmetric: {e:#}"))
+        })?;
     Ok((perm, sss))
 }
 
@@ -83,7 +84,7 @@ pub fn reorder_to_sss(coo: &Coo) -> Result<(Vec<u32>, Sss)> {
 /// skew-symmetric COO matrix (preprocessing via [`reorder_to_sss`]).
 /// The returned kernel operates in the reordered space — consistent
 /// across every kernel name for the same input matrix.
-pub fn build(name: &str, coo: &Coo, cfg: &KernelConfig) -> Result<Box<dyn Spmv>> {
+pub fn build(name: &str, coo: &Coo, cfg: &KernelConfig) -> Result<Box<dyn Spmv>, Pars3Error> {
     let (_, sss) = reorder_to_sss(coo)?;
     build_from_sss(name, sss, cfg)
 }
@@ -102,7 +103,7 @@ pub fn build_from_sss(
     name: &str,
     sss: impl Into<Arc<Sss>>,
     cfg: &KernelConfig,
-) -> Result<Box<dyn Spmv>> {
+) -> Result<Box<dyn Spmv>, Pars3Error> {
     let sss: Arc<Sss> = sss.into();
     let p = cfg.threads.clamp(1, sss.n.max(1));
     Ok(match name {
@@ -114,7 +115,7 @@ pub fn build_from_sss(
             let split = Split3::with_outer_bw_format(&sss, cfg.outer_bw, cfg.format)?;
             return build_from_split(split, cfg);
         }
-        other => bail!("unknown kernel '{other}'; available: {KERNEL_NAMES:?}"),
+        other => return Err(Pars3Error::UnknownKernel { name: other.to_string() }),
     })
 }
 
@@ -128,7 +129,7 @@ pub fn build_from_sss(
 pub fn build_from_split(
     split: impl Into<Arc<Split3>>,
     cfg: &KernelConfig,
-) -> Result<Box<dyn Spmv>> {
+) -> Result<Box<dyn Spmv>, Pars3Error> {
     let split: Arc<Split3> = split.into();
     let p = cfg.threads.clamp(1, split.n.max(1));
     Ok(Box::new(Pars3Kernel::new(split, p, cfg.threaded)?))

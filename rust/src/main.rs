@@ -5,16 +5,19 @@
 //! ```text
 //! pars3 info                          # artifact + platform info
 //! pars3 report <table1|rcm|conflicts|splits|fig9|coloring|complexity|all>
-//! pars3 spmv   [--matrix NAME] [--p N] [--backend serial|pars3|pjrt]
+//! pars3 spmv   [--matrix NAME] [--p N] [--backend serial|csr|dgbmv|coloring|pars3|pjrt]
 //! pars3 solve  [--matrix NAME] [--p N] [--backend ...] [--tol T] [--iters K] [--rhs K]
-//! pars3 serve  [--demo]               # request-service loop demo
+//! pars3 serve                         # sharded service demo (pipelined clients)
 //! ```
 //!
 //! Global flags: `--config FILE` (default `pars3.toml`), `--scale S`,
 //! `--ranks a,b,c`, `--threaded`, `--format auto|dia|sss` (band-interior
-//! storage: hybrid diagonal-major vs pure SSS, `auto` = fill heuristic).
+//! storage: hybrid diagonal-major vs pure SSS, `auto` = fill heuristic),
+//! `--shards W` (service worker pool), `--queue-depth N` (per-shard
+//! backpressure bound), `--max-cached-kernels N` (per-shard kernel-cache
+//! LRU cap, 0 = unbounded).
 
-use pars3::coordinator::{Backend, Config, Coordinator, Request, Response, Service};
+use pars3::coordinator::{Backend, Config, Coordinator, Service};
 use pars3::mpisim::CostModel;
 use pars3::report;
 use pars3::solver::mrs::MrsOptions;
@@ -74,6 +77,22 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(d) = args.flags.get("artifacts") {
         cfg.artifacts_dir = d.into();
     }
+    if let Some(w) = args.flags.get("shards") {
+        cfg.shards = w.parse()?;
+    }
+    if let Some(q) = args.flags.get("queue-depth") {
+        cfg.queue_depth = q.parse()?;
+    }
+    if let Some(m) = args.flags.get("max-cached-kernels") {
+        cfg.max_cached_kernels = m.parse()?;
+    }
+    // flag overrides must obey the same invariants the TOML path enforces
+    if cfg.shards == 0 {
+        anyhow::bail!("--shards must be >= 1");
+    }
+    if cfg.queue_depth == 0 {
+        anyhow::bail!("--queue-depth must be >= 1");
+    }
     Ok(cfg)
 }
 
@@ -81,6 +100,9 @@ fn backend_of(args: &Args, default_p: usize) -> Result<Backend> {
     let p: usize = args.flags.get("p").map(|v| v.parse()).transpose()?.unwrap_or(default_p);
     Ok(match args.flags.get("backend").map(String::as_str).unwrap_or("pars3") {
         "serial" => Backend::Serial,
+        "csr" => Backend::Csr,
+        "dgbmv" => Backend::Dgbmv,
+        "coloring" => Backend::Coloring { p },
         "pjrt" => Backend::Pjrt,
         "pars3" => Backend::Pars3 { p },
         other => anyhow::bail!("unknown backend '{other}'"),
@@ -117,8 +139,9 @@ fn run() -> Result<()> {
                  usage: pars3 <info|report|spmv|solve|serve> [flags]\n\
                  report subcommands: table1 rcm conflicts splits fig9 coloring complexity all\n\
                  flags: --config F --scale S --ranks 1,2,4 --threaded --matrix NAME --p N\n\
-                        --backend serial|pars3|pjrt --format auto|dia|sss --tol T --iters K\n\
-                        --rhs K --artifacts DIR"
+                        --backend serial|csr|dgbmv|coloring|pars3|pjrt --format auto|dia|sss\n\
+                        --tol T --iters K --rhs K --artifacts DIR --shards W --queue-depth N\n\
+                        --max-cached-kernels N"
             );
             Ok(())
         }
@@ -286,34 +309,51 @@ fn cmd_solve(cfg: Config, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(cfg: Config) -> Result<()> {
-    println!("starting request service (demo mode: 3 scripted clients)...");
+    println!(
+        "starting sharded service ({} shard(s), queue depth {}; demo: pipelined clients)...",
+        cfg.shards, cfg.queue_depth
+    );
     let scale = cfg.scale;
     let alpha = cfg.alpha;
     let seed = cfg.seed;
     let svc = Service::start(cfg);
+    let client = svc.client();
     let suite = gen::paper_suite(scale);
     let m = &suite[3]; // af analogue: fastest
     let mut rng = SmallRng::seed_from_u64(seed ^ m.n as u64);
     let coo = skew::coo_from_pattern(m.n, &m.lower_edges, alpha, &mut rng);
-    match svc.call(Request::Prepare { key: "demo".into(), coo }) {
-        Response::Prepared { n, nnz, rcm_bw } => {
-            println!("prepared '{}': n={n} nnz={nnz} rcm_bw={rcm_bw}", m.name)
-        }
-        Response::Error(e) => anyhow::bail!("prepare failed: {e}"),
-        _ => unreachable!(),
-    }
-    for client in 0..3 {
-        let n = m.n;
-        let x: Vec<f64> = (0..n).map(|i| ((i + client) as f64 * 0.11).cos()).collect();
-        match svc.call(Request::Spmv { key: "demo".into(), x, backend: Backend::Pars3 { p: 4 } }) {
-            Response::Spmv(y) => {
+    let handle = client.prepare(m.name, coo).wait()?;
+    let info = client.describe(&handle).wait()?;
+    println!(
+        "prepared '{}' on shard {} (generation {}): n={} nnz={} rcm_bw={}",
+        info.name,
+        handle.shard(),
+        handle.generation(),
+        info.n,
+        info.nnz_lower,
+        info.rcm_bw
+    );
+    // pipelined: every request is in flight before the first wait
+    let tickets: Vec<_> = (0..3)
+        .map(|c| {
+            let x: Vec<f64> = (0..m.n).map(|i| ((i + c) as f64 * 0.11).cos()).collect();
+            client.spmv(&handle, x, Backend::Pars3 { p: 4 })
+        })
+        .collect();
+    for (c, t) in tickets.into_iter().enumerate() {
+        match t.wait() {
+            Ok(y) => {
                 let norm: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
-                println!("client {client}: spmv ok, ||y|| = {norm:.6e}");
+                println!("client {c}: spmv ok, ||y|| = {norm:.6e}");
             }
-            Response::Error(e) => println!("client {client}: error {e}"),
-            _ => unreachable!(),
+            Err(e) => println!("client {c}: error {e}"),
         }
     }
+    let stats = client.cache_stats(handle.shard()).wait()?;
+    println!(
+        "shard {} kernel cache: {} cached, {} built (3 pipelined spmvs -> 1 build)",
+        stats.shard, stats.cached, stats.built
+    );
     svc.shutdown();
     println!("service stopped.");
     Ok(())

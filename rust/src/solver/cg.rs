@@ -6,6 +6,7 @@
 //! variant of the kernels has a native consumer too.
 
 use crate::kernel::{Spmv, VecBatch};
+use crate::solver::compaction::BatchCompactor;
 
 /// CG result.
 #[derive(Debug, Clone)]
@@ -63,10 +64,10 @@ pub fn cg_solve(kernel: &mut dyn Spmv, b: &[f64], max_iters: usize, tol: f64) ->
 /// [`cg_solve`] would produce for `bs.col(c)` alone.
 ///
 /// **Converged-column compaction:** when the active set shrinks below
-/// half the current SpMV width, the working set is repacked (the
-/// surviving direction columns are gathered into a narrower batch) so
-/// converged columns stop riding the fused multiply. Per-column
-/// numerics are unchanged.
+/// half the current SpMV width, the working set is repacked via the
+/// shared [`BatchCompactor`] (the surviving direction columns are
+/// gathered into a narrower batch) so converged columns stop riding
+/// the fused multiply. Per-column numerics are unchanged.
 pub fn cg_solve_batch(
     kernel: &mut dyn Spmv,
     bs: &VecBatch,
@@ -97,39 +98,20 @@ pub fn cg_solve_batch(
         })
         .collect();
 
-    // SpMV working set: original column indices still riding the fused
-    // multiply; compacted when the active set drops below half.
-    let mut work: Vec<usize> = (0..k).collect();
-    let mut ps_g = VecBatch::zeros(n, 0); // gathered directions
-    let mut aps_c = VecBatch::zeros(n, 0);
-
+    let mut comp = BatchCompactor::new(n, k);
     let mut sweeps = 0;
     while sweeps < max_iters {
-        let live: Vec<usize> = work.iter().copied().filter(|&c| cols[c].active).collect();
-        if live.is_empty() {
+        if !comp.retain_live(kernel, |c| cols[c].active) {
             break;
         }
-        if live.len() * 2 <= work.len() && live.len() < work.len() {
-            work = live;
-            kernel.prepare_hint(work.len());
-            ps_g = VecBatch::zeros(n, work.len());
-            aps_c = VecBatch::zeros(n, work.len());
-        }
-        let compacted = work.len() < k;
-        if compacted {
-            for (j, &c) in work.iter().enumerate() {
-                ps_g.col_mut(j).copy_from_slice(ps.col(c));
-            }
-            kernel.apply_batch(&ps_g, &mut aps_c);
-        } else {
-            kernel.apply_batch(&ps, &mut aps);
-        }
-        for (j, &c) in work.iter().enumerate() {
+        comp.fused_apply(kernel, &ps, &mut aps);
+        for j in 0..comp.work().len() {
+            let c = comp.work()[j];
             let st = &mut cols[c];
             if !st.active {
                 continue;
             }
-            let ap = if compacted { aps_c.col(j) } else { aps.col(c) };
+            let ap = comp.result_col(&aps, j);
             let pap = dot(ps.col(c), ap);
             if pap <= 0.0 {
                 st.active = false; // not SPD (or breakdown)

@@ -1,0 +1,207 @@
+//! Converged-column compaction for multi-RHS solvers.
+//!
+//! Batch solvers ([`crate::solver::mrs::mrs_solve_batch`],
+//! [`crate::solver::cg::cg_solve_batch`]) run one fused SpMV per sweep
+//! across all `k` right-hand sides. Once columns converge they are pure
+//! waste in that multiply — every matrix entry still drives
+//! multiply-accumulates for them — so the solvers maintain a *working
+//! set* of original column indices and, when the live set shrinks below
+//! half the current SpMV width, repack the surviving columns into a
+//! narrower batch. This module is that shared mechanism (previously
+//! duplicated in both solvers): live-set filtering, the halving
+//! trigger, the gather buffers, and the result-column mapping.
+//! Per-column numerics are unchanged by construction — only fully
+//! inactive columns are dropped from the multiply.
+
+use crate::kernel::{Spmv, VecBatch};
+
+/// Working-set manager for one batch solve: tracks which original
+/// columns still ride the fused SpMV and owns the gather/result buffers
+/// used once the set has been compacted.
+pub struct BatchCompactor {
+    n: usize,
+    /// Full batch width `k` (the uncompacted SpMV width).
+    width: usize,
+    /// Original column indices still riding the fused multiply, in
+    /// sweep order.
+    work: Vec<usize>,
+    /// Gathered input columns (compacted mode only).
+    src_c: VecBatch,
+    /// Fused-multiply output for the gathered columns.
+    dst_c: VecBatch,
+}
+
+impl BatchCompactor {
+    /// Start with all `k` columns in the working set.
+    pub fn new(n: usize, k: usize) -> Self {
+        Self {
+            n,
+            width: k,
+            work: (0..k).collect(),
+            src_c: VecBatch::zeros(n, 0),
+            dst_c: VecBatch::zeros(n, 0),
+        }
+    }
+
+    /// The working set: original column indices, in the order
+    /// [`Self::result_col`] expects its `j` position argument.
+    pub fn work(&self) -> &[usize] {
+        &self.work
+    }
+
+    /// Whether the working set has been repacked below the full width
+    /// (i.e. [`Self::fused_apply`] gathers into the narrow buffers).
+    pub fn is_compacted(&self) -> bool {
+        self.work.len() < self.width
+    }
+
+    /// Filter the working set down to columns `active(c)` reports live.
+    /// Returns `false` when nothing is live (the solve is done). When
+    /// the live set drops to half the current SpMV width or less, the
+    /// working set is repacked: the kernel is re-hinted at the narrow
+    /// width and the gather buffers are resized, so converged columns
+    /// stop riding the fused multiply.
+    pub fn retain_live(
+        &mut self,
+        kernel: &mut dyn Spmv,
+        active: impl Fn(usize) -> bool,
+    ) -> bool {
+        let live: Vec<usize> = self.work.iter().copied().filter(|&c| active(c)).collect();
+        if live.is_empty() {
+            return false;
+        }
+        if live.len() * 2 <= self.work.len() && live.len() < self.work.len() {
+            self.work = live;
+            kernel.prepare_hint(self.work.len());
+            self.src_c = VecBatch::zeros(self.n, self.work.len());
+            self.dst_c = VecBatch::zeros(self.n, self.work.len());
+        }
+        true
+    }
+
+    /// One fused sweep over the working set: `dst = A · src` restricted
+    /// to the working columns. Uncompacted, this is a single full-width
+    /// `apply_batch(src, dst)`; compacted, the surviving `src` columns
+    /// are gathered into the narrow buffer first and the result lands
+    /// in the internal output buffer (read it via [`Self::result_col`]).
+    pub fn fused_apply(&mut self, kernel: &mut dyn Spmv, src: &VecBatch, dst: &mut VecBatch) {
+        if self.is_compacted() {
+            for (j, &c) in self.work.iter().enumerate() {
+                self.src_c.col_mut(j).copy_from_slice(src.col(c));
+            }
+            kernel.apply_batch(&self.src_c, &mut self.dst_c);
+        } else {
+            kernel.apply_batch(src, dst);
+        }
+    }
+
+    /// The multiply result for working-set position `j` (original
+    /// column `self.work()[j]`), reading from whichever buffer the last
+    /// [`Self::fused_apply`] wrote.
+    pub fn result_col<'a>(&'a self, dst: &'a VecBatch, j: usize) -> &'a [f64] {
+        if self.is_compacted() {
+            self.dst_c.col(j)
+        } else {
+            dst.col(self.work[j])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Records batch widths and hints; `y = 2x` per column.
+    struct Probe {
+        n: usize,
+        widths: Vec<usize>,
+        hints: Vec<usize>,
+    }
+
+    impl Spmv for Probe {
+        fn n(&self) -> usize {
+            self.n
+        }
+        fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi = 2.0 * xi;
+            }
+        }
+        fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) {
+            self.widths.push(xs.k());
+            for c in 0..xs.k() {
+                let (x, y) = (xs.col(c).to_vec(), ys.col_mut(c));
+                for (yi, xi) in y.iter_mut().zip(&x) {
+                    *yi = 2.0 * xi;
+                }
+            }
+        }
+        fn prepare_hint(&mut self, k: usize) {
+            self.hints.push(k);
+        }
+        fn flops(&self) -> u64 {
+            0
+        }
+        fn bytes(&self) -> u64 {
+            0
+        }
+        fn name(&self) -> &'static str {
+            "probe"
+        }
+    }
+
+    #[test]
+    fn full_width_sweeps_until_the_halving_trigger() {
+        let n = 4;
+        let mut k = Probe { n, widths: Vec::new(), hints: Vec::new() };
+        let mut comp = BatchCompactor::new(n, 6);
+        let src = VecBatch::from_fn(n, 6, |i, c| (i + 10 * c) as f64);
+        let mut dst = VecBatch::zeros(n, 6);
+
+        // all live: full-width multiply, results read from `dst`
+        assert!(comp.retain_live(&mut k, |_| true));
+        assert!(!comp.is_compacted());
+        comp.fused_apply(&mut k, &src, &mut dst);
+        assert_eq!(k.widths, vec![6]);
+        for j in 0..6 {
+            assert_eq!(comp.work()[j], j);
+            assert_eq!(comp.result_col(&dst, j), dst.col(j));
+        }
+
+        // 4 of 6 live: above half, NO repack yet (4*2 > 6)
+        let live4 = [true, true, false, true, false, true];
+        assert!(comp.retain_live(&mut k, |c| live4[c]));
+        assert!(!comp.is_compacted());
+        assert_eq!(comp.work().len(), 6, "inactive columns still ride until the halving point");
+
+        // 3 of 6 live: exactly half -> repack to width 3
+        let live3 = [true, false, false, true, false, true];
+        assert!(comp.retain_live(&mut k, |c| live3[c]));
+        assert!(comp.is_compacted());
+        assert_eq!(comp.work(), &[0, 3, 5]);
+        assert_eq!(k.hints, vec![3], "kernel re-hinted at the narrow width");
+
+        // compacted sweep: gathers cols 0,3,5 and multiplies width 3
+        comp.fused_apply(&mut k, &src, &mut dst);
+        assert_eq!(k.widths, vec![6, 3]);
+        for (j, &c) in [0usize, 3, 5].iter().enumerate() {
+            let got = comp.result_col(&dst, j);
+            let want: Vec<f64> = src.col(c).iter().map(|v| 2.0 * v).collect();
+            assert_eq!(got, &want[..], "gathered col {c} at position {j}");
+        }
+    }
+
+    #[test]
+    fn compaction_halves_again_and_stops_when_dry() {
+        let n = 3;
+        let mut k = Probe { n, widths: Vec::new(), hints: Vec::new() };
+        let mut comp = BatchCompactor::new(n, 8);
+        // 8 -> 4 (half) -> 2 (half of 4) -> done
+        assert!(comp.retain_live(&mut k, |c| c < 4));
+        assert_eq!(comp.work(), &[0, 1, 2, 3]);
+        assert!(comp.retain_live(&mut k, |c| c < 2));
+        assert_eq!(comp.work(), &[0, 1]);
+        assert_eq!(k.hints, vec![4, 2]);
+        assert!(!comp.retain_live(&mut k, |_| false), "no live columns ends the solve");
+    }
+}

@@ -5,10 +5,15 @@
 //!   budget the paper highlights).
 //! * [`cg`] — Conjugate Gradient for SPD systems (the restrictive
 //!   comparison point the paper mentions).
+//! * [`compaction`] — shared converged-column compaction for the
+//!   multi-RHS batch solvers (live-set filter, halving trigger, gather
+//!   buffers).
 
 pub mod cg;
+pub mod compaction;
 pub mod mrs;
 pub mod mrs_krylov;
 
+pub use compaction::BatchCompactor;
 pub use mrs::{mrs_solve, mrs_solve_batch, MrsOptions, MrsResult};
 pub use mrs_krylov::{mrs_krylov_solve, mrs_krylov_solve_batch, KrylovOptions};

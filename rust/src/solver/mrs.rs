@@ -14,6 +14,7 @@
 //! integration tests cross-check them.
 
 use crate::kernel::{Spmv, VecBatch};
+use crate::solver::compaction::BatchCompactor;
 
 /// Options for [`mrs_solve`].
 #[derive(Debug, Clone)]
@@ -92,11 +93,12 @@ pub fn mrs_solve(kernel: &mut dyn Spmv, b: &[f64], opts: &MrsOptions) -> MrsResu
 /// alone.
 ///
 /// **Converged-column compaction:** when the active set shrinks below
-/// half the current SpMV width, the working set is repacked so
-/// converged columns stop riding the fused multiply (their `2k`-wide
-/// multiply-accumulates per matrix entry are pure waste). Repacking
-/// gathers the surviving residual columns into a narrower batch before
-/// each sweep; per-column numerics are unchanged.
+/// half the current SpMV width, the working set is repacked (via the
+/// shared [`BatchCompactor`]) so converged columns stop riding the
+/// fused multiply (their `2k`-wide multiply-accumulates per matrix
+/// entry are pure waste). Repacking gathers the surviving residual
+/// columns into a narrower batch before each sweep; per-column
+/// numerics are unchanged.
 pub fn mrs_solve_batch(
     kernel: &mut dyn Spmv,
     bs: &VecBatch,
@@ -125,40 +127,20 @@ pub fn mrs_solve_batch(
         })
         .collect();
 
-    // SpMV working set: the original column indices still riding the
-    // fused multiply. Starts as all k columns; compacted when the
-    // active set drops below half the current width.
-    let mut work: Vec<usize> = (0..k).collect();
-    let mut rs_c = VecBatch::zeros(n, 0); // gather buffer (compacted mode)
-    let mut ps_c = VecBatch::zeros(n, 0);
-
+    let mut comp = BatchCompactor::new(n, k);
     let mut sweeps = 0;
     while sweeps < opts.max_iters {
-        let live: Vec<usize> = work.iter().copied().filter(|&c| cols[c].active).collect();
-        if live.is_empty() {
+        if !comp.retain_live(kernel, |c| cols[c].active) {
             break;
         }
-        if live.len() * 2 <= work.len() && live.len() < work.len() {
-            work = live;
-            kernel.prepare_hint(work.len());
-            rs_c = VecBatch::zeros(n, work.len());
-            ps_c = VecBatch::zeros(n, work.len());
-        }
-        let compacted = work.len() < k;
-        if compacted {
-            for (j, &c) in work.iter().enumerate() {
-                rs_c.col_mut(j).copy_from_slice(rs.col(c));
-            }
-            kernel.apply_batch(&rs_c, &mut ps_c); // narrower fused SpMV
-        } else {
-            kernel.apply_batch(&rs, &mut ps); // the one fused hot-path SpMV
-        }
-        for (j, &c) in work.iter().enumerate() {
+        comp.fused_apply(kernel, &rs, &mut ps); // the one fused hot-path SpMV
+        for j in 0..comp.work().len() {
+            let c = comp.work()[j];
             let st = &mut cols[c];
             if !st.active {
                 continue;
             }
-            let p = if compacted { ps_c.col(j) } else { ps.col(c) };
+            let p = comp.result_col(&ps, j);
             let pp = dot(p, p);
             if pp <= f64::MIN_POSITIVE {
                 st.active = false;

@@ -1,6 +1,6 @@
 //! Integration tests: whole-pipeline flows across modules.
 
-use pars3::coordinator::{Backend, Config, Coordinator, Request, Response, Service};
+use pars3::coordinator::{Backend, Config, Coordinator, Service};
 use pars3::kernel::serial_sss::sss_spmv;
 use pars3::mpisim::CostModel;
 use pars3::report;
@@ -112,24 +112,96 @@ fn reordering_preserves_spmv_semantics() {
 }
 
 #[test]
-fn service_handles_concurrent_style_workload() {
+fn service_handles_pipelined_workload() {
     let svc = Service::start(small_cfg());
+    let client = svc.client();
     let coo = gen::small_test_matrix(100, 2, 2.0);
-    match svc.call(Request::Prepare { key: "a".into(), coo: coo.clone() }) {
-        Response::Prepared { n, .. } => assert_eq!(n, 100),
-        _ => panic!("prepare failed"),
-    }
+    let h = client.prepare("a", coo).wait().unwrap();
     // repeated multiplies against the same preprocessed matrix (the
-    // amortization story of §4)
-    let mut norms = Vec::new();
-    for k in 0..5 {
-        let x: Vec<f64> = (0..100).map(|i| ((i + k) as f64 * 0.2).sin()).collect();
-        match svc.call(Request::Spmv { key: "a".into(), x, backend: Backend::Pars3 { p: 4 } }) {
-            Response::Spmv(y) => norms.push(y.iter().map(|v| v * v).sum::<f64>().sqrt()),
-            _ => panic!("spmv failed"),
-        }
-    }
+    // amortization story of §4) — all five submitted before any wait
+    let tickets: Vec<_> = (0..5)
+        .map(|k| {
+            let x: Vec<f64> = (0..100).map(|i| ((i + k) as f64 * 0.2).sin()).collect();
+            client.spmv(&h, x, Backend::Pars3 { p: 4 })
+        })
+        .collect();
+    let norms: Vec<f64> = tickets
+        .into_iter()
+        .map(|t| t.wait().unwrap().iter().map(|v| v * v).sum::<f64>().sqrt())
+        .collect();
     assert_eq!(norms.len(), 5);
+    // five pipelined tickets, one kernel build on the owning shard
+    let stats = client.cache_stats(h.shard()).wait().unwrap();
+    assert_eq!(stats.built, 1, "pipelined tickets must share one cached kernel");
+    svc.shutdown();
+}
+
+#[test]
+fn clients_pipeline_mixed_tickets_across_shards() {
+    // >= 4 client threads pipelining mixed spmv/solve tickets against
+    // two matrices living on different shards; every result is checked
+    // against a direct (single-owner) Coordinator on the same config
+    let cfg = Config { shards: 2, ..small_cfg() };
+    let coo_a = gen::small_test_matrix(110, 3, 2.0);
+    let coo_b = gen::small_test_matrix(90, 4, 2.0);
+    let opts = MrsOptions { alpha: 2.0, max_iters: 300, tol: 1e-8 };
+
+    // reference answers, computed outside the service
+    let mut coord = Coordinator::new(cfg.clone());
+    let prep_a = coord.prepare("a", &coo_a).unwrap();
+    let prep_b = coord.prepare("b", &coo_b).unwrap();
+    let xs_a: Vec<Vec<f64>> = (0..4)
+        .map(|t| (0..110).map(|i| ((i * (t + 2)) % 13) as f64 * 0.1 - 0.6).collect())
+        .collect();
+    let bs_b: Vec<Vec<f64>> = (0..4)
+        .map(|t| (0..90).map(|i| ((i + 7 * t) % 5) as f64 - 2.0).collect())
+        .collect();
+    let want_y: Vec<Vec<f64>> = xs_a
+        .iter()
+        .map(|x| coord.spmv(&prep_a, x, Backend::Pars3 { p: 4 }).unwrap())
+        .collect();
+    let want_solve: Vec<Vec<f64>> = bs_b
+        .iter()
+        .map(|b| coord.solve(&prep_b, b, &opts, Backend::Serial).unwrap().x)
+        .collect();
+
+    let svc = Service::start(cfg);
+    let client = svc.client();
+    let ha = client.prepare("a", coo_a).wait().unwrap();
+    let hb = client.prepare("b", coo_b).wait().unwrap();
+    assert_ne!(ha.shard(), hb.shard(), "round-robin must spread the two matrices");
+
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let client = client.clone();
+            let (xs_a, bs_b) = (&xs_a, &bs_b);
+            let (want_y, want_solve) = (&want_y, &want_solve);
+            let opts = opts.clone();
+            s.spawn(move || {
+                // pipeline a mixed burst: spmv on shard A and solve on
+                // shard B are in flight simultaneously
+                let ty = client.spmv(&ha, xs_a[t].clone(), Backend::Pars3 { p: 4 });
+                let ts = client.solve(&hb, bs_b[t].clone(), opts, Backend::Serial);
+                // collect in reverse submission order: the spmv ticket
+                // must resolve although nobody waited on it first
+                let solved = ts.wait().unwrap();
+                let y = ty.wait().unwrap();
+                for (got, want) in y.iter().zip(&want_y[t]) {
+                    assert!((got - want).abs() < 1e-10, "thread {t} spmv");
+                }
+                assert!(solved.converged);
+                for (got, want) in solved.x.iter().zip(&want_solve[t]) {
+                    assert!((got - want).abs() < 1e-10, "thread {t} solve");
+                }
+            });
+        }
+    });
+
+    // each shard built its kernel once, reused by all four threads
+    for shard in 0..svc.num_shards() {
+        let stats = client.cache_stats(shard).wait().unwrap();
+        assert_eq!(stats.built, 1, "shard {shard} must reuse its cached kernel");
+    }
     svc.shutdown();
 }
 

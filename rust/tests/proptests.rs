@@ -451,3 +451,56 @@ fn prop_symmetric_variant_works_through_pars3() {
         }
     });
 }
+
+#[test]
+fn prop_client_matches_coordinator_for_every_registered_backend() {
+    // the typed handle/ticket surface is a transport, not a different
+    // engine: for ANY matrix and EVERY registry-backed Backend variant,
+    // spmv and solve answers through a sharded `Service` + `Client`
+    // must match a direct single-owner `Coordinator` on the same config
+    use pars3::coordinator::Service;
+    use pars3::solver::MrsOptions;
+    for_all("client == coordinator", 6, |rng| {
+        let n = 40 + rng.gen_range_usize(0, 120);
+        let alpha = 1.5 + rng.gen_f64();
+        let coo = gen::small_test_matrix(n, rng.next_u64(), alpha);
+        let cfg = Config { shards: 1 + rng.gen_range_usize(0, 3), ..Config::default() };
+        let p = 1 + rng.gen_range_usize(0, 8);
+        let backends = [
+            Backend::Serial,
+            Backend::Csr,
+            Backend::Dgbmv,
+            Backend::Coloring { p },
+            Backend::Pars3 { p },
+        ];
+
+        let mut coord = Coordinator::new(cfg.clone());
+        let prep = coord.prepare("prop", &coo).unwrap();
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let opts = MrsOptions { alpha, max_iters: 200, tol: 1e-7 };
+
+        let svc = Service::start(cfg);
+        let client = svc.client();
+        let h = client.prepare("prop", coo).wait().unwrap();
+        // pipeline one spmv ticket per backend before collecting any
+        let tickets: Vec<_> =
+            backends.iter().map(|&b| client.spmv(&h, x.clone(), b)).collect();
+        for (&backend, t) in backends.iter().zip(tickets) {
+            let got = t.wait().unwrap();
+            let want = coord.spmv(&prep, &x, backend).unwrap();
+            for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "{backend:?} row {r}: {a} vs {b}");
+            }
+        }
+        // one solve through a randomly chosen backend
+        let backend = backends[rng.gen_range_usize(0, backends.len())];
+        let got = client.solve(&h, x.clone(), opts.clone(), backend).wait().unwrap();
+        let want = coord.solve(&prep, &x, &opts, backend).unwrap();
+        assert_eq!(got.converged, want.converged, "{backend:?}");
+        assert_eq!(got.iters, want.iters, "{backend:?}");
+        for (a, b) in got.x.iter().zip(&want.x) {
+            assert!((a - b).abs() < 1e-10, "{backend:?}");
+        }
+        svc.shutdown();
+    });
+}
