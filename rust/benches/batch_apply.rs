@@ -32,7 +32,7 @@ fn main() {
         };
         for &name in KERNEL_NAMES {
             // dgbmv's dense band array explodes on wide analogues (§2)
-            if name == "dgbmv" && prep.rcm_bw >= 2_000 {
+            if name == "dgbmv" && prep.reordered_bw >= 2_000 {
                 continue;
             }
             // prep.sss is Arc-shared: constructing a kernel per name no

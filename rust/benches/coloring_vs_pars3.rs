@@ -30,7 +30,7 @@ fn main() {
             m.name.to_string(),
             c.num_colors.to_string(),
             format!("{:.3e}", t.min),
-            prep.rcm_bw.to_string(),
+            prep.reordered_bw.to_string(),
         ]);
     }
     b.section(&format!(

@@ -19,7 +19,7 @@ fn main() {
         let coo = gen::small_test_matrix(n, cfg.seed, cfg.alpha);
         let t_prep = b.bench(&format!("preprocess/n={n}"), 1, 3, || {
             let p = coord.prepare("cx", &coo).unwrap();
-            std::hint::black_box(p.rcm_bw);
+            std::hint::black_box(p.reordered_bw);
         });
         let prep = coord.prepare("cx", &coo).unwrap();
         let t_conf = b.bench(&format!("conflict-analysis/n={n}"), 1, 3, || {

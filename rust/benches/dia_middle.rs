@@ -46,6 +46,7 @@ fn main() {
                 outer_bw: cfg.outer_bw,
                 threaded: cfg.threaded,
                 format: policy,
+                ..KernelConfig::default()
             };
             for name in ["serial_sss", "pars3"] {
                 let mut kern = build_from_sss(name, prep.sss.clone(), &kcfg).expect(name);

@@ -37,7 +37,7 @@ fn main() {
         rows.push(vec![
             m.name.to_string(),
             prep.bw_before.to_string(),
-            prep.rcm_bw.to_string(),
+            prep.reordered_bw.to_string(),
             format!("{:.3e}", t_orig.min),
             format!("{:.3e}", t_rcm.min),
             format!("{:.2}x", t_orig.min / t_rcm.min),
@@ -53,7 +53,7 @@ fn main() {
         rows.push(vec![
             "already_banded".into(),
             prep.bw_before.to_string(),
-            prep.rcm_bw.to_string(),
+            prep.reordered_bw.to_string(),
             "-".into(),
             "-".into(),
             "(structure preserved)".into(),

@@ -29,7 +29,7 @@ fn main() {
 
         let mut timings = Vec::new();
         for &name in &["serial_sss", "csr", "dgbmv"] {
-            if name == "dgbmv" && prep.rcm_bw >= 2_000 {
+            if name == "dgbmv" && prep.reordered_bw >= 2_000 {
                 continue;
             }
             let mut k = build_from_sss(name, prep.sss.clone(), &kcfg).expect(name);
@@ -83,10 +83,10 @@ fn main() {
     // mirrored triangles — instead of materializing the band again.
     let mut waste_rows = Vec::new();
     for (m, prep) in &suite {
-        if prep.rcm_bw >= 2_000 {
+        if prep.reordered_bw >= 2_000 {
             continue;
         }
-        let slots = (2 * prep.rcm_bw + 1) * prep.n;
+        let slots = (2 * prep.reordered_bw + 1) * prep.n;
         let filled = prep.n + 2 * prep.nnz_lower;
         let waste = 1.0 - filled as f64 / slots as f64;
         waste_rows.push(vec![m.name.to_string(), format!("{waste:.3}")]);

@@ -18,7 +18,7 @@ fn main() {
         let coo = skew::coo_from_pattern(m.n, &m.lower_edges, cfg.alpha, &mut rng);
         b.bench(&format!("preprocess/{}", m.name), 1, 3, || {
             let prep = coord.prepare(m.name, &coo).unwrap();
-            std::hint::black_box(prep.rcm_bw);
+            std::hint::black_box(prep.reordered_bw);
         });
     }
 

@@ -19,13 +19,14 @@ fn main() -> pars3::Result<()> {
     let coo = skew::coo_from_pattern(n, &edges, alpha, &mut rng);
     println!("matrix: n={n}, nnz={} (full COO)", coo.nnz());
 
-    // 2. One-time preprocessing: RCM reorder -> band -> 3-way split.
+    // 2. One-time preprocessing: reorder -> band -> 3-way split.
     let mut coord = Coordinator::new(Config::default());
     let prep = coord.prepare("quickstart", &coo)?;
     println!(
-        "RCM: bandwidth {} -> {}  | split: middle={} outer={} (split_bw={})",
+        "{}: bandwidth {} -> {}  | split: middle={} outer={} (split_bw={})",
+        prep.report.strategy,
         prep.bw_before,
-        prep.rcm_bw,
+        prep.reordered_bw,
         prep.split.nnz_middle(),
         prep.split.nnz_outer(),
         prep.split.split_bw

@@ -60,9 +60,10 @@ fn main() -> pars3::Result<()> {
     let mut coord = Coordinator::new(Config::default());
     let prep = coord.prepare("convection2d", &coo)?;
     println!(
-        "preprocessing: bandwidth {} -> {} (RCM), middle={} outer={}",
+        "preprocessing: bandwidth {} -> {} ({}), middle={} outer={}",
         prep.bw_before,
-        prep.rcm_bw,
+        prep.reordered_bw,
+        prep.report.strategy,
         prep.split.nnz_middle(),
         prep.split.nnz_outer()
     );

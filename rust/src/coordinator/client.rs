@@ -27,7 +27,7 @@
 //! # fn demo(coo_a: pars3::sparse::Coo, x: Vec<f64>) -> Result<(), pars3::coordinator::Pars3Error> {
 //! let svc = Service::start(Config::default());
 //! let client = svc.client();
-//! let h = client.prepare("a", coo_a).wait()?; // RCM + split, once
+//! let h = client.prepare("a", coo_a).wait()?; // reorder + split, once
 //! // pipelined: both requests are in flight before either wait
 //! let t1 = client.spmv(&h, x.clone(), Backend::Pars3 { p: 4 });
 //! let t2 = client.spmv(&h, x, Backend::Serial);
@@ -82,8 +82,65 @@ enum TicketState<T> {
     Pending(Receiver<Result<T, Pars3Error>>),
     /// Resolved at submission time (dead shard, bad handle).
     Ready(Result<T, Pars3Error>),
+    /// Aggregating several in-flight requests into one result
+    /// (e.g. [`Client::cache_stats_all`]).
+    Gather(Box<dyn Gather<T> + Send>),
     /// `try_wait` already surrendered the result.
     Taken,
+}
+
+/// A multi-part result source a [`Ticket`] can wrap: several in-flight
+/// requests resolving into one aggregate value.
+trait Gather<T> {
+    /// Block until every part resolves (first error wins).
+    fn wait(self: Box<Self>) -> Result<T, Pars3Error>;
+    /// Non-blocking poll: `Some` once every part has resolved (or any
+    /// part failed), `None` while at least one is still in flight.
+    fn poll(&mut self) -> Option<Result<T, Pars3Error>>;
+}
+
+/// [`Gather`] over a homogeneous set of tickets, resolving to the
+/// vector of their results in submission order.
+struct GatherAll<E> {
+    parts: Vec<GatherPart<E>>,
+}
+
+enum GatherPart<E> {
+    Pending(Ticket<E>),
+    Done(E),
+}
+
+impl<E: Send> Gather<Vec<E>> for GatherAll<E> {
+    fn wait(self: Box<Self>) -> Result<Vec<E>, Pars3Error> {
+        self.parts
+            .into_iter()
+            .map(|p| match p {
+                GatherPart::Pending(t) => t.wait(),
+                GatherPart::Done(v) => Ok(v),
+            })
+            .collect()
+    }
+
+    fn poll(&mut self) -> Option<Result<Vec<E>, Pars3Error>> {
+        for p in &mut self.parts {
+            if let GatherPart::Pending(t) = p {
+                match t.try_wait() {
+                    None => return None,
+                    Some(Ok(v)) => *p = GatherPart::Done(v),
+                    Some(Err(e)) => return Some(Err(e)),
+                }
+            }
+        }
+        let parts = std::mem::take(&mut self.parts);
+        let all: Vec<E> = parts
+            .into_iter()
+            .map(|p| match p {
+                GatherPart::Done(v) => v,
+                GatherPart::Pending(_) => unreachable!("all parts resolved above"),
+            })
+            .collect();
+        Some(Ok(all))
+    }
 }
 
 /// A one-shot future for a submitted request.
@@ -110,6 +167,23 @@ impl<T> Ticket<T> {
         Self { shard, state: TicketState::Ready(result) }
     }
 
+    /// Aggregate a set of already-submitted tickets into one ticket
+    /// resolving to their results in order (first error wins). The
+    /// underlying requests are all in flight — and executing on their
+    /// shards concurrently — before this returns. The combined ticket
+    /// reports shard 0 (it spans every shard).
+    pub(crate) fn gather_all<E>(parts: Vec<Ticket<E>>) -> Ticket<Vec<E>>
+    where
+        E: Send + 'static,
+    {
+        Ticket {
+            shard: 0,
+            state: TicketState::Gather(Box::new(GatherAll {
+                parts: parts.into_iter().map(GatherPart::Pending).collect(),
+            })),
+        }
+    }
+
     /// The shard serving this request.
     pub fn shard(&self) -> usize {
         self.shard
@@ -125,6 +199,7 @@ impl<T> Ticket<T> {
                 .recv()
                 .unwrap_or(Err(Pars3Error::WorkerPoisoned { shard: self.shard })),
             TicketState::Ready(result) => result,
+            TicketState::Gather(g) => g.wait(),
             TicketState::Taken => Err(Pars3Error::TicketConsumed),
         }
     }
@@ -145,6 +220,13 @@ impl<T> Ticket<T> {
                 }
             },
             TicketState::Ready(result) => Some(result),
+            TicketState::Gather(mut g) => match g.poll() {
+                Some(result) => Some(result),
+                None => {
+                    self.state = TicketState::Gather(g);
+                    None
+                }
+            },
             TicketState::Taken => Some(Err(Pars3Error::TicketConsumed)),
         }
     }
@@ -154,18 +236,28 @@ impl<T> Ticket<T> {
 type ReplyPair<T> = (Sender<Result<T, Pars3Error>>, Receiver<Result<T, Pars3Error>>);
 
 /// Shared state between the [`Service`](crate::coordinator::Service)
-/// and every [`Client`] clone: the shard request queues and the
-/// round-robin placement counter for new matrices.
+/// and every [`Client`] clone: the shard request queues, their
+/// occupancy gauges, and the round-robin placement counter for new
+/// matrices.
 pub(crate) struct ServiceShared {
     pub(crate) shards: Vec<SyncSender<ShardMsg>>,
+    /// Per-shard queue-occupancy gauges: incremented at submission,
+    /// decremented by the worker as it dequeues. Reported by
+    /// [`Client::cache_stats`]/[`Client::cache_stats_all`].
+    pub(crate) depths: Vec<Arc<std::sync::atomic::AtomicUsize>>,
     /// Process-unique id stamped into every handle this service mints.
     pub(crate) service_id: u64,
     next_shard: AtomicUsize,
 }
 
 impl ServiceShared {
-    pub(crate) fn new(shards: Vec<SyncSender<ShardMsg>>, service_id: u64) -> Self {
-        Self { shards, service_id, next_shard: AtomicUsize::new(0) }
+    pub(crate) fn new(
+        shards: Vec<SyncSender<ShardMsg>>,
+        depths: Vec<Arc<std::sync::atomic::AtomicUsize>>,
+        service_id: u64,
+    ) -> Self {
+        debug_assert_eq!(shards.len(), depths.len());
+        Self { shards, depths, service_id, next_shard: AtomicUsize::new(0) }
     }
 }
 
@@ -200,9 +292,16 @@ impl Client {
                 Err(Pars3Error::UnknownShard { shard, shards: self.inner.shards.len() }),
             );
         };
+        // count the message as queued before it can possibly be
+        // dequeued; a failed send (dead worker) never enqueued, so undo
+        let gauge = &self.inner.depths[shard];
+        gauge.fetch_add(1, Ordering::Relaxed);
         match queue.send(msg) {
             Ok(()) => Ticket::pending(shard, rx),
-            Err(_) => Ticket::ready(shard, Err(Pars3Error::WorkerPoisoned { shard })),
+            Err(_) => {
+                gauge.fetch_sub(1, Ordering::Relaxed);
+                Ticket::ready(shard, Err(Pars3Error::WorkerPoisoned { shard }))
+            }
         }
     }
 
@@ -225,8 +324,10 @@ impl Client {
         Ok(())
     }
 
-    /// Preprocess and register a matrix (RCM reorder → SSS → 3-way
-    /// split) on a round-robin-chosen shard. The ticket resolves to the
+    /// Preprocess and register a matrix (reorder with the service's
+    /// configured strategy — `Auto` by default, which may decline to
+    /// reorder — then SSS conversion and the 3-way split) on a
+    /// round-robin-chosen shard. The ticket resolves to the
     /// new [`MatrixHandle`] — submission returns immediately, so a
     /// client can overlap the (expensive) prepare with serving requests
     /// against already-registered matrices.
@@ -268,7 +369,7 @@ impl Client {
         self.dispatch(handle.shard, msg, rx)
     }
 
-    /// Submit one multiply `y = A x` (RCM order, like
+    /// Submit one multiply `y = A x` (reordered space, like
     /// [`Coordinator::spmv`](crate::coordinator::Coordinator::spmv)).
     pub fn spmv(&self, handle: &MatrixHandle, x: Vec<f64>, backend: Backend) -> Ticket<Vec<f64>> {
         if let Err(t) = self.guard(handle) {
@@ -354,7 +455,9 @@ impl Client {
     }
 
     /// Query the preprocessing metadata of the matrix under `handle`
-    /// (dimension, stored NNZ, pre/post-RCM bandwidth — what the old
+    /// (dimension, stored NNZ, pre/post-reorder bandwidth and the
+    /// full [`ReorderReport`](crate::graph::reorder::ReorderReport) —
+    /// what the old
     /// prepare response reported inline).
     pub fn describe(&self, handle: &MatrixHandle) -> Ticket<MatrixInfo> {
         if let Err(t) = self.guard(handle) {
@@ -392,10 +495,22 @@ impl Client {
     }
 
     /// Query one shard's kernel-cache counters (the amortization
-    /// metric: `built` stalling while requests flow means cache hits).
+    /// metric: `built` stalling while requests flow means cache hits)
+    /// plus its queue depth at report time.
     pub fn cache_stats(&self, shard: usize) -> Ticket<CacheStats> {
         let (tx, rx) = Self::reply();
         self.dispatch(shard, ShardMsg::CacheStats { reply: tx }, rx)
+    }
+
+    /// Query **every** shard's cache/queue counters in one call: the
+    /// per-shard requests are all dispatched (and execute concurrently)
+    /// before this returns, and the ticket resolves to one
+    /// [`CacheStats`] per shard in shard order. The metrics-scrape
+    /// entry point for a monitoring consumer.
+    pub fn cache_stats_all(&self) -> Ticket<Vec<CacheStats>> {
+        let parts: Vec<Ticket<CacheStats>> =
+            (0..self.num_shards()).map(|s| self.cache_stats(s)).collect();
+        Ticket::gather_all(parts)
     }
 }
 
@@ -427,8 +542,35 @@ mod tests {
     }
 
     #[test]
+    fn gathered_tickets_resolve_in_order_with_first_error_winning() {
+        // all parts ready: wait() returns them in order
+        let t = Ticket::gather_all(vec![Ticket::ready(0, Ok(1u32)), Ticket::ready(1, Ok(2))]);
+        assert_eq!(t.wait(), Ok(vec![1, 2]));
+
+        // try_wait: None while any part is in flight, Some when all land
+        let (tx, rx) = channel();
+        let mut t =
+            Ticket::gather_all(vec![Ticket::ready(0, Ok(5u32)), Ticket::pending(1, rx)]);
+        assert!(t.try_wait().is_none());
+        tx.send(Ok(6)).unwrap();
+        assert_eq!(t.try_wait(), Some(Ok(vec![5, 6])));
+        assert_eq!(t.try_wait(), Some(Err(Pars3Error::TicketConsumed)));
+
+        // a failed part resolves the whole gather to its error
+        let t = Ticket::gather_all(vec![
+            Ticket::ready(0, Ok(1u32)),
+            Ticket::ready(1, Err(Pars3Error::TicketConsumed)),
+        ]);
+        assert_eq!(t.wait(), Err(Pars3Error::TicketConsumed));
+
+        // zero parts: an empty aggregate, not a hang
+        let t: Ticket<Vec<u32>> = Ticket::gather_all(Vec::new());
+        assert_eq!(t.wait(), Ok(Vec::new()));
+    }
+
+    #[test]
     fn out_of_range_shard_resolves_to_unknown_shard() {
-        let shared = Arc::new(ServiceShared::new(Vec::new(), 7));
+        let shared = Arc::new(ServiceShared::new(Vec::new(), Vec::new(), 7));
         let client = Client::new(shared);
         let fake = MatrixHandle { service: 7, shard: 5, slot: 0, generation: 1 };
         let err = client.spmv(&fake, vec![1.0], Backend::Serial).wait().unwrap_err();
@@ -437,7 +579,7 @@ mod tests {
 
     #[test]
     fn foreign_handles_are_rejected_before_dispatch() {
-        let client = Client::new(Arc::new(ServiceShared::new(Vec::new(), 7)));
+        let client = Client::new(Arc::new(ServiceShared::new(Vec::new(), Vec::new(), 7)));
         let alien = MatrixHandle { service: 8, shard: 0, slot: 0, generation: 1 };
         let err = client.spmv(&alien, vec![1.0], Backend::Serial).wait().unwrap_err();
         assert_eq!(err, Pars3Error::ForeignHandle { handle_service: 8, service: 7 });

@@ -13,12 +13,15 @@
 //! artifacts_dir = "artifacts"
 //! threaded = false
 //! format = "auto"
+//! reorder = "auto"
+//! reorder_min_gain = 0.0
 //! shards = 2
 //! queue_depth = 64
 //! max_cached_kernels = 32
 //! seed = 42
 //! ```
 
+use crate::graph::reorder::ReorderPolicy;
 use crate::kernel::FormatPolicy;
 use crate::Result;
 use anyhow::{bail, Context};
@@ -42,6 +45,14 @@ pub struct Config {
     /// Band-interior storage policy: `auto` (fill-ratio heuristic),
     /// `dia` (force hybrid diagonal-major) or `sss` (paper layout).
     pub format: FormatPolicy,
+    /// Reordering strategy run by `prepare`: `auto` (measure the
+    /// candidates, decline when nothing clears the gain threshold),
+    /// `rcm`, `rcm-bicriteria` (RCM++ start nodes) or `natural`.
+    pub reorder: ReorderPolicy,
+    /// `auto`'s decline gate: the fractional bandwidth improvement a
+    /// reordering must clear over the natural order to be accepted
+    /// (`0.0` = any strict improvement; must be in `[0, 1)`).
+    pub reorder_min_gain: f64,
     /// Worker shards in the request service (each owns a `Coordinator`
     /// and its kernel cache; matrices are assigned round-robin).
     pub shards: usize,
@@ -66,6 +77,8 @@ impl Default for Config {
             artifacts_dir: PathBuf::from("artifacts"),
             threaded: false,
             format: FormatPolicy::Auto,
+            reorder: ReorderPolicy::Auto,
+            reorder_min_gain: 0.0,
             shards: 2,
             queue_depth: 64,
             max_cached_kernels: 32,
@@ -105,6 +118,12 @@ impl Config {
                 "format" => {
                     cfg.format = value.trim_matches('"').parse().context("format")?;
                 }
+                "reorder" => {
+                    cfg.reorder = value.trim_matches('"').parse().context("reorder")?;
+                }
+                "reorder_min_gain" => {
+                    cfg.reorder_min_gain = value.parse().context("reorder_min_gain")?;
+                }
                 "shards" => cfg.shards = value.parse().context("shards")?,
                 "queue_depth" => cfg.queue_depth = value.parse().context("queue_depth")?,
                 "max_cached_kernels" => {
@@ -137,6 +156,9 @@ impl Config {
         if cfg.queue_depth == 0 {
             bail!("queue_depth must be >= 1");
         }
+        if !(0.0..1.0).contains(&cfg.reorder_min_gain) {
+            bail!("reorder_min_gain must be in [0, 1)");
+        }
         Ok(cfg)
     }
 }
@@ -154,7 +176,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let c = Config::parse(
-            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
+            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nreorder = \"rcm-bicriteria\"\nreorder_min_gain = 0.1\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
         )
         .unwrap();
         assert_eq!(c.scale, 0.5);
@@ -164,12 +186,18 @@ mod tests {
         assert_eq!(c.artifacts_dir, PathBuf::from("art"));
         assert!(c.threaded);
         assert_eq!(c.format, FormatPolicy::Dia);
+        assert_eq!(c.reorder, ReorderPolicy::RcmBiCriteria);
+        assert_eq!(c.reorder_min_gain, 0.1);
         assert_eq!(c.shards, 4);
         assert_eq!(c.queue_depth, 16);
         assert_eq!(c.max_cached_kernels, 8);
         assert_eq!(c.seed, 7);
         // bare (unquoted) values parse too
         assert_eq!(Config::parse("format = sss").unwrap().format, FormatPolicy::Sss);
+        assert_eq!(
+            Config::parse("reorder = natural").unwrap().reorder,
+            ReorderPolicy::Natural
+        );
     }
 
     #[test]
@@ -179,6 +207,9 @@ mod tests {
         assert!(Config::parse("ranks = []").is_err());
         assert!(Config::parse("scale 0.5").is_err());
         assert!(Config::parse("format = \"csr\"").is_err());
+        assert!(Config::parse("reorder = \"symrcm\"").is_err());
+        assert!(Config::parse("reorder_min_gain = 1.5").is_err());
+        assert!(Config::parse("reorder_min_gain = -0.1").is_err());
         assert!(Config::parse("shards = 0").is_err());
         assert!(Config::parse("queue_depth = 0").is_err());
     }

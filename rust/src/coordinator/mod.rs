@@ -1,5 +1,5 @@
 //! L3 coordinator: the end-to-end pipeline
-//! (ingest → RCM reorder → 3-way split → conflict analysis → distribute
+//! (ingest → reorder (pluggable strategy) → 3-way split → conflict analysis → distribute
 //! → repeated SpMV / MRS solve), plus config, the crate-wide typed
 //! error, and the sharded request service with its handle-based,
 //! pipelined client API.

@@ -1,6 +1,6 @@
 //! The preprocessing + execution pipeline.
 //!
-//! Preprocessing (RCM → SSS → 3-way split) happens once per matrix in
+//! Preprocessing (reorder → SSS → 3-way split) happens once per matrix in
 //! [`Coordinator::prepare`]; every multiply/solve after that constructs
 //! its kernel through the unified registry
 //! ([`crate::kernel::registry`]) — there is no per-backend construction
@@ -10,6 +10,7 @@
 
 use crate::coordinator::error::Pars3Error;
 use crate::coordinator::Config;
+use crate::graph::reorder::ReorderReport;
 use crate::kernel::pars3::Pars3Plan;
 use crate::kernel::registry::{self, KernelConfig};
 use crate::kernel::{ConflictMap, FormatPolicy, Split3, Spmv, VecBatch};
@@ -77,13 +78,18 @@ pub struct Prepared {
     pub n: usize,
     /// Stored lower NNZ.
     pub nnz_lower: usize,
-    /// Bandwidth before RCM.
+    /// Bandwidth before reordering.
     pub bw_before: usize,
-    /// Bandwidth after RCM (Table 1's "RCM Bandwith").
-    pub rcm_bw: usize,
-    /// The RCM permutation used (`perm[old] = new`).
+    /// Bandwidth after reordering (Table 1's "RCM Bandwith" when the
+    /// chosen strategy is RCM-family).
+    pub reordered_bw: usize,
+    /// The reordering permutation used (`perm[old] = new`).
     pub perm: Vec<u32>,
-    /// RCM-ordered matrix in SSS form, shared (not cloned) with every
+    /// Instrumentation from the reordering run: strategy chosen,
+    /// bandwidth/profile before/after, per-component stats, candidate
+    /// scores (see [`crate::graph::reorder`]).
+    pub report: ReorderReport,
+    /// Reordered matrix in SSS form, shared (not cloned) with every
     /// kernel built from this preparation.
     pub sss: Arc<Sss>,
     /// The 3-way split of the band, shared with every PARS3 plan.
@@ -156,32 +162,35 @@ impl Coordinator {
         }
     }
 
-    /// Preprocess a full COO matrix: RCM reorder (Θ(NNZ)), convert to
-    /// SSS, 3-way split at the configured outer bandwidth.
+    /// Preprocess a full COO matrix: reorder with the configured
+    /// strategy (Θ(NNZ) per candidate), convert to SSS, 3-way split at
+    /// the configured outer bandwidth.
     ///
-    /// Implements the paper's §4.1 future-work note — "a future work
+    /// The default [`crate::graph::reorder::ReorderPolicy::Auto`]
+    /// implements the paper's §4.1 future-work note — "a future work
     /// that can recognize and exploit original matrix patterns": if the
-    /// input is *already* banded at least as tightly as RCM achieves
-    /// (Fig. 5's pre-banded case), the identity ordering is kept and
+    /// input is *already* banded at least as tightly as the best
+    /// reordering achieves (Fig. 5's pre-banded case, gated by
+    /// [`Config::reorder_min_gain`]), the identity ordering is kept and
     /// the permutation cost disappears from the pipeline.
     pub fn prepare(&self, name: &str, coo: &Coo) -> Result<Prepared, Pars3Error> {
         let bw_before = coo.bandwidth();
-        let (perm, sss) = registry::reorder_to_sss(coo)?;
-        let rcm_bw = sss.bandwidth();
-        let split = Arc::new(Split3::with_outer_bw_format(
-            &sss,
-            self.cfg.outer_bw,
-            self.cfg.format,
-        )?);
+        let (perm, sss, report) =
+            registry::reorder_to_sss(coo, self.cfg.reorder, self.cfg.reorder_min_gain)?;
+        let reordered_bw = sss.bandwidth();
+        let mut split =
+            Split3::with_outer_bw_format(&sss, self.cfg.outer_bw, self.cfg.format)?;
+        split.reorder_strategy = Some(report.strategy);
         Ok(Prepared {
             name: name.to_string(),
             n: sss.n,
             nnz_lower: sss.nnz_lower(),
             bw_before,
-            rcm_bw,
+            reordered_bw,
             perm,
+            report,
             sss: Arc::new(sss),
-            split,
+            split: Arc::new(split),
         })
     }
 
@@ -204,6 +213,8 @@ impl Coordinator {
             outer_bw: self.cfg.outer_bw,
             threaded: self.cfg.threaded,
             format: self.cfg.format,
+            reorder: self.cfg.reorder,
+            reorder_min_gain: self.cfg.reorder_min_gain,
         };
         match backend {
             // reuse the 3-way split `prepare` already computed instead
@@ -308,7 +319,8 @@ impl Coordinator {
         self.kernels.clear();
     }
 
-    /// One multiply `y = A x` on the chosen backend (x/y in RCM order).
+    /// One multiply `y = A x` on the chosen backend (x/y in the
+    /// reordered space).
     /// Uses the kernel cache: repeated calls against the same
     /// preparation reuse one kernel (and, when threaded, its persistent
     /// rank threads).
@@ -416,15 +428,18 @@ impl Coordinator {
     }
 
     /// Pack a prepared band into the f32 DIA inputs of an artifact.
+    /// The band width comes from the post-reorder report's bandwidth
+    /// ([`Prepared::reordered_bw`]) — whatever strategy produced the
+    /// band, not specifically RCM.
     #[cfg(feature = "pjrt")]
     fn pack_dia(&mut self, prep: &Prepared, kind: &str) -> Result<(String, Vec<f32>, f64, usize)> {
-        if prep.rcm_bw == 0 {
+        if prep.reordered_bw == 0 {
             bail!("matrix has empty band");
         }
-        let dia = DiaBand::from_sss(&prep.sss, prep.rcm_bw)
+        let dia = DiaBand::from_sss(&prep.sss, prep.reordered_bw)
             .context("PJRT path requires a constant-diagonal (shifted) matrix")?;
         let rt = self.runtime()?;
-        let spec = rt.manifest().best_fit(kind, prep.n, prep.rcm_bw)?;
+        let spec = rt.manifest().best_fit(kind, prep.n, prep.reordered_bw)?;
         let (name, n_pad, beta_pad) = (spec.name.clone(), spec.n, spec.beta);
         let lo = dia.to_f32_padded(beta_pad, n_pad)?;
         Ok((name, lo, dia.alpha, n_pad))
@@ -549,8 +564,53 @@ mod tests {
         let coo = gen::small_test_matrix(300, 11, 2.0);
         let c = coordinator();
         let prep = c.prepare("t", &coo).unwrap();
-        assert!(prep.rcm_bw <= prep.bw_before);
+        assert!(prep.reordered_bw <= prep.bw_before);
         assert_eq!(prep.nnz_lower, prep.split.nnz_middle() + prep.split.nnz_outer());
+        // the reorder report rides along and agrees with the pipeline
+        assert_eq!(prep.report.bw_after, prep.reordered_bw);
+        assert_eq!(prep.split.reorder_strategy, Some(prep.report.strategy));
+        assert!(!prep.report.components.is_empty());
+    }
+
+    #[test]
+    fn prepare_honors_the_configured_reorder_strategy() {
+        use crate::graph::reorder::ReorderPolicy;
+        let coo = gen::small_test_matrix(200, 30, 2.0);
+        let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.17).sin()).collect();
+        let mut answers: Vec<Vec<f64>> = Vec::new();
+        for policy in [
+            ReorderPolicy::Natural,
+            ReorderPolicy::Rcm,
+            ReorderPolicy::RcmBiCriteria,
+            ReorderPolicy::Auto,
+        ] {
+            let mut c = Coordinator::new(Config { reorder: policy, ..Config::default() });
+            let prep = c.prepare("t", &coo).unwrap();
+            assert_eq!(prep.report.requested, policy);
+            if policy == ReorderPolicy::Natural {
+                assert_eq!(prep.report.strategy, "natural");
+                assert_eq!(prep.reordered_bw, prep.bw_before);
+            } else {
+                assert!(prep.reordered_bw <= prep.bw_before, "{policy}");
+            }
+            // every strategy serves the same operator: permute x into
+            // the strategy's ordering, multiply, un-permute the result
+            let mut xp = vec![0.0; 200];
+            for (old, &new) in prep.perm.iter().enumerate() {
+                xp[new as usize] = x[old];
+            }
+            let yp = c.spmv(&prep, &xp, Backend::Pars3 { p: 3 }).unwrap();
+            let mut y = vec![0.0; 200];
+            for (old, &new) in prep.perm.iter().enumerate() {
+                y[old] = yp[new as usize];
+            }
+            answers.push(y);
+        }
+        for y in &answers[1..] {
+            for (r, (a, b)) in y.iter().zip(&answers[0]).enumerate() {
+                assert!((a - b).abs() < 1e-9, "row {r}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

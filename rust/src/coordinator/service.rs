@@ -22,10 +22,11 @@
 use crate::coordinator::client::{Client, MatrixHandle, ServiceShared};
 use crate::coordinator::error::Pars3Error;
 use crate::coordinator::{Backend, Config, Coordinator, Prepared};
+use crate::graph::reorder::ReorderReport;
 use crate::kernel::VecBatch;
 use crate::solver::mrs::{MrsOptions, MrsResult};
 use crate::sparse::Coo;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -35,9 +36,9 @@ use std::thread::JoinHandle;
 /// slot table (it fails `ForeignHandle` at the client instead).
 static NEXT_SERVICE_ID: AtomicU64 = AtomicU64::new(1);
 
-/// One shard's kernel-cache counters (`built` stalling while requests
-/// flow is the amortization metric: kernels are being reused, not
-/// reconstructed).
+/// One shard's kernel-cache and queue counters (`built` stalling while
+/// requests flow is the amortization metric: kernels are being reused,
+/// not reconstructed; `queue_depth` is the load gauge).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CacheStats {
     /// The reporting shard.
@@ -47,12 +48,18 @@ pub struct CacheStats {
     /// Kernels ever constructed (cache misses, including rebuilds
     /// after LRU eviction).
     pub built: usize,
+    /// Requests submitted to this shard but not yet dequeued when the
+    /// shard produced this report — the backpressure gauge. Counts
+    /// messages in the bounded queue **plus** producers currently
+    /// blocked in `send`, so under backpressure it can read slightly
+    /// above [`Config::queue_depth`].
+    pub queue_depth: usize,
 }
 
 /// Preprocessing metadata for a registered matrix (what the one-time
-/// `prepare` computed: dimension, stored NNZ, and the RCM bandwidth
-/// reduction — Table 1's headline numbers). Query via
-/// [`Client::describe`](crate::coordinator::Client::describe).
+/// `prepare` computed: dimension, stored NNZ, the bandwidth reduction —
+/// Table 1's headline numbers — and the full reordering report). Query
+/// via [`Client::describe`](crate::coordinator::Client::describe).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct MatrixInfo {
     /// Registration name.
@@ -61,10 +68,14 @@ pub struct MatrixInfo {
     pub n: usize,
     /// Stored lower-triangle NNZ.
     pub nnz_lower: usize,
-    /// Bandwidth before RCM.
+    /// Bandwidth before reordering.
     pub bw_before: usize,
-    /// Bandwidth after RCM.
-    pub rcm_bw: usize,
+    /// Bandwidth after reordering.
+    pub reordered_bw: usize,
+    /// The reordering run's instrumentation: strategy chosen,
+    /// bandwidth/profile before/after, per-component stats, candidate
+    /// scores.
+    pub reorder: ReorderReport,
 }
 
 /// A request routed to one shard worker. Each variant carries its own
@@ -156,13 +167,22 @@ fn resolve<'s>(
     s.prep.as_ref().ok_or(Pars3Error::UnknownMatrix { shard, slot })
 }
 
-fn shard_worker(shard: usize, service: u64, cfg: Config, rx: Receiver<ShardMsg>) {
+fn shard_worker(
+    shard: usize,
+    service: u64,
+    cfg: Config,
+    rx: Receiver<ShardMsg>,
+    depth: Arc<AtomicUsize>,
+) {
     let mut coord = Coordinator::new(cfg);
     let mut slots: Vec<Slot> = Vec::new();
     // released slot indices, reused by later prepares (their generation
     // sequence continues, so freed handles never alias the new matrix)
     let mut free: Vec<usize> = Vec::new();
     while let Ok(msg) = rx.recv() {
+        // the dequeued message no longer occupies the queue (the
+        // counter was incremented by the client at submission)
+        depth.fetch_sub(1, Ordering::Relaxed);
         match msg {
             ShardMsg::Shutdown => break,
             ShardMsg::Prepare { replace, name, coo, reply } => {
@@ -204,7 +224,8 @@ fn shard_worker(shard: usize, service: u64, cfg: Config, rx: Receiver<ShardMsg>)
                     n: prep.n,
                     nnz_lower: prep.nnz_lower,
                     bw_before: prep.bw_before,
-                    rcm_bw: prep.rcm_bw,
+                    reordered_bw: prep.reordered_bw,
+                    reorder: prep.report.clone(),
                 });
                 let _ = reply.send(result);
             }
@@ -260,7 +281,8 @@ fn shard_worker(shard: usize, service: u64, cfg: Config, rx: Receiver<ShardMsg>)
             }
             ShardMsg::CacheStats { reply } => {
                 let (cached, built) = coord.kernel_cache_stats();
-                let _ = reply.send(Ok(CacheStats { shard, cached, built }));
+                let queue_depth = depth.load(Ordering::Relaxed);
+                let _ = reply.send(Ok(CacheStats { shard, cached, built, queue_depth }));
             }
         }
     }
@@ -284,16 +306,20 @@ impl Service {
         let shards = cfg.shards.max(1);
         let depth = cfg.queue_depth.max(1);
         let mut senders = Vec::with_capacity(shards);
+        let mut depths = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
             let (tx, rx) = sync_channel::<ShardMsg>(depth);
+            let gauge = Arc::new(AtomicUsize::new(0));
             let worker_cfg = cfg.clone();
+            let worker_gauge = gauge.clone();
             workers.push(std::thread::spawn(move || {
-                shard_worker(shard, service_id, worker_cfg, rx)
+                shard_worker(shard, service_id, worker_cfg, rx, worker_gauge)
             }));
             senders.push(tx);
+            depths.push(gauge);
         }
-        Self { shared: Arc::new(ServiceShared::new(senders, service_id)), workers }
+        Self { shared: Arc::new(ServiceShared::new(senders, depths, service_id)), workers }
     }
 
     /// A new client over this service's shard pool. Clients (and their
@@ -309,11 +335,17 @@ impl Service {
     }
 
     fn stop(&mut self) {
-        for tx in &self.shared.shards {
+        for (tx, gauge) in self.shared.shards.iter().zip(&self.shared.depths) {
+            // the worker decrements the gauge for every message it
+            // dequeues, so count the shutdown too (send failure means
+            // the worker is gone and will never decrement — undo)
+            gauge.fetch_add(1, Ordering::Relaxed);
             // blocks only while the worker is alive and its queue is
             // full (it is draining); errors mean the worker already
             // exited — both are fine
-            let _ = tx.send(ShardMsg::Shutdown);
+            if tx.send(ShardMsg::Shutdown).is_err() {
+                gauge.fetch_sub(1, Ordering::Relaxed);
+            }
         }
         for w in std::mem::take(&mut self.workers) {
             let _ = w.join();
@@ -353,7 +385,12 @@ mod tests {
         // queryable through the handle
         let info = client.describe(&h).wait().unwrap();
         assert_eq!((info.name.as_str(), info.n), ("m", 120));
-        assert!(info.nnz_lower > 0 && info.rcm_bw <= info.bw_before);
+        assert!(info.nnz_lower > 0 && info.reordered_bw <= info.bw_before);
+        // the reorder report rides along: the default Auto policy
+        // measured every candidate and chose one of them
+        assert_eq!(info.reorder.bw_after, info.reordered_bw);
+        assert_eq!(info.reorder.candidates.len(), 3);
+        assert_eq!(info.reorder.candidates.iter().filter(|c| c.chosen).count(), 1);
 
         let x: Vec<f64> = (0..120).map(|i| i as f64 * 0.01).collect();
         let y = client.spmv(&h, x.clone(), Backend::Pars3 { p: 4 }).wait().unwrap();
@@ -556,6 +593,43 @@ mod tests {
         client.spmv(&ha, xa, Backend::Serial).wait().unwrap(); // rebuild after eviction
         let s = client.cache_stats(0).wait().unwrap();
         assert_eq!((s.cached, s.built), (1, 3), "evicted kernel must rebuild");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cache_stats_all_aggregates_every_shard() {
+        let svc = Service::start(Config { shards: 3, ..Config::default() });
+        let client = svc.client();
+        let h = client.prepare("m", gen::small_test_matrix(80, 40, 2.0)).wait().unwrap();
+        client.spmv(&h, vec![1.0; 80], Backend::Serial).wait().unwrap();
+
+        let all = client.cache_stats_all().wait().unwrap();
+        assert_eq!(all.len(), 3, "one entry per shard");
+        for (i, s) in all.iter().enumerate() {
+            assert_eq!(s.shard, i, "entries arrive in shard order");
+            // idle service: every queue has drained
+            assert_eq!(s.queue_depth, 0);
+        }
+        // exactly the owning shard built a kernel
+        assert_eq!(all.iter().map(|s| s.built).sum::<usize>(), 1);
+        assert_eq!(all[h.shard()].built, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn describe_reports_the_configured_strategy() {
+        use crate::graph::reorder::ReorderPolicy;
+        let svc = Service::start(Config {
+            shards: 1,
+            reorder: ReorderPolicy::Natural,
+            ..Config::default()
+        });
+        let client = svc.client();
+        let h = client.prepare("m", gen::small_test_matrix(70, 41, 2.0)).wait().unwrap();
+        let info = client.describe(&h).wait().unwrap();
+        assert_eq!(info.reorder.requested, ReorderPolicy::Natural);
+        assert_eq!(info.reorder.strategy, "natural");
+        assert_eq!(info.reordered_bw, info.bw_before);
         svc.shutdown();
     }
 

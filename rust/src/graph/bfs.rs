@@ -22,6 +22,15 @@ impl LevelStructure {
     pub fn width(&self) -> usize {
         self.levels.iter().map(Vec::len).max().unwrap_or(0)
     }
+
+    /// The deepest non-empty level (`None` for a degenerate structure)
+    /// — the candidate pool of the start-node finders.
+    pub fn last_level(&self) -> Option<&[u32]> {
+        match self.levels.last() {
+            Some(l) if !l.is_empty() => Some(l),
+            _ => None,
+        }
+    }
 }
 
 /// BFS from `root`, returning the level structure of its component.

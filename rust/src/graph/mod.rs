@@ -1,15 +1,22 @@
-//! Graph substrate: adjacency structure, BFS level sets, pseudo-peripheral
-//! vertex finding, Reverse Cuthill-McKee reordering, and greedy coloring
-//! (the building block of the Elafrou et al. baseline).
+//! Graph substrate: adjacency structure, BFS level sets, start-node
+//! finders (George-Liu and the RCM++ bi-criteria variant), Reverse
+//! Cuthill-McKee reordering, the pluggable reordering strategies
+//! ([`reorder`]), and greedy coloring (the building block of the
+//! Elafrou et al. baseline).
 //!
 //! The paper uses MATLAB's `symrcm`; `rcm` here is the from-scratch
-//! equivalent (George-Liu pseudo-peripheral start + CM + reversal).
+//! equivalent (George-Liu pseudo-peripheral start + CM + reversal),
+//! and [`reorder`] wraps it — plus the bi-criteria variant, the
+//! identity, and a measured `Auto` — behind one strategy trait with
+//! per-component execution and a [`reorder::ReorderReport`] per run.
 
 pub mod adj;
 pub mod bfs;
 pub mod coloring;
 pub mod peripheral;
 pub mod rcm;
+pub mod reorder;
 
 pub use adj::Adjacency;
 pub use rcm::rcm;
+pub use reorder::{ReorderPolicy, ReorderReport, ReorderStrategy};

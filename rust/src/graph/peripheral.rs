@@ -1,22 +1,41 @@
-//! George-Liu pseudo-peripheral vertex finder.
+//! Start-node finders for RCM-family reorderings.
 //!
 //! RCM quality depends heavily on the starting vertex: starting from a
 //! vertex of (near-)maximal eccentricity produces long, narrow level
-//! structures and hence small bandwidth. The George-Liu iteration walks
-//! to a minimum-degree vertex of the last BFS level until the
-//! eccentricity stops growing.
+//! structures and hence small bandwidth. Two finders live here:
+//!
+//! * [`pseudo_peripheral`] — the classic George-Liu iteration, which
+//!   walks to a minimum-degree vertex of the last BFS level until the
+//!   eccentricity (level-structure *height*) stops growing.
+//! * [`bi_criteria_start`] — the RCM++-style refinement (Hou et al.):
+//!   a shortlist of low-degree last-level candidates is scored by
+//!   height **and** width (the max level size lower-bounds the
+//!   achievable bandwidth), accepting a candidate that grows the
+//!   height *or* narrows the structure at equal height.
 
-use crate::graph::bfs::level_structure;
+use crate::graph::bfs::{level_structure, LevelStructure};
 use crate::graph::Adjacency;
+
+/// Candidate-shortlist size for [`bi_criteria_start`] (RCM++ evaluates
+/// a few low-degree last-level vertices, not just the minimum-degree
+/// one; a handful captures most of the win at bounded cost).
+const BI_CRITERIA_CANDIDATES: usize = 8;
 
 /// Find a pseudo-peripheral vertex of `start`'s component.
 pub fn pseudo_peripheral(g: &Adjacency, start: u32) -> u32 {
+    pseudo_peripheral_ls(g, start).0
+}
+
+/// [`pseudo_peripheral`] returning the final root's level structure
+/// too (callers that score the pick reuse it instead of re-running the
+/// BFS).
+pub fn pseudo_peripheral_ls(g: &Adjacency, start: u32) -> (u32, LevelStructure) {
     let mut v = start;
     let mut ls = level_structure(g, v);
     loop {
-        let last = match ls.levels.last() {
-            Some(l) if !l.is_empty() => l,
-            _ => return v,
+        let last = match ls.last_level() {
+            Some(l) => l,
+            None => return (v, ls),
         };
         // minimum-degree vertex of the last level
         let u = *last.iter().min_by_key(|&&w| g.degree(w as usize)).unwrap();
@@ -25,7 +44,54 @@ pub fn pseudo_peripheral(g: &Adjacency, start: u32) -> u32 {
             v = u;
             ls = ls_u;
         } else {
-            return v;
+            return (v, ls);
+        }
+    }
+}
+
+/// RCM++-style bi-criteria start finder: like George-Liu, but each
+/// round evaluates a shortlist of low-degree last-level candidates and
+/// accepts the one that is lexicographically best by **(height
+/// descending, width ascending)** — strictly better than the current
+/// root. Terminates because every accepted step strictly improves that
+/// pair (height is bounded by the component size, width by 1 from
+/// below).
+pub fn bi_criteria_start(g: &Adjacency, start: u32) -> (u32, LevelStructure) {
+    let mut v = start;
+    let mut ls = level_structure(g, v);
+    loop {
+        let last = match ls.last_level() {
+            Some(l) => l,
+            None => return (v, ls),
+        };
+        let mut cand: Vec<u32> = last.to_vec();
+        cand.sort_unstable_by_key(|&w| (g.degree(w as usize), w));
+        cand.truncate(BI_CRITERIA_CANDIDATES);
+        // strictly better than (height, width) of the current root,
+        // best-first among the improvements
+        let better = |a: &LevelStructure, b: &LevelStructure| {
+            a.height() > b.height() || (a.height() == b.height() && a.width() < b.width())
+        };
+        let mut best: Option<(u32, LevelStructure)> = None;
+        for &u in &cand {
+            let ls_u = level_structure(g, u);
+            if !better(&ls_u, &ls) {
+                continue;
+            }
+            let beats_best = match &best {
+                None => true,
+                Some((_, b)) => better(&ls_u, b),
+            };
+            if beats_best {
+                best = Some((u, ls_u));
+            }
+        }
+        match best {
+            Some((u, ls_u)) => {
+                v = u;
+                ls = ls_u;
+            }
+            None => return (v, ls),
         }
     }
 }
@@ -52,5 +118,36 @@ mod tests {
     fn isolated_vertex_is_its_own_peripheral() {
         let g = Adjacency::from_lower_edges(2, &[]);
         assert_eq!(pseudo_peripheral(&g, 1), 1);
+    }
+
+    #[test]
+    fn bi_criteria_finds_a_path_endpoint() {
+        let g = Adjacency::from_lower_edges(6, &[(1, 0), (2, 1), (3, 2), (4, 3), (5, 4)]);
+        let (p, ls) = bi_criteria_start(&g, 2);
+        assert!(p == 0 || p == 5, "got {p}");
+        assert_eq!((ls.height(), ls.width()), (5, 1));
+    }
+
+    #[test]
+    fn bi_criteria_never_shrinks_the_height_george_liu_reaches() {
+        // the bi-criteria accept rule is a superset of George-Liu's
+        // (height must not decrease), so its final height is >= classic
+        let g = Adjacency::from_lower_edges(
+            7,
+            &[(1, 0), (2, 0), (3, 1), (3, 2), (4, 3), (5, 3), (6, 4), (6, 5)],
+        );
+        for s in 0..7u32 {
+            let (_, classic) = pseudo_peripheral_ls(&g, s);
+            let (_, bi) = bi_criteria_start(&g, s);
+            assert!(bi.height() >= classic.height(), "start {s}");
+        }
+    }
+
+    #[test]
+    fn bi_criteria_on_isolated_vertex() {
+        let g = Adjacency::from_lower_edges(3, &[(1, 0)]);
+        let (p, ls) = bi_criteria_start(&g, 2);
+        assert_eq!(p, 2);
+        assert_eq!(ls.height(), 0);
     }
 }

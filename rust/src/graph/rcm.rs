@@ -40,26 +40,41 @@ pub fn cm_order(g: &Adjacency) -> Vec<u32> {
             continue;
         }
         let root = pseudo_peripheral(g, s as u32);
-        visited[root as usize] = true;
-        order.push(root);
-        let mut head = order.len() - 1;
-        // BFS, expanding each dequeued vertex's unvisited neighbours in
-        // ascending degree order (ties broken by vertex id for determinism).
-        while head < order.len() {
-            let v = order[head];
-            head += 1;
-            scratch.clear();
-            for &w in g.neighbors(v as usize) {
-                if !visited[w as usize] {
-                    visited[w as usize] = true;
-                    scratch.push(w);
-                }
-            }
-            scratch.sort_unstable_by_key(|&w| (g.degree(w as usize), w));
-            order.extend_from_slice(&scratch);
-        }
+        cm_visit_component(g, root, &mut visited, &mut order, &mut scratch);
     }
     order
+}
+
+/// Expand one component's CM visit order from `root`, appending to
+/// `order`: BFS that visits each dequeued vertex's unvisited
+/// neighbours in ascending degree order (ties broken by vertex id for
+/// determinism). The single CM engine — shared by [`cm_order`] and the
+/// per-component strategy runner in [`crate::graph::reorder`], so the
+/// visit rule and tie-break can never drift apart. `scratch` is a
+/// reusable neighbour buffer.
+pub(crate) fn cm_visit_component(
+    g: &Adjacency,
+    root: u32,
+    visited: &mut [bool],
+    order: &mut Vec<u32>,
+    scratch: &mut Vec<u32>,
+) {
+    visited[root as usize] = true;
+    let mut head = order.len();
+    order.push(root);
+    while head < order.len() {
+        let v = order[head];
+        head += 1;
+        scratch.clear();
+        for &w in g.neighbors(v as usize) {
+            if !visited[w as usize] {
+                visited[w as usize] = true;
+                scratch.push(w);
+            }
+        }
+        scratch.sort_unstable_by_key(|&w| (g.degree(w as usize), w));
+        order.extend_from_slice(scratch);
+    }
 }
 
 /// Bandwidth of the graph under a permutation (`perm[old] = new`).

@@ -1,0 +1,627 @@
+//! Pluggable, instrumented reordering strategies (the preprocessing
+//! choice the whole PARS3 speedup story hinges on).
+//!
+//! The paper reorders with classic RCM unconditionally; two later
+//! results motivate making the step a *strategy*:
+//!
+//! * **RCM++** (Hou et al.): the start node dominates RCM quality, and
+//!   a bi-criteria pick — scoring candidate roots by level-structure
+//!   *height* (deeper = narrower levels on average) **and** *width*
+//!   (the max level size lower-bounds the achievable bandwidth) — beats
+//!   the classic George-Liu height-only iteration.
+//!   [`RcmBiCriteria`] implements that pick via
+//!   [`crate::graph::peripheral::bi_criteria_start`].
+//! * **"Is Sparse Matrix Reordering Effective for SpMV?"** (Asudeh et
+//!   al.): reordering sometimes *hurts* (an already-banded matrix loses
+//!   locality, and the permutation itself is not free), so a production
+//!   service should measure candidates and be able to decline. [`Auto`]
+//!   runs every candidate strategy, scores each by bandwidth then
+//!   envelope/profile, and keeps the **natural** order unless the best
+//!   reordering clears a configurable improvement threshold.
+//!
+//! Every strategy reorders **per connected component** (via
+//! [`crate::graph::bfs::components`]-style discovery): each component
+//! gets its own start node and occupies a contiguous index range, so
+//! disconnected blocks get independent, tighter orderings and the
+//! resulting permutation is always total. Every run emits a
+//! [`ReorderReport`] — strategy chosen, bandwidth/profile before and
+//! after, per-component stats, and the candidate scores Auto weighed —
+//! which flows into `Prepared`, `MatrixInfo`/`Client::describe`,
+//! `Pars3Stats`, and the CLI output.
+
+use crate::graph::bfs::LevelStructure;
+use crate::graph::peripheral::{bi_criteria_start, pseudo_peripheral_ls};
+use crate::graph::rcm::{bandwidth_under, profile_under};
+use crate::graph::Adjacency;
+
+/// Which reordering strategy `prepare` runs — the config/CLI selector
+/// (`reorder = auto|rcm|rcm-bicriteria|natural`, `--reorder`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ReorderPolicy {
+    /// Run every candidate strategy, score by bandwidth + profile, keep
+    /// the winner — including keeping the natural order when no
+    /// reordering clears the improvement threshold.
+    #[default]
+    Auto,
+    /// Classic RCM (George-Liu pseudo-peripheral start), per component.
+    Rcm,
+    /// RCM with the RCM++-style bi-criteria start-node selection.
+    RcmBiCriteria,
+    /// Identity: keep the input ordering.
+    Natural,
+}
+
+impl ReorderPolicy {
+    /// The policy's wire name (TOML/CLI spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReorderPolicy::Auto => "auto",
+            ReorderPolicy::Rcm => "rcm",
+            ReorderPolicy::RcmBiCriteria => "rcm-bicriteria",
+            ReorderPolicy::Natural => "natural",
+        }
+    }
+}
+
+impl std::fmt::Display for ReorderPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ReorderPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "auto" => ReorderPolicy::Auto,
+            "rcm" => ReorderPolicy::Rcm,
+            "rcm-bicriteria" => ReorderPolicy::RcmBiCriteria,
+            "natural" => ReorderPolicy::Natural,
+            other => anyhow::bail!(
+                "unknown reorder strategy '{other}' (expected auto|rcm|rcm-bicriteria|natural)"
+            ),
+        })
+    }
+}
+
+/// Per-connected-component reordering statistics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ComponentStats {
+    /// Start node the strategy picked (old vertex id).
+    pub start: u32,
+    /// Vertices in the component.
+    pub size: usize,
+    /// Level-structure height (eccentricity) rooted at `start`.
+    pub height: usize,
+    /// Level-structure width (max level size — a lower bound on the
+    /// component's achievable bandwidth).
+    pub width: usize,
+    /// Bandwidth of the component under the final ordering.
+    pub bw: usize,
+}
+
+/// One candidate strategy's score inside an [`Auto`] run (or the single
+/// self-score of a directly-requested strategy).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CandidateScore {
+    /// Candidate strategy name.
+    pub strategy: &'static str,
+    /// Bandwidth the candidate achieves.
+    pub bandwidth: usize,
+    /// Envelope/profile the candidate achieves.
+    pub profile: u64,
+    /// Whether this candidate's ordering was kept.
+    pub chosen: bool,
+}
+
+/// Instrumentation emitted by every reordering run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReorderReport {
+    /// The policy the caller requested.
+    pub requested: ReorderPolicy,
+    /// The strategy whose ordering was actually kept (for `Auto` this
+    /// is the winning candidate — possibly `"natural"` when the gate
+    /// declined to reorder).
+    pub strategy: &'static str,
+    /// Pattern-graph bandwidth before reordering.
+    pub bw_before: usize,
+    /// Pattern-graph bandwidth after reordering.
+    pub bw_after: usize,
+    /// Envelope/profile before reordering.
+    pub profile_before: u64,
+    /// Envelope/profile after reordering.
+    pub profile_after: u64,
+    /// Max level-structure height across components.
+    pub height: usize,
+    /// Max level-structure width across components.
+    pub width: usize,
+    /// Per-component stats (one entry per connected component, in
+    /// discovery order — each occupies a contiguous index range).
+    pub components: Vec<ComponentStats>,
+    /// Candidate scores (`Auto`: every strategy it weighed; direct
+    /// strategies: their single self-score).
+    pub candidates: Vec<CandidateScore>,
+}
+
+impl ReorderReport {
+    /// One-line human summary for CLI/serve output.
+    pub fn summary(&self) -> String {
+        format!(
+            "reorder {} (requested {}): bw {} -> {}, profile {} -> {}, {} component(s)",
+            self.strategy,
+            self.requested,
+            self.bw_before,
+            self.bw_after,
+            self.profile_before,
+            self.profile_after,
+            self.components.len()
+        )
+    }
+}
+
+/// The outcome of one strategy run: the permutation plus the stats the
+/// report is assembled from.
+#[derive(Debug, Clone)]
+pub struct ReorderOutcome {
+    /// Strategy whose ordering this is (for [`Auto`]: the winner).
+    pub strategy: &'static str,
+    /// Total permutation, `perm[old] = new`.
+    pub perm: Vec<u32>,
+    /// Per-component stats in discovery order.
+    pub components: Vec<ComponentStats>,
+    /// Candidate scores ([`Auto`] only; empty for direct strategies).
+    pub candidates: Vec<CandidateScore>,
+}
+
+/// A pluggable reordering strategy over the pattern graph.
+///
+/// Implementations must return a **total** permutation (`perm[old] =
+/// new`, every position hit exactly once) and reorder per connected
+/// component: each component's vertices map to a contiguous index
+/// range, so its ordering is independent of every other component's.
+pub trait ReorderStrategy {
+    /// Strategy name (report/CLI spelling).
+    fn name(&self) -> &'static str;
+
+    /// Compute the permutation and its per-component stats.
+    fn reorder(&self, g: &Adjacency) -> ReorderOutcome;
+}
+
+/// Identity ordering (decline to reorder). Component stats are still
+/// measured so `Auto`'s report shows what the input looked like.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Natural;
+
+/// Classic per-component RCM: George-Liu pseudo-peripheral start, CM
+/// visit in ascending-degree order, reversal within the component.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Rcm;
+
+/// RCM with RCM++-style bi-criteria start selection: candidate roots
+/// are scored by level-structure height *and* width instead of the
+/// height-only George-Liu iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RcmBiCriteria;
+
+/// Measured strategy selection with a decline gate.
+///
+/// Runs [`Natural`], [`Rcm`] and [`RcmBiCriteria`], scores each
+/// candidate by `(bandwidth, profile)`, and keeps the best reordering
+/// **only** when its bandwidth beats the natural order by more than
+/// `min_gain` (a fraction: `0.0` = accept any strict improvement,
+/// `0.25` = require a 25% bandwidth reduction). Otherwise the natural
+/// order is kept — reordering is not free, and on already-banded inputs
+/// it buys nothing (Asudeh et al.).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Auto {
+    /// Required fractional bandwidth improvement over natural, in
+    /// `[0, 1)` (the `0.0` default accepts any strict improvement).
+    pub min_gain: f64,
+}
+
+impl ReorderStrategy for Natural {
+    fn name(&self) -> &'static str {
+        "natural"
+    }
+
+    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
+        let n = g.n;
+        let perm: Vec<u32> = (0..n as u32).collect();
+        let mut components = Vec::new();
+        let mut seen = vec![false; n];
+        // shared BFS buffers: the whole scan is O(n + m) regardless of
+        // the component count (no per-component allocations)
+        let mut frontier: Vec<u32> = Vec::new();
+        let mut next: Vec<u32> = Vec::new();
+        for s in 0..n {
+            if seen[s] {
+                continue;
+            }
+            // one BFS per component measures its level structure
+            // (rooted at the smallest vertex), size, and natural-order
+            // bandwidth in a single pass
+            frontier.clear();
+            frontier.push(s as u32);
+            seen[s] = true;
+            let (mut size, mut bw, mut height, mut width) = (0usize, 0usize, 0usize, 0usize);
+            loop {
+                width = width.max(frontier.len());
+                size += frontier.len();
+                next.clear();
+                for &v in &frontier {
+                    for &w in g.neighbors(v as usize) {
+                        bw = bw.max((v as usize).abs_diff(w as usize));
+                        if !seen[w as usize] {
+                            seen[w as usize] = true;
+                            next.push(w);
+                        }
+                    }
+                }
+                if next.is_empty() {
+                    break;
+                }
+                std::mem::swap(&mut frontier, &mut next);
+                height += 1;
+            }
+            components.push(ComponentStats { start: s as u32, size, height, width, bw });
+        }
+        ReorderOutcome { strategy: self.name(), perm, components, candidates: Vec::new() }
+    }
+}
+
+/// Shared per-component CM engine: discover components in vertex order,
+/// let `pick` choose each component's start node (returning the level
+/// structure it judged the start by), run the ascending-degree CM
+/// visit, and reverse **within the component** — component `c` occupies
+/// the contiguous range its discovery order assigns, so each block's
+/// ordering is exactly the RCM of that component in isolation.
+fn rcm_per_component(
+    g: &Adjacency,
+    name: &'static str,
+    pick: &dyn Fn(&Adjacency, u32) -> (u32, LevelStructure),
+) -> ReorderOutcome {
+    let n = g.n;
+    let mut perm = vec![0u32; n];
+    let mut visited = vec![false; n];
+    let mut components = Vec::new();
+    let mut order: Vec<u32> = Vec::new();
+    let mut scratch: Vec<u32> = Vec::new();
+    let mut base = 0usize;
+    for s in 0..n {
+        if visited[s] {
+            continue;
+        }
+        let (root, ls) = pick(g, s as u32);
+        order.clear();
+        // the one shared CM engine (rcm::cm_visit_component) expands
+        // the component's visit order — same rule as classic cm_order
+        crate::graph::rcm::cm_visit_component(g, root, &mut visited, &mut order, &mut scratch);
+        // RCM: reverse the CM visit within the component's range
+        for (i, &old) in order.iter().rev().enumerate() {
+            perm[old as usize] = (base + i) as u32;
+        }
+        let mut bw = 0usize;
+        for &v in &order {
+            let pv = perm[v as usize] as i64;
+            for &w in g.neighbors(v as usize) {
+                bw = bw.max((pv - perm[w as usize] as i64).unsigned_abs() as usize);
+            }
+        }
+        components.push(ComponentStats {
+            start: root,
+            size: order.len(),
+            height: ls.height(),
+            width: ls.width(),
+            bw,
+        });
+        base += order.len();
+    }
+    ReorderOutcome { strategy: name, perm, components, candidates: Vec::new() }
+}
+
+impl ReorderStrategy for Rcm {
+    fn name(&self) -> &'static str {
+        "rcm"
+    }
+
+    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
+        rcm_per_component(g, self.name(), &pseudo_peripheral_ls)
+    }
+}
+
+impl ReorderStrategy for RcmBiCriteria {
+    fn name(&self) -> &'static str {
+        "rcm-bicriteria"
+    }
+
+    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
+        rcm_per_component(g, self.name(), &bi_criteria_start)
+    }
+}
+
+impl ReorderStrategy for Auto {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+
+    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
+        let natural = Natural.reorder(g);
+        let nat_bw = bandwidth_under(g, &natural.perm);
+        let nat_profile = profile_under(g, &natural.perm);
+
+        // Rcm first so an exact (bw, profile) tie keeps the classic pick.
+        let reorderers = [Rcm.reorder(g), RcmBiCriteria.reorder(g)];
+        let mut scored: Vec<(ReorderOutcome, usize, u64)> = reorderers
+            .into_iter()
+            .map(|out| {
+                let bw = bandwidth_under(g, &out.perm);
+                let profile = profile_under(g, &out.perm);
+                (out, bw, profile)
+            })
+            .collect();
+        let best = scored
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (_, bw, profile))| (*bw, *profile))
+            .map(|(i, _)| i)
+            .expect("two candidates");
+        let best_bw = scored[best].1;
+
+        // The decline gate: reordering must beat the natural bandwidth
+        // by more than `min_gain` (strict at min_gain = 0), otherwise
+        // the input ordering is kept.
+        let accept = (best_bw as f64) < (nat_bw as f64) * (1.0 - self.min_gain);
+
+        let mut candidates = vec![CandidateScore {
+            strategy: natural.strategy,
+            bandwidth: nat_bw,
+            profile: nat_profile,
+            chosen: !accept,
+        }];
+        for (i, (out, bw, profile)) in scored.iter().enumerate() {
+            candidates.push(CandidateScore {
+                strategy: out.strategy,
+                bandwidth: *bw,
+                profile: *profile,
+                chosen: accept && i == best,
+            });
+        }
+        let mut winner = if accept { scored.swap_remove(best).0 } else { natural };
+        winner.candidates = candidates;
+        winner
+    }
+}
+
+/// Construct the strategy a [`ReorderPolicy`] names. `min_gain` only
+/// affects [`ReorderPolicy::Auto`].
+pub fn strategy_for(policy: ReorderPolicy, min_gain: f64) -> Box<dyn ReorderStrategy> {
+    match policy {
+        ReorderPolicy::Auto => Box::new(Auto { min_gain }),
+        ReorderPolicy::Rcm => Box::new(Rcm),
+        ReorderPolicy::RcmBiCriteria => Box::new(RcmBiCriteria),
+        ReorderPolicy::Natural => Box::new(Natural),
+    }
+}
+
+/// Run the policy's strategy and assemble the full [`ReorderReport`].
+pub fn reorder_with_report(
+    g: &Adjacency,
+    policy: ReorderPolicy,
+    min_gain: f64,
+) -> (Vec<u32>, ReorderReport) {
+    let out = strategy_for(policy, min_gain).reorder(g);
+    // Auto already measured every candidate (natural included), so its
+    // scores are reused verbatim; only the direct strategies pay the
+    // before/after measurement passes here.
+    let (bw_before, profile_before, bw_after, profile_after, candidates) =
+        if out.candidates.is_empty() {
+            let bw_after = bandwidth_under(g, &out.perm);
+            let profile_after = profile_under(g, &out.perm);
+            let (bw_before, profile_before) = if out.strategy == "natural" {
+                // identity ordering: before == after by definition
+                (bw_after, profile_after)
+            } else {
+                let id: Vec<u32> = (0..g.n as u32).collect();
+                (bandwidth_under(g, &id), profile_under(g, &id))
+            };
+            let self_score = vec![CandidateScore {
+                strategy: out.strategy,
+                bandwidth: bw_after,
+                profile: profile_after,
+                chosen: true,
+            }];
+            (bw_before, profile_before, bw_after, profile_after, self_score)
+        } else {
+            let natural = out
+                .candidates
+                .iter()
+                .find(|c| c.strategy == "natural")
+                .expect("auto always scores the natural order");
+            let chosen = out
+                .candidates
+                .iter()
+                .find(|c| c.chosen)
+                .expect("auto always keeps exactly one candidate");
+            let scores = (natural.bandwidth, natural.profile, chosen.bandwidth, chosen.profile);
+            (scores.0, scores.1, scores.2, scores.3, out.candidates)
+        };
+    let report = ReorderReport {
+        requested: policy,
+        strategy: out.strategy,
+        bw_before,
+        bw_after,
+        profile_before,
+        profile_after,
+        height: out.components.iter().map(|c| c.height).max().unwrap_or(0),
+        width: out.components.iter().map(|c| c.width).max().unwrap_or(0),
+        components: out.components,
+        candidates,
+    };
+    (out.perm, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SmallRng;
+
+    fn assert_total(perm: &[u32], n: usize) {
+        assert_eq!(perm.len(), n);
+        let mut seen = vec![false; n];
+        for &p in perm {
+            assert!(!seen[p as usize], "position {p} assigned twice");
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    fn scrambled_grid(seed: u64) -> Adjacency {
+        let mut rng = SmallRng::seed_from_u64(seed);
+        let edges = crate::sparse::gen::grid2d_pattern(12, 12, 1, 1);
+        let scrambled = crate::sparse::gen::scramble(&edges, 144, &mut rng);
+        Adjacency::from_lower_edges(144, &scrambled)
+    }
+
+    #[test]
+    fn every_strategy_returns_a_total_permutation() {
+        let g = Adjacency::from_lower_edges(7, &[(1, 0), (2, 1), (4, 3), (5, 4)]);
+        for policy in [
+            ReorderPolicy::Natural,
+            ReorderPolicy::Rcm,
+            ReorderPolicy::RcmBiCriteria,
+            ReorderPolicy::Auto,
+        ] {
+            let (perm, report) = reorder_with_report(&g, policy, 0.0);
+            assert_total(&perm, 7);
+            assert_eq!(report.components.len(), 3, "{policy}");
+            assert_eq!(report.components.iter().map(|c| c.size).sum::<usize>(), 7);
+        }
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [
+            ReorderPolicy::Auto,
+            ReorderPolicy::Rcm,
+            ReorderPolicy::RcmBiCriteria,
+            ReorderPolicy::Natural,
+        ] {
+            assert_eq!(p.to_string().parse::<ReorderPolicy>().unwrap(), p);
+        }
+        assert!("symrcm".parse::<ReorderPolicy>().is_err());
+        assert_eq!(ReorderPolicy::default(), ReorderPolicy::Auto);
+    }
+
+    #[test]
+    fn rcm_strategy_matches_classic_rcm_on_connected_graphs() {
+        // one component: per-component reversal == the classic global
+        // reversal, so the strategy reproduces `graph::rcm::rcm` exactly
+        let g = scrambled_grid(11);
+        assert_eq!(Rcm.reorder(&g).perm, crate::graph::rcm::rcm(&g));
+    }
+
+    #[test]
+    fn bicriteria_never_loses_to_rcm_on_bandwidth_here() {
+        // not a theorem — but on these fixtures the wider candidate
+        // pool must not pick something worse than what it also sees
+        for seed in [3u64, 7, 11, 19] {
+            let g = scrambled_grid(seed);
+            let bw_rcm = bandwidth_under(&g, &Rcm.reorder(&g).perm);
+            let bw_bi = bandwidth_under(&g, &RcmBiCriteria.reorder(&g).perm);
+            assert!(bw_bi <= bw_rcm + bw_rcm / 4, "seed {seed}: {bw_bi} vs {bw_rcm}");
+        }
+    }
+
+    #[test]
+    fn auto_declines_on_already_banded_input() {
+        // path graph in natural order: bandwidth 1 is optimal, so no
+        // reordering can clear any threshold — Auto must keep identity
+        let edges = [(1, 0), (2, 1), (3, 2), (4, 3), (5, 4), (6, 5), (7, 6), (8, 7)];
+        let g = Adjacency::from_lower_edges(9, &edges);
+        for min_gain in [0.0, 0.25] {
+            let (perm, report) = reorder_with_report(&g, ReorderPolicy::Auto, min_gain);
+            assert_eq!(report.strategy, "natural", "min_gain {min_gain}");
+            assert_eq!(perm, (0..9).collect::<Vec<u32>>());
+            assert_eq!(report.bw_after, report.bw_before);
+            let natural = report.candidates.iter().find(|c| c.strategy == "natural").unwrap();
+            assert!(natural.chosen);
+        }
+    }
+
+    #[test]
+    fn auto_threshold_gates_marginal_improvements() {
+        let g = scrambled_grid(4);
+        // an absurd threshold declines even a huge win...
+        let (perm, report) = reorder_with_report(&g, ReorderPolicy::Auto, 0.999);
+        assert_eq!(report.strategy, "natural");
+        assert_eq!(perm, (0..144).collect::<Vec<u32>>());
+        // ...while the default accepts it
+        let (_, report) = reorder_with_report(&g, ReorderPolicy::Auto, 0.0);
+        assert_ne!(report.strategy, "natural");
+        assert!(report.bw_after < report.bw_before);
+        // every candidate was scored, exactly one chosen
+        assert_eq!(report.candidates.len(), 3);
+        assert_eq!(report.candidates.iter().filter(|c| c.chosen).count(), 1);
+    }
+
+    #[test]
+    fn auto_never_increases_bandwidth_over_natural() {
+        for seed in 0..8u64 {
+            let mut rng = SmallRng::seed_from_u64(seed);
+            let n = 30 + (seed as usize) * 17;
+            let mut edges = crate::sparse::gen::random_banded_pattern(n, 3, 0.5, &mut rng);
+            crate::sparse::gen::add_long_range(&mut edges, n, 0.05, &mut rng);
+            let g = Adjacency::from_lower_edges(n, &edges);
+            let id: Vec<u32> = (0..n as u32).collect();
+            let (perm, report) = reorder_with_report(&g, ReorderPolicy::Auto, 0.0);
+            assert!(bandwidth_under(&g, &perm) <= bandwidth_under(&g, &id), "seed {seed}");
+            assert_eq!(report.bw_after, bandwidth_under(&g, &perm));
+        }
+    }
+
+    #[test]
+    fn components_are_reordered_independently() {
+        // two banded components glued into one graph: the combined
+        // permutation must restrict to exactly the permutation each
+        // component gets in isolation (offset by the first block's size)
+        let a_edges = [(1u32, 0u32), (2, 0), (3, 1), (4, 2), (4, 3)];
+        let b_edges = [(1u32, 0u32), (2, 1), (3, 1), (3, 2)];
+        let (na, nb) = (5usize, 4usize);
+        let mut edges: Vec<(u32, u32)> = a_edges.to_vec();
+        edges.extend(b_edges.iter().map(|&(i, j)| (i + na as u32, j + na as u32)));
+        let g = Adjacency::from_lower_edges(na + nb, &edges);
+        let ga = Adjacency::from_lower_edges(na, &a_edges);
+        let gb = Adjacency::from_lower_edges(nb, &b_edges);
+        for policy in [ReorderPolicy::Rcm, ReorderPolicy::RcmBiCriteria, ReorderPolicy::Auto] {
+            let (perm, report) = reorder_with_report(&g, policy, 0.0);
+            let (pa, _) = reorder_with_report(&ga, policy, 0.0);
+            let (pb, _) = reorder_with_report(&gb, policy, 0.0);
+            for v in 0..na {
+                assert_eq!(perm[v], pa[v], "{policy} component A vertex {v}");
+            }
+            for v in 0..nb {
+                assert_eq!(perm[na + v], na as u32 + pb[v], "{policy} component B vertex {v}");
+            }
+            assert_eq!(report.components.len(), 2);
+            assert_eq!(report.components[0].size, na);
+            assert_eq!(report.components[1].size, nb);
+        }
+    }
+
+    #[test]
+    fn report_measures_before_and_after() {
+        let g = scrambled_grid(2);
+        let (perm, report) = reorder_with_report(&g, ReorderPolicy::Rcm, 0.0);
+        assert_eq!(report.requested, ReorderPolicy::Rcm);
+        assert_eq!(report.strategy, "rcm");
+        assert_eq!(report.bw_after, bandwidth_under(&g, &perm));
+        assert_eq!(report.profile_after, profile_under(&g, &perm));
+        assert!(report.profile_after <= report.profile_before);
+        assert!(report.height >= 1 && report.width >= 1);
+        assert!(report.summary().contains("rcm"));
+        // direct strategies still expose their self-score
+        assert_eq!(report.candidates.len(), 1);
+        assert!(report.candidates[0].chosen);
+    }
+}

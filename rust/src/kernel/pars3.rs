@@ -72,6 +72,12 @@ pub struct Pars3Stats {
     /// Middle-split nnz served by the dense diagonals (the remainder
     /// rides the SSS gather loop).
     pub dia_nnz: usize,
+    /// Reordering strategy that produced the band this plan's split
+    /// came from (`None` when the split was built from an unannotated
+    /// matrix — e.g. directly in a test or bench).
+    pub reorder_strategy: Option<&'static str>,
+    /// Bandwidth of the (reordered) band the split was built from.
+    pub reordered_bw: usize,
 }
 
 /// The preprocessed parallel kernel.
@@ -172,9 +178,12 @@ impl Pars3Plan {
         Ok(Self { split, dist, ranks, outer_by_rank })
     }
 
-    /// Record the middle-split storage choice (the fill-ratio
-    /// heuristic's outcome) on a stats object.
+    /// Record the preprocessing provenance on a stats object: the
+    /// middle-split storage choice (the fill-ratio heuristic's outcome)
+    /// and the reordering the band came from.
     fn note_format(&self, stats: &mut Pars3Stats) {
+        stats.reorder_strategy = self.split.reorder_strategy;
+        stats.reordered_bw = self.split.total_bw;
         if let Some(dia) = &self.split.dia {
             stats.dia_diagonals = dia.diags.len();
             stats.dia_nnz = dia.dense_nnz;

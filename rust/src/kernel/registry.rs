@@ -13,8 +13,8 @@
 //! the property the cross-kernel benches and tests rely on.
 
 use crate::coordinator::error::Pars3Error;
-use crate::graph::rcm::bandwidth_under;
-use crate::graph::{rcm, Adjacency};
+use crate::graph::reorder::{self, ReorderPolicy, ReorderReport};
+use crate::graph::Adjacency;
 use crate::kernel::coloring_spmv::ColoringKernel;
 use crate::kernel::csr_spmv::CsrSpmv;
 use crate::kernel::dgbmv::BandedDgbmv;
@@ -32,7 +32,8 @@ pub const KERNEL_NAMES: &[&str] = &["serial_sss", "csr", "dgbmv", "coloring", "p
 /// Construction parameters shared by all kernels (parallel kernels use
 /// `threads`/`threaded`; `pars3` additionally uses `outer_bw`; the
 /// band-interior kernels — `serial_sss`, `dgbmv`, `pars3` — honor
-/// `format`).
+/// `format`; `reorder` only matters to the from-COO entry point
+/// [`build`], which preprocesses).
 #[derive(Debug, Clone)]
 pub struct KernelConfig {
     /// Rank count for the parallel kernels (clamped to the matrix size).
@@ -44,11 +45,24 @@ pub struct KernelConfig {
     /// Band-interior storage: hybrid diagonal-major (DIA) vs pure SSS,
     /// with `Auto` deciding per matrix by fill ratio.
     pub format: FormatPolicy,
+    /// Reordering strategy for the from-COO preprocessing path.
+    pub reorder: ReorderPolicy,
+    /// `Auto`'s decline gate (fractional bandwidth improvement a
+    /// reordering must clear over natural; see
+    /// [`crate::graph::reorder::Auto`]).
+    pub reorder_min_gain: f64,
 }
 
 impl Default for KernelConfig {
     fn default() -> Self {
-        Self { threads: 8, outer_bw: 3, threaded: false, format: FormatPolicy::Auto }
+        Self {
+            threads: 8,
+            outer_bw: 3,
+            threaded: false,
+            format: FormatPolicy::Auto,
+            reorder: ReorderPolicy::Auto,
+            reorder_min_gain: 0.0,
+        }
     }
 }
 
@@ -61,31 +75,34 @@ impl KernelConfig {
 
 /// Shared preprocessing for every entry point that starts from a full
 /// COO matrix (this module's [`build`] and
-/// [`crate::coordinator::Coordinator::prepare`]): RCM reorder with the
-/// identity fallback for already-banded inputs (paper §4.1's
-/// pattern-recognition note), then SSS conversion. Returns the chosen
-/// permutation (`perm[old] = new`) and the reordered matrix.
-pub fn reorder_to_sss(coo: &Coo) -> Result<(Vec<u32>, Sss), Pars3Error> {
-    let bw_before = coo.bandwidth();
+/// [`crate::coordinator::Coordinator::prepare`]): run the selected
+/// [`ReorderPolicy`] strategy per connected component (the default
+/// `Auto` measures the candidates and keeps the natural order when no
+/// reordering clears `min_gain` — paper §4.1's pattern-recognition
+/// note, generalized per Asudeh et al.), then convert to SSS. Returns
+/// the chosen permutation (`perm[old] = new`), the reordered matrix,
+/// and the instrumented [`ReorderReport`].
+pub fn reorder_to_sss(
+    coo: &Coo,
+    strategy: ReorderPolicy,
+    min_gain: f64,
+) -> Result<(Vec<u32>, Sss, ReorderReport), Pars3Error> {
     let g = Adjacency::from_coo(coo);
-    let mut perm = rcm(&g);
-    if bandwidth_under(&g, &perm) >= bw_before {
-        // already-banded input: keep the natural ordering
-        perm = (0..coo.n as u32).collect();
-    }
+    let (perm, report) = reorder::reorder_with_report(&g, strategy, min_gain);
     let sss = convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew)
         .map_err(|e| {
             Pars3Error::InvalidMatrix(format!("matrix is not (shifted) skew-symmetric: {e:#}"))
         })?;
-    Ok((perm, sss))
+    Ok((perm, sss, report))
 }
 
 /// Build a kernel by name from a full (both-triangle) shifted
-/// skew-symmetric COO matrix (preprocessing via [`reorder_to_sss`]).
-/// The returned kernel operates in the reordered space — consistent
-/// across every kernel name for the same input matrix.
+/// skew-symmetric COO matrix (preprocessing via [`reorder_to_sss`]
+/// with `cfg.reorder`). The returned kernel operates in the reordered
+/// space — consistent across every kernel name for the same input
+/// matrix and strategy.
 pub fn build(name: &str, coo: &Coo, cfg: &KernelConfig) -> Result<Box<dyn Spmv>, Pars3Error> {
-    let (_, sss) = reorder_to_sss(coo)?;
+    let (_, sss, _) = reorder_to_sss(coo, cfg.reorder, cfg.reorder_min_gain)?;
     build_from_sss(name, sss, cfg)
 }
 
@@ -138,6 +155,7 @@ pub fn build_from_split(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::rcm;
     use crate::kernel::serial_sss::sss_spmv;
     use crate::solver::cg::cg_solve;
     use crate::solver::mrs::{mrs_solve, MrsOptions};
@@ -150,6 +168,26 @@ mod tests {
         let sss =
             convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap();
         (coo, sss)
+    }
+
+    #[test]
+    fn reorder_to_sss_honors_every_strategy() {
+        let coo = gen::small_test_matrix(120, 9, 2.0);
+        for policy in [
+            ReorderPolicy::Natural,
+            ReorderPolicy::Rcm,
+            ReorderPolicy::RcmBiCriteria,
+            ReorderPolicy::Auto,
+        ] {
+            let (perm, sss, report) = reorder_to_sss(&coo, policy, 0.0).unwrap();
+            assert_eq!(report.requested, policy);
+            assert_eq!(perm.len(), 120);
+            // the reordered matrix's bandwidth is what the report says
+            assert_eq!(sss.bandwidth(), report.bw_after, "{policy}");
+            if policy == ReorderPolicy::Natural {
+                assert_eq!(perm, (0..120).collect::<Vec<u32>>());
+            }
+        }
     }
 
     #[test]

@@ -53,6 +53,12 @@ pub struct Split3 {
     pub split_bw: usize,
     /// Total bandwidth of the source band matrix.
     pub total_bw: usize,
+    /// Name of the reordering strategy that produced the band this
+    /// split was built from (`None` when the caller split an
+    /// unannotated matrix directly). Set by
+    /// [`crate::coordinator::Coordinator::prepare`]; flows into
+    /// [`crate::kernel::pars3::Pars3Stats`].
+    pub reorder_strategy: Option<&'static str>,
 }
 
 impl Split3 {
@@ -100,6 +106,7 @@ impl Split3 {
             outer,
             split_bw,
             total_bw,
+            reorder_strategy: None,
         };
         split.select_format(policy);
         Ok(split)

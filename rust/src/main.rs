@@ -13,9 +13,12 @@
 //! Global flags: `--config FILE` (default `pars3.toml`), `--scale S`,
 //! `--ranks a,b,c`, `--threaded`, `--format auto|dia|sss` (band-interior
 //! storage: hybrid diagonal-major vs pure SSS, `auto` = fill heuristic),
-//! `--shards W` (service worker pool), `--queue-depth N` (per-shard
-//! backpressure bound), `--max-cached-kernels N` (per-shard kernel-cache
-//! LRU cap, 0 = unbounded).
+//! `--reorder auto|rcm|rcm-bicriteria|natural` (preprocessing strategy;
+//! `auto` measures the candidates and declines when nothing clears
+//! `--reorder-min-gain`), `--shards W` (service worker pool),
+//! `--queue-depth N` (per-shard backpressure bound),
+//! `--max-cached-kernels N` (per-shard kernel-cache LRU cap,
+//! 0 = unbounded).
 
 use pars3::coordinator::{Backend, Config, Coordinator, Service};
 use pars3::mpisim::CostModel;
@@ -74,6 +77,12 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(f) = args.flags.get("format") {
         cfg.format = f.parse()?;
     }
+    if let Some(r) = args.flags.get("reorder") {
+        cfg.reorder = r.parse()?;
+    }
+    if let Some(g) = args.flags.get("reorder-min-gain") {
+        cfg.reorder_min_gain = g.parse()?;
+    }
     if let Some(d) = args.flags.get("artifacts") {
         cfg.artifacts_dir = d.into();
     }
@@ -92,6 +101,9 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if cfg.queue_depth == 0 {
         anyhow::bail!("--queue-depth must be >= 1");
+    }
+    if !(0.0..1.0).contains(&cfg.reorder_min_gain) {
+        anyhow::bail!("--reorder-min-gain must be in [0, 1)");
     }
     Ok(cfg)
 }
@@ -140,6 +152,7 @@ fn run() -> Result<()> {
                  report subcommands: table1 rcm conflicts splits fig9 coloring complexity all\n\
                  flags: --config F --scale S --ranks 1,2,4 --threaded --matrix NAME --p N\n\
                         --backend serial|csr|dgbmv|coloring|pars3|pjrt --format auto|dia|sss\n\
+                        --reorder auto|rcm|rcm-bicriteria|natural --reorder-min-gain G\n\
                         --tol T --iters K --rhs K --artifacts DIR --shards W --queue-depth N\n\
                         --max-cached-kernels N"
             );
@@ -227,13 +240,15 @@ fn cmd_spmv(cfg: Config, args: &Args) -> Result<()> {
     let mut coord = Coordinator::new(cfg);
     let prep = coord.prepare(&name, &coo)?;
     println!(
-        "{name}: n={} nnz_lower={} bw {} -> {} (RCM), middle format {}",
+        "{name}: n={} nnz_lower={} bw {} -> {} ({}), middle format {}",
         prep.n,
         prep.nnz_lower,
         prep.bw_before,
-        prep.rcm_bw,
+        prep.reordered_bw,
+        prep.report.strategy,
         prep.split.format_name()
     );
+    println!("{}", prep.report.summary());
     let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.37).sin()).collect();
     let t0 = std::time::Instant::now();
     let y = coord.spmv(&prep, &x, backend)?;
@@ -325,14 +340,15 @@ fn cmd_serve(cfg: Config) -> Result<()> {
     let handle = client.prepare(m.name, coo).wait()?;
     let info = client.describe(&handle).wait()?;
     println!(
-        "prepared '{}' on shard {} (generation {}): n={} nnz={} rcm_bw={}",
+        "prepared '{}' on shard {} (generation {}): n={} nnz={} reordered_bw={}",
         info.name,
         handle.shard(),
         handle.generation(),
         info.n,
         info.nnz_lower,
-        info.rcm_bw
+        info.reordered_bw
     );
+    println!("{}", info.reorder.summary());
     // pipelined: every request is in flight before the first wait
     let tickets: Vec<_> = (0..3)
         .map(|c| {
@@ -349,11 +365,13 @@ fn cmd_serve(cfg: Config) -> Result<()> {
             Err(e) => println!("client {c}: error {e}"),
         }
     }
-    let stats = client.cache_stats(handle.shard()).wait()?;
-    println!(
-        "shard {} kernel cache: {} cached, {} built (3 pipelined spmvs -> 1 build)",
-        stats.shard, stats.cached, stats.built
-    );
+    for stats in client.cache_stats_all().wait()? {
+        println!(
+            "shard {} kernel cache: {} cached, {} built, queue depth {} \
+             (3 pipelined spmvs -> 1 build on the owning shard)",
+            stats.shard, stats.cached, stats.built, stats.queue_depth
+        );
+    }
     svc.shutdown();
     println!("service stopped.");
     Ok(())

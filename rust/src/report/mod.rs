@@ -55,11 +55,11 @@ pub fn table1(suite: &[(BenchMatrix, Prepared)]) -> String {
                 m.name.to_string(),
                 p.n.to_string(),
                 (2 * p.nnz_lower + p.n).to_string(),
-                p.rcm_bw.to_string(),
+                p.reordered_bw.to_string(),
                 m.paper_rows.to_string(),
                 m.paper_nnz.to_string(),
                 m.paper_rcm_bw.to_string(),
-                format!("{:.4}", p.rcm_bw as f64 / p.n as f64),
+                format!("{:.4}", p.reordered_bw as f64 / p.n as f64),
                 format!("{:.4}", m.paper_rcm_bw as f64 / m.paper_rows as f64),
             ]
         })
@@ -82,14 +82,14 @@ pub fn rcm_report(suite: &[(BenchMatrix, Prepared)]) -> String {
         .iter()
         .map(|(m, p)| {
             let reduction = if p.bw_before > 0 {
-                100.0 * (1.0 - p.rcm_bw as f64 / p.bw_before as f64)
+                100.0 * (1.0 - p.reordered_bw as f64 / p.bw_before as f64)
             } else {
                 0.0
             };
             vec![
                 m.name.to_string(),
                 p.bw_before.to_string(),
-                p.rcm_bw.to_string(),
+                p.reordered_bw.to_string(),
                 format!("{reduction:.1}%"),
             ]
         })

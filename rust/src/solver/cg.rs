@@ -22,39 +22,19 @@ pub struct CgResult {
 }
 
 /// Solve `A x = b` for SPD `A` with plain CG.
+///
+/// This is [`cg_solve_batch`] at width 1 — one recurrence
+/// implementation serves both entry points (ROADMAP dedup item; the
+/// k = 1 batch sweep runs the same per-column update the historical
+/// scalar loop did, verified by the legacy-recurrence regression test
+/// below).
 pub fn cg_solve(kernel: &mut dyn Spmv, b: &[f64], max_iters: usize, tol: f64) -> CgResult {
-    let n = kernel.n();
-    assert_eq!(b.len(), n);
-    let mut x = vec![0.0f64; n];
-    let mut r = b.to_vec();
-    let mut p = r.clone();
-    let mut ap = vec![0.0f64; n];
-    let bb = dot(b, b);
-    let mut rr = bb;
-    let mut history = vec![rr];
-    let tol2 = tol * tol * bb;
-    let mut iters = 0;
-    while iters < max_iters && rr > tol2 {
-        kernel.apply(&p, &mut ap);
-        let pap = dot(&p, &ap);
-        if pap <= 0.0 {
-            break; // not SPD (or breakdown)
-        }
-        let a = rr / pap;
-        for i in 0..n {
-            x[i] += a * p[i];
-            r[i] -= a * ap[i];
-        }
-        let rr_new = dot(&r, &r);
-        let beta = rr_new / rr;
-        for i in 0..n {
-            p[i] = r[i] + beta * p[i];
-        }
-        rr = rr_new;
-        history.push(rr);
-        iters += 1;
-    }
-    CgResult { x, history, iters, converged: rr <= tol2 }
+    assert_eq!(b.len(), kernel.n());
+    let bs = VecBatch::from_columns(&[b.to_vec()]);
+    cg_solve_batch(kernel, &bs, max_iters, tol)
+        .into_iter()
+        .next()
+        .expect("width-1 batch returns one result")
 }
 
 /// Multi-RHS CG: one fused [`Spmv::apply_batch`] per sweep serves all
@@ -175,6 +155,61 @@ mod tests {
             c.push(i - 1, i, -1.0);
         }
         SerialSss::new(convert::coo_to_sss(&c, Symmetry::Symmetric).unwrap())
+    }
+
+    /// The historical scalar recurrence, kept verbatim as the reference
+    /// for the k = 1 delegation (deleted from the public path when
+    /// `cg_solve` became `cg_solve_batch` at width 1).
+    fn legacy_cg_solve(kernel: &mut dyn Spmv, b: &[f64], max_iters: usize, tol: f64) -> CgResult {
+        let n = kernel.n();
+        assert_eq!(b.len(), n);
+        let mut x = vec![0.0f64; n];
+        let mut r = b.to_vec();
+        let mut p = r.clone();
+        let mut ap = vec![0.0f64; n];
+        let bb = dot(b, b);
+        let mut rr = bb;
+        let mut history = vec![rr];
+        let tol2 = tol * tol * bb;
+        let mut iters = 0;
+        while iters < max_iters && rr > tol2 {
+            kernel.apply(&p, &mut ap);
+            let pap = dot(&p, &ap);
+            if pap <= 0.0 {
+                break;
+            }
+            let a = rr / pap;
+            for i in 0..n {
+                x[i] += a * p[i];
+                r[i] -= a * ap[i];
+            }
+            let rr_new = dot(&r, &r);
+            let beta = rr_new / rr;
+            for i in 0..n {
+                p[i] = r[i] + beta * p[i];
+            }
+            rr = rr_new;
+            history.push(rr);
+            iters += 1;
+        }
+        CgResult { x, history, iters, converged: rr <= tol2 }
+    }
+
+    #[test]
+    fn scalar_solve_matches_the_legacy_recurrence() {
+        for n in [80usize, 150] {
+            let mut k = spd(n);
+            let b: Vec<f64> = (0..n).map(|i| ((i * 7) % 9) as f64 - 4.0).collect();
+            let got = cg_solve(&mut k, &b, 500, 1e-10);
+            let mut k_ref = spd(n);
+            let want = legacy_cg_solve(&mut k_ref, &b, 500, 1e-10);
+            assert_eq!(got.converged, want.converged);
+            assert_eq!(got.iters, want.iters);
+            assert_eq!(got.history.len(), want.history.len());
+            for (a, c) in got.x.iter().zip(&want.x) {
+                assert!((a - c).abs() < 1e-12, "{a} vs {c}");
+            }
+        }
     }
 
     #[test]

@@ -52,34 +52,19 @@ pub struct MrsResult {
 ///
 /// The kernel must apply the *full* `A = alpha*I + S` (the diagonal
 /// split carries the shift after preprocessing).
+///
+/// This is [`mrs_solve_batch`] at width 1 — one recurrence
+/// implementation serves both entry points (ROADMAP dedup item; the
+/// k = 1 batch sweep runs the same per-column update the historical
+/// scalar loop did, verified by the legacy-recurrence regression test
+/// below).
 pub fn mrs_solve(kernel: &mut dyn Spmv, b: &[f64], opts: &MrsOptions) -> MrsResult {
-    let n = kernel.n();
-    assert_eq!(b.len(), n);
-    let mut x = vec![0.0f64; n];
-    let mut r = b.to_vec();
-    let mut p = vec![0.0f64; n];
-    let bb: f64 = dot(b, b);
-    let mut rr = bb;
-    let mut history = vec![rr];
-    let tol2 = opts.tol * opts.tol * bb;
-    let mut iters = 0;
-
-    while iters < opts.max_iters && rr > tol2 {
-        kernel.apply(&r, &mut p); // p = A r (the hot path)
-        let pp = dot(&p, &p);
-        if pp <= f64::MIN_POSITIVE {
-            break;
-        }
-        let a = opts.alpha * rr / pp;
-        for i in 0..n {
-            x[i] += a * r[i];
-            r[i] -= a * p[i];
-        }
-        rr = dot(&r, &r);
-        history.push(rr);
-        iters += 1;
-    }
-    MrsResult { x, r, converged: rr <= tol2, history, iters }
+    assert_eq!(b.len(), kernel.n());
+    let bs = VecBatch::from_columns(&[b.to_vec()]);
+    mrs_solve_batch(kernel, &bs, opts)
+        .into_iter()
+        .next()
+        .expect("width-1 batch returns one result")
 }
 
 /// Multi-RHS minimal-residual iteration: solve `A x_c = b_c` for every
@@ -193,6 +178,60 @@ mod tests {
         let sss = convert::coo_to_sss(&coo, Symmetry::Skew).unwrap();
         let b: Vec<f64> = (0..n).map(|i| ((i * 7) % 5) as f64 - 2.0).collect();
         (SerialSss::new(sss), b)
+    }
+
+    /// The historical scalar recurrence, kept verbatim as the reference
+    /// for the k = 1 delegation (deleted from the public path when
+    /// `mrs_solve` became `mrs_solve_batch` at width 1).
+    fn legacy_mrs_solve(kernel: &mut dyn Spmv, b: &[f64], opts: &MrsOptions) -> MrsResult {
+        let n = kernel.n();
+        assert_eq!(b.len(), n);
+        let mut x = vec![0.0f64; n];
+        let mut r = b.to_vec();
+        let mut p = vec![0.0f64; n];
+        let bb: f64 = dot(b, b);
+        let mut rr = bb;
+        let mut history = vec![rr];
+        let tol2 = opts.tol * opts.tol * bb;
+        let mut iters = 0;
+        while iters < opts.max_iters && rr > tol2 {
+            kernel.apply(&r, &mut p);
+            let pp = dot(&p, &p);
+            if pp <= f64::MIN_POSITIVE {
+                break;
+            }
+            let a = opts.alpha * rr / pp;
+            for i in 0..n {
+                x[i] += a * r[i];
+                r[i] -= a * p[i];
+            }
+            rr = dot(&r, &r);
+            history.push(rr);
+            iters += 1;
+        }
+        MrsResult { x, r, converged: rr <= tol2, history, iters }
+    }
+
+    #[test]
+    fn scalar_solve_matches_the_legacy_recurrence() {
+        // the k = 1 delegation must reproduce the historical scalar
+        // path: same iteration count, same history, same iterate
+        for (n, seed, alpha) in [(90usize, 11u64, 2.0f64), (140, 12, 3.5), (60, 13, 1.2)] {
+            let (mut k, b) = system(n, seed, alpha);
+            let opts = MrsOptions { alpha, max_iters: 600, tol: 1e-9 };
+            let got = mrs_solve(&mut k, &b, &opts);
+            let (mut k_ref, _) = system(n, seed, alpha);
+            let want = legacy_mrs_solve(&mut k_ref, &b, &opts);
+            assert_eq!(got.converged, want.converged);
+            assert_eq!(got.iters, want.iters);
+            assert_eq!(got.history.len(), want.history.len());
+            for (a, c) in got.x.iter().zip(&want.x) {
+                assert!((a - c).abs() < 1e-12, "{a} vs {c}");
+            }
+            for (a, c) in got.r.iter().zip(&want.r) {
+                assert!((a - c).abs() < 1e-12, "{a} vs {c}");
+            }
+        }
     }
 
     #[test]

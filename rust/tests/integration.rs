@@ -25,7 +25,7 @@ fn full_pipeline_on_suite_smoke() {
         let err = y0.iter().zip(&y1).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
         assert!(err < 1e-9, "{}: err={err}", m.name);
         // RCM should never *increase* the bandwidth on scrambled inputs
-        assert!(prep.rcm_bw <= prep.bw_before, "{}", m.name);
+        assert!(prep.reordered_bw <= prep.bw_before, "{}", m.name);
     }
 }
 
@@ -41,15 +41,17 @@ fn table1_orderings_match_paper() {
     // af has the smallest relative RCM bandwidth...
     for (m, p) in &suite {
         if m.name != "af_5_k101_like" {
+            let af_rel = af.reordered_bw as f64 / af.n as f64;
+            let p_rel = p.reordered_bw as f64 / p.n as f64;
             assert!(
-                (af.rcm_bw as f64 / af.n as f64) <= (p.rcm_bw as f64 / p.n as f64) * 1.05,
+                af_rel <= p_rel * 1.05,
                 "af bw/n should be smallest, vs {}",
                 m.name
             );
         }
     }
     // ...and Serena/audikw the largest relative bandwidths (paper Table 1)
-    let rel = |p: &pars3::coordinator::Prepared| p.rcm_bw as f64 / p.n as f64;
+    let rel = |p: &pars3::coordinator::Prepared| p.reordered_bw as f64 / p.n as f64;
     let mut rels: Vec<f64> = suite.iter().map(|(_, p)| rel(p)).collect();
     rels.sort_by(|a, b| a.partial_cmp(b).unwrap());
     assert!(rel(serena) >= rels[3], "Serena should be among the widest");
@@ -84,7 +86,7 @@ fn matrix_market_roundtrip_through_pipeline() {
     let coord = Coordinator::new(Config::default());
     let p0 = coord.prepare("orig", &coo).unwrap();
     let p1 = coord.prepare("loaded", &loaded).unwrap();
-    assert_eq!(p0.rcm_bw, p1.rcm_bw);
+    assert_eq!(p0.reordered_bw, p1.reordered_bw);
     assert_eq!(p0.nnz_lower, p1.nnz_lower);
 }
 
@@ -108,6 +110,46 @@ fn reordering_preserves_spmv_semantics() {
     sss_spmv(&prep.sss, &xp, &mut yp);
     for (old, &new) in prep.perm.iter().enumerate() {
         assert!((yp[new as usize] - y_orig[old]).abs() < 1e-10, "row {old}");
+    }
+}
+
+#[test]
+fn rcm_bicriteria_matches_rcm_numerics_through_every_kernel() {
+    // the bi-criteria start nodes change the ordering, never the
+    // operator: for every registered kernel, multiplying in either
+    // ordering and mapping back to the original index space must give
+    // the same vector as the natural-order CSR reference
+    use pars3::kernel::registry::{build_from_sss, reorder_to_sss, KernelConfig};
+    use pars3::kernel::KERNEL_NAMES;
+    use pars3::graph::reorder::ReorderPolicy;
+    let n = 160;
+    let coo = gen::small_test_matrix(n, 21, 2.0);
+    let x: Vec<f64> = (0..n).map(|i| ((i * 13) % 17) as f64 * 0.2 - 1.5).collect();
+    let csr = convert::coo_to_csr(&coo);
+    let mut want = vec![0.0; n];
+    pars3::kernel::csr_spmv::csr_spmv(&csr, &x, &mut want);
+    for policy in [ReorderPolicy::Rcm, ReorderPolicy::RcmBiCriteria] {
+        let (perm, sss, report) = reorder_to_sss(&coo, policy, 0.0).unwrap();
+        assert_eq!(report.strategy, policy.name());
+        let sss = std::sync::Arc::new(sss);
+        let mut xp = vec![0.0; n];
+        for (old, &new) in perm.iter().enumerate() {
+            xp[new as usize] = x[old];
+        }
+        for &name in KERNEL_NAMES {
+            let mut k =
+                build_from_sss(name, sss.clone(), &KernelConfig::with_threads(4)).unwrap();
+            let mut yp = vec![0.0; n];
+            k.apply(&xp, &mut yp);
+            for (old, &new) in perm.iter().enumerate() {
+                assert!(
+                    (yp[new as usize] - want[old]).abs() < 1e-9,
+                    "{policy:?}/{name} row {old}: {} vs {}",
+                    yp[new as usize],
+                    want[old]
+                );
+            }
+        }
     }
 }
 
@@ -237,7 +279,7 @@ fn cost_model_reproduces_paper_orderings() {
     let prep_w = coord
         .prepare("wide", &skew::coo_from_pattern(n, &wide_edges, 2.0, &mut rng))
         .unwrap();
-    assert!(prep_n.rcm_bw < prep_w.rcm_bw);
+    assert!(prep_n.reordered_bw < prep_w.reordered_bw);
     let sp = |prep: &pars3::coordinator::Prepared| {
         let cm = prep.conflicts(32);
         let serial = model.serial_time(prep.n, prep.nnz_lower);

@@ -101,10 +101,10 @@ fn prop_prepare_permutation_never_increases_bandwidth() {
         let coord = Coordinator::new(Config::default());
         let prep = coord.prepare("prop", &coo).unwrap();
         assert!(
-            prep.rcm_bw <= prep.bw_before,
+            prep.reordered_bw <= prep.bw_before,
             "bandwidth grew: {} -> {}",
             prep.bw_before,
-            prep.rcm_bw
+            prep.reordered_bw
         );
         // the permutation is total...
         let mut seen = vec![false; n];
@@ -115,8 +115,64 @@ fn prop_prepare_permutation_never_increases_bandwidth() {
         // ...and permute_symmetric under it reproduces exactly the
         // bandwidth the pipeline reports
         let permuted = coo.permute_symmetric(&prep.perm);
-        assert_eq!(permuted.bandwidth(), prep.rcm_bw);
+        assert_eq!(permuted.bandwidth(), prep.reordered_bw);
         assert!(permuted.bandwidth() <= coo.bandwidth());
+    });
+}
+
+#[test]
+fn prop_every_reorder_strategy_is_a_total_permutation() {
+    // every strategy — including Auto's measured pick — must emit a
+    // total permutation on arbitrary disconnected graphs, with the
+    // per-component stats accounting for every vertex
+    use pars3::graph::reorder::{reorder_with_report, ReorderPolicy};
+    for_all("reorder strategies total on disconnected", 25, |rng| {
+        let (n, edges) = disconnected_pattern(rng);
+        let edges = gen::scramble(&edges, n, rng);
+        let g = Adjacency::from_lower_edges(n, &edges);
+        for policy in [
+            ReorderPolicy::Natural,
+            ReorderPolicy::Rcm,
+            ReorderPolicy::RcmBiCriteria,
+            ReorderPolicy::Auto,
+        ] {
+            let (perm, report) = reorder_with_report(&g, policy, 0.0);
+            assert_eq!(perm.len(), n, "{policy}");
+            let mut seen = vec![false; n];
+            for &p in &perm {
+                assert!(!seen[p as usize], "{policy}: target {p} assigned twice");
+                seen[p as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{policy}: permutation is not total");
+            assert_eq!(
+                report.components.iter().map(|c| c.size).sum::<usize>(),
+                n,
+                "{policy}: component stats must cover every vertex"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_auto_never_increases_bandwidth_over_natural() {
+    // the Asudeh-et-al. gate: whatever Auto picks, its bandwidth is
+    // never worse than declining to reorder (natural is a candidate)
+    use pars3::graph::rcm::bandwidth_under;
+    use pars3::graph::reorder::{reorder_with_report, ReorderPolicy};
+    for_all("auto bandwidth gate", 25, |rng| {
+        let (n, edges) = disconnected_pattern(rng);
+        let edges = gen::scramble(&edges, n, rng);
+        let g = Adjacency::from_lower_edges(n, &edges);
+        let id: Vec<u32> = (0..n as u32).collect();
+        let min_gain = 0.2 * rng.gen_f64();
+        let (perm, report) = reorder_with_report(&g, ReorderPolicy::Auto, min_gain);
+        let nat_bw = bandwidth_under(&g, &id);
+        assert!(
+            bandwidth_under(&g, &perm) <= nat_bw,
+            "auto picked a worse-than-natural ordering (min_gain {min_gain})"
+        );
+        assert_eq!(report.bw_after, bandwidth_under(&g, &perm));
+        assert_eq!(report.bw_before, nat_bw);
     });
 }
 
@@ -338,7 +394,13 @@ fn prop_dia_format_matches_sss_for_every_kernel() {
             let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect();
             let xs = VecBatch::from_fn(n, kw, |_, _| rng.gen_range_f64(-2.0, 2.0));
             for &name in KERNEL_NAMES {
-                let mk = |format| KernelConfig { threads, outer_bw, threaded: false, format };
+                let mk = |format| KernelConfig {
+                    threads,
+                    outer_bw,
+                    threaded: false,
+                    format,
+                    ..KernelConfig::default()
+                };
                 let mut k_sss = build_from_sss(name, s.clone(), &mk(FormatPolicy::Sss)).unwrap();
                 let mut k_dia = build_from_sss(name, s.clone(), &mk(FormatPolicy::Dia)).unwrap();
                 // k = 1

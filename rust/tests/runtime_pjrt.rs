@@ -88,7 +88,7 @@ fn padded_execution_matches_smaller_problem() {
     let coo = narrow_system(700, 2.0, 3);
     let mut coord = Coordinator::new(Config { artifacts_dir: dir, ..Config::default() });
     let prep = coord.prepare("pad", &coo).unwrap();
-    assert!(prep.rcm_bw <= 16 || prep.n <= 4096, "fixture fits an artifact");
+    assert!(prep.reordered_bw <= 16 || prep.n <= 4096, "fixture fits an artifact");
     let x: Vec<f64> = (0..700).map(|i| (i as f64 * 0.05).cos()).collect();
     let y_serial = coord.spmv(&prep, &x, Backend::Serial).unwrap();
     let y_pjrt = coord.spmv(&prep, &x, Backend::Pjrt).unwrap();
