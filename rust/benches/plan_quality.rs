@@ -1,0 +1,187 @@
+//! Bench: **planner honesty** — does the joint (reorder, format,
+//! backend) plan match the measured-best triple?
+//!
+//! For each pattern family the all-auto planner picks a triple from
+//! structural scores; this bench then *measures* every triple in the
+//! plan space (reorder × format × backend, at the planner's thread
+//! count) and reports the planner's pick, the measured-best pick, the
+//! slowdown of trusting the planner, and the per-axis hit-rate across
+//! families. Families:
+//!
+//! * `banded`       — already tightly banded (reordering should decline);
+//! * `scattered`    — scrambled band + long-range edges (reordering wins);
+//! * `disconnected` — disjoint banded blocks, scrambled;
+//! * `symmetric`    — structurally symmetric 2D 5-point mesh (the RACE
+//!                    case: bandwidth stays wide, kernel choice matters).
+//!
+//! `PARS3_BENCH_SCALE` (float) overrides the problem size — the CI
+//! smoke job runs this bench tiny to keep it from bit-rotting.
+
+use pars3::coordinator::planner::backend_label;
+use pars3::coordinator::{Backend, Config, Coordinator, PlanMode};
+use pars3::graph::reorder::ReorderPolicy;
+use pars3::kernel::FormatPolicy;
+use pars3::report::md_table;
+use pars3::sparse::{gen, skew};
+use pars3::util::bencher::Bencher;
+use pars3::util::SmallRng;
+
+/// Lower edges of a g×g 5-point mesh, scrambled (structurally
+/// symmetric; natural bandwidth g, which no reordering beats by much).
+fn mesh_pattern(g: usize, rng: &mut SmallRng) -> (usize, Vec<(u32, u32)>) {
+    let n = g * g;
+    let mut edges = Vec::new();
+    for r in 0..g {
+        for c in 0..g {
+            let i = (r * g + c) as u32;
+            if c > 0 {
+                edges.push((i, i - 1));
+            }
+            if r > 0 {
+                edges.push((i, i - g as u32));
+            }
+        }
+    }
+    (n, gen::scramble(&edges, n, rng))
+}
+
+fn patterns(n: usize, rng: &mut SmallRng) -> Vec<(&'static str, usize, Vec<(u32, u32)>)> {
+    let banded = gen::random_banded_pattern(n, 4, 0.5, rng);
+    let mut scattered = banded.clone();
+    gen::add_long_range(&mut scattered, n, 0.05, rng);
+    let scattered = gen::scramble(&scattered, n, rng);
+    let block = n / 3;
+    let mut disconnected = Vec::new();
+    for b in 0..3u32 {
+        let base = b * block as u32;
+        for (i, j) in gen::random_banded_pattern(block, 3, 0.5, rng) {
+            disconnected.push((i + base, j + base));
+        }
+    }
+    let dn = 3 * block;
+    let disconnected = gen::scramble(&disconnected, dn, rng);
+    let g = (n as f64).sqrt() as usize;
+    let (mn, mesh) = mesh_pattern(g.max(6), rng);
+    vec![
+        ("banded", n, banded),
+        ("scattered", n, scattered),
+        ("disconnected", dn, disconnected),
+        ("symmetric", mn, mesh),
+    ]
+}
+
+fn main() {
+    let mut scale = 1.0f64;
+    if let Ok(s) = std::env::var("PARS3_BENCH_SCALE") {
+        scale = s.parse().expect("PARS3_BENCH_SCALE must be a float");
+    }
+    let n = ((2000.0 * scale) as usize).max(96);
+    // the planner's default thread count (PlanConstraints::from_config);
+    // the measured sweep must run the parallel backends at the same p
+    // for the comparison to be apples-to-apples
+    let p = 8usize;
+    let mut rng = SmallRng::seed_from_u64(11);
+    let mut b = Bencher::new("plan_quality");
+    let mut rows = Vec::new();
+    let (mut triple_hits, mut axis_hits, mut families) = (0usize, [0usize; 3], 0usize);
+
+    let reorders = [ReorderPolicy::Natural, ReorderPolicy::Rcm, ReorderPolicy::RcmBiCriteria];
+    let formats = [FormatPolicy::Dia, FormatPolicy::Sss];
+    let backends = [
+        Backend::Serial,
+        Backend::Csr,
+        Backend::Dgbmv,
+        Backend::Coloring { p },
+        Backend::Pars3 { p },
+    ];
+
+    for (family, n, edges) in patterns(n, &mut rng) {
+        let coo = skew::coo_from_pattern(n, &edges, 2.0, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin()).collect();
+
+        // the planner's structural pick on the all-auto config
+        let mut auto_coord = Coordinator::new(Config::default());
+        let prep = auto_coord.prepare(family, &coo).expect("auto prepare");
+        let planned = prep.choice;
+        let planned_key =
+            (planned.reorder.name(), planned.format.to_string(), backend_label(planned.backend));
+
+        // measure EVERY triple in the plan space through the pinned
+        // legacy path (fresh coordinator per triple: no cache sharing)
+        let mut best: Option<(f64, (&str, String, String))> = None;
+        let mut planned_time = f64::INFINITY;
+        for reorder in reorders {
+            for format in formats {
+                let cfg = Config {
+                    plan: PlanMode::Pinned,
+                    reorder,
+                    format,
+                    ..Config::default()
+                };
+                let mut coord = Coordinator::new(cfg);
+                let pinned = coord.prepare(family, &coo).expect("pinned prepare");
+                for backend in backends {
+                    let label = backend_label(backend);
+                    let t = b.bench(
+                        &format!("spmv/{family}/{}+{}+{}", reorder.name(), format, label),
+                        1,
+                        3,
+                        || {
+                            let y = coord.spmv(&pinned, &x, backend).expect("spmv");
+                            std::hint::black_box(&y);
+                        },
+                    );
+                    let key = (reorder.name(), format.to_string(), label);
+                    if key == planned_key {
+                        planned_time = t.min;
+                    }
+                    if best.as_ref().map(|(m, _)| t.min < *m).unwrap_or(true) {
+                        best = Some((t.min, key));
+                    }
+                }
+            }
+        }
+        let (best_time, best_key) = best.expect("at least one measured triple");
+
+        families += 1;
+        let hit = [
+            planned_key.0 == best_key.0,
+            planned_key.1 == best_key.1,
+            planned_key.2 == best_key.2,
+        ];
+        for (h, a) in hit.iter().zip(axis_hits.iter_mut()) {
+            *a += *h as usize;
+        }
+        triple_hits += hit.iter().all(|&h| h) as usize;
+        rows.push(vec![
+            family.to_string(),
+            format!("{}+{}+{}", planned_key.0, planned_key.1, planned_key.2),
+            format!("{}+{}+{}", best_key.0, best_key.1, best_key.2),
+            format!("{:.3e}", planned_time),
+            format!("{:.3e}", best_time),
+            format!("{:.2}x", planned_time / best_time.max(f64::MIN_POSITIVE)),
+            if hit.iter().all(|&h| h) { "yes" } else { "no" }.to_string(),
+        ]);
+    }
+
+    b.section(&format!(
+        "## Planner pick vs measured-best triple\n\n{}",
+        md_table(
+            &[
+                "pattern", "planned", "measured best", "planned s", "best s", "slowdown",
+                "triple match",
+            ],
+            &rows
+        )
+    ));
+    b.section(&format!(
+        "Per-axis hit-rate over {families} families: reorder {}/{families}, \
+         format {}/{families}, backend {}/{families}; full-triple {triple_hits}/{families}. \
+         The planner scores structure only (bytes moved, row-work balance) — a \
+         miss with a small slowdown is acceptable; a large slowdown means a \
+         scorer is dishonest. Re-run with `plan_probe > 0` semantics by \
+         comparing against the probe-backed plan if a scorer drifts.\n",
+        axis_hits[0], axis_hits[1], axis_hits[2]
+    ));
+    b.finish();
+}

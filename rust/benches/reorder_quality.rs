@@ -68,11 +68,11 @@ fn main() {
             rows.push(vec![
                 family.to_string(),
                 policy.to_string(),
-                prep.report.strategy.to_string(),
+                prep.plan.reorder.strategy.to_string(),
                 prep.bw_before.to_string(),
                 prep.reordered_bw.to_string(),
-                prep.report.profile_after.to_string(),
-                prep.report.components.len().to_string(),
+                prep.plan.reorder.profile_after.to_string(),
+                prep.plan.reorder.components.len().to_string(),
                 format!("{:.3e}", t.min),
             ]);
         }

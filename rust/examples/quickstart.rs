@@ -24,7 +24,7 @@ fn main() -> pars3::Result<()> {
     let prep = coord.prepare("quickstart", &coo)?;
     println!(
         "{}: bandwidth {} -> {}  | split: middle={} outer={} (split_bw={})",
-        prep.report.strategy,
+        prep.plan.reorder.strategy,
         prep.bw_before,
         prep.reordered_bw,
         prep.split.nnz_middle(),

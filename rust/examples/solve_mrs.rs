@@ -63,7 +63,7 @@ fn main() -> pars3::Result<()> {
         "preprocessing: bandwidth {} -> {} ({}), middle={} outer={}",
         prep.bw_before,
         prep.reordered_bw,
-        prep.report.strategy,
+        prep.plan.reorder.strategy,
         prep.split.nnz_middle(),
         prep.split.nnz_outer()
     );

@@ -454,11 +454,14 @@ impl Client {
         self.dispatch(handle.shard, msg, rx)
     }
 
-    /// Query the preprocessing metadata of the matrix under `handle`
-    /// (dimension, stored NNZ, pre/post-reorder bandwidth and the
-    /// full [`ReorderReport`](crate::graph::reorder::ReorderReport) —
-    /// what the old
-    /// prepare response reported inline).
+    /// Query the preprocessing metadata of the matrix under `handle`:
+    /// dimension, stored NNZ, pre/post-reorder bandwidth, the resolved
+    /// [`PlanChoice`](crate::coordinator::planner::PlanChoice) triple
+    /// and the full
+    /// [`PlanReport`](crate::coordinator::planner::PlanReport)
+    /// evidence (per-axis candidates, scores, decline reasons). After
+    /// `prepare_replace` this reflects the replacement's plan, not the
+    /// original's.
     pub fn describe(&self, handle: &MatrixHandle) -> Ticket<MatrixInfo> {
         if let Err(t) = self.guard(handle) {
             return t;

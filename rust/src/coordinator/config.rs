@@ -15,12 +15,16 @@
 //! format = "auto"
 //! reorder = "auto"
 //! reorder_min_gain = 0.0
+//! backend = "auto"
+//! plan = "auto"
+//! plan_probe = 0
 //! shards = 2
 //! queue_depth = 64
 //! max_cached_kernels = 32
 //! seed = 42
 //! ```
 
+use crate::coordinator::planner::{BackendPolicy, PlanMode};
 use crate::graph::reorder::ReorderPolicy;
 use crate::kernel::FormatPolicy;
 use crate::Result;
@@ -53,6 +57,16 @@ pub struct Config {
     /// reordering must clear over the natural order to be accepted
     /// (`0.0` = any strict improvement; must be in `[0, 1)`).
     pub reorder_min_gain: f64,
+    /// Backend constraint: `auto` lets the planner score the registry
+    /// backends; anything else pins the axis
+    /// (`serial|csr|dgbmv|coloring|pars3|pjrt`).
+    pub backend: BackendPolicy,
+    /// `auto` = joint (reorder, format, backend) planning with every
+    /// unpinned axis scored; `pinned` = legacy per-axis resolution.
+    pub plan: PlanMode,
+    /// Timed `apply` calls per backend candidate during planning
+    /// (`0` = structural scoring only, no probe kernels built).
+    pub plan_probe: usize,
     /// Worker shards in the request service (each owns a `Coordinator`
     /// and its kernel cache; matrices are assigned round-robin).
     pub shards: usize,
@@ -79,6 +93,9 @@ impl Default for Config {
             format: FormatPolicy::Auto,
             reorder: ReorderPolicy::Auto,
             reorder_min_gain: 0.0,
+            backend: BackendPolicy::Auto,
+            plan: PlanMode::Auto,
+            plan_probe: 0,
             shards: 2,
             queue_depth: 64,
             max_cached_kernels: 32,
@@ -124,6 +141,13 @@ impl Config {
                 "reorder_min_gain" => {
                     cfg.reorder_min_gain = value.parse().context("reorder_min_gain")?;
                 }
+                "backend" => {
+                    cfg.backend = value.trim_matches('"').parse().context("backend")?;
+                }
+                "plan" => {
+                    cfg.plan = value.trim_matches('"').parse().context("plan")?;
+                }
+                "plan_probe" => cfg.plan_probe = value.parse().context("plan_probe")?,
                 "shards" => cfg.shards = value.parse().context("shards")?,
                 "queue_depth" => cfg.queue_depth = value.parse().context("queue_depth")?,
                 "max_cached_kernels" => {
@@ -176,7 +200,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let c = Config::parse(
-            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nreorder = \"rcm-bicriteria\"\nreorder_min_gain = 0.1\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
+            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nreorder = \"rcm-bicriteria\"\nreorder_min_gain = 0.1\nbackend = \"pars3\"\nplan = \"pinned\"\nplan_probe = 2\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
         )
         .unwrap();
         assert_eq!(c.scale, 0.5);
@@ -188,6 +212,9 @@ mod tests {
         assert_eq!(c.format, FormatPolicy::Dia);
         assert_eq!(c.reorder, ReorderPolicy::RcmBiCriteria);
         assert_eq!(c.reorder_min_gain, 0.1);
+        assert_eq!(c.backend, BackendPolicy::Pars3);
+        assert_eq!(c.plan, PlanMode::Pinned);
+        assert_eq!(c.plan_probe, 2);
         assert_eq!(c.shards, 4);
         assert_eq!(c.queue_depth, 16);
         assert_eq!(c.max_cached_kernels, 8);
@@ -197,6 +224,10 @@ mod tests {
         assert_eq!(
             Config::parse("reorder = natural").unwrap().reorder,
             ReorderPolicy::Natural
+        );
+        assert_eq!(
+            Config::parse("backend = coloring").unwrap().backend,
+            BackendPolicy::Coloring
         );
     }
 
@@ -208,6 +239,8 @@ mod tests {
         assert!(Config::parse("scale 0.5").is_err());
         assert!(Config::parse("format = \"csr\"").is_err());
         assert!(Config::parse("reorder = \"symrcm\"").is_err());
+        assert!(Config::parse("backend = \"gpu\"").is_err());
+        assert!(Config::parse("plan = \"maybe\"").is_err());
         assert!(Config::parse("reorder_min_gain = 1.5").is_err());
         assert!(Config::parse("reorder_min_gain = -0.1").is_err());
         assert!(Config::parse("shards = 0").is_err());

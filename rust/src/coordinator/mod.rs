@@ -1,8 +1,9 @@
 //! L3 coordinator: the end-to-end pipeline
-//! (ingest → reorder (pluggable strategy) → 3-way split → conflict analysis → distribute
-//! → repeated SpMV / MRS solve), plus config, the crate-wide typed
-//! error, and the sharded request service with its handle-based,
-//! pipelined client API.
+//! (ingest → plan the (reorder, format, backend) triple
+//! ([`Planner`]) → reorder → 3-way split → conflict analysis →
+//! distribute → repeated SpMV / MRS solve), plus config, the
+//! crate-wide typed error, and the sharded request service with its
+//! handle-based, pipelined client API.
 //!
 //! This is the paper's system glued together: preprocessing is done once
 //! per matrix ([`Coordinator::prepare`]); the returned [`Prepared`]
@@ -16,10 +17,15 @@ pub mod client;
 pub mod config;
 pub mod error;
 pub mod pipeline;
+pub mod planner;
 pub mod service;
 
 pub use client::{Client, MatrixHandle, Ticket};
 pub use config::Config;
 pub use error::Pars3Error;
 pub use pipeline::{Backend, Coordinator, Prepared};
+pub use planner::{
+    AxisReport, BackendPolicy, PlanCandidate, PlanChoice, PlanConstraints, PlanMode, PlanReport,
+    Planned, Planner,
+};
 pub use service::{CacheStats, MatrixInfo, Service};

@@ -1,19 +1,22 @@
 //! The preprocessing + execution pipeline.
 //!
-//! Preprocessing (reorder → SSS → 3-way split) happens once per matrix in
-//! [`Coordinator::prepare`]; every multiply/solve after that constructs
-//! its kernel through the unified registry
-//! ([`crate::kernel::registry`]) — there is no per-backend construction
-//! logic here. The PJRT backend is additionally gated behind the `pjrt`
-//! feature; without it, [`Backend::Pjrt`] requests fail with a clear
-//! error instead of dragging XLA into the build.
+//! Preprocessing (plan → reorder → SSS → 3-way split) happens once per
+//! matrix in [`Coordinator::prepare`], which delegates the joint
+//! (reorder, format, backend) decision to
+//! [`crate::coordinator::planner::Planner`]; every multiply/solve after
+//! that constructs its kernel through the unified registry
+//! ([`crate::kernel::registry`]) under the prepared [`PlanChoice`] —
+//! there is no per-backend construction logic here. The PJRT backend is
+//! additionally gated behind the `pjrt` feature; without it,
+//! [`Backend::Pjrt`] requests fail with a clear error instead of
+//! dragging XLA into the build.
 
 use crate::coordinator::error::Pars3Error;
+use crate::coordinator::planner::{PlanChoice, PlanConstraints, PlanReport, Planned, Planner};
 use crate::coordinator::Config;
-use crate::graph::reorder::ReorderReport;
 use crate::kernel::pars3::Pars3Plan;
 use crate::kernel::registry::{self, KernelConfig};
-use crate::kernel::{ConflictMap, FormatPolicy, Split3, Spmv, VecBatch};
+use crate::kernel::{ConflictMap, Split3, Spmv, VecBatch};
 use crate::solver::mrs::{mrs_solve, mrs_solve_batch, MrsOptions, MrsResult};
 use crate::sparse::{Coo, Sss};
 use crate::Result;
@@ -85,10 +88,13 @@ pub struct Prepared {
     pub reordered_bw: usize,
     /// The reordering permutation used (`perm[old] = new`).
     pub perm: Vec<u32>,
-    /// Instrumentation from the reordering run: strategy chosen,
-    /// bandwidth/profile before/after, per-component stats, candidate
-    /// scores (see [`crate::graph::reorder`]).
-    pub report: ReorderReport,
+    /// The (reorder, format, backend) triple the planner resolved —
+    /// part of every kernel-cache key derived from this preparation.
+    pub choice: PlanChoice,
+    /// Evidence for the choice: per-axis candidates, scores, probe
+    /// timings, decline reasons, plus the embedded
+    /// [`ReorderReport`](crate::graph::reorder::ReorderReport).
+    pub plan: PlanReport,
     /// Reordered matrix in SSS form, shared (not cloned) with every
     /// kernel built from this preparation.
     pub sss: Arc<Sss>,
@@ -108,9 +114,11 @@ impl Prepared {
     }
 }
 
-/// Kernel-cache key: `Sss` allocation address, backend, and the config
-/// knobs (`threaded`, `format`, `outer_bw`) that affect construction.
-type CacheKey = (usize, Backend, bool, FormatPolicy, usize);
+/// Kernel-cache key: `Sss` allocation address, requested backend, the
+/// preparation's [`PlanChoice`] (a re-plan must never be served a
+/// kernel built for the old triple), and the config knobs (`threaded`,
+/// `outer_bw`) that affect construction.
+type CacheKey = (usize, Backend, PlanChoice, bool, usize);
 
 /// One kernel-cache entry: the built kernel plus the `Arc<Sss>` whose
 /// pointer is the entry's identity key. Pinning the `Arc` here makes
@@ -162,25 +170,29 @@ impl Coordinator {
         }
     }
 
-    /// Preprocess a full COO matrix: reorder with the configured
-    /// strategy (Θ(NNZ) per candidate), convert to SSS, 3-way split at
-    /// the configured outer bandwidth.
+    /// Preprocess a full COO matrix: plan the (reorder, format,
+    /// backend) triple under the config's constraints
+    /// ([`Planner::plan`]), reorder with the chosen strategy (Θ(NNZ)
+    /// per candidate), convert to SSS, 3-way split at the configured
+    /// outer bandwidth with the chosen middle-split format.
     ///
-    /// The default [`crate::graph::reorder::ReorderPolicy::Auto`]
-    /// implements the paper's §4.1 future-work note — "a future work
-    /// that can recognize and exploit original matrix patterns": if the
-    /// input is *already* banded at least as tightly as the best
-    /// reordering achieves (Fig. 5's pre-banded case, gated by
-    /// [`Config::reorder_min_gain`]), the identity ordering is kept and
-    /// the permutation cost disappears from the pipeline.
+    /// The default all-`auto` config implements the paper's §4.1
+    /// future-work note — "a future work that can recognize and
+    /// exploit original matrix patterns": if the input is *already*
+    /// banded at least as tightly as the best reordering achieves
+    /// (Fig. 5's pre-banded case, gated by
+    /// [`Config::reorder_min_gain`]), the identity ordering is kept
+    /// and the permutation cost disappears from the pipeline — and
+    /// the same measured-candidate treatment now extends to the
+    /// storage format and the backend. Every [`Prepared`] carries the
+    /// full [`PlanReport`] evidence.
     pub fn prepare(&self, name: &str, coo: &Coo) -> Result<Prepared, Pars3Error> {
         let bw_before = coo.bandwidth();
-        let (perm, sss, report) =
-            registry::reorder_to_sss(coo, self.cfg.reorder, self.cfg.reorder_min_gain)?;
+        let cons = PlanConstraints::from_config(&self.cfg);
+        let Planned { choice, report, perm, sss, mut split } = Planner::plan(coo, &cons)?;
         let reordered_bw = sss.bandwidth();
-        let mut split =
-            Split3::with_outer_bw_format(&sss, self.cfg.outer_bw, self.cfg.format)?;
-        split.reorder_strategy = Some(report.strategy);
+        split.reorder_strategy = Some(report.reorder.strategy);
+        split.plan_triple = Some(choice.describe());
         Ok(Prepared {
             name: name.to_string(),
             n: sss.n,
@@ -188,7 +200,8 @@ impl Coordinator {
             bw_before,
             reordered_bw,
             perm,
-            report,
+            choice,
+            plan: report,
             sss: Arc::new(sss),
             split: Arc::new(split),
         })
@@ -212,7 +225,9 @@ impl Coordinator {
             threads,
             outer_bw: self.cfg.outer_bw,
             threaded: self.cfg.threaded,
-            format: self.cfg.format,
+            // the *planned* format, not the raw config: the plan is
+            // what the prepared split was actually built with
+            format: prep.choice.format,
             reorder: self.cfg.reorder,
             reorder_min_gain: self.cfg.reorder_min_gain,
         };
@@ -227,16 +242,19 @@ impl Coordinator {
     }
 
     /// Cache key for a preparation: the `Arc<Sss>` allocation identity,
-    /// the backend, and every [`Config`] knob that changes what
+    /// the requested backend, the preparation's [`PlanChoice`], and
+    /// every remaining [`Config`] knob that changes what
     /// [`Self::kernel`] builds — so mutating the public `cfg` between
     /// requests builds a new kernel instead of silently serving one
-    /// constructed under the old settings.
+    /// constructed under the old settings, and a *re-planned* matrix
+    /// (whose triple changed) can never be served a kernel built for
+    /// the old triple.
     fn cache_key(&self, prep: &Prepared, backend: Backend) -> CacheKey {
         (
             Arc::as_ptr(&prep.sss) as usize,
             backend,
+            prep.choice,
             self.cfg.threaded,
-            self.cfg.format,
             self.cfg.outer_bw,
         )
     }
@@ -566,10 +584,17 @@ mod tests {
         let prep = c.prepare("t", &coo).unwrap();
         assert!(prep.reordered_bw <= prep.bw_before);
         assert_eq!(prep.nnz_lower, prep.split.nnz_middle() + prep.split.nnz_outer());
-        // the reorder report rides along and agrees with the pipeline
-        assert_eq!(prep.report.bw_after, prep.reordered_bw);
-        assert_eq!(prep.split.reorder_strategy, Some(prep.report.strategy));
-        assert!(!prep.report.components.is_empty());
+        // the plan report rides along and agrees with the pipeline
+        assert_eq!(prep.plan.reorder.bw_after, prep.reordered_bw);
+        assert_eq!(prep.split.reorder_strategy, Some(prep.plan.reorder.strategy));
+        assert_eq!(prep.split.plan_triple, Some(prep.choice.describe()));
+        assert!(!prep.plan.reorder.components.is_empty());
+        // all-auto config: every axis was planned with >= 2 candidates
+        for ax in &prep.plan.axes {
+            assert!(!ax.pinned, "{} axis", ax.axis);
+            assert!(ax.candidates.len() >= 2, "{} axis", ax.axis);
+            assert_eq!(ax.candidates.iter().filter(|c| c.chosen).count(), 1);
+        }
     }
 
     #[test]
@@ -586,9 +611,9 @@ mod tests {
         ] {
             let mut c = Coordinator::new(Config { reorder: policy, ..Config::default() });
             let prep = c.prepare("t", &coo).unwrap();
-            assert_eq!(prep.report.requested, policy);
+            assert_eq!(prep.plan.reorder.requested, policy);
             if policy == ReorderPolicy::Natural {
-                assert_eq!(prep.report.strategy, "natural");
+                assert_eq!(prep.plan.reorder.strategy, "natural");
                 assert_eq!(prep.reordered_bw, prep.bw_before);
             } else {
                 assert!(prep.reordered_bw <= prep.bw_before, "{policy}");
@@ -754,7 +779,6 @@ mod tests {
 
     #[test]
     fn cache_distinguishes_config_changes() {
-        use crate::kernel::FormatPolicy;
         let coo = gen::small_test_matrix(90, 24, 1.5);
         let mut c = coordinator();
         let prep = c.prepare("t", &coo).unwrap();
@@ -763,11 +787,34 @@ mod tests {
         assert_eq!(c.kernel_cache_stats(), (1, 1));
         // mutating the public cfg must build a fresh kernel, not serve
         // the one constructed under the old settings
-        c.cfg.format = FormatPolicy::Sss;
+        c.cfg.threaded = true;
         c.spmv(&prep, &x, Backend::Serial).unwrap();
         assert_eq!(c.kernel_cache_stats(), (2, 2));
         c.clear_kernel_cache();
         assert_eq!(c.kernel_cache_stats(), (0, 2));
+    }
+
+    #[test]
+    fn cache_keys_on_the_plan_choice_so_a_replan_rebuilds() {
+        use crate::kernel::FormatPolicy;
+        let coo = gen::small_test_matrix(110, 27, 2.0);
+        let mut c = coordinator();
+        let prep = c.prepare("t", &coo).unwrap();
+        let x = vec![1.0; 110];
+        c.spmv(&prep, &x, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (1, 1));
+        // simulate a re-plan that resolved a different triple for the
+        // same matrix allocation: the cache must treat it as a new
+        // kernel, never serving one built for the old triple
+        let mut replanned = prep.clone();
+        replanned.choice.format = match prep.choice.format {
+            FormatPolicy::Dia => FormatPolicy::Sss,
+            _ => FormatPolicy::Dia,
+        };
+        c.spmv(&replanned, &x, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (2, 2), "new triple, new kernel");
+        c.spmv(&prep, &x, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (2, 2), "old triple still cached");
     }
 
     #[test]

@@ -1,0 +1,912 @@
+//! Measured preprocessing planner: pick the (reorder, format, backend)
+//! **triple** jointly instead of through three independent `Auto` knobs.
+//!
+//! The paper's economics — preprocessing pays for itself over repeated
+//! SpMVs (§4) — only hold if the preprocessing decisions are the right
+//! ones *together*: RACE (Alappat et al., 1907.06487) shows
+//! coloring-style kernels win exactly where RCM fails to band, i.e.
+//! where the reorder quality gate (Asudeh et al.) declines, and the
+//! DIA-vs-SSS storage choice shifts which backend is
+//! bandwidth-optimal. [`Planner::plan`] therefore resolves all three
+//! axes in one pass:
+//!
+//! 1. **reorder** — the candidate-scoring loop formerly private to
+//!    [`crate::graph::reorder::Auto`] lives here as
+//!    [`score_reorder_candidates`]: every strategy is scored by
+//!    (bandwidth, envelope profile) and the natural order is kept
+//!    unless the best reordering clears `reorder_min_gain`.
+//! 2. **format** — DIA and SSS middle storage are scored by estimated
+//!    bytes streamed per `apply` (the measured-candidate generalization
+//!    of the old fixed 0.5 fill threshold, which
+//!    [`FormatPolicy::Auto`] still applies on the direct registry
+//!    path).
+//! 3. **backend** — every registry kernel gets a structural byte proxy
+//!    (nnz, bandwidth, [`Split3::row_work`] balance across ranks);
+//!    with a probe budget (`plan_probe` / `--plan-probe`) the planner
+//!    instead *times* a few real `apply` calls on each candidate
+//!    kernel and scores by the minimum.
+//!
+//! [`crate::coordinator::Config`]'s `reorder`/`format`/`backend` act as
+//! **constraints**: pinning one axis restricts the plan space on that
+//! axis only — the others are still planned. `plan = "pinned"` turns
+//! the planner off wholesale and resolves every axis by the legacy
+//! per-axis rules (bit-for-bit the pre-planner behavior). Every plan
+//! emits a [`PlanReport`] — per-axis candidates, scores, probe
+//! timings, chosen flags, decline reasons — that flows through
+//! [`crate::coordinator::Prepared`], [`crate::coordinator::MatrixInfo`]
+//! / `Client::describe`, `Pars3Stats`, the kernel-cache key, and the
+//! CLI output, so every prepared matrix carries the evidence for how
+//! it was prepared.
+
+use crate::coordinator::config::Config;
+use crate::coordinator::error::Pars3Error;
+use crate::coordinator::pipeline::Backend;
+use crate::graph::rcm::{bandwidth_under, profile_under};
+use crate::graph::reorder::{
+    CandidateScore, Natural, Rcm, RcmBiCriteria, ReorderOutcome, ReorderPolicy, ReorderReport,
+    ReorderStrategy,
+};
+use crate::graph::Adjacency;
+use crate::kernel::dia::{DiaBand, FormatPolicy};
+use crate::kernel::registry::{self, KernelConfig};
+use crate::kernel::split3::Split3;
+use crate::sparse::{Coo, Sss};
+use std::fmt;
+use std::time::Instant;
+
+/// Whether `prepare` plans jointly or resolves each axis by the legacy
+/// per-axis rules (config `plan = auto|pinned`, CLI `--plan`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PlanMode {
+    /// Joint planning: every axis not pinned by config is scored and
+    /// chosen by the planner.
+    #[default]
+    Auto,
+    /// Legacy resolution: `reorder`/`format`/`backend` mean exactly
+    /// what they meant before the planner existed (including their own
+    /// per-axis `Auto` heuristics).
+    Pinned,
+}
+
+impl PlanMode {
+    /// Config/CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanMode::Auto => "auto",
+            PlanMode::Pinned => "pinned",
+        }
+    }
+}
+
+impl fmt::Display for PlanMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for PlanMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        Ok(match s {
+            "auto" => PlanMode::Auto,
+            "pinned" => PlanMode::Pinned,
+            other => anyhow::bail!("unknown plan mode '{other}' (expected auto|pinned)"),
+        })
+    }
+}
+
+/// Backend **constraint** (config `backend = ...`, CLI `--backend`):
+/// `Auto` leaves the axis to the planner, anything else pins it.
+/// Thread counts are not part of the policy — the planner supplies `p`
+/// when it resolves a parallel backend (see [`BackendPolicy::resolve`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendPolicy {
+    /// Let the planner choose among the registry backends.
+    #[default]
+    Auto,
+    /// Pin the serial SSS baseline.
+    Serial,
+    /// Pin plain CSR.
+    Csr,
+    /// Pin the dense-band `dgbmv` kernel.
+    Dgbmv,
+    /// Pin the graph-coloring phased kernel.
+    Coloring,
+    /// Pin the PARS3 3-way split kernel.
+    Pars3,
+    /// Pin the PJRT accelerator path (outside the registry; never part
+    /// of the auto plan space and never probed).
+    Pjrt,
+}
+
+impl BackendPolicy {
+    /// Config/CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendPolicy::Auto => "auto",
+            BackendPolicy::Serial => "serial",
+            BackendPolicy::Csr => "csr",
+            BackendPolicy::Dgbmv => "dgbmv",
+            BackendPolicy::Coloring => "coloring",
+            BackendPolicy::Pars3 => "pars3",
+            BackendPolicy::Pjrt => "pjrt",
+        }
+    }
+
+    /// Concrete backend this policy pins (parallel backends get rank
+    /// count `p`), or `None` for [`BackendPolicy::Auto`].
+    pub fn resolve(self, p: usize) -> Option<Backend> {
+        match self {
+            BackendPolicy::Auto => None,
+            BackendPolicy::Serial => Some(Backend::Serial),
+            BackendPolicy::Csr => Some(Backend::Csr),
+            BackendPolicy::Dgbmv => Some(Backend::Dgbmv),
+            BackendPolicy::Coloring => Some(Backend::Coloring { p }),
+            BackendPolicy::Pars3 => Some(Backend::Pars3 { p }),
+            BackendPolicy::Pjrt => Some(Backend::Pjrt),
+        }
+    }
+}
+
+impl fmt::Display for BackendPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for BackendPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        Ok(match s {
+            "auto" => BackendPolicy::Auto,
+            "serial" => BackendPolicy::Serial,
+            "csr" => BackendPolicy::Csr,
+            "dgbmv" => BackendPolicy::Dgbmv,
+            "coloring" => BackendPolicy::Coloring,
+            "pars3" => BackendPolicy::Pars3,
+            "pjrt" => BackendPolicy::Pjrt,
+            other => anyhow::bail!(
+                "unknown backend '{other}' (expected auto|serial|csr|dgbmv|coloring|pars3|pjrt)"
+            ),
+        })
+    }
+}
+
+/// Human-readable label for a concrete [`Backend`] (parallel backends
+/// include their rank count).
+pub fn backend_label(b: Backend) -> String {
+    match b {
+        Backend::Serial => "serial".to_string(),
+        Backend::Csr => "csr".to_string(),
+        Backend::Dgbmv => "dgbmv".to_string(),
+        Backend::Coloring { p } => format!("coloring(p={p})"),
+        Backend::Pars3 { p } => format!("pars3(p={p})"),
+        Backend::Pjrt => "pjrt".to_string(),
+    }
+}
+
+/// The plan space and per-axis pins [`Planner::plan`] works under —
+/// built from a [`Config`] via [`PlanConstraints::from_config`].
+#[derive(Debug, Clone)]
+pub struct PlanConstraints {
+    /// Joint planning vs legacy per-axis resolution.
+    pub mode: PlanMode,
+    /// Reorder axis: [`ReorderPolicy::Auto`] leaves it to the planner.
+    pub reorder: ReorderPolicy,
+    /// The reorder quality gate (fractional bandwidth improvement a
+    /// reordering must clear over natural).
+    pub reorder_min_gain: f64,
+    /// Format axis: [`FormatPolicy::Auto`] leaves it to the planner.
+    pub format: FormatPolicy,
+    /// Backend axis: [`BackendPolicy::Auto`] leaves it to the planner.
+    pub backend: BackendPolicy,
+    /// Outer-split bandwidth for the 3-way split (paper default 3).
+    pub outer_bw: usize,
+    /// Rank count candidate parallel backends are planned at (clamped
+    /// to the matrix size).
+    pub threads: usize,
+    /// Real threads vs deterministic emulated executors (probe kernels
+    /// honor this so probe timings reflect the execution mode).
+    pub threaded: bool,
+    /// Number of timed `apply` calls per backend candidate; `0`
+    /// disables probing and scores backends structurally.
+    pub probe_spmvs: usize,
+}
+
+impl PlanConstraints {
+    /// Derive the constraints a [`Config`] expresses. The planning
+    /// rank count is the registry default
+    /// ([`KernelConfig::default`]`.threads`); per-call overrides (CLI
+    /// `--p`) apply at execution, not planning.
+    pub fn from_config(cfg: &Config) -> Self {
+        Self {
+            mode: cfg.plan,
+            reorder: cfg.reorder,
+            reorder_min_gain: cfg.reorder_min_gain,
+            format: cfg.format,
+            backend: cfg.backend,
+            outer_bw: cfg.outer_bw,
+            threads: KernelConfig::default().threads,
+            threaded: cfg.threaded,
+            probe_spmvs: cfg.plan_probe,
+        }
+    }
+}
+
+/// The resolved (reorder, format, backend) triple. Part of the
+/// kernel-cache key, so a re-plan can never be served a kernel built
+/// for a different triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanChoice {
+    /// Concrete reorder policy matching the chosen strategy (never
+    /// `Auto` under [`PlanMode::Auto`]; verbatim config under
+    /// [`PlanMode::Pinned`]). Pinning this policy through an old-style
+    /// config reproduces the plan's permutation exactly.
+    pub reorder: ReorderPolicy,
+    /// Middle-split storage kernels are built with.
+    pub format: FormatPolicy,
+    /// Backend `spmv`/`solve` default to when the caller does not name
+    /// one.
+    pub backend: Backend,
+}
+
+impl PlanChoice {
+    /// One-line `reorder=... format=... backend=...` label (also the
+    /// `plan_triple` stamped into `Pars3Stats`).
+    pub fn describe(&self) -> String {
+        format!(
+            "reorder={} format={} backend={}",
+            self.reorder,
+            self.format,
+            backend_label(self.backend)
+        )
+    }
+}
+
+/// One scored candidate on one plan axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanCandidate {
+    /// Candidate label (`"rcm"`, `"dia"`, `"pars3(p=8)"`, ...).
+    pub name: String,
+    /// Score the planner compared (lower is better): bandwidth for the
+    /// reorder axis, estimated bytes per `apply` for format/backend,
+    /// or the probe minimum in seconds when probing.
+    pub score: f64,
+    /// Human-readable evidence behind the score.
+    pub detail: String,
+    /// Minimum timed `apply` over the probe budget, when probed.
+    pub probe_s: Option<f64>,
+    /// Whether this candidate won its axis.
+    pub chosen: bool,
+}
+
+/// Everything the planner weighed on one axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AxisReport {
+    /// `"reorder"`, `"format"`, or `"backend"`.
+    pub axis: &'static str,
+    /// True when config/CLI pinned this axis (or `plan = "pinned"`
+    /// disabled planning wholesale).
+    pub pinned: bool,
+    /// Label of the winning candidate.
+    pub chosen: String,
+    /// Every candidate scored, in scoring order, exactly one `chosen`
+    /// on an unpinned axis.
+    pub candidates: Vec<PlanCandidate>,
+    /// Why the planner kept the status quo on an unpinned axis (the
+    /// Asudeh-style decline gate for reorder, DIA rejection for
+    /// format); `None` when a transforming candidate won or the axis
+    /// was pinned.
+    pub decline: Option<String>,
+}
+
+/// The [`ReorderReport`] generalized across all three plan axes: the
+/// evidence record every prepared matrix carries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanReport {
+    /// Mode the plan was made under.
+    pub mode: PlanMode,
+    /// The full instrumented reorder report (bandwidth/profile
+    /// before/after, per-component stats, candidate scores) — the
+    /// pre-planner `ReorderReport` surface, unchanged.
+    pub reorder: ReorderReport,
+    /// Per-axis candidates, scores, and decline reasons, in
+    /// reorder/format/backend order.
+    pub axes: Vec<AxisReport>,
+    /// Probe budget the plan ran with (0 = structural scoring only).
+    pub probe_spmvs: usize,
+}
+
+impl PlanReport {
+    /// Look up one axis by name.
+    pub fn axis(&self, name: &str) -> Option<&AxisReport> {
+        self.axes.iter().find(|a| a.axis == name)
+    }
+
+    /// One-line plan summary: mode, per-axis winner, candidate counts.
+    pub fn summary(&self) -> String {
+        let mut s = format!("plan[{}]", self.mode);
+        for ax in &self.axes {
+            let pin = if ax.pinned { ", pinned" } else { "" };
+            s.push_str(&format!(
+                " {}={} ({} candidate(s){})",
+                ax.axis,
+                ax.chosen,
+                ax.candidates.len(),
+                pin
+            ));
+        }
+        s
+    }
+
+    /// Multi-line evidence dump: every candidate with score, probe
+    /// timing, chosen flag, plus per-axis decline reasons.
+    pub fn detail(&self) -> String {
+        let mut s = String::new();
+        for ax in &self.axes {
+            s.push_str(&format!(
+                "{} axis{}:\n",
+                ax.axis,
+                if ax.pinned { " (pinned)" } else { "" }
+            ));
+            for c in &ax.candidates {
+                let mark = if c.chosen { '*' } else { ' ' };
+                let probe = match c.probe_s {
+                    Some(t) => format!(" probe {t:.3e}s"),
+                    None => String::new(),
+                };
+                s.push_str(&format!(
+                    "  {mark} {:<16} score {:>12.3}{probe}  {}\n",
+                    c.name, c.score, c.detail
+                ));
+            }
+            if let Some(d) = &ax.decline {
+                s.push_str(&format!("    declined: {d}\n"));
+            }
+        }
+        s
+    }
+}
+
+/// Output of [`Planner::plan`]: the choice, the evidence, and the
+/// preprocessed matrix artifacts (permutation, reordered SSS, 3-way
+/// split with the chosen format already selected).
+#[derive(Debug, Clone)]
+pub struct Planned {
+    /// The resolved (reorder, format, backend) triple.
+    pub choice: PlanChoice,
+    /// Per-axis evidence for the choice.
+    pub report: PlanReport,
+    /// Chosen permutation (`perm[old] = new`).
+    pub perm: Vec<u32>,
+    /// The reordered skew-symmetric matrix.
+    pub sss: Sss,
+    /// The 3-way band split, with [`PlanChoice::format`] selected.
+    pub split: Split3,
+}
+
+/// The joint (reorder, format, backend) planner. Stateless; all inputs
+/// arrive through [`PlanConstraints`].
+pub struct Planner;
+
+impl Planner {
+    /// Plan and preprocess `coo` under `cons`: resolve every unpinned
+    /// axis from scored candidates, honor every pinned axis, and
+    /// return the preprocessed artifacts plus the [`PlanReport`]
+    /// evidence.
+    pub fn plan(coo: &Coo, cons: &PlanConstraints) -> Result<Planned, Pars3Error> {
+        // Axis 1: reorder. `reorder_to_sss` already runs the scoring
+        // loop (via `score_reorder_candidates` when the policy is
+        // Auto), so both pinned and unpinned resolution share it.
+        let (perm, sss, rreport) =
+            registry::reorder_to_sss(coo, cons.reorder, cons.reorder_min_gain)?;
+        let reorder_pinned =
+            cons.mode == PlanMode::Pinned || cons.reorder != ReorderPolicy::Auto;
+        let reorder_axis = reorder_axis_report(&rreport, reorder_pinned, cons.reorder_min_gain);
+        let chosen_reorder = match cons.mode {
+            PlanMode::Pinned => cons.reorder,
+            PlanMode::Auto => policy_named(rreport.strategy),
+        };
+
+        // Build the split with pure-SSS storage first; the format axis
+        // decides what `select_format` installs.
+        let mut split = Split3::with_outer_bw_format(&sss, cons.outer_bw, FormatPolicy::Sss)?;
+
+        // Axis 2: format.
+        let format_pinned =
+            cons.mode == PlanMode::Pinned || cons.format != FormatPolicy::Auto;
+        let (format_choice, format_axis) = if format_pinned {
+            (cons.format, pinned_format_axis(&split, cons.format))
+        } else {
+            scored_format_axis(&split)
+        };
+        split.select_format(format_choice);
+
+        // Axis 3: backend (scored against the split as it will be
+        // executed, i.e. after format selection).
+        let p = cons.threads.clamp(1, sss.n.max(1));
+        let backend_pinned =
+            cons.mode == PlanMode::Pinned || cons.backend != BackendPolicy::Auto;
+        let (backend_choice, backend_axis) = if backend_pinned {
+            let b = cons.backend.resolve(p).unwrap_or(Backend::Pars3 { p });
+            (b, pinned_backend_axis(b, &sss, &split, p))
+        } else {
+            scored_backend_axis(&sss, &split, p, format_choice, cons)?
+        };
+
+        let report = PlanReport {
+            mode: cons.mode,
+            reorder: rreport,
+            axes: vec![reorder_axis, format_axis, backend_axis],
+            probe_spmvs: cons.probe_spmvs,
+        };
+        let choice = PlanChoice {
+            reorder: chosen_reorder,
+            format: format_choice,
+            backend: backend_choice,
+        };
+        Ok(Planned { choice, report, perm, sss, split })
+    }
+}
+
+/// The candidate-scoring loop behind [`ReorderPolicy::Auto`]
+/// (extracted from `reorder::Auto` so the planner owns the scorer):
+/// run every strategy, score by (bandwidth, envelope profile), keep
+/// the natural order unless the best reordering clears `min_gain`.
+pub fn score_reorder_candidates(g: &Adjacency, min_gain: f64) -> ReorderOutcome {
+    let natural = Natural.reorder(g);
+    let nat_bw = bandwidth_under(g, &natural.perm);
+    let nat_profile = profile_under(g, &natural.perm);
+
+    // Rcm first so an exact (bw, profile) tie keeps the classic pick.
+    let reorderers = [Rcm.reorder(g), RcmBiCriteria.reorder(g)];
+    let mut scored: Vec<(ReorderOutcome, usize, u64)> = reorderers
+        .into_iter()
+        .map(|out| {
+            let bw = bandwidth_under(g, &out.perm);
+            let profile = profile_under(g, &out.perm);
+            (out, bw, profile)
+        })
+        .collect();
+    let best = scored
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, (_, bw, profile))| (*bw, *profile))
+        .map(|(i, _)| i)
+        .expect("two candidates");
+    let best_bw = scored[best].1;
+
+    // The decline gate: reordering must beat the natural bandwidth
+    // by more than `min_gain` (strict at min_gain = 0), otherwise
+    // the input ordering is kept.
+    let accept = (best_bw as f64) < (nat_bw as f64) * (1.0 - min_gain);
+
+    let mut candidates = vec![CandidateScore {
+        strategy: natural.strategy,
+        bandwidth: nat_bw,
+        profile: nat_profile,
+        chosen: !accept,
+    }];
+    for (i, (out, bw, profile)) in scored.iter().enumerate() {
+        candidates.push(CandidateScore {
+            strategy: out.strategy,
+            bandwidth: *bw,
+            profile: *profile,
+            chosen: accept && i == best,
+        });
+    }
+    let mut winner = if accept { scored.swap_remove(best).0 } else { natural };
+    winner.candidates = candidates;
+    winner
+}
+
+/// Concrete policy naming a strategy the scorer picked.
+fn policy_named(strategy: &str) -> ReorderPolicy {
+    match strategy {
+        "rcm" => ReorderPolicy::Rcm,
+        "rcm-bicriteria" => ReorderPolicy::RcmBiCriteria,
+        _ => ReorderPolicy::Natural,
+    }
+}
+
+fn reorder_axis_report(rreport: &ReorderReport, pinned: bool, min_gain: f64) -> AxisReport {
+    let candidates: Vec<PlanCandidate> = rreport
+        .candidates
+        .iter()
+        .map(|c| PlanCandidate {
+            name: c.strategy.to_string(),
+            score: c.bandwidth as f64,
+            detail: format!("bw {}, profile {}", c.bandwidth, c.profile),
+            probe_s: None,
+            chosen: c.chosen,
+        })
+        .collect();
+    let decline = if pinned {
+        None
+    } else {
+        let nat = rreport.candidates.iter().find(|c| c.strategy == "natural");
+        let best = rreport
+            .candidates
+            .iter()
+            .filter(|c| c.strategy != "natural")
+            .min_by_key(|c| (c.bandwidth, c.profile));
+        match (nat, best) {
+            (Some(nat), Some(best)) if nat.chosen => Some(format!(
+                "reordering declined: best candidate '{}' bw {} vs natural bw {} \
+                 (min_gain {min_gain:.2})",
+                best.strategy, best.bandwidth, nat.bandwidth
+            )),
+            _ => None,
+        }
+    };
+    AxisReport {
+        axis: "reorder",
+        pinned,
+        chosen: rreport.strategy.to_string(),
+        candidates,
+        decline,
+    }
+}
+
+/// Estimated bytes one `apply` streams through a pure-SSS middle.
+fn sss_middle_bytes(split: &Split3) -> f64 {
+    (split.middle.nnz_lower() * 12 + (split.n + 1) * 8) as f64
+}
+
+fn pinned_format_axis(split: &Split3, policy: FormatPolicy) -> AxisReport {
+    // Evidence only: what the pinned policy resolves to under the
+    // legacy rule (Auto = 0.5 fill threshold, Dia = every diagonal,
+    // Sss = never).
+    let resolved = DiaBand::from_policy(&split.middle, policy);
+    let (score, detail) = match &resolved {
+        Some(d) => (
+            d.bytes() as f64,
+            format!(
+                "resolves to dia: {} dense diagonal(s), fill {:.2}",
+                d.diags.len(),
+                d.fill_ratio()
+            ),
+        ),
+        None => (
+            sss_middle_bytes(split),
+            format!("resolves to sss: {} middle nnz", split.middle.nnz_lower()),
+        ),
+    };
+    AxisReport {
+        axis: "format",
+        pinned: true,
+        chosen: policy.to_string(),
+        candidates: vec![PlanCandidate {
+            name: policy.to_string(),
+            score,
+            detail,
+            probe_s: None,
+            chosen: true,
+        }],
+        decline: None,
+    }
+}
+
+fn scored_format_axis(split: &Split3) -> (FormatPolicy, AxisReport) {
+    let sss_score = sss_middle_bytes(split);
+    let dia_view = DiaBand::from_policy(&split.middle, FormatPolicy::Dia);
+    let (dia_score, dia_detail) = match &dia_view {
+        Some(d) => (
+            d.bytes() as f64,
+            format!("{} dense diagonal(s), fill {:.2}", d.diags.len(), d.fill_ratio()),
+        ),
+        None => (
+            f64::INFINITY,
+            "no dense diagonal available (band interior is empty)".to_string(),
+        ),
+    };
+    let pick_dia = dia_score < sss_score;
+    let candidates = vec![
+        PlanCandidate {
+            name: "dia".to_string(),
+            score: dia_score,
+            detail: dia_detail,
+            probe_s: None,
+            chosen: pick_dia,
+        },
+        PlanCandidate {
+            name: "sss".to_string(),
+            score: sss_score,
+            detail: format!("{} middle nnz", split.middle.nnz_lower()),
+            probe_s: None,
+            chosen: !pick_dia,
+        },
+    ];
+    let decline = if pick_dia {
+        None
+    } else if dia_view.is_none() {
+        Some("dia declined: band interior has no off-diagonal entries".to_string())
+    } else {
+        Some(format!(
+            "dia declined: ~{} B/apply vs sss ~{} B/apply",
+            dia_score as u64, sss_score as u64
+        ))
+    };
+    let choice = if pick_dia { FormatPolicy::Dia } else { FormatPolicy::Sss };
+    (
+        choice,
+        AxisReport {
+            axis: "format",
+            pinned: false,
+            chosen: choice.to_string(),
+            candidates,
+            decline,
+        },
+    )
+}
+
+/// Structural proxy for one backend: estimated bytes streamed per
+/// `apply`, with the parallel kernels credited for splitting the
+/// matrix across `p` ranks and PARS3 charged for its halo exchange
+/// plus the worst rank's share of [`Split3::row_work`] (load balance —
+/// an even row split only helps if the work is evenly banded).
+fn structural_backend_score(b: Backend, sss: &Sss, split: &Split3, p: usize) -> f64 {
+    let n = sss.n as f64;
+    let nnz = sss.nnz_lower() as f64;
+    let bw = sss.bandwidth() as f64;
+    let pf = p as f64;
+    match b {
+        Backend::Serial => 12.0 * nnz + 16.0 * n,
+        // CSR stores both triangles.
+        Backend::Csr => 24.0 * nnz + 16.0 * n,
+        // Dense band: (bw+1) stored diagonals regardless of fill.
+        Backend::Dgbmv => 8.0 * n * (bw + 1.0) + 16.0 * n,
+        // Coloring re-streams x across phase barriers: charge the full
+        // both-triangle traffic, split across ranks.
+        Backend::Coloring { .. } => 24.0 * nnz / pf + 16.0 * n,
+        // PARS3: the slowest rank's middle share, plus per-rank halo
+        // windows of one bandwidth, plus its slice of the vectors.
+        Backend::Pars3 { .. } => {
+            12.0 * max_chunk_work(split, p) as f64 + 8.0 * pf * bw + 16.0 * n / pf
+        }
+        Backend::Pjrt => f64::INFINITY,
+    }
+}
+
+/// Largest per-rank work sum under an even contiguous row split —
+/// the balance figure the PARS3 proxy charges.
+fn max_chunk_work(split: &Split3, p: usize) -> usize {
+    let work = split.row_work();
+    if work.is_empty() {
+        return 0;
+    }
+    let chunk = work.len().div_ceil(p).max(1);
+    work.chunks(chunk).map(|c| c.iter().sum::<usize>()).max().unwrap_or(0)
+}
+
+fn pinned_backend_axis(b: Backend, sss: &Sss, split: &Split3, p: usize) -> AxisReport {
+    let score = structural_backend_score(b, sss, split, p);
+    AxisReport {
+        axis: "backend",
+        pinned: true,
+        chosen: backend_label(b),
+        candidates: vec![PlanCandidate {
+            name: backend_label(b),
+            score,
+            detail: "pinned by constraints".to_string(),
+            probe_s: None,
+            chosen: true,
+        }],
+        decline: None,
+    }
+}
+
+fn scored_backend_axis(
+    sss: &Sss,
+    split: &Split3,
+    p: usize,
+    format: FormatPolicy,
+    cons: &PlanConstraints,
+) -> Result<(Backend, AxisReport), Pars3Error> {
+    let backends = [
+        Backend::Serial,
+        Backend::Csr,
+        Backend::Dgbmv,
+        Backend::Coloring { p },
+        Backend::Pars3 { p },
+    ];
+    let kcfg = KernelConfig {
+        threads: p,
+        outer_bw: cons.outer_bw,
+        threaded: cons.threaded,
+        format,
+        reorder: cons.reorder,
+        reorder_min_gain: cons.reorder_min_gain,
+    };
+    let mut cands: Vec<(Backend, PlanCandidate)> = Vec::with_capacity(backends.len());
+    for b in backends {
+        let structural = structural_backend_score(b, sss, split, p);
+        let (score, probe_s, detail) = if cons.probe_spmvs > 0 {
+            match probe_backend(b, sss, split, &kcfg, cons.probe_spmvs) {
+                Ok(t) => (
+                    t,
+                    Some(t),
+                    format!(
+                        "probe min over {} apply(s); structural ~{} B/apply",
+                        cons.probe_spmvs, structural as u64
+                    ),
+                ),
+                // A candidate that cannot even build disqualifies
+                // itself; the failure is the evidence.
+                Err(e) => (f64::INFINITY, None, format!("probe failed: {e}")),
+            }
+        } else {
+            (structural, None, format!("structural ~{} B/apply", structural as u64))
+        };
+        cands.push((
+            b,
+            PlanCandidate { name: backend_label(b), score, detail, probe_s, chosen: false },
+        ));
+    }
+    // First minimum wins ties, keeping the registry order (serial
+    // first) deterministic.
+    let mut best = 0;
+    for i in 1..cands.len() {
+        if cands[i].1.score < cands[best].1.score {
+            best = i;
+        }
+    }
+    cands[best].1.chosen = true;
+    let choice = cands[best].0;
+    let axis = AxisReport {
+        axis: "backend",
+        pinned: false,
+        chosen: backend_label(choice),
+        candidates: cands.into_iter().map(|(_, c)| c).collect(),
+        decline: None,
+    };
+    Ok((choice, axis))
+}
+
+/// Build one candidate kernel directly through the registry (never the
+/// coordinator cache — probes must not pollute cache stats) and time
+/// `spmvs` real `apply` calls on a deterministic vector; the score is
+/// the minimum.
+fn probe_backend(
+    b: Backend,
+    sss: &Sss,
+    split: &Split3,
+    kcfg: &KernelConfig,
+    spmvs: usize,
+) -> Result<f64, Pars3Error> {
+    let mut kernel = match b {
+        Backend::Pars3 { .. } => registry::build_from_split(split.clone(), kcfg)?,
+        _ => {
+            let name = b.kernel_name().ok_or(Pars3Error::BackendUnavailable {
+                backend: "pjrt",
+                reason: "pjrt kernels are built outside the registry and cannot be probed"
+                    .to_string(),
+            })?;
+            registry::build_from_sss(name, sss.clone(), kcfg)?
+        }
+    };
+    let n = sss.n;
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let mut y = vec![0.0; n];
+    let mut best = f64::INFINITY;
+    for _ in 0..spmvs {
+        let t0 = Instant::now();
+        kernel.apply(&x, &mut y);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(&y);
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+
+    fn constraints() -> PlanConstraints {
+        PlanConstraints::from_config(&Config::default())
+    }
+
+    #[test]
+    fn all_auto_plans_every_axis_with_scored_candidates() {
+        let coo = gen::small_test_matrix(120, 9, 2.0);
+        let planned = Planner::plan(&coo, &constraints()).unwrap();
+        let rep = &planned.report;
+        assert_eq!(rep.mode, PlanMode::Auto);
+        assert_eq!(rep.axes.len(), 3);
+        for ax in &rep.axes {
+            assert!(!ax.pinned, "{} must be unpinned under all-auto", ax.axis);
+            assert!(ax.candidates.len() >= 2, "{}: too few candidates", ax.axis);
+            assert_eq!(
+                ax.candidates.iter().filter(|c| c.chosen).count(),
+                1,
+                "{}: exactly one chosen",
+                ax.axis
+            );
+            let chosen = ax.candidates.iter().find(|c| c.chosen).unwrap();
+            assert_eq!(chosen.name, ax.chosen);
+            assert!(chosen.score.is_finite());
+        }
+        // every axis resolves to something concrete
+        assert_ne!(planned.choice.reorder, ReorderPolicy::Auto);
+        assert_ne!(planned.choice.format, FormatPolicy::Auto);
+        assert!(planned.report.summary().contains("plan[auto]"));
+        assert!(planned.choice.describe().starts_with("reorder="));
+    }
+
+    #[test]
+    fn pinning_one_axis_keeps_planning_on_the_others() {
+        let coo = gen::small_test_matrix(140, 11, 2.0);
+        let mut cons = constraints();
+        cons.format = FormatPolicy::Sss;
+        let planned = Planner::plan(&coo, &cons).unwrap();
+        let fmt = planned.report.axis("format").unwrap();
+        assert!(fmt.pinned);
+        assert_eq!(fmt.candidates.len(), 1);
+        assert_eq!(planned.choice.format, FormatPolicy::Sss);
+        assert_eq!(planned.split.format_name(), "sss");
+        for name in ["reorder", "backend"] {
+            let ax = planned.report.axis(name).unwrap();
+            assert!(!ax.pinned, "{name} stays planned");
+            assert!(ax.candidates.len() >= 2, "{name} still scores candidates");
+            assert_eq!(ax.candidates.iter().filter(|c| c.chosen).count(), 1);
+        }
+    }
+
+    #[test]
+    fn pinned_mode_resolves_every_axis_by_legacy_rules() {
+        let coo = gen::small_test_matrix(100, 3, 2.0);
+        let mut cons = constraints();
+        cons.mode = PlanMode::Pinned;
+        let planned = Planner::plan(&coo, &cons).unwrap();
+        // verbatim config: per-axis Auto heuristics stay in charge
+        assert_eq!(planned.choice.reorder, ReorderPolicy::Auto);
+        assert_eq!(planned.choice.format, FormatPolicy::Auto);
+        assert_eq!(planned.choice.backend, Backend::Pars3 { p: 8 });
+        assert!(planned.report.axes.iter().all(|a| a.pinned));
+        // the reorder quality gate still ran and left its evidence
+        assert_eq!(planned.report.reorder.candidates.len(), 3);
+    }
+
+    #[test]
+    fn format_choice_matches_the_byte_scores_and_the_split() {
+        let coo = gen::small_test_matrix(150, 7, 2.0);
+        let planned = Planner::plan(&coo, &constraints()).unwrap();
+        let fmt = planned.report.axis("format").unwrap();
+        let chosen = fmt.candidates.iter().find(|c| c.chosen).unwrap();
+        for c in &fmt.candidates {
+            assert!(chosen.score <= c.score, "{} beaten by {}", chosen.name, c.name);
+        }
+        assert_eq!(planned.split.format_name(), chosen.name);
+    }
+
+    #[test]
+    fn probe_budget_times_every_backend_candidate() {
+        let coo = gen::small_test_matrix(90, 5, 2.0);
+        let mut cons = constraints();
+        cons.probe_spmvs = 2;
+        let planned = Planner::plan(&coo, &cons).unwrap();
+        assert_eq!(planned.report.probe_spmvs, 2);
+        let be = planned.report.axis("backend").unwrap();
+        assert!(be.candidates.iter().all(|c| c.probe_s.is_some()));
+        assert!(be.candidates.iter().all(|c| c.score >= 0.0 && c.score.is_finite()));
+    }
+
+    #[test]
+    fn backend_and_plan_policies_roundtrip_their_spellings() {
+        for s in ["auto", "serial", "csr", "dgbmv", "coloring", "pars3", "pjrt"] {
+            let p: BackendPolicy = s.parse().unwrap();
+            assert_eq!(p.to_string(), s);
+        }
+        assert!("gpu".parse::<BackendPolicy>().is_err());
+        for s in ["auto", "pinned"] {
+            let m: PlanMode = s.parse().unwrap();
+            assert_eq!(m.to_string(), s);
+        }
+        assert!("maybe".parse::<PlanMode>().is_err());
+        assert_eq!(BackendPolicy::Coloring.resolve(4), Some(Backend::Coloring { p: 4 }));
+        assert_eq!(BackendPolicy::Auto.resolve(4), None);
+    }
+}

@@ -21,8 +21,8 @@
 
 use crate::coordinator::client::{Client, MatrixHandle, ServiceShared};
 use crate::coordinator::error::Pars3Error;
+use crate::coordinator::planner::{PlanChoice, PlanReport};
 use crate::coordinator::{Backend, Config, Coordinator, Prepared};
-use crate::graph::reorder::ReorderReport;
 use crate::kernel::VecBatch;
 use crate::solver::mrs::{MrsOptions, MrsResult};
 use crate::sparse::Coo;
@@ -58,9 +58,9 @@ pub struct CacheStats {
 
 /// Preprocessing metadata for a registered matrix (what the one-time
 /// `prepare` computed: dimension, stored NNZ, the bandwidth reduction —
-/// Table 1's headline numbers — and the full reordering report). Query
+/// Table 1's headline numbers — and the full planning evidence). Query
 /// via [`Client::describe`](crate::coordinator::Client::describe).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MatrixInfo {
     /// Registration name.
     pub name: String,
@@ -72,10 +72,13 @@ pub struct MatrixInfo {
     pub bw_before: usize,
     /// Bandwidth after reordering.
     pub reordered_bw: usize,
-    /// The reordering run's instrumentation: strategy chosen,
-    /// bandwidth/profile before/after, per-component stats, candidate
-    /// scores.
-    pub reorder: ReorderReport,
+    /// The (reorder, format, backend) triple the planner resolved for
+    /// this matrix — what `auto`-backend requests execute against.
+    pub choice: PlanChoice,
+    /// The planning run's evidence: per-axis candidates with scores,
+    /// chosen flags, probe timings and decline reasons, plus the full
+    /// embedded reordering report.
+    pub plan: PlanReport,
 }
 
 /// A request routed to one shard worker. Each variant carries its own
@@ -225,7 +228,8 @@ fn shard_worker(
                     nnz_lower: prep.nnz_lower,
                     bw_before: prep.bw_before,
                     reordered_bw: prep.reordered_bw,
-                    reorder: prep.report.clone(),
+                    choice: prep.choice,
+                    plan: prep.plan.clone(),
                 });
                 let _ = reply.send(result);
             }
@@ -386,11 +390,20 @@ mod tests {
         let info = client.describe(&h).wait().unwrap();
         assert_eq!((info.name.as_str(), info.n), ("m", 120));
         assert!(info.nnz_lower > 0 && info.reordered_bw <= info.bw_before);
-        // the reorder report rides along: the default Auto policy
-        // measured every candidate and chose one of them
-        assert_eq!(info.reorder.bw_after, info.reordered_bw);
-        assert_eq!(info.reorder.candidates.len(), 3);
-        assert_eq!(info.reorder.candidates.iter().filter(|c| c.chosen).count(), 1);
+        // the plan report rides along: the default all-auto config
+        // scored every axis and chose a concrete triple
+        assert_eq!(info.plan.reorder.bw_after, info.reordered_bw);
+        assert_eq!(info.plan.reorder.candidates.len(), 3);
+        assert_eq!(info.plan.reorder.candidates.iter().filter(|c| c.chosen).count(), 1);
+        for ax in &info.plan.axes {
+            assert!(!ax.pinned, "all-auto config must leave {} unpinned", ax.axis);
+            assert!(ax.candidates.len() >= 2, "{} needs scored alternatives", ax.axis);
+            assert_eq!(ax.candidates.iter().filter(|c| c.chosen).count(), 1);
+        }
+        // the chosen backend candidate in the report names the triple's
+        // backend — the evidence and the decision cannot disagree
+        let backend_axis = info.plan.axis("backend").expect("backend axis reported");
+        assert_eq!(backend_axis.chosen, crate::coordinator::planner::backend_label(info.choice.backend));
 
         let x: Vec<f64> = (0..120).map(|i| i as f64 * 0.01).collect();
         let y = client.spmv(&h, x.clone(), Backend::Pars3 { p: 4 }).wait().unwrap();
@@ -627,9 +640,52 @@ mod tests {
         let client = svc.client();
         let h = client.prepare("m", gen::small_test_matrix(70, 41, 2.0)).wait().unwrap();
         let info = client.describe(&h).wait().unwrap();
-        assert_eq!(info.reorder.requested, ReorderPolicy::Natural);
-        assert_eq!(info.reorder.strategy, "natural");
+        assert_eq!(info.plan.reorder.requested, ReorderPolicy::Natural);
+        assert_eq!(info.plan.reorder.strategy, "natural");
         assert_eq!(info.reordered_bw, info.bw_before);
+        // pinning reorder must not disable planning on the other axes
+        let reorder_axis = info.plan.axis("reorder").unwrap();
+        assert!(reorder_axis.pinned);
+        for name in ["format", "backend"] {
+            let ax = info.plan.axis(name).unwrap();
+            assert!(!ax.pinned && ax.candidates.len() >= 2, "{name} stays planned");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn describe_after_replace_reflects_the_new_plan() {
+        // regression: re-preparing under a handle must surface the NEW
+        // matrix's plan through describe, and the kernel cache (keyed on
+        // the plan choice + matrix identity) must never serve a kernel
+        // built for the replaced matrix's triple
+        let svc = Service::start(one_shard_cfg());
+        let client = svc.client();
+        // a banded matrix (reordering helps, dense interior) ...
+        let h = client.prepare("a", gen::small_test_matrix(100, 42, 2.0)).wait().unwrap();
+        let before = client.describe(&h).wait().unwrap();
+        client.spmv(&h, vec![1.0; 100], Backend::Serial).wait().unwrap();
+
+        // ... replaced by a different matrix with a different dimension
+        let h2 = client.prepare_replace(&h, "b", gen::small_test_matrix(140, 43, 2.0)).wait().unwrap();
+        let after = client.describe(&h2).wait().unwrap();
+        assert_eq!((after.name.as_str(), after.n), ("b", 140));
+        assert_ne!(
+            (before.n, before.nnz_lower),
+            (after.n, after.nnz_lower),
+            "describe must reflect the replacement, not the original"
+        );
+        // the new registration carries its own complete plan evidence
+        assert_eq!(after.plan.reorder.bw_after, after.reordered_bw);
+        for ax in &after.plan.axes {
+            assert_eq!(ax.candidates.iter().filter(|c| c.chosen).count(), 1, "{}", ax.axis);
+        }
+        // requests against the new handle execute at the new dimension —
+        // the old 100-dim kernels were evicted with the old matrix
+        let y = client.spmv(&h2, vec![1.0; 140], Backend::Serial).wait().unwrap();
+        assert_eq!(y.len(), 140);
+        let stats = client.cache_stats(0).wait().unwrap();
+        assert_eq!(stats.cached, 1, "only the replacement's kernel remains cached");
         svc.shutdown();
     }
 

@@ -17,7 +17,9 @@
 //!   service should measure candidates and be able to decline. [`Auto`]
 //!   runs every candidate strategy, scores each by bandwidth then
 //!   envelope/profile, and keeps the **natural** order unless the best
-//!   reordering clears a configurable improvement threshold.
+//!   reordering clears a configurable improvement threshold — the
+//!   scoring loop itself lives with the other plan-axis scorers as
+//!   [`crate::coordinator::planner::score_reorder_candidates`].
 //!
 //! Every strategy reorders **per connected component** (via
 //! [`crate::graph::bfs::components`]-style discovery): each component
@@ -26,8 +28,10 @@
 //! resulting permutation is always total. Every run emits a
 //! [`ReorderReport`] — strategy chosen, bandwidth/profile before and
 //! after, per-component stats, and the candidate scores Auto weighed —
-//! which flows into `Prepared`, `MatrixInfo`/`Client::describe`,
-//! `Pars3Stats`, and the CLI output.
+//! which the planner embeds in its
+//! [`PlanReport`](crate::coordinator::planner::PlanReport), flowing
+//! into `Prepared`, `MatrixInfo`/`Client::describe`, `Pars3Stats`, and
+//! the CLI output.
 
 use crate::graph::bfs::LevelStructure;
 use crate::graph::peripheral::{bi_criteria_start, pseudo_peripheral_ls};
@@ -346,50 +350,10 @@ impl ReorderStrategy for Auto {
     }
 
     fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
-        let natural = Natural.reorder(g);
-        let nat_bw = bandwidth_under(g, &natural.perm);
-        let nat_profile = profile_under(g, &natural.perm);
-
-        // Rcm first so an exact (bw, profile) tie keeps the classic pick.
-        let reorderers = [Rcm.reorder(g), RcmBiCriteria.reorder(g)];
-        let mut scored: Vec<(ReorderOutcome, usize, u64)> = reorderers
-            .into_iter()
-            .map(|out| {
-                let bw = bandwidth_under(g, &out.perm);
-                let profile = profile_under(g, &out.perm);
-                (out, bw, profile)
-            })
-            .collect();
-        let best = scored
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, (_, bw, profile))| (*bw, *profile))
-            .map(|(i, _)| i)
-            .expect("two candidates");
-        let best_bw = scored[best].1;
-
-        // The decline gate: reordering must beat the natural bandwidth
-        // by more than `min_gain` (strict at min_gain = 0), otherwise
-        // the input ordering is kept.
-        let accept = (best_bw as f64) < (nat_bw as f64) * (1.0 - self.min_gain);
-
-        let mut candidates = vec![CandidateScore {
-            strategy: natural.strategy,
-            bandwidth: nat_bw,
-            profile: nat_profile,
-            chosen: !accept,
-        }];
-        for (i, (out, bw, profile)) in scored.iter().enumerate() {
-            candidates.push(CandidateScore {
-                strategy: out.strategy,
-                bandwidth: *bw,
-                profile: *profile,
-                chosen: accept && i == best,
-            });
-        }
-        let mut winner = if accept { scored.swap_remove(best).0 } else { natural };
-        winner.candidates = candidates;
-        winner
+        // The candidate-scoring loop lives with the other plan-axis
+        // scorers in the planner; this strategy is the thin policy
+        // adapter the registry path keeps using.
+        crate::coordinator::planner::score_reorder_candidates(g, self.min_gain)
     }
 }
 

@@ -76,6 +76,10 @@ pub struct Pars3Stats {
     /// came from (`None` when the split was built from an unannotated
     /// matrix — e.g. directly in a test or bench).
     pub reorder_strategy: Option<&'static str>,
+    /// The planner's resolved `reorder=... format=... backend=...`
+    /// triple for the preparation this split came from (`None` for
+    /// unplanned/direct construction).
+    pub plan_triple: Option<String>,
     /// Bandwidth of the (reordered) band the split was built from.
     pub reordered_bw: usize,
 }
@@ -183,6 +187,7 @@ impl Pars3Plan {
     /// and the reordering the band came from.
     fn note_format(&self, stats: &mut Pars3Stats) {
         stats.reorder_strategy = self.split.reorder_strategy;
+        stats.plan_triple = self.split.plan_triple.clone();
         stats.reordered_bw = self.split.total_bw;
         if let Some(dia) = &self.split.dia {
             stats.dia_diagonals = dia.diags.len();

@@ -7,6 +7,10 @@
 //! point. Solvers, the coordinator, and the benches all go through it,
 //! so adding a kernel (or comparing an existing pair) never requires
 //! touching call sites: the set of kernels *is* [`KERNEL_NAMES`].
+//! Which kernel to build is decided upstream by
+//! `coordinator::planner` (the backend axis of the plan triple); the
+//! registry stays the only construction path, and CI greps for direct
+//! constructor calls that would bypass it.
 //!
 //! All kernels built from one source matrix operate in the same (RCM)
 //! ordering, so for any input vector they produce identical outputs —

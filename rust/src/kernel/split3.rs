@@ -59,6 +59,11 @@ pub struct Split3 {
     /// [`crate::coordinator::Coordinator::prepare`]; flows into
     /// [`crate::kernel::pars3::Pars3Stats`].
     pub reorder_strategy: Option<&'static str>,
+    /// The planner's resolved `reorder=... format=... backend=...`
+    /// label when this split came out of a planned `prepare` (`None`
+    /// for direct registry/bench construction). Flows into
+    /// [`crate::kernel::pars3::Pars3Stats`] like `reorder_strategy`.
+    pub plan_triple: Option<String>,
 }
 
 impl Split3 {
@@ -107,6 +112,7 @@ impl Split3 {
             split_bw,
             total_bw,
             reorder_strategy: None,
+            plan_triple: None,
         };
         split.select_format(policy);
         Ok(split)

@@ -5,20 +5,24 @@
 //! ```text
 //! pars3 info                          # artifact + platform info
 //! pars3 report <table1|rcm|conflicts|splits|fig9|coloring|complexity|all>
-//! pars3 spmv   [--matrix NAME] [--p N] [--backend serial|csr|dgbmv|coloring|pars3|pjrt]
+//! pars3 spmv   [--matrix NAME] [--p N] [--backend auto|serial|csr|dgbmv|coloring|pars3|pjrt]
 //! pars3 solve  [--matrix NAME] [--p N] [--backend ...] [--tol T] [--iters K] [--rhs K]
 //! pars3 serve                         # sharded service demo (pipelined clients)
 //! ```
 //!
 //! Global flags: `--config FILE` (default `pars3.toml`), `--scale S`,
 //! `--ranks a,b,c`, `--threaded`, `--format auto|dia|sss` (band-interior
-//! storage: hybrid diagonal-major vs pure SSS, `auto` = fill heuristic),
-//! `--reorder auto|rcm|rcm-bicriteria|natural` (preprocessing strategy;
-//! `auto` measures the candidates and declines when nothing clears
-//! `--reorder-min-gain`), `--shards W` (service worker pool),
-//! `--queue-depth N` (per-shard backpressure bound),
-//! `--max-cached-kernels N` (per-shard kernel-cache LRU cap,
-//! 0 = unbounded).
+//! storage: hybrid diagonal-major vs pure SSS, `auto` = planner scores
+//! both by bytes moved), `--reorder auto|rcm|rcm-bicriteria|natural`
+//! (preprocessing strategy; `auto` measures the candidates and declines
+//! when nothing clears `--reorder-min-gain`),
+//! `--backend auto|serial|csr|dgbmv|coloring|pars3|pjrt` (`auto` =
+//! execute on the planner's pick), `--plan auto|pinned` (`pinned`
+//! restores legacy per-axis resolution), `--plan-probe N` (time N real
+//! `apply` calls per backend candidate instead of structural proxies),
+//! `--shards W` (service worker pool), `--queue-depth N` (per-shard
+//! backpressure bound), `--max-cached-kernels N` (per-shard
+//! kernel-cache LRU cap, 0 = unbounded).
 
 use pars3::coordinator::{Backend, Config, Coordinator, Service};
 use pars3::mpisim::CostModel;
@@ -83,6 +87,15 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(g) = args.flags.get("reorder-min-gain") {
         cfg.reorder_min_gain = g.parse()?;
     }
+    if let Some(b) = args.flags.get("backend") {
+        cfg.backend = b.parse()?;
+    }
+    if let Some(m) = args.flags.get("plan") {
+        cfg.plan = m.parse()?;
+    }
+    if let Some(n) = args.flags.get("plan-probe") {
+        cfg.plan_probe = n.parse()?;
+    }
     if let Some(d) = args.flags.get("artifacts") {
         cfg.artifacts_dir = d.into();
     }
@@ -108,17 +121,13 @@ fn load_config(args: &Args) -> Result<Config> {
     Ok(cfg)
 }
 
-fn backend_of(args: &Args, default_p: usize) -> Result<Backend> {
+/// Resolve the requested execution backend: `None` means `auto` — run
+/// on whatever the planner chose (`prep.choice.backend`). The
+/// `--backend` flag was already folded into `cfg.backend` by
+/// [`load_config`], so this just applies `--p` to the policy.
+fn backend_of(args: &Args, cfg: &Config, default_p: usize) -> Result<Option<Backend>> {
     let p: usize = args.flags.get("p").map(|v| v.parse()).transpose()?.unwrap_or(default_p);
-    Ok(match args.flags.get("backend").map(String::as_str).unwrap_or("pars3") {
-        "serial" => Backend::Serial,
-        "csr" => Backend::Csr,
-        "dgbmv" => Backend::Dgbmv,
-        "coloring" => Backend::Coloring { p },
-        "pjrt" => Backend::Pjrt,
-        "pars3" => Backend::Pars3 { p },
-        other => anyhow::bail!("unknown backend '{other}'"),
-    })
+    Ok(cfg.backend.resolve(p))
 }
 
 fn pick_matrix(cfg: &Config, name: &str) -> Result<(String, pars3::sparse::Coo)> {
@@ -151,8 +160,9 @@ fn run() -> Result<()> {
                  usage: pars3 <info|report|spmv|solve|serve> [flags]\n\
                  report subcommands: table1 rcm conflicts splits fig9 coloring complexity all\n\
                  flags: --config F --scale S --ranks 1,2,4 --threaded --matrix NAME --p N\n\
-                        --backend serial|csr|dgbmv|coloring|pars3|pjrt --format auto|dia|sss\n\
-                        --reorder auto|rcm|rcm-bicriteria|natural --reorder-min-gain G\n\
+                        --backend auto|serial|csr|dgbmv|coloring|pars3|pjrt\n\
+                        --format auto|dia|sss --reorder auto|rcm|rcm-bicriteria|natural\n\
+                        --reorder-min-gain G --plan auto|pinned --plan-probe N\n\
                         --tol T --iters K --rhs K --artifacts DIR --shards W --queue-depth N\n\
                         --max-cached-kernels N"
             );
@@ -235,20 +245,23 @@ fn cmd_report(cfg: Config, which: &str) -> Result<()> {
 
 fn cmd_spmv(cfg: Config, args: &Args) -> Result<()> {
     let name = args.flags.get("matrix").map(String::as_str).unwrap_or("af_5_k101_like");
-    let backend = backend_of(args, 8)?;
+    let requested = backend_of(args, &cfg, 8)?;
     let (name, coo) = pick_matrix(&cfg, name)?;
     let mut coord = Coordinator::new(cfg);
     let prep = coord.prepare(&name, &coo)?;
+    // `--backend auto` (or none configured) executes on the planner's pick
+    let backend = requested.unwrap_or(prep.choice.backend);
     println!(
         "{name}: n={} nnz_lower={} bw {} -> {} ({}), middle format {}",
         prep.n,
         prep.nnz_lower,
         prep.bw_before,
         prep.reordered_bw,
-        prep.report.strategy,
+        prep.plan.reorder.strategy,
         prep.split.format_name()
     );
-    println!("{}", prep.report.summary());
+    println!("{}", prep.plan.summary());
+    println!("{}", prep.plan.detail());
     let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.37).sin()).collect();
     let t0 = std::time::Instant::now();
     let y = coord.spmv(&prep, &x, backend)?;
@@ -264,7 +277,7 @@ fn cmd_spmv(cfg: Config, args: &Args) -> Result<()> {
 
 fn cmd_solve(cfg: Config, args: &Args) -> Result<()> {
     let name = args.flags.get("matrix").map(String::as_str).unwrap_or("af_5_k101_like");
-    let backend = backend_of(args, 8)?;
+    let requested = backend_of(args, &cfg, 8)?;
     let tol: f64 = args.flags.get("tol").map(|v| v.parse()).transpose()?.unwrap_or(1e-8);
     let iters: usize = args.flags.get("iters").map(|v| v.parse()).transpose()?.unwrap_or(500);
     let rhs: usize = args.flags.get("rhs").map(|v| v.parse()).transpose()?.unwrap_or(1);
@@ -272,6 +285,8 @@ fn cmd_solve(cfg: Config, args: &Args) -> Result<()> {
     let (name, coo) = pick_matrix(&cfg, name)?;
     let mut coord = Coordinator::new(cfg);
     let prep = coord.prepare(&name, &coo)?;
+    let backend = requested.unwrap_or(prep.choice.backend);
+    println!("{}", prep.plan.summary());
     let mut rng = SmallRng::seed_from_u64(17);
     let opts = MrsOptions { alpha, max_iters: iters, tol };
     if rhs > 1 {
@@ -348,7 +363,7 @@ fn cmd_serve(cfg: Config) -> Result<()> {
         info.nnz_lower,
         info.reordered_bw
     );
-    println!("{}", info.reorder.summary());
+    println!("{}", info.plan.summary());
     // pipelined: every request is in flight before the first wait
     let tickets: Vec<_> = (0..3)
         .map(|c| {

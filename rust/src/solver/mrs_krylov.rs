@@ -39,101 +39,17 @@ impl Default for KrylovOptions {
 ///
 /// Internally applies `S v = A v - alpha v` so the Lanczos vectors see
 /// the pure skew part.
+///
+/// This is [`mrs_krylov_solve_batch`] at width 1: the per-column state
+/// of the batch recurrence is exactly the scalar recurrence, so one
+/// maintained implementation serves both (the scalar numerics are
+/// pinned against a frozen copy of the original loop in the tests).
 pub fn mrs_krylov_solve(kernel: &mut dyn Spmv, b: &[f64], opts: &KrylovOptions) -> MrsResult {
-    let n = kernel.n();
-    assert_eq!(b.len(), n);
-    let bnorm = norm(b);
-    let mut history = vec![bnorm * bnorm];
-    if bnorm == 0.0 {
-        return MrsResult {
-            x: vec![0.0; n],
-            r: vec![0.0; n],
-            history,
-            iters: 0,
-            converged: true,
-        };
-    }
-
-    // Lanczos vectors (two-term recurrence for skew S)
-    let mut v_prev = vec![0.0f64; n];
-    let mut v = b.iter().map(|&x| x / bnorm).collect::<Vec<_>>();
-    let mut beta_prev = 0.0f64;
-
-    // MINRES-style solution update vectors
-    let mut w1 = vec![0.0f64; n]; // w_{k-1}
-    let mut w2 = vec![0.0f64; n]; // w_{k-2}
-    let mut x = vec![0.0f64; n];
-
-    // Givens rotation state (two trailing rotations affect each column)
-    let (mut c_prev, mut s_prev) = (1.0f64, 0.0f64);
-    let (mut c_pprev, mut s_pprev) = (1.0f64, 0.0f64);
-    let mut phi_bar = bnorm; // *signed* residual carry (|phi_bar| = ||r||)
-    let mut av = vec![0.0f64; n];
-    let mut iters = 0;
-    let tol_abs = opts.tol * bnorm;
-
-    while iters < opts.max_iters && phi_bar.abs() > tol_abs {
-        // S v = A v - alpha v  (one SpMV)
-        kernel.apply(&v, &mut av);
-        for i in 0..n {
-            av[i] -= opts.alpha * v[i];
-        }
-        // two-term skew Lanczos: u = S v + beta_prev * v_prev
-        // (note the +: S^T = -S makes the usual minus a plus)
-        for i in 0..n {
-            av[i] += beta_prev * v_prev[i];
-        }
-        let beta = norm(&av); // the one inner product
-        // column k of (alpha*I + T): [ -beta_prev (super), alpha (diag),
-        // beta (sub) ]; apply the two trailing rotations G_{k-2}, G_{k-1}
-        let tau = s_pprev * (-beta_prev); // fill-in two rows above
-        let mid = c_pprev * (-beta_prev);
-        let delta = c_prev * mid + s_prev * opts.alpha; // one row above
-        let gamma = -s_prev * mid + c_prev * opts.alpha; // diagonal
-        // new rotation annihilating the subdiagonal beta
-        let rho = (gamma * gamma + beta * beta).sqrt();
-        let (c, s) = if rho == 0.0 { (1.0, 0.0) } else { (gamma / rho, beta / rho) };
-
-        // solution direction from R's 3-nonzero column (tau, delta, rho)
-        if rho > f64::MIN_POSITIVE {
-            for i in 0..n {
-                let w_new = (v[i] - delta * w1[i] - tau * w2[i]) / rho;
-                w2[i] = w1[i];
-                w1[i] = w_new;
-            }
-            // x += c * phi_bar * w  (signed carry — the MINRES update)
-            let step = c * phi_bar;
-            for i in 0..n {
-                x[i] += step * w1[i];
-            }
-        }
-        phi_bar = -s * phi_bar;
-        history.push(phi_bar * phi_bar);
-
-        // advance Lanczos
-        if beta > 0.0 {
-            for i in 0..n {
-                let next = av[i] / beta;
-                v_prev[i] = v[i];
-                v[i] = next;
-            }
-        }
-        beta_prev = beta;
-        c_pprev = c_prev;
-        s_pprev = s_prev;
-        c_prev = c;
-        s_prev = s;
-        iters += 1;
-        if beta == 0.0 {
-            break; // invariant subspace found: exact solve
-        }
-    }
-
-    // true residual
-    kernel.apply(&x, &mut av);
-    let r: Vec<f64> = b.iter().zip(&av).map(|(b, a)| b - a).collect();
-    let rn = norm(&r);
-    MrsResult { x, converged: rn <= tol_abs * 1.5, r, history, iters }
+    let bs = VecBatch::from_columns(&[b.to_vec()]);
+    mrs_krylov_solve_batch(kernel, &bs, opts)
+        .into_iter()
+        .next()
+        .expect("width-1 batch returns exactly one result")
 }
 
 /// Multi-RHS Krylov MRS: each column runs its own two-term skew
@@ -375,6 +291,137 @@ mod tests {
         let res = mrs_krylov_solve(&mut k, &vec![0.0; 50], &KrylovOptions::default());
         assert!(res.converged);
         assert_eq!(res.iters, 0);
+    }
+
+    /// The original scalar Krylov MRS loop, frozen verbatim when the
+    /// public entry point became a width-1 delegation to
+    /// [`mrs_krylov_solve_batch`]. Exists only to pin the delegated
+    /// numerics bit-for-bit (well, to 1e-12) against the legacy code.
+    fn legacy_mrs_krylov_solve(
+        kernel: &mut dyn Spmv,
+        b: &[f64],
+        opts: &KrylovOptions,
+    ) -> MrsResult {
+        let n = kernel.n();
+        assert_eq!(b.len(), n);
+        let bnorm = norm(b);
+        let mut history = vec![bnorm * bnorm];
+        if bnorm == 0.0 {
+            return MrsResult {
+                x: vec![0.0; n],
+                r: vec![0.0; n],
+                history,
+                iters: 0,
+                converged: true,
+            };
+        }
+
+        // Lanczos vectors (two-term recurrence for skew S)
+        let mut v_prev = vec![0.0f64; n];
+        let mut v = b.iter().map(|&x| x / bnorm).collect::<Vec<_>>();
+        let mut beta_prev = 0.0f64;
+
+        // MINRES-style solution update vectors
+        let mut w1 = vec![0.0f64; n]; // w_{k-1}
+        let mut w2 = vec![0.0f64; n]; // w_{k-2}
+        let mut x = vec![0.0f64; n];
+
+        // Givens rotation state (two trailing rotations affect each column)
+        let (mut c_prev, mut s_prev) = (1.0f64, 0.0f64);
+        let (mut c_pprev, mut s_pprev) = (1.0f64, 0.0f64);
+        let mut phi_bar = bnorm; // *signed* residual carry (|phi_bar| = ||r||)
+        let mut av = vec![0.0f64; n];
+        let mut iters = 0;
+        let tol_abs = opts.tol * bnorm;
+
+        while iters < opts.max_iters && phi_bar.abs() > tol_abs {
+            // S v = A v - alpha v  (one SpMV)
+            kernel.apply(&v, &mut av);
+            for i in 0..n {
+                av[i] -= opts.alpha * v[i];
+            }
+            // two-term skew Lanczos: u = S v + beta_prev * v_prev
+            // (note the +: S^T = -S makes the usual minus a plus)
+            for i in 0..n {
+                av[i] += beta_prev * v_prev[i];
+            }
+            let beta = norm(&av); // the one inner product
+            // column k of (alpha*I + T): [ -beta_prev (super), alpha (diag),
+            // beta (sub) ]; apply the two trailing rotations G_{k-2}, G_{k-1}
+            let tau = s_pprev * (-beta_prev); // fill-in two rows above
+            let mid = c_pprev * (-beta_prev);
+            let delta = c_prev * mid + s_prev * opts.alpha; // one row above
+            let gamma = -s_prev * mid + c_prev * opts.alpha; // diagonal
+            // new rotation annihilating the subdiagonal beta
+            let rho = (gamma * gamma + beta * beta).sqrt();
+            let (c, s) = if rho == 0.0 { (1.0, 0.0) } else { (gamma / rho, beta / rho) };
+
+            // solution direction from R's 3-nonzero column (tau, delta, rho)
+            if rho > f64::MIN_POSITIVE {
+                for i in 0..n {
+                    let w_new = (v[i] - delta * w1[i] - tau * w2[i]) / rho;
+                    w2[i] = w1[i];
+                    w1[i] = w_new;
+                }
+                // x += c * phi_bar * w  (signed carry — the MINRES update)
+                let step = c * phi_bar;
+                for i in 0..n {
+                    x[i] += step * w1[i];
+                }
+            }
+            phi_bar = -s * phi_bar;
+            history.push(phi_bar * phi_bar);
+
+            // advance Lanczos
+            if beta > 0.0 {
+                for i in 0..n {
+                    let next = av[i] / beta;
+                    v_prev[i] = v[i];
+                    v[i] = next;
+                }
+            }
+            beta_prev = beta;
+            c_pprev = c_prev;
+            s_pprev = s_prev;
+            c_prev = c;
+            s_prev = s;
+            iters += 1;
+            if beta == 0.0 {
+                break; // invariant subspace found: exact solve
+            }
+        }
+
+        // true residual
+        kernel.apply(&x, &mut av);
+        let r: Vec<f64> = b.iter().zip(&av).map(|(b, a)| b - a).collect();
+        let rn = norm(&r);
+        MrsResult { x, converged: rn <= tol_abs * 1.5, r, history, iters }
+    }
+
+    #[test]
+    fn scalar_solve_matches_the_legacy_recurrence() {
+        // the width-1 delegation must reproduce the frozen original
+        // loop exactly: same iteration count, same convergence flag,
+        // same residual history, solutions within 1e-12
+        for (n, seed, alpha) in [(150usize, 1u64, 2.0f64), (120, 2, 1.0), (95, 8, 3.5)] {
+            let (mut k_new, b) = system(n, seed, alpha);
+            let (mut k_old, _) = system(n, seed, alpha);
+            let opts = KrylovOptions { alpha, max_iters: 400, tol: 1e-10 };
+            let got = mrs_krylov_solve(&mut k_new, &b, &opts);
+            let want = legacy_mrs_krylov_solve(&mut k_old, &b, &opts);
+            assert_eq!(got.iters, want.iters, "n={n} seed={seed}");
+            assert_eq!(got.converged, want.converged, "n={n} seed={seed}");
+            assert_eq!(got.history.len(), want.history.len(), "n={n} seed={seed}");
+            for (a, b) in got.history.iter().zip(&want.history) {
+                assert!((a - b).abs() <= 1e-12 * (1.0 + b.abs()), "history {a} vs {b}");
+            }
+            for (a, b) in got.x.iter().zip(&want.x) {
+                assert!((a - b).abs() <= 1e-12, "x {a} vs {b}");
+            }
+            for (a, b) in got.r.iter().zip(&want.r) {
+                assert!((a - b).abs() <= 1e-12, "r {a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -312,6 +312,47 @@ fn coloring_baseline_loses_at_scale() {
 }
 
 #[test]
+fn pinning_one_axis_restricts_only_that_axis_end_to_end() {
+    // pin the backend through config: planning must keep scoring the
+    // reorder and format axes, the pinned axis shows exactly one
+    // candidate, and both the direct-Coordinator and Service paths
+    // report the same plan shape and numerics
+    use pars3::coordinator::BackendPolicy;
+    let cfg = Config { backend: BackendPolicy::Serial, ..Config::default() };
+    let mut coord = Coordinator::new(cfg.clone());
+    let coo = gen::small_test_matrix(130, 12, 2.0);
+    let prep = coord.prepare("pin", &coo).unwrap();
+    assert_eq!(prep.choice.backend, Backend::Serial);
+    let backend_axis = prep.plan.axis("backend").unwrap();
+    assert!(backend_axis.pinned, "configured backend must pin the axis");
+    assert_eq!(backend_axis.candidates.len(), 1);
+    for name in ["reorder", "format"] {
+        let ax = prep.plan.axis(name).unwrap();
+        assert!(!ax.pinned, "{name} must stay planned");
+        assert!(ax.candidates.len() >= 2, "{name} must list scored alternatives");
+        assert_eq!(ax.candidates.iter().filter(|c| c.chosen).count(), 1, "{name}");
+    }
+
+    // the same shape is visible through the sharded service
+    let svc = Service::start(cfg);
+    let client = svc.client();
+    let h = client.prepare("pin", coo).wait().unwrap();
+    let info = client.describe(&h).wait().unwrap();
+    assert_eq!(info.choice.backend, Backend::Serial);
+    assert!(info.plan.axis("backend").unwrap().pinned);
+    assert!(!info.plan.axis("format").unwrap().pinned);
+
+    // executing on the planned triple matches an explicit request
+    let x: Vec<f64> = (0..130).map(|i| (i as f64 * 0.31).sin()).collect();
+    let via_plan = client.spmv(&h, x.clone(), info.choice.backend).wait().unwrap();
+    let explicit = coord.spmv(&prep, &x, Backend::Serial).unwrap();
+    for (r, (a, b)) in via_plan.iter().zip(&explicit).enumerate() {
+        assert!((a - b).abs() <= 1e-12, "row {r}: {a} vs {b}");
+    }
+    svc.shutdown();
+}
+
+#[test]
 fn skew_part_preconditioning_flow() {
     // general matrix -> skew projection -> shifted system -> solve
     let coo = gen::small_test_matrix(120, 31, 0.0);

@@ -515,6 +515,58 @@ fn prop_symmetric_variant_works_through_pars3() {
 }
 
 #[test]
+fn prop_planned_triple_matches_pinned_numerics() {
+    // planning is pure selection, never a different computation: for ANY
+    // matrix, read the (reorder, format, backend) triple an all-auto
+    // plan chose, pin exactly that triple through the legacy per-axis
+    // config path, and the two pipelines must agree to 1e-12 on spmv
+    // and step-for-step on the solver
+    use pars3::coordinator::PlanMode;
+    use pars3::solver::MrsOptions;
+    for_all("planned triple == pinned triple", 10, |rng| {
+        let n = 40 + rng.gen_range_usize(0, 140);
+        let alpha = 1.5 + rng.gen_f64();
+        let coo = gen::small_test_matrix(n, rng.next_u64(), alpha);
+
+        let mut auto_coord = Coordinator::new(Config::default());
+        let auto_prep = auto_coord.prepare("prop", &coo).unwrap();
+
+        let pinned_cfg = Config {
+            plan: PlanMode::Pinned,
+            reorder: auto_prep.choice.reorder,
+            format: auto_prep.choice.format,
+            ..Config::default()
+        };
+        let mut pinned_coord = Coordinator::new(pinned_cfg);
+        let pinned_prep = pinned_coord.prepare("prop", &coo).unwrap();
+
+        // same concrete reorder policy -> same permutation; same format
+        // policy -> same middle-split storage
+        assert_eq!(auto_prep.perm, pinned_prep.perm, "n={n}");
+        assert_eq!(auto_prep.split.format_name(), pinned_prep.split.format_name(), "n={n}");
+        // the pinned run reports every axis as pinned
+        assert!(pinned_prep.plan.axes.iter().all(|ax| ax.pinned));
+
+        let backend = auto_prep.choice.backend;
+        let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-1.0, 1.0)).collect();
+        let ya = auto_coord.spmv(&auto_prep, &x, backend).unwrap();
+        let yp = pinned_coord.spmv(&pinned_prep, &x, backend).unwrap();
+        for (r, (a, b)) in ya.iter().zip(&yp).enumerate() {
+            assert!((a - b).abs() <= 1e-12, "spmv row {r}: {a} vs {b} (n={n})");
+        }
+
+        let opts = MrsOptions { alpha, max_iters: 200, tol: 1e-7 };
+        let ra = auto_coord.solve(&auto_prep, &x, &opts, backend).unwrap();
+        let rp = pinned_coord.solve(&pinned_prep, &x, &opts, backend).unwrap();
+        assert_eq!(ra.iters, rp.iters, "n={n}");
+        assert_eq!(ra.converged, rp.converged, "n={n}");
+        for (r, (a, b)) in ra.x.iter().zip(&rp.x).enumerate() {
+            assert!((a - b).abs() <= 1e-12, "solve row {r}: {a} vs {b} (n={n})");
+        }
+    });
+}
+
+#[test]
 fn prop_client_matches_coordinator_for_every_registered_backend() {
     // the typed handle/ticket surface is a transport, not a different
     // engine: for ANY matrix and EVERY registry-backed Backend variant,
