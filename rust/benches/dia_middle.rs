@@ -50,16 +50,27 @@ fn main() {
             };
             for name in ["serial_sss", "pars3"] {
                 let mut kern = build_from_sss(name, prep.sss.clone(), &kcfg).expect(name);
+                let (flops, bytes) = (kern.flops(), kern.bytes());
                 for &k in &[1usize, 8] {
                     let xs = VecBatch::from_fn(n, k, |i, c| {
                         ((i * 29 + c * 11) % 19) as f64 * 0.25 - 2.0
                     });
                     let mut ys = VecBatch::zeros(n, k);
                     kern.prepare_hint(k);
-                    b.bench(&format!("{name}/{fmt}-k{k}/{}", m.name), 1, 3, || {
-                        kern.apply_batch(&xs, &mut ys);
-                        std::hint::black_box(ys.data());
-                    });
+                    let label = format!("{name}/{fmt}-k{k}/{}", m.name);
+                    if k == 1 {
+                        // rated against the kernel's own per-apply
+                        // accounting — exact only for a single column
+                        b.bench_rated(&label, 1, 3, flops, bytes, || {
+                            kern.apply_batch(&xs, &mut ys);
+                            std::hint::black_box(ys.data());
+                        });
+                    } else {
+                        b.bench(&label, 1, 3, || {
+                            kern.apply_batch(&xs, &mut ys);
+                            std::hint::black_box(ys.data());
+                        });
+                    }
                 }
             }
         }

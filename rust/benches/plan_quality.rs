@@ -26,50 +26,6 @@ use pars3::sparse::{gen, skew};
 use pars3::util::bencher::Bencher;
 use pars3::util::SmallRng;
 
-/// Lower edges of a g×g 5-point mesh, scrambled (structurally
-/// symmetric; natural bandwidth g, which no reordering beats by much).
-fn mesh_pattern(g: usize, rng: &mut SmallRng) -> (usize, Vec<(u32, u32)>) {
-    let n = g * g;
-    let mut edges = Vec::new();
-    for r in 0..g {
-        for c in 0..g {
-            let i = (r * g + c) as u32;
-            if c > 0 {
-                edges.push((i, i - 1));
-            }
-            if r > 0 {
-                edges.push((i, i - g as u32));
-            }
-        }
-    }
-    (n, gen::scramble(&edges, n, rng))
-}
-
-fn patterns(n: usize, rng: &mut SmallRng) -> Vec<(&'static str, usize, Vec<(u32, u32)>)> {
-    let banded = gen::random_banded_pattern(n, 4, 0.5, rng);
-    let mut scattered = banded.clone();
-    gen::add_long_range(&mut scattered, n, 0.05, rng);
-    let scattered = gen::scramble(&scattered, n, rng);
-    let block = n / 3;
-    let mut disconnected = Vec::new();
-    for b in 0..3u32 {
-        let base = b * block as u32;
-        for (i, j) in gen::random_banded_pattern(block, 3, 0.5, rng) {
-            disconnected.push((i + base, j + base));
-        }
-    }
-    let dn = 3 * block;
-    let disconnected = gen::scramble(&disconnected, dn, rng);
-    let g = (n as f64).sqrt() as usize;
-    let (mn, mesh) = mesh_pattern(g.max(6), rng);
-    vec![
-        ("banded", n, banded),
-        ("scattered", n, scattered),
-        ("disconnected", dn, disconnected),
-        ("symmetric", mn, mesh),
-    ]
-}
-
 fn main() {
     let mut scale = 1.0f64;
     if let Ok(s) = std::env::var("PARS3_BENCH_SCALE") {
@@ -95,7 +51,7 @@ fn main() {
         Backend::Pars3 { p },
     ];
 
-    for (family, n, edges) in patterns(n, &mut rng) {
+    for (family, n, edges) in gen::pattern_families(n, &mut rng) {
         let coo = skew::coo_from_pattern(n, &edges, 2.0, &mut rng);
         let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.13).sin()).collect();
 

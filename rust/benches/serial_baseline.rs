@@ -33,31 +33,36 @@ fn main() {
                 continue;
             }
             let mut k = build_from_sss(name, prep.sss.clone(), &kcfg).expect(name);
-            let t = b.bench(&format!("{name}/{}", m.name), 2, 5, || {
-                k.apply(&x, &mut y);
-                std::hint::black_box(&y);
-            });
-            timings.push((name, t, k.flops(), k.bytes()));
+            let (flops, bytes) = (k.flops(), k.bytes());
+            let (t, roof) =
+                b.bench_rated(&format!("{name}/{}", m.name), 2, 5, flops, bytes, || {
+                    k.apply(&x, &mut y);
+                    std::hint::black_box(&y);
+                });
+            timings.push((name, t, roof, flops, bytes));
         }
 
         // the split3 serial path (pars3's single-rank numerics) for the
         // same matrix, via the registry's pars3 kernel at p=1
         let mut k1 = build_from_sss("pars3", prep.sss.clone(), &kcfg).expect("pars3");
-        let t_split = b.bench(&format!("pars3-p1/{}", m.name), 2, 5, || {
+        let (f1, by1) = (k1.flops(), k1.bytes());
+        let (t_split, _) = b.bench_rated(&format!("pars3-p1/{}", m.name), 2, 5, f1, by1, || {
             k1.apply(&x, &mut y);
             std::hint::black_box(&y);
         });
 
-        let (t_sss, flops, bytes) = timings
+        let (t_sss, roof_sss, flops, bytes) = timings
             .iter()
             .find(|(n, ..)| *n == "serial_sss")
-            .map(|&(_, t, f, by)| (t, f, by))
+            .map(|&(_, t, r, f, by)| (t, r, f, by))
             .expect("serial_sss timing");
         let t_csr = timings
             .iter()
             .find(|(n, ..)| *n == "csr")
             .map(|&(_, t, ..)| t)
             .expect("csr timing");
+        // both the min-based (best observed) and median-based rates, so
+        // a noisy machine is visible in the report itself
         let th = pars3::perf::throughput(t_sss, flops, bytes);
         rows.push(vec![
             m.name.to_string(),
@@ -66,14 +71,26 @@ fn main() {
             format!("{:.3e}", t_split.min),
             format!("{:.2}", t_csr.min / t_sss.min),
             format!("{:.2}", th.gflops),
+            format!("{:.2}", th.gflops_median),
             format!("{:.2}", th.gbytes),
+            format!("{:.1}%", 100.0 * roof_sss.achieved_fraction),
         ]);
     }
 
     b.section(&format!(
         "## Serial kernels via the registry (Alg. 1 vs CSR vs pars3-p1)\n\n{}",
         md_table(
-            &["Matrix", "SSS s", "CSR s", "pars3-p1 s", "CSR/SSS", "SSS GFLOP/s", "SSS GB/s"],
+            &[
+                "Matrix",
+                "SSS s",
+                "CSR s",
+                "pars3-p1 s",
+                "CSR/SSS",
+                "SSS GF/s (min)",
+                "SSS GF/s (median)",
+                "SSS GB/s",
+                "roofline",
+            ],
             &rows
         )
     ));

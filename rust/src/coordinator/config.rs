@@ -15,6 +15,7 @@
 //! format = "auto"
 //! reorder = "auto"
 //! reorder_min_gain = 0.0
+//! l2_kib = 256
 //! backend = "auto"
 //! plan = "auto"
 //! plan_probe = 0
@@ -26,7 +27,7 @@
 
 use crate::coordinator::planner::{BackendPolicy, PlanMode};
 use crate::graph::reorder::ReorderPolicy;
-use crate::kernel::FormatPolicy;
+use crate::kernel::{FormatPolicy, DEFAULT_L2_KIB};
 use crate::Result;
 use anyhow::{bail, Context};
 use std::path::{Path, PathBuf};
@@ -57,6 +58,10 @@ pub struct Config {
     /// reordering must clear over the natural order to be accepted
     /// (`0.0` = any strict improvement; must be in `[0, 1)`).
     pub reorder_min_gain: f64,
+    /// Cache budget (KiB) the tile-blocked band kernels size their row
+    /// tiles against (`kernel::blocking`); default 256 KiB ≈ a typical
+    /// per-core L2.
+    pub l2_kib: usize,
     /// Backend constraint: `auto` lets the planner score the registry
     /// backends; anything else pins the axis
     /// (`serial|csr|dgbmv|coloring|pars3|pjrt`).
@@ -93,6 +98,7 @@ impl Default for Config {
             format: FormatPolicy::Auto,
             reorder: ReorderPolicy::Auto,
             reorder_min_gain: 0.0,
+            l2_kib: DEFAULT_L2_KIB,
             backend: BackendPolicy::Auto,
             plan: PlanMode::Auto,
             plan_probe: 0,
@@ -141,6 +147,7 @@ impl Config {
                 "reorder_min_gain" => {
                     cfg.reorder_min_gain = value.parse().context("reorder_min_gain")?;
                 }
+                "l2_kib" => cfg.l2_kib = value.parse().context("l2_kib")?,
                 "backend" => {
                     cfg.backend = value.trim_matches('"').parse().context("backend")?;
                 }
@@ -183,6 +190,9 @@ impl Config {
         if !(0.0..1.0).contains(&cfg.reorder_min_gain) {
             bail!("reorder_min_gain must be in [0, 1)");
         }
+        if cfg.l2_kib == 0 {
+            bail!("l2_kib must be >= 1");
+        }
         Ok(cfg)
     }
 }
@@ -200,7 +210,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let c = Config::parse(
-            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nreorder = \"rcm-bicriteria\"\nreorder_min_gain = 0.1\nbackend = \"pars3\"\nplan = \"pinned\"\nplan_probe = 2\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
+            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nreorder = \"rcm-bicriteria\"\nreorder_min_gain = 0.1\nl2_kib = 512\nbackend = \"pars3\"\nplan = \"pinned\"\nplan_probe = 2\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
         )
         .unwrap();
         assert_eq!(c.scale, 0.5);
@@ -212,6 +222,7 @@ mod tests {
         assert_eq!(c.format, FormatPolicy::Dia);
         assert_eq!(c.reorder, ReorderPolicy::RcmBiCriteria);
         assert_eq!(c.reorder_min_gain, 0.1);
+        assert_eq!(c.l2_kib, 512);
         assert_eq!(c.backend, BackendPolicy::Pars3);
         assert_eq!(c.plan, PlanMode::Pinned);
         assert_eq!(c.plan_probe, 2);
@@ -245,6 +256,7 @@ mod tests {
         assert!(Config::parse("reorder_min_gain = -0.1").is_err());
         assert!(Config::parse("shards = 0").is_err());
         assert!(Config::parse("queue_depth = 0").is_err());
+        assert!(Config::parse("l2_kib = 0").is_err());
     }
 
     #[test]

@@ -117,8 +117,8 @@ impl Prepared {
 /// Kernel-cache key: `Sss` allocation address, requested backend, the
 /// preparation's [`PlanChoice`] (a re-plan must never be served a
 /// kernel built for the old triple), and the config knobs (`threaded`,
-/// `outer_bw`) that affect construction.
-type CacheKey = (usize, Backend, PlanChoice, bool, usize);
+/// `outer_bw`, `l2_kib`) that affect construction.
+type CacheKey = (usize, Backend, PlanChoice, bool, usize, usize);
 
 /// One kernel-cache entry: the built kernel plus the `Arc<Sss>` whose
 /// pointer is the entry's identity key. Pinning the `Arc` here makes
@@ -230,6 +230,7 @@ impl Coordinator {
             format: prep.choice.format,
             reorder: self.cfg.reorder,
             reorder_min_gain: self.cfg.reorder_min_gain,
+            l2_kib: self.cfg.l2_kib,
         };
         match backend {
             // reuse the 3-way split `prepare` already computed instead
@@ -256,6 +257,7 @@ impl Coordinator {
             prep.choice,
             self.cfg.threaded,
             self.cfg.outer_bw,
+            self.cfg.l2_kib,
         )
     }
 
@@ -790,8 +792,12 @@ mod tests {
         c.cfg.threaded = true;
         c.spmv(&prep, &x, Backend::Serial).unwrap();
         assert_eq!(c.kernel_cache_stats(), (2, 2));
+        // so must a tile-budget change (it alters the blocked traversal)
+        c.cfg.l2_kib = 1;
+        c.spmv(&prep, &x, Backend::Serial).unwrap();
+        assert_eq!(c.kernel_cache_stats(), (3, 3));
         c.clear_kernel_cache();
-        assert_eq!(c.kernel_cache_stats(), (0, 2));
+        assert_eq!(c.kernel_cache_stats(), (0, 3));
     }
 
     #[test]

@@ -50,6 +50,7 @@ use crate::graph::Adjacency;
 use crate::kernel::dia::{DiaBand, FormatPolicy};
 use crate::kernel::registry::{self, KernelConfig};
 use crate::kernel::split3::Split3;
+use crate::perf::Roofline;
 use crate::sparse::{Coo, Sss};
 use std::fmt;
 use std::time::Instant;
@@ -213,6 +214,9 @@ pub struct PlanConstraints {
     /// Number of timed `apply` calls per backend candidate; `0`
     /// disables probing and scores backends structurally.
     pub probe_spmvs: usize,
+    /// Cache budget (KiB) probe kernels tile their band passes with
+    /// (must match execution so probe timings transfer).
+    pub l2_kib: usize,
 }
 
 impl PlanConstraints {
@@ -231,6 +235,7 @@ impl PlanConstraints {
             threads: KernelConfig::default().threads,
             threaded: cfg.threaded,
             probe_spmvs: cfg.plan_probe,
+            l2_kib: cfg.l2_kib,
         }
     }
 }
@@ -317,6 +322,11 @@ pub struct PlanReport {
     pub axes: Vec<AxisReport>,
     /// Probe budget the plan ran with (0 = structural scoring only).
     pub probe_spmvs: usize,
+    /// Measured roofline point of the chosen backend: the probe
+    /// minimum when the backend axis was probed, otherwise a one-shot
+    /// measurement taken at plan time. `None` only for PJRT (no CPU
+    /// kernel to measure).
+    pub roofline: Option<Roofline>,
 }
 
 impl PlanReport {
@@ -337,6 +347,9 @@ impl PlanReport {
                 ax.candidates.len(),
                 pin
             ));
+        }
+        if let Some(r) = &self.roofline {
+            s.push_str(&format!(" | roofline {}", r.summary()));
         }
         s
     }
@@ -411,8 +424,16 @@ impl Planner {
         };
 
         // Build the split with pure-SSS storage first; the format axis
-        // decides what `select_format` installs.
-        let mut split = Split3::with_outer_bw_format(&sss, cons.outer_bw, FormatPolicy::Sss)?;
+        // decides what `select_format` installs. The configured tile
+        // budget rides on the split so the DIA view built here (and
+        // reused by every kernel over this preparation) blocks against
+        // the same cache size the probes and execution will.
+        let mut split = Split3::with_outer_bw_format_budget(
+            &sss,
+            cons.outer_bw,
+            FormatPolicy::Sss,
+            cons.l2_kib,
+        )?;
 
         // Axis 2: format.
         let format_pinned =
@@ -427,20 +448,35 @@ impl Planner {
         // Axis 3: backend (scored against the split as it will be
         // executed, i.e. after format selection).
         let p = cons.threads.clamp(1, sss.n.max(1));
+        let kcfg = KernelConfig {
+            threads: p,
+            outer_bw: cons.outer_bw,
+            threaded: cons.threaded,
+            format: format_choice,
+            reorder: cons.reorder,
+            reorder_min_gain: cons.reorder_min_gain,
+            l2_kib: cons.l2_kib,
+        };
         let backend_pinned =
             cons.mode == PlanMode::Pinned || cons.backend != BackendPolicy::Auto;
-        let (backend_choice, backend_axis) = if backend_pinned {
+        let (backend_choice, backend_axis, probed_roofline) = if backend_pinned {
             let b = cons.backend.resolve(p).unwrap_or(Backend::Pars3 { p });
-            (b, pinned_backend_axis(b, &sss, &split, p))
+            (b, pinned_backend_axis(b, &sss, &split, p), None)
         } else {
-            scored_backend_axis(&sss, &split, p, format_choice, cons)?
+            scored_backend_axis(&sss, &split, p, &kcfg, cons)?
         };
+        // every native plan carries a measured roofline point for its
+        // chosen backend: reuse the probe's when one ran, else take a
+        // one-shot measurement now (PJRT has no CPU kernel -> None)
+        let roofline = probed_roofline
+            .or_else(|| probe_backend(backend_choice, &sss, &split, &kcfg, 1).ok().map(|(_, r)| r));
 
         let report = PlanReport {
             mode: cons.mode,
             reorder: rreport,
             axes: vec![reorder_axis, format_axis, backend_axis],
             probe_spmvs: cons.probe_spmvs,
+            roofline,
         };
         let choice = PlanChoice {
             reorder: chosen_reorder,
@@ -702,9 +738,9 @@ fn scored_backend_axis(
     sss: &Sss,
     split: &Split3,
     p: usize,
-    format: FormatPolicy,
+    kcfg: &KernelConfig,
     cons: &PlanConstraints,
-) -> Result<(Backend, AxisReport), Pars3Error> {
+) -> Result<(Backend, AxisReport, Option<Roofline>), Pars3Error> {
     let backends = [
         Backend::Serial,
         Backend::Csr,
@@ -712,37 +748,34 @@ fn scored_backend_axis(
         Backend::Coloring { p },
         Backend::Pars3 { p },
     ];
-    let kcfg = KernelConfig {
-        threads: p,
-        outer_bw: cons.outer_bw,
-        threaded: cons.threaded,
-        format,
-        reorder: cons.reorder,
-        reorder_min_gain: cons.reorder_min_gain,
-    };
-    let mut cands: Vec<(Backend, PlanCandidate)> = Vec::with_capacity(backends.len());
+    let mut cands: Vec<(Backend, PlanCandidate, Option<Roofline>)> =
+        Vec::with_capacity(backends.len());
     for b in backends {
         let structural = structural_backend_score(b, sss, split, p);
-        let (score, probe_s, detail) = if cons.probe_spmvs > 0 {
-            match probe_backend(b, sss, split, &kcfg, cons.probe_spmvs) {
-                Ok(t) => (
+        let (score, probe_s, detail, roof) = if cons.probe_spmvs > 0 {
+            match probe_backend(b, sss, split, kcfg, cons.probe_spmvs) {
+                Ok((t, roof)) => (
                     t,
                     Some(t),
                     format!(
-                        "probe min over {} apply(s); structural ~{} B/apply",
-                        cons.probe_spmvs, structural as u64
+                        "probe min over {} apply(s); {}; structural ~{} B/apply",
+                        cons.probe_spmvs,
+                        roof.summary(),
+                        structural as u64
                     ),
+                    Some(roof),
                 ),
                 // A candidate that cannot even build disqualifies
                 // itself; the failure is the evidence.
-                Err(e) => (f64::INFINITY, None, format!("probe failed: {e}")),
+                Err(e) => (f64::INFINITY, None, format!("probe failed: {e}"), None),
             }
         } else {
-            (structural, None, format!("structural ~{} B/apply", structural as u64))
+            (structural, None, format!("structural ~{} B/apply", structural as u64), None)
         };
         cands.push((
             b,
             PlanCandidate { name: backend_label(b), score, detail, probe_s, chosen: false },
+            roof,
         ));
     }
     // First minimum wins ties, keeping the registry order (serial
@@ -755,27 +788,29 @@ fn scored_backend_axis(
     }
     cands[best].1.chosen = true;
     let choice = cands[best].0;
+    let roofline = cands[best].2;
     let axis = AxisReport {
         axis: "backend",
         pinned: false,
         chosen: backend_label(choice),
-        candidates: cands.into_iter().map(|(_, c)| c).collect(),
+        candidates: cands.into_iter().map(|(_, c, _)| c).collect(),
         decline: None,
     };
-    Ok((choice, axis))
+    Ok((choice, axis, roofline))
 }
 
 /// Build one candidate kernel directly through the registry (never the
 /// coordinator cache — probes must not pollute cache stats) and time
 /// `spmvs` real `apply` calls on a deterministic vector; the score is
-/// the minimum.
+/// the minimum, returned alongside the corresponding [`Roofline`]
+/// point (from the kernel's own `flops()`/`bytes()` accounting).
 fn probe_backend(
     b: Backend,
     sss: &Sss,
     split: &Split3,
     kcfg: &KernelConfig,
     spmvs: usize,
-) -> Result<f64, Pars3Error> {
+) -> Result<(f64, Roofline), Pars3Error> {
     let mut kernel = match b {
         Backend::Pars3 { .. } => registry::build_from_split(split.clone(), kcfg)?,
         _ => {
@@ -791,13 +826,13 @@ fn probe_backend(
     let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
     let mut y = vec![0.0; n];
     let mut best = f64::INFINITY;
-    for _ in 0..spmvs {
+    for _ in 0..spmvs.max(1) {
         let t0 = Instant::now();
         kernel.apply(&x, &mut y);
         best = best.min(t0.elapsed().as_secs_f64());
     }
     std::hint::black_box(&y);
-    Ok(best)
+    Ok((best, Roofline::from_seconds(best, kernel.flops(), kernel.bytes())))
 }
 
 #[cfg(test)]
@@ -834,6 +869,11 @@ mod tests {
         assert_ne!(planned.choice.format, FormatPolicy::Auto);
         assert!(planned.report.summary().contains("plan[auto]"));
         assert!(planned.choice.describe().starts_with("reorder="));
+        // even without a probe budget, the plan carries a measured
+        // roofline point for its chosen (native) backend
+        let roof = planned.report.roofline.expect("native plan must carry a roofline");
+        assert!(roof.gflops > 0.0 && roof.gbytes > 0.0 && roof.peak_gbytes > 0.0);
+        assert!(planned.report.summary().contains("roofline"));
     }
 
     #[test]
@@ -892,6 +932,9 @@ mod tests {
         let be = planned.report.axis("backend").unwrap();
         assert!(be.candidates.iter().all(|c| c.probe_s.is_some()));
         assert!(be.candidates.iter().all(|c| c.score >= 0.0 && c.score.is_finite()));
+        // probed candidates log their roofline numbers as evidence
+        assert!(be.candidates.iter().all(|c| c.detail.contains("GF/s")), "{be:?}");
+        assert!(planned.report.roofline.is_some());
     }
 
     #[test]

@@ -650,6 +650,9 @@ mod tests {
             let ax = info.plan.axis(name).unwrap();
             assert!(!ax.pinned && ax.candidates.len() >= 2, "{name} stays planned");
         }
+        // the measured roofline point of the chosen backend rides along
+        let roof = info.plan.roofline.expect("describe carries the plan's roofline");
+        assert!(roof.gflops > 0.0 && roof.gbytes > 0.0 && roof.achieved_fraction > 0.0);
         svc.shutdown();
     }
 

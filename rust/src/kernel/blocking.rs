@@ -1,0 +1,295 @@
+//! SIMD lane dispatch and L2 cache tiling for the band hot paths.
+//!
+//! Two independent mechanisms, composed by the DIA / band kernels:
+//!
+//! * **Lanes** — the dense-diagonal passes are `y[i] += c * v[i] *
+//!   x[i]` strips. [`Lanes`] runs them as fixed-width
+//!   ([`LANE_WIDTH`]) accumulator chunks the compiler autovectorizes,
+//!   behind a `target_feature`-dispatched function pointer selected
+//!   once per process: AVX2+FMA on x86-64 when the CPU has them, the
+//!   portable chunked body otherwise (on aarch64 NEON is baseline, so
+//!   the portable body already vectorizes). The chosen
+//!   [`LaneVariant`] is recorded at kernel build and surfaces in
+//!   `Pars3Stats`.
+//! * **Tiles** — [`TilePlan`] splits a band traversal into row tiles
+//!   sized so the `x`/`y` windows of one tile (tile rows + one
+//!   bandwidth of halo, `k` columns wide) fit a configurable L2
+//!   budget (`Config::l2_kib`). Diagonals then iterate *inside* each
+//!   tile, so the forward and mirrored passes reuse vector windows
+//!   that are still resident instead of streaming `x`/`y` once per
+//!   diagonal — the RACE recipe (Alappat et al., 1907.06487) applied
+//!   to the symmetric band.
+
+use std::sync::OnceLock;
+
+/// Accumulator strip width the lane kernels unroll to. Eight f64 lanes
+/// = two AVX2 vectors or four NEON vectors per chunk — wide enough to
+/// keep the FMA pipes busy, narrow enough that the scalar tail is
+/// cheap on short diagonals.
+pub const LANE_WIDTH: usize = 8;
+
+/// Default L2 working-set budget per tile, KiB ([`TilePlan::new`]).
+/// 256 KiB ≈ half a typical per-core L2: the tile's `x`/`y` windows
+/// stay resident with room left for the diagonal values streaming
+/// through.
+pub const DEFAULT_L2_KIB: usize = 256;
+
+/// Tiles never shrink below this many rows (when the matrix has them):
+/// below ~64 rows the per-tile loop overhead beats any residency win.
+const MIN_TILE_ROWS: usize = 64;
+
+/// Which lane implementation [`Lanes::get`] dispatched to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LaneVariant {
+    /// Chunked portable body (autovectorized by the compiler for the
+    /// build target's baseline features).
+    Portable,
+    /// x86-64 with runtime-detected AVX2 + FMA.
+    Avx2Fma,
+    /// aarch64: NEON is baseline, the portable body compiles to NEON.
+    Neon,
+}
+
+impl LaneVariant {
+    /// Stable label recorded in `Pars3Stats` and bench reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneVariant::Portable => "portable",
+            LaneVariant::Avx2Fma => "avx2+fma",
+            LaneVariant::Neon => "neon",
+        }
+    }
+
+    /// Runtime feature detection for the current CPU.
+    pub fn detect() -> Self {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                LaneVariant::Avx2Fma
+            } else {
+                LaneVariant::Portable
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            LaneVariant::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            LaneVariant::Portable
+        }
+    }
+}
+
+/// `y[i] += c * vals[i] * x[i]` over equal-length strips, in
+/// [`LANE_WIDTH`]-wide chunks with a scalar tail. `#[inline(always)]`
+/// so each `target_feature` wrapper specializes its own copy with the
+/// wrapper's enabled features.
+#[inline(always)]
+fn strip_axpy_body(y: &mut [f64], vals: &[f64], x: &[f64], c: f64) {
+    let m = y.len().min(vals.len()).min(x.len());
+    let head = m - m % LANE_WIDTH;
+    let (yh, yt) = y[..m].split_at_mut(head);
+    let (vh, vt) = vals[..m].split_at(head);
+    let (xh, xt) = x[..m].split_at(head);
+    for ((yc, vc), xc) in yh
+        .chunks_exact_mut(LANE_WIDTH)
+        .zip(vh.chunks_exact(LANE_WIDTH))
+        .zip(xh.chunks_exact(LANE_WIDTH))
+    {
+        for l in 0..LANE_WIDTH {
+            yc[l] += c * vc[l] * xc[l];
+        }
+    }
+    for ((yi, vi), xi) in yt.iter_mut().zip(vt).zip(xt) {
+        *yi += c * *vi * *xi;
+    }
+}
+
+/// Uniform pointer type for the dispatched variants. The pointees are
+/// memory-safe for any inputs; `unsafe` only carries the
+/// `target_feature` calling requirement, discharged by
+/// [`LaneVariant::detect`] before a pointer is ever installed.
+type AxpyFn = unsafe fn(&mut [f64], &[f64], &[f64], f64);
+
+unsafe fn strip_axpy_portable(y: &mut [f64], vals: &[f64], x: &[f64], c: f64) {
+    strip_axpy_body(y, vals, x, c)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn strip_axpy_avx2(y: &mut [f64], vals: &[f64], x: &[f64], c: f64) {
+    strip_axpy_body(y, vals, x, c)
+}
+
+/// The process-wide lane dispatch: a [`LaneVariant`] tag plus the
+/// function pointer it selected. Kernels capture a copy at build time
+/// (the tag is what `Pars3Stats` records as `lane_variant`).
+#[derive(Clone, Copy)]
+pub struct Lanes {
+    /// Which implementation the pointer targets.
+    pub variant: LaneVariant,
+    axpy: AxpyFn,
+}
+
+impl std::fmt::Debug for Lanes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Lanes").field("variant", &self.variant).finish()
+    }
+}
+
+impl PartialEq for Lanes {
+    fn eq(&self, other: &Self) -> bool {
+        self.variant == other.variant
+    }
+}
+
+static LANES: OnceLock<Lanes> = OnceLock::new();
+
+impl Lanes {
+    /// The detected-once dispatch for this process.
+    pub fn get() -> Lanes {
+        *LANES.get_or_init(|| {
+            let variant = LaneVariant::detect();
+            let axpy: AxpyFn = match variant {
+                #[cfg(target_arch = "x86_64")]
+                LaneVariant::Avx2Fma => strip_axpy_avx2,
+                _ => strip_axpy_portable,
+            };
+            Lanes { variant, axpy }
+        })
+    }
+
+    /// `y[i] += c * vals[i] * x[i]` over the common prefix of the three
+    /// slices, through the dispatched lane kernel.
+    #[inline]
+    pub fn axpy(&self, y: &mut [f64], vals: &[f64], x: &[f64], c: f64) {
+        // Safety: the pointer was selected by `detect()`, so the
+        // target features it was compiled with are present on this CPU;
+        // the body itself is safe for any slice lengths.
+        unsafe { (self.axpy)(y, vals, x, c) }
+    }
+}
+
+/// Row tiling of a band traversal against an L2 working-set budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Rows per tile (the last tile of a range may be shorter).
+    pub tile_rows: usize,
+    /// Budget the plan was sized for (KiB), kept for reports.
+    pub l2_kib: usize,
+}
+
+impl TilePlan {
+    /// Size tiles so one tile's vector working set fits `l2_kib`: a
+    /// tile of `t` rows touches ~`t + bw` entries of `x` and of `y`
+    /// (the mirrored pass reaches one bandwidth ahead), each `k`
+    /// columns of 8-byte f64 — so `t` solves
+    /// `2 * 8 * k * (t + bw) <= l2_kib * 1024`, clamped to
+    /// `[MIN_TILE_ROWS, n]`. A budget at or above the whole matrix
+    /// degenerates to a single tile, i.e. the untiled traversal.
+    pub fn new(n: usize, bw: usize, k: usize, l2_kib: usize) -> Self {
+        let n = n.max(1);
+        let budget_rows = (l2_kib.max(1) * 1024) / (16 * k.max(1));
+        let tile_rows = budget_rows.saturating_sub(bw).clamp(MIN_TILE_ROWS.min(n), n);
+        TilePlan { tile_rows, l2_kib }
+    }
+
+    /// Contiguous `(t0, t1)` row ranges covering `[r0, r1)` in order.
+    pub fn tiles(&self, r0: usize, r1: usize) -> impl Iterator<Item = (usize, usize)> {
+        let step = self.tile_rows.max(1);
+        (r0..r1).step_by(step).map(move |t0| (t0, (t0 + step).min(r1)))
+    }
+
+    /// Number of tiles covering `[r0, r1)`.
+    pub fn num_tiles(&self, r0: usize, r1: usize) -> usize {
+        (r1.saturating_sub(r0)).div_ceil(self.tile_rows.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_axpy(y: &mut [f64], vals: &[f64], x: &[f64], c: f64) {
+        for ((yi, vi), xi) in y.iter_mut().zip(vals).zip(x) {
+            *yi += c * *vi * *xi;
+        }
+    }
+
+    #[test]
+    fn lane_axpy_matches_scalar_for_all_strip_lengths() {
+        let lanes = Lanes::get();
+        // every length around the chunk boundary, including 0 and tails
+        for m in 0..(3 * LANE_WIDTH + 2) {
+            let vals: Vec<f64> = (0..m).map(|i| (i as f64 * 0.7).sin()).collect();
+            let x: Vec<f64> = (0..m).map(|i| (i as f64 * 0.3).cos()).collect();
+            let mut y: Vec<f64> = (0..m).map(|i| i as f64 * 0.1).collect();
+            let mut want = y.clone();
+            lanes.axpy(&mut y, &vals, &x, -1.5);
+            scalar_axpy(&mut want, &vals, &x, -1.5);
+            for (i, (a, b)) in y.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-15, "m={m} i={i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_variant_is_detected_and_named() {
+        let lanes = Lanes::get();
+        assert!(!lanes.variant.name().is_empty());
+        // detection is idempotent and the cached dispatch agrees
+        assert_eq!(Lanes::get().variant, lanes.variant);
+        assert_eq!(LaneVariant::detect(), lanes.variant);
+    }
+
+    #[test]
+    fn tiles_partition_the_range_exactly() {
+        // tiny budget -> many tiles; they must cover [r0, r1) exactly
+        // once, in order, each no longer than tile_rows
+        let plan = TilePlan::new(1000, 7, 1, 1);
+        let mut expect = 137usize;
+        let mut count = 0;
+        for (t0, t1) in plan.tiles(137, 911) {
+            assert_eq!(t0, expect, "tiles must be contiguous");
+            assert!(t1 > t0 && t1 - t0 <= plan.tile_rows);
+            expect = t1;
+            count += 1;
+        }
+        assert_eq!(expect, 911, "tiles must reach the end of the range");
+        assert_eq!(count, plan.num_tiles(137, 911));
+        assert!(count > 1, "a 1 KiB budget must split 774 rows");
+    }
+
+    #[test]
+    fn single_tile_degenerate_case() {
+        // budget >= whole matrix -> exactly one tile == the full range
+        let plan = TilePlan::new(500, 9, 1, 1 << 20);
+        assert_eq!(plan.tile_rows, 500);
+        let tiles: Vec<_> = plan.tiles(0, 500).collect();
+        assert_eq!(tiles, vec![(0, 500)]);
+        assert_eq!(plan.num_tiles(0, 500), 1);
+        // empty range -> no tiles
+        assert_eq!(plan.tiles(10, 10).count(), 0);
+    }
+
+    #[test]
+    fn tile_rows_scale_down_with_batch_width_and_up_with_budget() {
+        let k1 = TilePlan::new(100_000, 50, 1, DEFAULT_L2_KIB);
+        let k8 = TilePlan::new(100_000, 50, 8, DEFAULT_L2_KIB);
+        assert!(k8.tile_rows < k1.tile_rows, "wider batches need shorter tiles");
+        let big = TilePlan::new(100_000, 50, 1, 4 * DEFAULT_L2_KIB);
+        assert!(big.tile_rows > k1.tile_rows);
+        // budget arithmetic: k=1, 256 KiB, bw=50 -> 16384 - 50 rows
+        assert_eq!(k1.tile_rows, 256 * 1024 / 16 - 50);
+    }
+
+    #[test]
+    fn tile_rows_never_drop_below_the_minimum() {
+        let plan = TilePlan::new(10_000, 9_999, 8, 1);
+        assert_eq!(plan.tile_rows, 64, "clamped to MIN_TILE_ROWS");
+        // tiny matrices clamp to n instead
+        let tiny = TilePlan::new(5, 2, 1, 1);
+        assert_eq!(tiny.tile_rows, 5);
+    }
+}

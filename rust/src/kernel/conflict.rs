@@ -100,11 +100,15 @@ impl ConflictMap {
         let mut halo: Vec<std::collections::BTreeMap<usize, usize>> =
             vec![Default::default(); p];
 
+        // True middle nonzeros regardless of storage: with a DIA view
+        // the stored SSS middle is remainder-only, and explicit-zero
+        // dense slots must not count as conflicts.
         for i in 0..split.n {
             let r = dist.rank_of(i);
             let rc = &mut per_rank[r];
-            for (j, _) in split.middle.row(i) {
-                let jr = dist.rank_of(j as usize);
+            let h = &mut halo[r];
+            split.for_each_middle_entry(i, |j, _| {
+                let jr = dist.rank_of(j);
                 rc.local_nnz += 1;
                 if jr == r {
                     rc.safe_nnz += 1;
@@ -113,9 +117,9 @@ impl ConflictMap {
                     if !rc.target_ranks.contains(&jr) {
                         rc.target_ranks.push(jr);
                     }
-                    *halo[r].entry(jr).or_insert(0) += 1;
+                    *h.entry(jr).or_insert(0) += 1;
                 }
-            }
+            });
         }
         for e in &split.outer {
             let r = dist.rank_of(e.row as usize);
@@ -238,6 +242,27 @@ mod tests {
                 for &t in &rc.target_ranks {
                     assert_eq!(t, r - 1, "rank {r} targets {t}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dia_and_sss_splits_get_identical_conflict_maps() {
+        // the analysis must see true nonzeros only, so the remainder-
+        // only DIA storage and the pure SSS middle agree entry-for-entry
+        let split_sss = banded_split(180, 7, 6);
+        let mut split_dia = split_sss.clone();
+        split_dia.select_format(crate::kernel::FormatPolicy::Dia);
+        assert!(split_dia.dia.is_some());
+        for p in [1, 3, 8] {
+            let a = ConflictMap::analyze(&split_sss, p);
+            let b = ConflictMap::analyze(&split_dia, p);
+            for (ra, rb) in a.per_rank.iter().zip(&b.per_rank) {
+                assert_eq!(ra.local_nnz, rb.local_nnz, "p={p}");
+                assert_eq!(ra.safe_nnz, rb.safe_nnz, "p={p}");
+                assert_eq!(ra.conflicting_nnz, rb.conflicting_nnz, "p={p}");
+                assert_eq!(ra.target_ranks, rb.target_ranks, "p={p}");
+                assert_eq!(ra.halo_cols_by_src, rb.halo_cols_by_src, "p={p}");
             }
         }
     }

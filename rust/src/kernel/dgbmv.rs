@@ -17,6 +17,7 @@
 //! SSS gather loop instead of wasting dense slots.
 
 use crate::kernel::batch::VecBatch;
+use crate::kernel::blocking::{Lanes, TilePlan, DEFAULT_L2_KIB};
 use crate::kernel::dia::{DiaBand, FormatPolicy};
 use crate::kernel::traits::Spmv;
 use crate::sparse::{Sss, Symmetry};
@@ -44,12 +45,22 @@ pub struct BandedDgbmv {
     pub ab: Vec<f64>,
     /// Hybrid diagonal-major mode (`None` = classic dense band).
     hybrid: Option<HybridBand>,
+    /// L2 tile budget (KiB) the classic band traversal blocks against
+    /// (the hybrid mode's [`DiaBand`] carries its own copy).
+    pub l2_kib: usize,
+    /// Lane dispatch captured at build.
+    lanes: Lanes,
 }
 
 impl BandedDgbmv {
     /// Build the classic dense band from an SSS matrix (expands the
     /// implied triangle; errors if the matrix is empty).
     pub fn from_sss(s: &Sss) -> Result<Self> {
+        Self::from_sss_budget(s, DEFAULT_L2_KIB)
+    }
+
+    /// [`Self::from_sss`] with an explicit L2 tile budget (KiB).
+    pub fn from_sss_budget(s: &Sss, l2_kib: usize) -> Result<Self> {
         let beta = s.bandwidth();
         ensure!(s.n > 0, "empty matrix");
         let sign = s.sym.sign();
@@ -66,22 +77,29 @@ impl BandedDgbmv {
                 ab[(beta + j - i) * s.n + i] = sign * v;
             }
         }
-        Ok(Self { n: s.n, beta, ab, hybrid: None })
+        Ok(Self { n: s.n, beta, ab, hybrid: None, l2_kib, lanes: Lanes::get() })
     }
 
     /// Build per the storage policy: the hybrid diagonal-major layout
     /// when the policy (or its fill heuristic) selects dense diagonals,
     /// the classic dense band otherwise.
     pub fn from_sss_format(s: &Sss, policy: FormatPolicy) -> Result<Self> {
+        Self::from_sss_format_budget(s, policy, DEFAULT_L2_KIB)
+    }
+
+    /// [`Self::from_sss_format`] with an explicit L2 tile budget (KiB).
+    pub fn from_sss_format_budget(s: &Sss, policy: FormatPolicy, l2_kib: usize) -> Result<Self> {
         ensure!(s.n > 0, "empty matrix");
-        match DiaBand::from_policy(s, policy) {
+        match DiaBand::from_policy_budget(s, policy, l2_kib) {
             Some(dia) => Ok(Self {
                 n: s.n,
                 beta: s.bandwidth(),
                 ab: Vec::new(),
                 hybrid: Some(HybridBand { diag: s.dvalues.clone(), dia }),
+                l2_kib,
+                lanes: Lanes::get(),
             }),
-            None => Self::from_sss(s),
+            None => Self::from_sss_budget(s, l2_kib),
         }
     }
 
@@ -90,9 +108,24 @@ impl BandedDgbmv {
         self.hybrid.is_some()
     }
 
+    /// Per-tile clamp of band row `d`'s column range: `i = j + off`
+    /// must land in the row tile `[t0, t1)` and in `[0, n)`. Returns
+    /// `(off, j_lo, j_hi)`.
+    fn tile_range(&self, d: usize, t0: usize, t1: usize) -> (isize, usize, usize) {
+        let (n, beta) = (self.n, self.beta);
+        let off = d as isize - beta as isize;
+        let j_lo = (t0 as isize - off).max(0) as usize;
+        let j_hi_diag = if off > 0 { n - off as usize } else { n };
+        let j_hi = ((t1 as isize - off).max(0) as usize).min(j_hi_diag);
+        (off, j_lo, j_hi)
+    }
+
     /// `y = A x`. The classic band touches every slot, zeros included
-    /// (the dgbmv trade-off); hybrid mode runs two unit-stride passes
-    /// per selected diagonal plus the SSS remainder.
+    /// (the dgbmv trade-off), but runs row tiles outer × band rows
+    /// inner — one tile's x/y windows stay L2-resident across all
+    /// `2β+1` diagonals — with each diagonal's tile segment as one
+    /// unit-stride lane strip. Hybrid mode runs the blocked DIA passes
+    /// plus the SSS remainder.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         if let Some(h) = &self.hybrid {
             for (yi, (&d, &xi)) in y.iter_mut().zip(h.diag.iter().zip(x)) {
@@ -103,22 +136,26 @@ impl BandedDgbmv {
         }
         let (n, beta) = (self.n, self.beta);
         y.iter_mut().for_each(|v| *v = 0.0);
-        for d in 0..=2 * beta {
-            // band row d holds A[i][j] with i - j = d - beta
-            let off = d as isize - beta as isize;
-            let row = &self.ab[d * n..(d + 1) * n];
-            // i = j + off must be in [0, n)
-            let j_lo = (-off).max(0) as usize;
-            let j_hi = if off > 0 { n - off as usize } else { n };
-            for j in j_lo..j_hi {
-                let i = (j as isize + off) as usize;
-                y[i] += row[j] * x[j];
+        let plan = TilePlan::new(n, 2 * beta, 1, self.l2_kib);
+        for (t0, t1) in plan.tiles(0, n) {
+            for d in 0..=2 * beta {
+                // band row d holds A[i][j] with i - j = d - beta
+                let (off, j_lo, j_hi) = self.tile_range(d, t0, t1);
+                if j_lo >= j_hi {
+                    continue;
+                }
+                let row = &self.ab[d * n..(d + 1) * n];
+                let i0 = (j_lo as isize + off) as usize;
+                let m = j_hi - j_lo;
+                self.lanes.axpy(&mut y[i0..i0 + m], &row[j_lo..j_hi], &x[j_lo..j_hi], 1.0);
             }
         }
     }
 
-    /// Fused batch band multiply: each band slot is loaded once and
-    /// reused across all `k` columns (a `dgbmv`-to-`dgbmm` promotion).
+    /// Fused batch band multiply (a `dgbmv`-to-`dgbmm` promotion),
+    /// tiled like [`Self::spmv`]: within a tile each band row runs one
+    /// lane strip per batch column, so a band slot is re-read from a
+    /// still-resident tile line rather than streamed `k` times.
     pub fn spmv_batch(&self, xs: &VecBatch, ys: &mut VecBatch) {
         let (n, beta, kw) = (self.n, self.beta, xs.k());
         assert_eq!(xs.n(), n);
@@ -140,16 +177,20 @@ impl BandedDgbmv {
         let xd = xs.data();
         let yd = ys.data_mut();
         yd.iter_mut().for_each(|v| *v = 0.0);
-        for d in 0..=2 * beta {
-            let off = d as isize - beta as isize;
-            let row = &self.ab[d * n..(d + 1) * n];
-            let j_lo = (-off).max(0) as usize;
-            let j_hi = if off > 0 { n - off as usize } else { n };
-            for j in j_lo..j_hi {
-                let i = (j as isize + off) as usize;
-                let v = row[j];
+        let plan = TilePlan::new(n, 2 * beta, kw, self.l2_kib);
+        for (t0, t1) in plan.tiles(0, n) {
+            for d in 0..=2 * beta {
+                let (off, j_lo, j_hi) = self.tile_range(d, t0, t1);
+                if j_lo >= j_hi {
+                    continue;
+                }
+                let row = &self.ab[d * n..(d + 1) * n];
+                let i0 = (j_lo as isize + off) as usize;
+                let m = j_hi - j_lo;
                 for c in 0..kw {
-                    yd[c * n + i] += v * xd[c * n + j];
+                    let xcol = &xd[c * n..(c + 1) * n];
+                    let ycol = &mut yd[c * n..(c + 1) * n];
+                    self.lanes.axpy(&mut ycol[i0..i0 + m], &row[j_lo..j_hi], &xcol[j_lo..j_hi], 1.0);
                 }
             }
         }

@@ -25,6 +25,7 @@
 //! f64 execution format for the native kernels.
 
 use crate::kernel::batch::VecBatch;
+use crate::kernel::blocking::{Lanes, TilePlan, DEFAULT_L2_KIB};
 use crate::sparse::{Sss, Symmetry};
 
 /// Fill ratio above which [`FormatPolicy::Auto`] stores a diagonal
@@ -109,18 +110,33 @@ pub struct DiaBand {
     pub dense_nnz: usize,
     /// The fill threshold the selection used (for reports).
     pub threshold: f64,
+    /// L2 working-set budget (KiB) the apply passes tile against.
+    pub l2_kib: usize,
+    /// Lane dispatch captured at build time ([`Lanes::get`]); its
+    /// variant is what `Pars3Stats` reports.
+    pub lanes: Lanes,
 }
 
 impl DiaBand {
     /// Build per the policy: `None` means "stay SSS" (either the policy
     /// forces it or no diagonal clears the `Auto` threshold).
     pub fn from_policy(lower: &Sss, policy: FormatPolicy) -> Option<Self> {
-        policy.threshold().and_then(|t| Self::build(lower, t))
+        Self::from_policy_budget(lower, policy, DEFAULT_L2_KIB)
+    }
+
+    /// [`Self::from_policy`] with an explicit L2 tile budget (KiB).
+    pub fn from_policy_budget(lower: &Sss, policy: FormatPolicy, l2_kib: usize) -> Option<Self> {
+        policy.threshold().and_then(|t| Self::build_budget(lower, t, l2_kib))
     }
 
     /// Build with an explicit fill threshold; `None` if no nonempty
     /// diagonal has `nnz / (n - d) >= threshold`.
     pub fn build(lower: &Sss, threshold: f64) -> Option<Self> {
+        Self::build_budget(lower, threshold, DEFAULT_L2_KIB)
+    }
+
+    /// [`Self::build`] with an explicit L2 tile budget (KiB).
+    pub fn build_budget(lower: &Sss, threshold: f64, l2_kib: usize) -> Option<Self> {
         let n = lower.n;
         let bw = lower.bandwidth();
         if bw == 0 {
@@ -171,7 +187,28 @@ impl DiaBand {
             vals,
             sym: lower.sym,
         };
-        Some(Self { n, sym: lower.sym, diags, rest, dense_nnz, threshold })
+        Some(Self {
+            n,
+            sym: lower.sym,
+            diags,
+            rest,
+            dense_nnz,
+            threshold,
+            l2_kib,
+            lanes: Lanes::get(),
+        })
+    }
+
+    /// Widest dense-diagonal distance — how far the mirrored pass
+    /// reaches ahead of a tile (its halo).
+    pub fn max_d(&self) -> usize {
+        self.diags.last().map(|dd| dd.d).unwrap_or(0)
+    }
+
+    /// Row tiling of the dense passes for a `k`-wide batch against the
+    /// configured budget.
+    pub fn tile_plan(&self, k: usize) -> TilePlan {
+        TilePlan::new(self.n, self.max_d(), k, self.l2_kib)
     }
 
     /// Total dense slots (including explicit zeros).
@@ -226,18 +263,24 @@ impl DiaBand {
         let sign = self.sym.sign();
         let xd = xs.data();
         let yd = ys.data_mut();
-        for dd in &self.diags {
-            let d = dd.d;
-            let m = n - d;
-            let vals = &dd.vals[..m];
-            for c in 0..k {
-                let xcol = &xd[c * n..(c + 1) * n];
-                let ycol = &mut yd[c * n..(c + 1) * n];
-                for ((yv, &v), &xv) in ycol[d..].iter_mut().zip(vals).zip(&xcol[..m]) {
-                    *yv += v * xv;
+        // Row tiles outer, diagonals inner: the k columns' x/y tile
+        // windows stay L2-resident across every diagonal's forward +
+        // mirrored pass instead of streaming n rows once per diagonal.
+        for (t0, t1) in self.tile_plan(k).tiles(0, n) {
+            for dd in &self.diags {
+                let d = dd.d;
+                let lo_i = t0.max(d);
+                if lo_i >= t1 {
+                    continue;
                 }
-                for ((yv, &v), &xv) in ycol[..m].iter_mut().zip(vals).zip(&xcol[d..]) {
-                    *yv += sign * v * xv;
+                let j0 = lo_i - d;
+                let m = t1 - lo_i;
+                let vals = &dd.vals[j0..j0 + m];
+                for c in 0..k {
+                    let xcol = &xd[c * n..(c + 1) * n];
+                    let ycol = &mut yd[c * n..(c + 1) * n];
+                    self.lanes.axpy(&mut ycol[j0 + d..j0 + d + m], vals, &xcol[j0..j0 + m], 1.0);
+                    self.lanes.axpy(&mut ycol[j0..j0 + m], vals, &xcol[j0 + d..j0 + d + m], sign);
                 }
             }
         }
@@ -268,38 +311,42 @@ impl DiaBand {
         debug_assert_eq!(xw.len(), r1 - base);
         debug_assert_eq!(yw.len(), r1 - base);
         let sign = self.sym.sign();
-        for dd in &self.diags {
-            let d = dd.d;
-            let lo_i = r0.max(base + d); // first row with col >= base
-            if lo_i >= r1 {
-                continue;
+        // Row tiles outer, diagonals inner: one tile's x/y windows stay
+        // L2-resident across the forward + mirrored pass of every dense
+        // diagonal. Each tile clamps its own halo: the per-diagonal
+        // `lo_i` below works identically whether the lower bound comes
+        // from the rank window (`r0`) or a tile boundary (`t0`).
+        for (t0, t1) in self.tile_plan(1).tiles(r0, r1) {
+            for dd in &self.diags {
+                let d = dd.d;
+                let lo_i = t0.max(base + d); // first row with col >= base
+                if lo_i >= t1 {
+                    continue;
+                }
+                let j0 = lo_i - d; // absolute column start (>= base)
+                let m = t1 - lo_i;
+                let vals = &dd.vals[j0..j0 + m];
+                let w = j0 - base; // window offset of the column start
+                // forward: y[i] += v * x[i - d]
+                self.lanes.axpy(&mut yw[w + d..w + d + m], vals, &xw[w..w + m], 1.0);
+                // mirrored: y[i - d] += sign * v * x[i]
+                self.lanes.axpy(&mut yw[w..w + m], vals, &xw[w + d..w + d + m], sign);
             }
-            let j0 = lo_i - d; // absolute column start (>= base)
-            let m = r1 - lo_i;
-            let vals = &dd.vals[j0..j0 + m];
-            let w = j0 - base; // window offset of the column start
-            // forward: y[i] += v * x[i - d]
-            for ((yv, &v), &xv) in yw[w + d..w + d + m].iter_mut().zip(vals).zip(&xw[w..w + m]) {
-                *yv += v * xv;
+            // sparse remainder: same gather loop as the SSS middle
+            // split, over the still-resident tile rows
+            for i in t0..t1 {
+                let xi = xw[i - base];
+                let sxi = sign * xi;
+                let mut yi = 0.0;
+                let lo = self.rest.row_ptr[i];
+                let hi = self.rest.row_ptr[i + 1];
+                for (&j, &v) in self.rest.col_ind[lo..hi].iter().zip(&self.rest.vals[lo..hi]) {
+                    let j = j as usize;
+                    yi += v * xw[j - base];
+                    yw[j - base] += v * sxi;
+                }
+                yw[i - base] += yi;
             }
-            // mirrored: y[i - d] += sign * v * x[i]
-            for ((yv, &v), &xv) in yw[w..w + m].iter_mut().zip(vals).zip(&xw[w + d..w + d + m]) {
-                *yv += sign * v * xv;
-            }
-        }
-        // sparse remainder: same gather loop as the SSS middle split
-        for i in r0..r1 {
-            let xi = xw[i - base];
-            let sxi = sign * xi;
-            let mut yi = 0.0;
-            let lo = self.rest.row_ptr[i];
-            let hi = self.rest.row_ptr[i + 1];
-            for (&j, &v) in self.rest.col_ind[lo..hi].iter().zip(&self.rest.vals[lo..hi]) {
-                let j = j as usize;
-                yi += v * xw[j - base];
-                yw[j - base] += v * sxi;
-            }
-            yw[i - base] += yi;
         }
     }
 
@@ -318,36 +365,41 @@ impl DiaBand {
         debug_assert_eq!(xw.len(), (r1 - base) * k);
         debug_assert_eq!(yw.len(), (r1 - base) * k);
         let sign = self.sym.sign();
-        for dd in &self.diags {
-            let d = dd.d;
-            let lo_i = r0.max(base + d);
-            if lo_i >= r1 {
-                continue;
-            }
-            let j0 = lo_i - d;
-            let m = r1 - lo_i;
-            let vals = &dd.vals[j0..j0 + m];
-            let w = j0 - base;
-            for (t, &v) in vals.iter().enumerate() {
-                let oj = (w + t) * k;
-                let oi = (w + t + d) * k;
-                let sv = sign * v;
-                for c in 0..k {
-                    yw[oi + c] += v * xw[oj + c];
-                    yw[oj + c] += sv * xw[oi + c];
+        // Tiled like apply_window; the interleaved layout keeps the
+        // inner per-slot column loop contiguous (k-wide, compiler-
+        // vectorized), so tiling is the only blocking applied here.
+        for (t0, t1) in self.tile_plan(k).tiles(r0, r1) {
+            for dd in &self.diags {
+                let d = dd.d;
+                let lo_i = t0.max(base + d);
+                if lo_i >= t1 {
+                    continue;
+                }
+                let j0 = lo_i - d;
+                let m = t1 - lo_i;
+                let vals = &dd.vals[j0..j0 + m];
+                let w = j0 - base;
+                for (t, &v) in vals.iter().enumerate() {
+                    let oj = (w + t) * k;
+                    let oi = (w + t + d) * k;
+                    let sv = sign * v;
+                    for c in 0..k {
+                        yw[oi + c] += v * xw[oj + c];
+                        yw[oj + c] += sv * xw[oi + c];
+                    }
                 }
             }
-        }
-        for i in r0..r1 {
-            let oi = (i - base) * k;
-            let lo = self.rest.row_ptr[i];
-            let hi = self.rest.row_ptr[i + 1];
-            for (&j, &v) in self.rest.col_ind[lo..hi].iter().zip(&self.rest.vals[lo..hi]) {
-                let oj = (j as usize - base) * k;
-                let sv = sign * v;
-                for c in 0..k {
-                    yw[oi + c] += v * xw[oj + c];
-                    yw[oj + c] += sv * xw[oi + c];
+            for i in t0..t1 {
+                let oi = (i - base) * k;
+                let lo = self.rest.row_ptr[i];
+                let hi = self.rest.row_ptr[i + 1];
+                for (&j, &v) in self.rest.col_ind[lo..hi].iter().zip(&self.rest.vals[lo..hi]) {
+                    let oj = (j as usize - base) * k;
+                    let sv = sign * v;
+                    for c in 0..k {
+                        yw[oi + c] += v * xw[oj + c];
+                        yw[oj + c] += sv * xw[oi + c];
+                    }
                 }
             }
         }
@@ -508,6 +560,60 @@ mod tests {
                 assert!((yw[t * k + c] - want[t]).abs() < 1e-10, "col {c} slot {t}");
             }
         }
+    }
+
+    #[test]
+    fn tiny_tile_budget_matches_untiled_apply() {
+        let s = banded(200, 6, 1.2);
+        let x: Vec<f64> = (0..200).map(|i| ((i * 13) % 23) as f64 * 0.2 - 2.0).collect();
+        let untiled = DiaBand::build_budget(&s, 0.0, 1 << 20).unwrap();
+        assert_eq!(untiled.tile_plan(1).num_tiles(0, 200), 1, "huge budget = single tile");
+        let mut want = vec![0.0; 200];
+        untiled.apply_add(&x, &mut want);
+        let tiled = DiaBand::build_budget(&s, 0.0, 1).unwrap();
+        assert!(tiled.tile_plan(1).num_tiles(0, 200) > 1, "1 KiB budget must split 200 rows");
+        let mut got = vec![0.0; 200];
+        tiled.apply_add(&x, &mut got);
+        for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-12, "row {r}: {a} vs {b}");
+        }
+        // batch path under the same tiny budget
+        let k = 3;
+        let xs = VecBatch::from_fn(200, k, |i, c| ((i * 5 + c * 11) % 9) as f64 * 0.4 - 1.5);
+        let mut ys = VecBatch::zeros(200, k);
+        tiled.apply_add_batch(&xs, &mut ys);
+        for c in 0..k {
+            let mut want = vec![0.0; 200];
+            untiled.apply_add(xs.col(c), &mut want);
+            for (r, (a, b)) in ys.col(c).iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-12, "col {c} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_boundaries_clamp_the_window_halo_correctly() {
+        // A rank window with a halo prefix (base < r0), cut into tiny
+        // tiles: every tile boundary must clamp its per-diagonal start
+        // exactly like the window's own lower bound does, and mirrored
+        // writes crossing a boundary must still land.
+        let s = banded(160, 7, 1.0);
+        let bw = s.bandwidth();
+        let (r0, r1) = (70usize, 150usize);
+        let base = r0.saturating_sub(bw);
+        let xw: Vec<f64> = (0..r1 - base).map(|t| ((t * 11) % 19) as f64 * 0.3 - 1.4).collect();
+        let untiled = DiaBand::build_budget(&s, 0.0, 1 << 20).unwrap();
+        let mut want = vec![0.0; r1 - base];
+        untiled.apply_window(r0, r1, base, &xw, &mut want);
+        let tiled = DiaBand::build_budget(&s, 0.0, 1).unwrap();
+        assert!(tiled.tile_plan(1).num_tiles(r0, r1) > 1);
+        let mut got = vec![0.0; r1 - base];
+        tiled.apply_window(r0, r1, base, &xw, &mut got);
+        for (t, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-12, "slot {t}: {a} vs {b}");
+        }
+        // lane dispatch was captured at build and is nameable
+        assert!(!tiled.lanes.variant.name().is_empty());
     }
 
     #[test]

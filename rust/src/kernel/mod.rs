@@ -5,6 +5,7 @@
 
 pub mod balance;
 pub mod batch;
+pub mod blocking;
 pub mod coloring_spmv;
 pub mod conflict;
 pub mod csr_spmv;
@@ -17,6 +18,7 @@ pub mod split3;
 pub mod traits;
 
 pub use batch::VecBatch;
+pub use blocking::{LaneVariant, Lanes, TilePlan, DEFAULT_L2_KIB, LANE_WIDTH};
 pub use conflict::{BlockDist, ConflictMap};
 pub use dia::FormatPolicy;
 pub use pars3::Pars3Plan;

@@ -24,9 +24,12 @@
 //! 6. **epoch fence** — barrier; the window now holds `y = A x`.
 
 use crate::kernel::batch::VecBatch;
+use crate::kernel::blocking::Lanes;
 use crate::kernel::conflict::BlockDist;
+use crate::kernel::serial_sss::GATHER_LANES;
 use crate::kernel::split3::Split3;
 use crate::mpisim::{InputSlot, PersistentWorld, RankCtx, RankReport, Window, World};
+use crate::perf::Roofline;
 use crate::Result;
 use anyhow::ensure;
 use std::sync::Arc;
@@ -82,6 +85,14 @@ pub struct Pars3Stats {
     pub plan_triple: Option<String>,
     /// Bandwidth of the (reordered) band the split was built from.
     pub reordered_bw: usize,
+    /// Lane implementation the band passes dispatched to
+    /// ([`crate::kernel::blocking::LaneVariant::name`]; `""` before the
+    /// first apply stamps it).
+    pub lane_variant: &'static str,
+    /// Measured roofline point of the most recent apply through
+    /// [`Pars3Kernel`] (`None` for plan-level executions that did not
+    /// go through the kernel adapter).
+    pub roofline: Option<Roofline>,
 }
 
 /// The preprocessed parallel kernel.
@@ -124,19 +135,22 @@ impl Pars3Plan {
             .collect();
 
         // Θ(NNZ) discovery pass (paper: "we first iterate over SSS data
-        // ... to mark the conflicting process IDs").
+        // ... to mark the conflicting process IDs"). Iterates TRUE
+        // middle nonzeros regardless of storage — with a DIA view
+        // active the stored SSS middle holds only the remainder, and
+        // explicit-zero dense slots must not widen the halo (so the
+        // SSS and DIA splits of one matrix get identical schedules).
         for r in 0..p {
             let (r0, r1) = dist.range(r);
             let rp = &mut ranks[r];
             for i in r0..r1 {
-                for (j, _) in split.middle.row(i) {
-                    let j = j as usize;
+                split.for_each_middle_entry(i, |j, _| {
                     rp.middle_nnz += 1;
                     if j < r0 {
                         rp.conflicting_nnz += 1;
                         rp.halo_lo = rp.halo_lo.min(j);
                     }
-                }
+                });
             }
         }
         let mut outer_by_rank = vec![Vec::new(); p];
@@ -189,6 +203,7 @@ impl Pars3Plan {
         stats.reorder_strategy = self.split.reorder_strategy;
         stats.plan_triple = self.split.plan_triple.clone();
         stats.reordered_bw = self.split.total_bw;
+        stats.lane_variant = Lanes::get().variant.name();
         if let Some(dia) = &self.split.dia {
             stats.dia_diagonals = dia.diags.len();
             stats.dia_nnz = dia.dense_nnz;
@@ -213,25 +228,37 @@ impl Pars3Plan {
         for i in r0..r1 {
             yw[i - base] = split.diag[i] * xw[i - base];
         }
-        // middle split: unit-stride DIA passes when the hybrid view is
-        // selected, the col_ind gather loop otherwise
+        // middle split: blocked unit-stride DIA passes when the hybrid
+        // view is selected; otherwise the col_ind gather loop, chunked
+        // into GATHER_LANES independent partial sums like Alg. 1
         match &split.dia {
             Some(dia) => dia.apply_window(r0, r1, base, xw, yw),
             None => {
                 for i in r0..r1 {
                     let xi = xw[i - base];
                     let sxi = sign * xi;
-                    let mut yi = 0.0;
                     let lo = split.middle.row_ptr[i];
                     let hi = split.middle.row_ptr[i + 1];
-                    for (&j, &v) in
-                        split.middle.col_ind[lo..hi].iter().zip(&split.middle.vals[lo..hi])
+                    let cols = &split.middle.col_ind[lo..hi];
+                    let vals = &split.middle.vals[lo..hi];
+                    let head = cols.len() - cols.len() % GATHER_LANES;
+                    let mut acc = [0.0f64; GATHER_LANES];
+                    for (jc, vc) in cols[..head]
+                        .chunks_exact(GATHER_LANES)
+                        .zip(vals[..head].chunks_exact(GATHER_LANES))
                     {
-                        let j = j as usize;
-                        yi += v * xw[j - base];
-                        yw[j - base] += v * sxi; // safe or conflicting mirror
+                        for l in 0..GATHER_LANES {
+                            let j = jc[l] as usize - base;
+                            acc[l] += vc[l] * xw[j];
+                            yw[j] += vc[l] * sxi; // safe or conflicting mirror
+                        }
                     }
-                    yw[i - base] += yi;
+                    for (l, (&j, &v)) in cols[head..].iter().zip(&vals[head..]).enumerate() {
+                        let j = j as usize - base;
+                        acc[l] += v * xw[j];
+                        yw[j] += v * sxi;
+                    }
+                    yw[i - base] += (acc[0] + acc[1]) + (acc[2] + acc[3]);
                 }
             }
         }
@@ -634,7 +661,8 @@ impl crate::kernel::Spmv for Pars3Kernel {
     }
 
     fn apply(&mut self, x: &[f64], y: &mut [f64]) {
-        let stats = match &self.exec {
+        let t0 = std::time::Instant::now();
+        let mut stats = match &self.exec {
             Some(exec) => exec.apply_into(x, y),
             None => {
                 let (out, stats) = self.plan.execute_emulated(x);
@@ -642,14 +670,24 @@ impl crate::kernel::Spmv for Pars3Kernel {
                 stats
             }
         };
+        stats.roofline =
+            Some(Roofline::from_seconds(t0.elapsed().as_secs_f64(), self.flops(), self.bytes()));
         self.last_stats = Some(stats);
     }
 
     fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) {
-        let stats = match &mut self.exec {
+        let t0 = std::time::Instant::now();
+        let mut stats = match &mut self.exec {
             Some(exec) => exec.apply_batch(xs, ys),
             None => self.plan.execute_emulated_batch(xs, ys),
         };
+        // the batch does k vectors' flops over one matrix traversal
+        let k = xs.k() as u64;
+        stats.roofline = Some(Roofline::from_seconds(
+            t0.elapsed().as_secs_f64(),
+            self.flops() * k,
+            self.bytes(),
+        ));
         self.last_stats = Some(stats);
     }
 
@@ -1043,5 +1081,28 @@ mod tests {
             assert!((a - b).abs() < 1e-10);
         }
         assert_eq!(k.name(), "pars3");
+        // stats carry the lane dispatch and a measured roofline point
+        let st = k.last_stats().unwrap();
+        assert!(!st.lane_variant.is_empty(), "lane variant must be stamped");
+        let r = st.roofline.expect("kernel apply must stamp a roofline");
+        assert!(r.peak_gbytes > 0.0 && r.gbytes > 0.0);
+        assert!((r.achieved_fraction - r.gbytes / r.peak_gbytes).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_tile_budget_matches_default_through_rank_windows() {
+        use crate::kernel::FormatPolicy;
+        let s = banded(180, 23, 1.5);
+        let x: Vec<f64> = (0..180).map(|i| ((i * 17) % 29) as f64 * 0.2 - 2.3).collect();
+        let split_def = Split3::with_outer_bw_format(&s, 3, FormatPolicy::Dia).unwrap();
+        let split_tiny =
+            Split3::with_outer_bw_format_budget(&s, 3, FormatPolicy::Dia, 1).unwrap();
+        for p in [1, 4] {
+            let (want, _) = Pars3Plan::new(split_def.clone(), p).unwrap().execute_emulated(&x);
+            let (got, _) = Pars3Plan::new(split_tiny.clone(), p).unwrap().execute_emulated(&x);
+            for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-12, "p={p} row {r}: {a} vs {b}");
+            }
+        }
     }
 }

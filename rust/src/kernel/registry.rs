@@ -22,6 +22,7 @@ use crate::graph::Adjacency;
 use crate::kernel::coloring_spmv::ColoringKernel;
 use crate::kernel::csr_spmv::CsrSpmv;
 use crate::kernel::dgbmv::BandedDgbmv;
+use crate::kernel::blocking::DEFAULT_L2_KIB;
 use crate::kernel::dia::FormatPolicy;
 use crate::kernel::pars3::Pars3Kernel;
 use crate::kernel::serial_sss::SerialSss;
@@ -55,6 +56,10 @@ pub struct KernelConfig {
     /// reordering must clear over natural; see
     /// [`crate::graph::reorder::Auto`]).
     pub reorder_min_gain: f64,
+    /// Cache budget (KiB) for the tile-blocked band traversals; sizes
+    /// the row tiles so the touched x/y stretch stays resident across
+    /// the forward and mirrored passes (see [`crate::kernel::blocking`]).
+    pub l2_kib: usize,
 }
 
 impl Default for KernelConfig {
@@ -66,6 +71,7 @@ impl Default for KernelConfig {
             format: FormatPolicy::Auto,
             reorder: ReorderPolicy::Auto,
             reorder_min_gain: 0.0,
+            l2_kib: DEFAULT_L2_KIB,
         }
     }
 }
@@ -128,12 +134,17 @@ pub fn build_from_sss(
     let sss: Arc<Sss> = sss.into();
     let p = cfg.threads.clamp(1, sss.n.max(1));
     Ok(match name {
-        "serial_sss" => Box::new(SerialSss::with_format(sss, cfg.format)),
+        "serial_sss" => Box::new(SerialSss::with_format_budget(sss, cfg.format, cfg.l2_kib)),
         "csr" => Box::new(CsrSpmv::new(convert::sss_to_csr(&sss))),
-        "dgbmv" => Box::new(BandedDgbmv::from_sss_format(&sss, cfg.format)?),
+        "dgbmv" => Box::new(BandedDgbmv::from_sss_format_budget(&sss, cfg.format, cfg.l2_kib)?),
         "coloring" => Box::new(ColoringKernel::new(sss, p, cfg.threaded)?),
         "pars3" => {
-            let split = Split3::with_outer_bw_format(&sss, cfg.outer_bw, cfg.format)?;
+            let split = Split3::with_outer_bw_format_budget(
+                &sss,
+                cfg.outer_bw,
+                cfg.format,
+                cfg.l2_kib,
+            )?;
             return build_from_split(split, cfg);
         }
         other => return Err(Pars3Error::UnknownKernel { name: other.to_string() }),
@@ -279,6 +290,30 @@ mod tests {
             for y in &outs[1..] {
                 for (r, (a, b)) in y.iter().zip(&outs[0]).enumerate() {
                     assert!((a - b).abs() < 1e-9, "{name} row {r}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_registered_kernel_agrees_across_tile_budgets() {
+        // a 1 KiB budget forces many tiny tiles; a huge one forces a
+        // single tile — both must match the default plan exactly
+        let (_, sss) = fixture(140, 11, 2.0);
+        let sss = Arc::new(sss);
+        let x: Vec<f64> = (0..140).map(|i| ((i * 23) % 13) as f64 * 0.4 - 2.0).collect();
+        for &name in KERNEL_NAMES {
+            let mut outs = Vec::new();
+            for l2_kib in [1, DEFAULT_L2_KIB, 1 << 20] {
+                let cfg = KernelConfig { threads: 4, l2_kib, ..KernelConfig::default() };
+                let mut k = build_from_sss(name, sss.clone(), &cfg).unwrap();
+                let mut y = vec![0.0; 140];
+                k.apply(&x, &mut y);
+                outs.push(y);
+            }
+            for y in &outs[1..] {
+                for (r, (a, b)) in y.iter().zip(&outs[0]).enumerate() {
+                    assert!((a - b).abs() < 1e-12, "{name} row {r}: {a} vs {b}");
                 }
             }
         }

@@ -11,10 +11,19 @@
 //! ```
 
 use crate::kernel::batch::VecBatch;
+use crate::kernel::blocking::DEFAULT_L2_KIB;
 use crate::kernel::dia::{DiaBand, FormatPolicy};
 use crate::kernel::traits::Spmv;
 use crate::sparse::Sss;
 use std::sync::Arc;
+
+/// Gather-side unroll width of the compressed-row loop: four
+/// independent partial sums break the serial dependence on the row
+/// accumulator so the forward gathers pipeline (the mirrored scatter
+/// stays per-entry — columns within a row are distinct, so its order is
+/// free). The scalar and batch kernels chunk identically and reduce the
+/// partials with the same tree, preserving their bit-for-bit agreement.
+pub const GATHER_LANES: usize = 4;
 
 /// Compute `y = A x` for an SSS matrix (Alg. 1). `y` is overwritten.
 pub fn sss_spmv(s: &Sss, x: &[f64], y: &mut [f64]) {
@@ -24,22 +33,35 @@ pub fn sss_spmv(s: &Sss, x: &[f64], y: &mut [f64]) {
     for i in 0..s.n {
         // line 2 of Alg. 1: diagonal contribution
         let xi = x[i];
-        let mut yi = s.dvalues[i] * xi;
+        let sxi = sign * xi;
         // lines 3-7: unroll the compressed row, updating both pairs.
         // Zipped slice iteration lets LLVM drop the per-element bounds
         // checks on col_ind/vals (§Perf); the x[j]/y[j] gathers are
         // inherent to SpMV.
         let lo = s.row_ptr[i];
         let hi = s.row_ptr[i + 1];
-        let sxi = sign * xi;
-        for (&j, &v) in s.col_ind[lo..hi].iter().zip(&s.vals[lo..hi]) {
+        let cols = &s.col_ind[lo..hi];
+        let vals = &s.vals[lo..hi];
+        let head = cols.len() - cols.len() % GATHER_LANES;
+        let mut acc = [0.0f64; GATHER_LANES];
+        for (jc, vc) in cols[..head]
+            .chunks_exact(GATHER_LANES)
+            .zip(vals[..head].chunks_exact(GATHER_LANES))
+        {
+            for l in 0..GATHER_LANES {
+                let j = jc[l] as usize;
+                acc[l] += vc[l] * x[j];
+                y[j] += vc[l] * sxi;
+            }
+        }
+        for (l, (&j, &v)) in cols[head..].iter().zip(&vals[head..]).enumerate() {
             let j = j as usize;
-            yi += v * x[j];
+            acc[l] += v * x[j];
             y[j] += v * sxi;
         }
         // y[i] accumulated last: all mirrored writes into y[i] come from
         // rows > i (col < row in SSS), which have not run yet.
-        y[i] = yi;
+        y[i] = s.dvalues[i] * xi + ((acc[0] + acc[1]) + (acc[2] + acc[3]));
     }
 }
 
@@ -56,27 +78,49 @@ pub fn sss_spmv_batch(s: &Sss, xs: &VecBatch, ys: &mut VecBatch) {
     let sign = s.sym.sign();
     let xd = xs.data();
     let yd = ys.data_mut();
-    let mut yi = vec![0.0f64; k];
+    // acc[l * k + c]: lane-l partial sum for batch column c — the same
+    // four-lane chunking as the scalar kernel, replicated per column so
+    // the reduction tree (and thus the rounding) matches it exactly.
+    let mut acc = vec![0.0f64; GATHER_LANES * k];
     for i in 0..n {
-        let d = s.dvalues[i];
-        for c in 0..k {
-            yi[c] = d * xd[c * n + i];
-        }
+        acc.iter_mut().for_each(|a| *a = 0.0);
         let lo = s.row_ptr[i];
         let hi = s.row_ptr[i + 1];
-        for (&j, &v) in s.col_ind[lo..hi].iter().zip(&s.vals[lo..hi]) {
+        let cols = &s.col_ind[lo..hi];
+        let vals = &s.vals[lo..hi];
+        let head = cols.len() - cols.len() % GATHER_LANES;
+        for (jc, vc) in cols[..head]
+            .chunks_exact(GATHER_LANES)
+            .zip(vals[..head].chunks_exact(GATHER_LANES))
+        {
+            for l in 0..GATHER_LANES {
+                let j = jc[l] as usize;
+                let v = vc[l];
+                let sv = sign * v;
+                let al = l * k;
+                for c in 0..k {
+                    let base = c * n;
+                    acc[al + c] += v * xd[base + j];
+                    yd[base + j] += sv * xd[base + i];
+                }
+            }
+        }
+        for (l, (&j, &v)) in cols[head..].iter().zip(&vals[head..]).enumerate() {
             let j = j as usize;
             let sv = sign * v;
+            let al = l * k;
             for c in 0..k {
                 let base = c * n;
-                yi[c] += v * xd[base + j];
+                acc[al + c] += v * xd[base + j];
                 yd[base + j] += sv * xd[base + i];
             }
         }
         // same overwrite-last discipline as the scalar kernel: mirror
         // writes into row i only come from rows > i, which run later
+        let d = s.dvalues[i];
         for c in 0..k {
-            yd[c * n + i] = yi[c];
+            yd[c * n + i] = d * xd[c * n + i]
+                + ((acc[c] + acc[k + c]) + (acc[2 * k + c] + acc[3 * k + c]));
         }
     }
 }
@@ -107,8 +151,18 @@ impl SerialSss {
     /// Wrap with a middle-storage policy (`Auto` builds the DIA view
     /// only when the fill-ratio heuristic finds dense diagonals).
     pub fn with_format(s: impl Into<Arc<Sss>>, policy: FormatPolicy) -> Self {
+        Self::with_format_budget(s, policy, DEFAULT_L2_KIB)
+    }
+
+    /// [`Self::with_format`] with an explicit L2 tile budget (KiB) for
+    /// the DIA view's blocked passes.
+    pub fn with_format_budget(
+        s: impl Into<Arc<Sss>>,
+        policy: FormatPolicy,
+        l2_kib: usize,
+    ) -> Self {
         let s: Arc<Sss> = s.into();
-        let dia = DiaBand::from_policy(&s, policy);
+        let dia = DiaBand::from_policy_budget(&s, policy, l2_kib);
         Self { s, dia }
     }
 

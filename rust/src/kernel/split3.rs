@@ -13,6 +13,7 @@
 //! `split_bw` is the user bandwidth parameter; the paper's default puts
 //! the outermost `outer_bw = 3` diagonals in the outer split.
 
+use crate::kernel::blocking::DEFAULT_L2_KIB;
 use crate::kernel::dia::{DiaBand, FormatPolicy};
 use crate::sparse::{Sss, Symmetry};
 use crate::Result;
@@ -38,9 +39,12 @@ pub struct Split3 {
     pub sym: Symmetry,
     /// Diagonal split.
     pub diag: Vec<f64>,
-    /// Middle split (distance `1..=split_bw`), SSS-compressed. Always
-    /// present — the authoritative entry set (`unsplit`, conflict and
-    /// halo analysis all read it) even when a DIA view is selected.
+    /// Middle split (distance `1..=split_bw`), SSS-compressed. When no
+    /// DIA view is active this is the complete middle; when [`Self::dia`]
+    /// is `Some` it holds **only the remainder** (entries on non-dense
+    /// diagonals — the dense-covered entries live in the DIA arrays and
+    /// are *not* duplicated here). Readers that need the complete entry
+    /// set use [`Self::for_each_middle_entry`] or [`Self::full_middle`].
     pub middle: Sss,
     /// Hybrid diagonal-major view of the middle split (dense diagonals
     /// + SSS remainder), present when a [`FormatPolicy`] selected it.
@@ -51,6 +55,8 @@ pub struct Split3 {
     pub outer: Vec<OuterEntry>,
     /// The split boundary (user bandwidth parameter).
     pub split_bw: usize,
+    /// L2 tile budget (KiB) handed to the DIA view's blocked passes.
+    pub l2_kib: usize,
     /// Total bandwidth of the source band matrix.
     pub total_bw: usize,
     /// Name of the reordering strategy that produced the band this
@@ -76,6 +82,17 @@ impl Split3 {
     /// Split `s` at diagonal distance `split_bw`, selecting the
     /// middle-split storage per `policy`.
     pub fn with_format(s: &Sss, split_bw: usize, policy: FormatPolicy) -> Result<Self> {
+        Self::with_format_budget(s, split_bw, policy, DEFAULT_L2_KIB)
+    }
+
+    /// [`Self::with_format`] with an explicit L2 tile budget (KiB) for
+    /// the DIA view's blocked passes.
+    pub fn with_format_budget(
+        s: &Sss,
+        split_bw: usize,
+        policy: FormatPolicy,
+        l2_kib: usize,
+    ) -> Result<Self> {
         ensure!(split_bw >= 1, "split_bw must be >= 1");
         let total_bw = s.bandwidth();
         let mut row_ptr = vec![0usize; s.n + 1];
@@ -110,6 +127,7 @@ impl Split3 {
             dia: None,
             outer,
             split_bw,
+            l2_kib,
             total_bw,
             reorder_strategy: None,
             plan_triple: None,
@@ -126,15 +144,89 @@ impl Split3 {
 
     /// Like [`Self::with_outer_bw`] with a middle-split storage policy.
     pub fn with_outer_bw_format(s: &Sss, outer_bw: usize, policy: FormatPolicy) -> Result<Self> {
+        Self::with_outer_bw_format_budget(s, outer_bw, policy, DEFAULT_L2_KIB)
+    }
+
+    /// [`Self::with_outer_bw_format`] with an explicit L2 tile budget.
+    pub fn with_outer_bw_format_budget(
+        s: &Sss,
+        outer_bw: usize,
+        policy: FormatPolicy,
+        l2_kib: usize,
+    ) -> Result<Self> {
         let total = s.bandwidth();
         let split_bw = total.saturating_sub(outer_bw).max(1);
-        Self::with_format(s, split_bw, policy)
+        Self::with_format_budget(s, split_bw, policy, l2_kib)
     }
 
     /// (Re)select the middle-split storage: builds the DIA view when the
     /// policy (or its fill heuristic) picks it, clears it otherwise.
+    /// With a DIA view active the stored SSS `middle` keeps **only the
+    /// remainder** — dense-covered entries are not duplicated, halving
+    /// middle memory versus dual storage. Re-selection first
+    /// reconstructs the complete middle so no entry is ever lost.
     pub fn select_format(&mut self, policy: FormatPolicy) {
-        self.dia = DiaBand::from_policy(&self.middle, policy);
+        let full = self.full_middle();
+        self.dia = DiaBand::from_policy_budget(&full, policy, self.l2_kib);
+        self.middle = match &self.dia {
+            Some(dia) => dia.rest.clone(),
+            None => full,
+        };
+    }
+
+    /// Reconstruct the complete middle-split SSS: dense-covered entries
+    /// (true nonzeros only) merged back with the stored remainder. With
+    /// no DIA view active this is a clone of [`Self::middle`].
+    pub fn full_middle(&self) -> Sss {
+        let Some(dia) = &self.dia else {
+            return self.middle.clone();
+        };
+        let mut row_ptr = vec![0usize; self.n + 1];
+        let mut col_ind = Vec::with_capacity(self.nnz_middle());
+        let mut vals = Vec::with_capacity(self.nnz_middle());
+        let mut row: Vec<(u32, f64)> = Vec::new();
+        for i in 0..self.n {
+            row.clear();
+            self.for_each_middle_entry(i, |j, v| row.push((j as u32, v)));
+            row.sort_unstable_by_key(|&(j, _)| j);
+            for &(j, v) in &row {
+                col_ind.push(j);
+                vals.push(v);
+            }
+            row_ptr[i + 1] = vals.len();
+        }
+        Sss {
+            n: self.n,
+            dvalues: vec![0.0; self.n],
+            row_ptr,
+            col_ind,
+            vals,
+            sym: self.sym,
+        }
+    }
+
+    /// Visit every **true** middle-split nonzero of row `i` as
+    /// `(col, val)`, independent of storage: dense-diagonal slots
+    /// holding a nonzero plus the stored SSS rows (the remainder when a
+    /// DIA view is active, the whole middle otherwise). Explicit-zero
+    /// dense slots are skipped, so conflict/halo analysis built on this
+    /// sees exactly the same entry set for both formats. Column order
+    /// is not guaranteed.
+    pub fn for_each_middle_entry(&self, i: usize, mut f: impl FnMut(usize, f64)) {
+        if let Some(dia) = &self.dia {
+            for dd in &dia.diags {
+                if i >= dd.d {
+                    let j = i - dd.d;
+                    let v = dd.vals[j];
+                    if v != 0.0 {
+                        f(j, v);
+                    }
+                }
+            }
+        }
+        for (j, v) in self.middle.row(i) {
+            f(j as usize, v);
+        }
     }
 
     /// Name of the active middle-split storage (for stats/reports).
@@ -175,9 +267,14 @@ impl Split3 {
         w
     }
 
-    /// NNZ partition invariant check: middle + outer == source lower NNZ.
+    /// NNZ partition invariant check: middle + outer == source lower
+    /// NNZ. True nonzeros regardless of storage — with a DIA view this
+    /// is dense nonzeros + remainder, not slots.
     pub fn nnz_middle(&self) -> usize {
-        self.middle.nnz_lower()
+        match &self.dia {
+            Some(dia) => dia.nnz(),
+            None => self.middle.nnz_lower(),
+        }
     }
 
     /// Outer-split NNZ.
@@ -224,9 +321,7 @@ impl Split3 {
     pub fn unsplit(&self) -> Sss {
         let mut entries: Vec<(u32, u32, f64)> = Vec::with_capacity(self.nnz_middle() + self.nnz_outer());
         for i in 0..self.n {
-            for (j, v) in self.middle.row(i) {
-                entries.push((i as u32, j, v));
-            }
+            self.for_each_middle_entry(i, |j, v| entries.push((i as u32, j as u32, v)));
         }
         for e in &self.outer {
             entries.push((e.row, e.col, e.val));
@@ -398,6 +493,63 @@ mod tests {
                 assert!((a - b).abs() < 1e-10, "split_bw={split_bw} row {r}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn dia_middle_stores_only_the_remainder() {
+        let s = band_fixture(150, 10);
+        let total = s.nnz_lower();
+        for policy in [FormatPolicy::Auto, FormatPolicy::Dia] {
+            let sp = Split3::with_outer_bw_format(&s, 3, policy).unwrap();
+            if let Some(dia) = &sp.dia {
+                // the stored SSS middle is exactly the DIA remainder —
+                // dense-covered entries are not duplicated
+                assert_eq!(sp.middle.nnz_lower(), dia.rest.nnz_lower());
+                assert_eq!(sp.middle.row_ptr, dia.rest.row_ptr);
+                // the partition invariant holds on true nonzeros
+                assert_eq!(sp.nnz_middle(), dia.dense_nnz + sp.middle.nnz_lower());
+                assert_eq!(sp.nnz_middle() + sp.nnz_outer(), total, "{policy}");
+            }
+        }
+        // forced DIA drops every entry from the stored middle
+        let sp = Split3::with_outer_bw_format(&s, 3, FormatPolicy::Dia).unwrap();
+        assert_eq!(sp.middle.nnz_lower(), 0);
+        assert_eq!(sp.nnz_middle() + sp.nnz_outer(), total);
+    }
+
+    #[test]
+    fn select_format_is_reentrant_and_unsplit_roundtrips() {
+        let s = band_fixture(100, 11);
+        let mut sp = Split3::with_outer_bw_format(&s, 3, FormatPolicy::Dia).unwrap();
+        assert_eq!(sp.unsplit(), s, "unsplit must merge dense + remainder");
+        // flip back to SSS: the full middle must be reconstructed
+        sp.select_format(FormatPolicy::Sss);
+        assert!(sp.dia.is_none());
+        assert_eq!(sp.unsplit(), s);
+        // and forward again — re-selection must never lose entries
+        sp.select_format(FormatPolicy::Dia);
+        assert!(sp.dia.is_some());
+        assert_eq!(sp.unsplit(), s);
+        // full_middle agrees with a never-DIA split's middle
+        let plain = Split3::with_outer_bw(&s, 3).unwrap();
+        assert_eq!(sp.full_middle(), plain.middle);
+    }
+
+    #[test]
+    fn for_each_middle_entry_sees_the_same_set_for_both_formats() {
+        let s = band_fixture(130, 12);
+        let collect = |sp: &Split3| {
+            let mut es: Vec<(usize, usize, f64)> = Vec::new();
+            for i in 0..sp.n {
+                sp.for_each_middle_entry(i, |j, v| es.push((i, j, v)));
+            }
+            es.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            es
+        };
+        let sss = Split3::with_outer_bw_format(&s, 3, FormatPolicy::Sss).unwrap();
+        let dia = Split3::with_outer_bw_format(&s, 3, FormatPolicy::Dia).unwrap();
+        assert_eq!(collect(&sss), collect(&dia));
+        assert_eq!(collect(&sss).len(), sss.nnz_middle());
     }
 
     #[test]

@@ -22,7 +22,8 @@
 //! `apply` calls per backend candidate instead of structural proxies),
 //! `--shards W` (service worker pool), `--queue-depth N` (per-shard
 //! backpressure bound), `--max-cached-kernels N` (per-shard
-//! kernel-cache LRU cap, 0 = unbounded).
+//! kernel-cache LRU cap, 0 = unbounded), `--l2-kib K` (cache budget the
+//! tile-blocked band kernels size their row tiles against).
 
 use pars3::coordinator::{Backend, Config, Coordinator, Service};
 use pars3::mpisim::CostModel;
@@ -108,6 +109,9 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(m) = args.flags.get("max-cached-kernels") {
         cfg.max_cached_kernels = m.parse()?;
     }
+    if let Some(l) = args.flags.get("l2-kib") {
+        cfg.l2_kib = l.parse()?;
+    }
     // flag overrides must obey the same invariants the TOML path enforces
     if cfg.shards == 0 {
         anyhow::bail!("--shards must be >= 1");
@@ -117,6 +121,9 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if !(0.0..1.0).contains(&cfg.reorder_min_gain) {
         anyhow::bail!("--reorder-min-gain must be in [0, 1)");
+    }
+    if cfg.l2_kib == 0 {
+        anyhow::bail!("--l2-kib must be >= 1");
     }
     Ok(cfg)
 }
@@ -164,7 +171,7 @@ fn run() -> Result<()> {
                         --format auto|dia|sss --reorder auto|rcm|rcm-bicriteria|natural\n\
                         --reorder-min-gain G --plan auto|pinned --plan-probe N\n\
                         --tol T --iters K --rhs K --artifacts DIR --shards W --queue-depth N\n\
-                        --max-cached-kernels N"
+                        --max-cached-kernels N --l2-kib K"
             );
             Ok(())
         }
@@ -268,6 +275,30 @@ fn cmd_spmv(cfg: Config, args: &Args) -> Result<()> {
     let dt = t0.elapsed().as_secs_f64();
     let norm: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
     println!("backend {backend:?}: ||y|| = {norm:.6e}  ({dt:.6}s incl. plan)");
+    // measured roofline for the executed backend: re-apply on the (now
+    // cached) kernel so build cost doesn't pollute the rate, and use the
+    // kernel's own flops()/bytes() accounting (pjrt has no CPU kernel)
+    if backend != Backend::Pjrt {
+        let mut k = coord.kernel(&prep, backend)?;
+        let mut y2 = vec![0.0; prep.n];
+        let t1 = std::time::Instant::now();
+        k.apply(&x, &mut y2);
+        let roof = pars3::perf::Roofline::from_seconds(
+            t1.elapsed().as_secs_f64(),
+            k.flops(),
+            k.bytes(),
+        );
+        println!("| metric | GF/s | GB/s | peak GB/s | achieved | AI flop/B |");
+        println!("|--------|------|------|-----------|----------|-----------|");
+        println!(
+            "| roofline | {:.3} | {:.3} | {:.2} | {:.1}% | {:.4} |",
+            roof.gflops,
+            roof.gbytes,
+            roof.peak_gbytes,
+            100.0 * roof.achieved_fraction,
+            roof.arithmetic_intensity
+        );
+    }
     // cross-check against serial
     let y0 = coord.spmv(&prep, &x, Backend::Serial)?;
     let err = y.iter().zip(&y0).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);

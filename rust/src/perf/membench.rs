@@ -1,0 +1,77 @@
+//! Measured memory-bandwidth bound: a STREAM-triad microbench
+//! (`a[i] = b[i] + s*c[i]`, McCalpin) over a working set far past L2,
+//! cached once per process.
+//!
+//! This is the roofline's denominator: every achieved-fraction figure
+//! in bench reports, `Pars3Stats`, and plan evidence divides by the
+//! number measured here. Set `PARS3_PEAK_GBS` to pin the bound (CI
+//! smoke runs do, so achieved fractions are deterministic on shared
+//! runners); otherwise the first caller pays one ~tens-of-ms
+//! measurement and every later caller reads the cached value.
+
+use std::sync::OnceLock;
+
+/// Doubles per triad array: 2 Mi × 8 B × 3 arrays = 48 MiB working
+/// set — far beyond any L2/L3 a build runner has, so the measurement
+/// is memory bandwidth, not cache bandwidth.
+pub const TRIAD_LEN: usize = 1 << 21;
+
+/// Measured timed repetitions (after one warmup pass that also faults
+/// the pages in).
+pub const TRIAD_REPS: usize = 3;
+
+static PEAK: OnceLock<f64> = OnceLock::new();
+
+/// The process-wide machine bandwidth bound in GB/s. First call
+/// measures (or reads `PARS3_PEAK_GBS`); later calls are free.
+pub fn peak_gbytes() -> f64 {
+    *PEAK.get_or_init(|| {
+        if let Ok(v) = std::env::var("PARS3_PEAK_GBS") {
+            if let Ok(g) = v.parse::<f64>() {
+                if g > 0.0 {
+                    return g;
+                }
+            }
+        }
+        measure_triad_gbytes(TRIAD_LEN, TRIAD_REPS)
+    })
+}
+
+/// Run the triad over `len`-element arrays for `reps` timed passes and
+/// return GB/s from the fastest pass. Exposed for tests; production
+/// callers want the cached [`peak_gbytes`].
+pub fn measure_triad_gbytes(len: usize, reps: usize) -> f64 {
+    let len = len.max(1);
+    let scalar = 3.0f64;
+    let b = vec![1.0f64; len];
+    let c = vec![2.0f64; len];
+    let mut a = vec![0.0f64; len];
+    let t = super::time_fn(1, reps.max(1), || {
+        for ((ai, bi), ci) in a.iter_mut().zip(&b).zip(&c) {
+            *ai = *bi + scalar * *ci;
+        }
+        std::hint::black_box(&a);
+    });
+    // the triad streams two loads + one store of f64 per element
+    (24 * len) as f64 / t.min / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triad_measures_a_positive_bandwidth() {
+        // tiny arrays so the test is instant; the rate is still > 0
+        let g = measure_triad_gbytes(1 << 12, 2);
+        assert!(g > 0.0 && g.is_finite());
+    }
+
+    #[test]
+    fn peak_is_cached_and_stable() {
+        let a = peak_gbytes();
+        let b = peak_gbytes();
+        assert!(a > 0.0);
+        assert_eq!(a, b, "OnceLock must return the same bound every time");
+    }
+}

@@ -320,6 +320,61 @@ pub fn paper_suite(scale: f64) -> Vec<BenchMatrix> {
     suite
 }
 
+/// Lower edges of a `g×g` 5-point mesh, scrambled (structurally
+/// symmetric; natural bandwidth `g`, which no reordering beats by
+/// much — the RACE case where kernel choice matters more than order).
+pub fn mesh_pattern(g: usize, rng: &mut SmallRng) -> (usize, Vec<(u32, u32)>) {
+    let n = g * g;
+    let mut edges = Vec::new();
+    for r in 0..g {
+        for c in 0..g {
+            let i = (r * g + c) as u32;
+            if c > 0 {
+                edges.push((i, i - 1));
+            }
+            if r > 0 {
+                edges.push((i, i - g as u32));
+            }
+        }
+    }
+    (n, scramble(&edges, n, rng))
+}
+
+/// The four pattern families the planner-honesty and roofline benches
+/// sweep, each `(name, n, lower_edges)`:
+///
+/// * `banded`       — already tightly banded (reordering should decline);
+/// * `scattered`    — scrambled band + long-range edges (reordering wins);
+/// * `disconnected` — disjoint banded blocks, scrambled;
+/// * `symmetric`    — structurally symmetric 2D 5-point mesh.
+pub fn pattern_families(
+    n: usize,
+    rng: &mut SmallRng,
+) -> Vec<(&'static str, usize, Vec<(u32, u32)>)> {
+    let banded = random_banded_pattern(n, 4, 0.5, rng);
+    let mut scattered = banded.clone();
+    add_long_range(&mut scattered, n, 0.05, rng);
+    let scattered = scramble(&scattered, n, rng);
+    let block = n / 3;
+    let mut disconnected = Vec::new();
+    for b in 0..3u32 {
+        let base = b * block as u32;
+        for (i, j) in random_banded_pattern(block, 3, 0.5, rng) {
+            disconnected.push((i + base, j + base));
+        }
+    }
+    let dn = 3 * block;
+    let disconnected = scramble(&disconnected, dn, rng);
+    let g = (n as f64).sqrt() as usize;
+    let (mn, mesh) = mesh_pattern(g.max(6), rng);
+    vec![
+        ("banded", n, banded),
+        ("scattered", n, scattered),
+        ("disconnected", dn, disconnected),
+        ("symmetric", mn, mesh),
+    ]
+}
+
 /// Convenience: a small, fully deterministic test matrix (shifted skew).
 pub fn small_test_matrix(n: usize, seed: u64, alpha: f64) -> crate::sparse::Coo {
     let mut rng = SmallRng::seed_from_u64(seed);
@@ -373,6 +428,22 @@ mod tests {
         for m in &suite {
             assert!(m.n > 0 && !m.lower_edges.is_empty(), "{} empty", m.name);
             assert!(m.lower_edges.iter().all(|&(i, j)| i > j && (i as usize) < m.n));
+        }
+    }
+
+    #[test]
+    fn pattern_families_are_well_formed() {
+        let mut rng = SmallRng::seed_from_u64(11);
+        let fams = pattern_families(120, &mut rng);
+        assert_eq!(fams.len(), 4);
+        let names: Vec<_> = fams.iter().map(|(f, ..)| *f).collect();
+        assert_eq!(names, ["banded", "scattered", "disconnected", "symmetric"]);
+        for (f, n, edges) in &fams {
+            assert!(*n > 0 && !edges.is_empty(), "{f} empty");
+            assert!(
+                edges.iter().all(|&(i, j)| i > j && (i as usize) < *n),
+                "{f} malformed edges"
+            );
         }
     }
 

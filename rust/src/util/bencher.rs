@@ -5,18 +5,34 @@
 //! `<group>.md` and a machine-readable `<group>.json` (via
 //! [`crate::util::json`]) so per-PR speedup trajectories can be
 //! tracked by tooling instead of by eyeballing markdown diffs.
+//!
+//! Runs measured with [`Bencher::bench_rated`] additionally carry the
+//! work they performed (`flops`/`bytes` per call, from the kernel's own
+//! accounting) and are reported as [`Roofline`] points — GF/s, GB/s,
+//! and the fraction of the measured STREAM-triad bandwidth achieved —
+//! in both report files. All throughput math goes through
+//! [`crate::perf`]; benches never divide by time themselves.
 
-use crate::perf::{time_fn, Timing};
+use crate::perf::{self, membench, time_fn, Roofline, Timing};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::PathBuf;
 
+/// One recorded measurement: rated runs remember their per-call work
+/// so the report stage can derive rates and roofline points.
+struct Measurement {
+    name: String,
+    t: Timing,
+    /// `(flops, bytes)` per call for rated runs.
+    work: Option<(u64, u64)>,
+}
+
 /// A named group of measurements, rendered like criterion output.
 pub struct Bencher {
     group: String,
     lines: Vec<String>,
-    measurements: Vec<(String, Timing)>,
+    measurements: Vec<Measurement>,
     report: String,
 }
 
@@ -44,8 +60,44 @@ impl Bencher {
         );
         println!("{line}");
         self.lines.push(line);
-        self.measurements.push((name.to_string(), t));
+        self.measurements.push(Measurement { name: name.to_string(), t, work: None });
         t
+    }
+
+    /// Time `f` like [`Self::bench`] and rate it against the machine's
+    /// memory roofline: `flops`/`bytes` are the work one call performs
+    /// (the kernel's own `flops()`/`bytes()` accounting). Records both
+    /// the min- and median-based rates; the returned [`Roofline`] point
+    /// is min-based (best observed = least noise).
+    pub fn bench_rated<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        reps: usize,
+        flops: u64,
+        bytes: u64,
+        f: F,
+    ) -> (Timing, Roofline) {
+        let t = time_fn(warmup, reps, f);
+        let tp = perf::throughput(t, flops, bytes);
+        let roof = Roofline::from_seconds(t.min, flops, bytes);
+        let line = format!(
+            "{}/{name:<40} time: [min {} median {}]  \
+             rate: [median {:.3} GF/s]  {}",
+            self.group,
+            fmt_t(t.min),
+            fmt_t(t.median),
+            tp.gflops_median,
+            roof.summary()
+        );
+        println!("{line}");
+        self.lines.push(line);
+        self.measurements.push(Measurement {
+            name: name.to_string(),
+            t,
+            work: Some((flops, bytes)),
+        });
+        (t, roof)
     }
 
     /// Attach a pre-rendered markdown section to the report file.
@@ -56,30 +108,92 @@ impl Bencher {
     }
 
     /// The machine-readable report document (what `finish` writes to
-    /// `<group>.json`): `{group, runs: [{name, min_s, median_s,
-    /// mean_s, reps}]}`.
+    /// `<group>.json`): `{group, runs: [{name, min_s, median_s, mean_s,
+    /// reps, ...}]}`. Rated runs add `gflops`/`gbytes` (min-based),
+    /// `gflops_median`/`gbytes_median`, `achieved_fraction` and
+    /// `arithmetic_intensity`; the document then also carries the
+    /// shared `peak_gbytes` triad figure they were rated against.
     pub fn to_json(&self) -> Json {
+        let mut any_rated = false;
         let runs: Vec<Json> = self
             .measurements
             .iter()
-            .map(|(name, t)| {
+            .map(|mm| {
+                let t = mm.t;
                 let mut m = BTreeMap::new();
-                m.insert("name".to_string(), Json::Str(name.clone()));
+                m.insert("name".to_string(), Json::Str(mm.name.clone()));
                 m.insert("min_s".to_string(), Json::Num(t.min));
                 m.insert("median_s".to_string(), Json::Num(t.median));
                 m.insert("mean_s".to_string(), Json::Num(t.mean));
                 m.insert("reps".to_string(), Json::Num(t.reps as f64));
+                if let Some((flops, bytes)) = mm.work {
+                    any_rated = true;
+                    let tp = perf::throughput(t, flops, bytes);
+                    let roof = Roofline::from_seconds(t.min, flops, bytes);
+                    m.insert("gflops".to_string(), Json::Num(tp.gflops));
+                    m.insert("gbytes".to_string(), Json::Num(tp.gbytes));
+                    m.insert("gflops_median".to_string(), Json::Num(tp.gflops_median));
+                    m.insert("gbytes_median".to_string(), Json::Num(tp.gbytes_median));
+                    m.insert(
+                        "achieved_fraction".to_string(),
+                        Json::Num(roof.achieved_fraction),
+                    );
+                    m.insert(
+                        "arithmetic_intensity".to_string(),
+                        Json::Num(roof.arithmetic_intensity),
+                    );
+                }
                 Json::Obj(m)
             })
             .collect();
         let mut doc = BTreeMap::new();
         doc.insert("group".to_string(), Json::Str(self.group.clone()));
         doc.insert("runs".to_string(), Json::Arr(runs));
+        if any_rated {
+            doc.insert("peak_gbytes".to_string(), Json::Num(membench::peak_gbytes()));
+        }
         Json::Obj(doc)
     }
 
-    /// Write `target/bench_reports/<group>.md` (timings + sections) and
-    /// `target/bench_reports/<group>.json` (machine-readable runs).
+    /// Markdown roofline table covering every rated run (empty string
+    /// when nothing was rated).
+    fn roofline_md(&self) -> String {
+        let rated: Vec<&Measurement> =
+            self.measurements.iter().filter(|m| m.work.is_some()).collect();
+        if rated.is_empty() {
+            return String::new();
+        }
+        let mut md = String::from(
+            "## roofline\n\n\
+             | run | GF/s | GB/s | median GF/s | achieved | AI flop/B |\n\
+             |-----|------|------|-------------|----------|-----------|\n",
+        );
+        for mm in rated {
+            let (flops, bytes) = mm.work.expect("filtered on work");
+            let tp = perf::throughput(mm.t, flops, bytes);
+            let roof = Roofline::from_seconds(mm.t.min, flops, bytes);
+            let _ = writeln!(
+                md,
+                "| {} | {:.3} | {:.3} | {:.3} | {:.1}% | {:.4} |",
+                mm.name,
+                roof.gflops,
+                roof.gbytes,
+                tp.gflops_median,
+                100.0 * roof.achieved_fraction,
+                roof.arithmetic_intensity
+            );
+        }
+        let _ = writeln!(
+            md,
+            "\npeak bandwidth (STREAM triad, cached per process): {:.2} GB/s\n",
+            membench::peak_gbytes()
+        );
+        md
+    }
+
+    /// Write `target/bench_reports/<group>.md` (timings + roofline
+    /// table + sections) and `target/bench_reports/<group>.json`
+    /// (machine-readable runs).
     pub fn finish(self) {
         let dir = PathBuf::from("target/bench_reports");
         let _ = std::fs::create_dir_all(&dir);
@@ -88,6 +202,7 @@ impl Bencher {
             let _ = writeln!(out, "{l}");
         }
         out.push_str("```\n\n");
+        out.push_str(&self.roofline_md());
         out.push_str(&self.report);
         let path = dir.join(format!("{}.md", self.group));
         if std::fs::write(&path, out).is_ok() {
@@ -138,5 +253,38 @@ mod tests {
         assert_eq!(runs[0].req("name").unwrap().as_str().unwrap(), "first/run");
         assert_eq!(runs[0].req("reps").unwrap().as_usize().unwrap(), 2);
         assert!(runs[1].req("min_s").unwrap().as_f64().unwrap() >= 0.0);
+        // un-rated groups carry no roofline surface
+        assert!(parsed.req("peak_gbytes").is_err());
+    }
+
+    #[test]
+    fn rated_runs_carry_roofline_fields_in_json_and_md() {
+        let mut b = Bencher::new("selftest_rated");
+        let v: Vec<f64> = (0..4096).map(|i| i as f64).collect();
+        let (t, roof) = b.bench_rated("axpy-ish", 1, 3, 2 * 4096, 8 * 4096, || {
+            std::hint::black_box(v.iter().sum::<f64>());
+        });
+        assert!(t.min > 0.0);
+        assert!(roof.gflops > 0.0 && roof.gbytes > 0.0 && roof.peak_gbytes > 0.0);
+        let parsed = Json::parse(&b.to_json().dump()).unwrap();
+        assert!(parsed.req("peak_gbytes").unwrap().as_f64().unwrap() > 0.0);
+        let run = &parsed.req("runs").unwrap().as_arr().unwrap()[0];
+        for field in [
+            "gflops",
+            "gbytes",
+            "gflops_median",
+            "gbytes_median",
+            "achieved_fraction",
+            "arithmetic_intensity",
+        ] {
+            assert!(run.req(field).unwrap().as_f64().unwrap() >= 0.0, "{field}");
+        }
+        // min-based rate can't be slower than the median-based one
+        let min_rate = run.req("gflops").unwrap().as_f64().unwrap();
+        let med_rate = run.req("gflops_median").unwrap().as_f64().unwrap();
+        assert!(min_rate >= med_rate);
+        let md = b.roofline_md();
+        assert!(md.contains("## roofline") && md.contains("axpy-ish"));
+        assert!(md.contains("STREAM triad"));
     }
 }

@@ -434,6 +434,70 @@ fn prop_dia_format_matches_sss_for_every_kernel() {
 }
 
 #[test]
+fn prop_blocked_and_lane_variants_match_scalar_for_every_kernel() {
+    // cache blocking and lane unrolling are execution details: for ANY
+    // banded skew or symmetric matrix, every registered kernel must
+    // reproduce the plain scalar reference (`sss_spmv`, column by
+    // column) under a tiny tile budget (many tiles), the default one,
+    // and a huge one (a single tile spanning the matrix), at k = 1 and
+    // at k = 8.
+    use pars3::kernel::registry::{build_from_sss, KernelConfig};
+    use pars3::kernel::{Spmv, VecBatch, DEFAULT_L2_KIB, KERNEL_NAMES};
+    for_all("blocked/lane == scalar for every kernel", 4, |rng| {
+        for skew in [true, false] {
+            let s =
+                Arc::new(if skew { random_banded(rng) } else { random_banded_symmetric(rng) });
+            let n = s.n;
+            let kw = 8usize;
+            let threads = 1 + rng.gen_range_usize(0, 8);
+            let outer_bw = 1 + rng.gen_range_usize(0, 4);
+            let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect();
+            let xs = VecBatch::from_fn(n, kw, |_, _| rng.gen_range_f64(-2.0, 2.0));
+            // scalar reference, per column
+            let mut want1 = vec![0.0; n];
+            sss_spmv(&s, &x, &mut want1);
+            let mut want_b = VecBatch::zeros(n, kw);
+            for c in 0..kw {
+                let mut col = vec![0.0; n];
+                sss_spmv(&s, xs.col(c), &mut col);
+                want_b.col_mut(c).copy_from_slice(&col);
+            }
+            for l2_kib in [1usize, DEFAULT_L2_KIB, 1 << 20] {
+                for &name in KERNEL_NAMES {
+                    let cfg = KernelConfig {
+                        threads,
+                        outer_bw,
+                        threaded: false,
+                        l2_kib,
+                        ..KernelConfig::default()
+                    };
+                    let mut k = build_from_sss(name, s.clone(), &cfg).unwrap();
+                    let mut y = vec![0.0; n];
+                    k.apply(&x, &mut y);
+                    for (r, (a, b)) in y.iter().zip(&want1).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-12,
+                            "{name} skew={skew} l2={l2_kib} row {r}: {a} vs {b} (n={n})"
+                        );
+                    }
+                    k.prepare_hint(kw);
+                    let mut ys = VecBatch::zeros(n, kw);
+                    k.apply_batch(&xs, &mut ys);
+                    for c in 0..kw {
+                        for (r, (a, b)) in ys.col(c).iter().zip(want_b.col(c)).enumerate() {
+                            assert!(
+                                (a - b).abs() < 1e-12,
+                                "{name} skew={skew} l2={l2_kib} col {c} row {r} (n={n})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_pars3_batch_modes_agree_and_fuse_halos() {
     use pars3::kernel::pars3::{Pars3Plan, Pars3Threaded};
     use pars3::kernel::VecBatch;
