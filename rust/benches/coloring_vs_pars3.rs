@@ -1,17 +1,32 @@
 //! Bench: **§4.1 comparison (X1)** — PARS3 vs the graph-coloring
 //! conflict-free SSpMV [3]: modeled speedups at every rank count plus
-//! real single-core executor timings and coloring statistics.
+//! real single-core executor timings, coloring statistics, and the
+//! three-way greedy / RACE / PARS3 sweep over the banded, scattered,
+//! and small-world pattern families (the matrices where each strategy
+//! is supposed to win).
+//!
+//! `PARS3_BENCH_SCALE` (float) overrides the sweep problem size — the
+//! CI smoke job runs this bench tiny to keep it from bit-rotting.
 
 use pars3::coordinator::Config;
 use pars3::graph::coloring::color_rows;
-use pars3::kernel::registry::{build_from_split, build_from_sss, KernelConfig};
+use pars3::graph::reorder::ReorderPolicy;
+use pars3::kernel::race::RaceStructure;
+use pars3::kernel::registry::{self, build_from_split, build_from_sss, KernelConfig};
 use pars3::kernel::Spmv;
 use pars3::mpisim::CostModel;
 use pars3::report::{self, md_table};
+use pars3::sparse::{gen, skew};
 use pars3::util::bencher::Bencher;
+use pars3::util::SmallRng;
+use std::sync::Arc;
 
 fn main() {
     let cfg = Config::default();
+    let mut scale = 1.0f64;
+    if let Ok(s) = std::env::var("PARS3_BENCH_SCALE") {
+        scale = s.parse().expect("PARS3_BENCH_SCALE must be a float");
+    }
     let suite = report::prepared_suite(&cfg).expect("suite");
     let mut b = Bencher::new("coloring_vs_pars3");
 
@@ -58,6 +73,63 @@ fn main() {
             });
         }
     }
+
+    // three-way sweep: greedy coloring vs RACE vs PARS3 on the three
+    // families where the contest is interesting — banded (PARS3's
+    // home turf), scattered (reordering declines) and small-world
+    // (RACE's target). All kernels constructed by name through the
+    // registry; phase counts come from the same structures the kernels
+    // execute.
+    let sweep_n = ((1200.0 * scale) as usize).max(96);
+    let mut rng = SmallRng::seed_from_u64(23);
+    let mut rows3 = Vec::new();
+    for (family, n, edges) in gen::pattern_families(sweep_n, &mut rng) {
+        if !matches!(family, "banded" | "scattered" | "small_world") {
+            continue;
+        }
+        let coo = skew::coo_from_pattern(n, &edges, 2.0, &mut rng);
+        let (_, sss, _) =
+            registry::reorder_to_sss(&coo, ReorderPolicy::Auto, cfg.reorder_min_gain)
+                .expect("reorder");
+        let sss = Arc::new(sss);
+        let colors = color_rows(&sss).num_colors;
+        let st = RaceStructure::build(&sss, 4);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).sin()).collect();
+        let mut y = vec![0.0; n];
+        let kcfg =
+            KernelConfig { threads: 4, outer_bw: cfg.outer_bw, ..KernelConfig::default() };
+        let mut times = Vec::new();
+        for name in ["coloring", "race", "pars3"] {
+            let mut k = build_from_sss(name, sss.clone(), &kcfg).expect(name);
+            let t = b.bench(&format!("three-way/{family}/{name}"), 2, 5, || {
+                k.apply(&x, &mut y);
+                std::hint::black_box(&y);
+            });
+            times.push(t.min);
+        }
+        rows3.push(vec![
+            family.to_string(),
+            n.to_string(),
+            colors.to_string(),
+            st.phases().to_string(),
+            st.depth.to_string(),
+            format!("{:.3e}", times[0]),
+            format!("{:.3e}", times[1]),
+            format!("{:.3e}", times[2]),
+        ]);
+    }
+    b.section(&format!(
+        "## Three-way sweep: greedy coloring vs RACE vs PARS3 (emulated, p=4)\n\n{}\n\n\
+         Greedy pays one barrier per color; RACE pays one per parity \
+         phase (at most 2) and keeps level order for locality.\n",
+        md_table(
+            &[
+                "pattern", "n", "greedy colors", "race phases", "race depth", "coloring s",
+                "race s", "pars3 s",
+            ],
+            &rows3
+        )
+    ));
 
     b.section(&report::coloring_compare(&suite, &cfg.ranks, &model));
     b.finish();

@@ -11,8 +11,10 @@
 //! * `banded`       — already tightly banded (reordering should decline);
 //! * `scattered`    — scrambled band + long-range edges (reordering wins);
 //! * `disconnected` — disjoint banded blocks, scrambled;
-//! * `symmetric`    — structurally symmetric 2D 5-point mesh (the RACE
-//!                    case: bandwidth stays wide, kernel choice matters).
+//! * `symmetric`    — structurally symmetric 2D 5-point mesh (bandwidth
+//!                    stays wide, kernel choice matters);
+//! * `small_world`  — ring + random long-range rewires (the RACE case:
+//!                    no banding exists, the level schedule should win).
 //!
 //! `PARS3_BENCH_SCALE` (float) overrides the problem size — the CI
 //! smoke job runs this bench tiny to keep it from bit-rotting.
@@ -48,6 +50,7 @@ fn main() {
         Backend::Csr,
         Backend::Dgbmv,
         Backend::Coloring { p },
+        Backend::Race { p },
         Backend::Pars3 { p },
     ];
 

@@ -48,6 +48,11 @@ pub enum Backend {
         /// Rank count.
         p: usize,
     },
+    /// RACE-style recursive level-coloring kernel at `p` ranks.
+    Race {
+        /// Rank count.
+        p: usize,
+    },
     /// PARS3 parallel kernel at a given rank count.
     Pars3 {
         /// Rank count.
@@ -66,6 +71,7 @@ impl Backend {
             Backend::Csr => Some("csr"),
             Backend::Dgbmv => Some("dgbmv"),
             Backend::Coloring { .. } => Some("coloring"),
+            Backend::Race { .. } => Some("race"),
             Backend::Pars3 { .. } => Some("pars3"),
             Backend::Pjrt => None,
         }
@@ -218,7 +224,7 @@ impl Coordinator {
             });
         };
         let threads = match backend {
-            Backend::Pars3 { p } | Backend::Coloring { p } => p,
+            Backend::Pars3 { p } | Backend::Coloring { p } | Backend::Race { p } => p,
             _ => 1,
         };
         let cfg = KernelConfig {
@@ -647,9 +653,13 @@ mod tests {
         let prep = c.prepare("t", &coo).unwrap();
         let x: Vec<f64> = (0..200).map(|i| (i as f64 * 0.21).sin()).collect();
         let y0 = c.spmv(&prep, &x, Backend::Serial).unwrap();
-        for backend in
-            [Backend::Csr, Backend::Dgbmv, Backend::Coloring { p: 3 }, Backend::Pars3 { p: 4 }]
-        {
+        for backend in [
+            Backend::Csr,
+            Backend::Dgbmv,
+            Backend::Coloring { p: 3 },
+            Backend::Race { p: 3 },
+            Backend::Pars3 { p: 4 },
+        ] {
             let y1 = c.spmv(&prep, &x, backend).unwrap();
             for (a, b) in y0.iter().zip(&y1) {
                 assert!((a - b).abs() < 1e-10, "{backend:?}");
@@ -878,6 +888,7 @@ mod tests {
         assert_eq!(Backend::Csr.kernel_name(), Some("csr"));
         assert_eq!(Backend::Dgbmv.kernel_name(), Some("dgbmv"));
         assert_eq!(Backend::Coloring { p: 2 }.kernel_name(), Some("coloring"));
+        assert_eq!(Backend::Race { p: 2 }.kernel_name(), Some("race"));
         assert_eq!(Backend::Pars3 { p: 4 }.kernel_name(), Some("pars3"));
         assert_eq!(Backend::Pjrt.kernel_name(), None);
         // every registry kernel is reachable from a Backend, and every
@@ -887,6 +898,7 @@ mod tests {
             Backend::Csr,
             Backend::Dgbmv,
             Backend::Coloring { p: 2 },
+            Backend::Race { p: 2 },
             Backend::Pars3 { p: 2 },
         ];
         let names: Vec<_> = native.iter().filter_map(Backend::kernel_name).collect();

@@ -48,6 +48,7 @@ use crate::graph::reorder::{
 };
 use crate::graph::Adjacency;
 use crate::kernel::dia::{DiaBand, FormatPolicy};
+use crate::kernel::race::RaceStructure;
 use crate::kernel::registry::{self, KernelConfig};
 use crate::kernel::split3::Split3;
 use crate::perf::Roofline;
@@ -114,6 +115,8 @@ pub enum BackendPolicy {
     Dgbmv,
     /// Pin the graph-coloring phased kernel.
     Coloring,
+    /// Pin the RACE-style recursive level-coloring kernel.
+    Race,
     /// Pin the PARS3 3-way split kernel.
     Pars3,
     /// Pin the PJRT accelerator path (outside the registry; never part
@@ -130,6 +133,7 @@ impl BackendPolicy {
             BackendPolicy::Csr => "csr",
             BackendPolicy::Dgbmv => "dgbmv",
             BackendPolicy::Coloring => "coloring",
+            BackendPolicy::Race => "race",
             BackendPolicy::Pars3 => "pars3",
             BackendPolicy::Pjrt => "pjrt",
         }
@@ -144,6 +148,7 @@ impl BackendPolicy {
             BackendPolicy::Csr => Some(Backend::Csr),
             BackendPolicy::Dgbmv => Some(Backend::Dgbmv),
             BackendPolicy::Coloring => Some(Backend::Coloring { p }),
+            BackendPolicy::Race => Some(Backend::Race { p }),
             BackendPolicy::Pars3 => Some(Backend::Pars3 { p }),
             BackendPolicy::Pjrt => Some(Backend::Pjrt),
         }
@@ -166,10 +171,12 @@ impl std::str::FromStr for BackendPolicy {
             "csr" => BackendPolicy::Csr,
             "dgbmv" => BackendPolicy::Dgbmv,
             "coloring" => BackendPolicy::Coloring,
+            "race" => BackendPolicy::Race,
             "pars3" => BackendPolicy::Pars3,
             "pjrt" => BackendPolicy::Pjrt,
             other => anyhow::bail!(
-                "unknown backend '{other}' (expected auto|serial|csr|dgbmv|coloring|pars3|pjrt)"
+                "unknown backend '{other}' \
+                 (expected auto|serial|csr|dgbmv|coloring|race|pars3|pjrt)"
             ),
         })
     }
@@ -183,6 +190,7 @@ pub fn backend_label(b: Backend) -> String {
         Backend::Csr => "csr".to_string(),
         Backend::Dgbmv => "dgbmv".to_string(),
         Backend::Coloring { p } => format!("coloring(p={p})"),
+        Backend::Race { p } => format!("race(p={p})"),
         Backend::Pars3 { p } => format!("pars3(p={p})"),
         Backend::Pjrt => "pjrt".to_string(),
     }
@@ -678,11 +686,21 @@ fn scored_format_axis(split: &Split3) -> (FormatPolicy, AxisReport) {
     )
 }
 
+/// Byte-equivalent charge for one phase barrier in the structural
+/// backend proxy: a synchronization point costs roughly what streaming
+/// a couple of KiB does, so a backend needing `k` barriers per apply
+/// pays `k` of these on top of its traffic estimate. This is what
+/// separates RACE's fixed 2-phase schedule from greedy coloring's
+/// one-barrier-per-color ladder.
+const BARRIER_COST_BYTES: f64 = 2048.0;
+
 /// Structural proxy for one backend: estimated bytes streamed per
 /// `apply`, with the parallel kernels credited for splitting the
 /// matrix across `p` ranks and PARS3 charged for its halo exchange
 /// plus the worst rank's share of [`Split3::row_work`] (load balance —
-/// an even row split only helps if the work is evenly banded).
+/// an even row split only helps if the work is evenly banded). Phased
+/// kernels additionally pay [`BARRIER_COST_BYTES`] per barrier: the
+/// greedy coloring one per color, RACE one per parity phase (≤ 2).
 fn structural_backend_score(b: Backend, sss: &Sss, split: &Split3, p: usize) -> f64 {
     let n = sss.n as f64;
     let nnz = sss.nnz_lower() as f64;
@@ -695,8 +713,22 @@ fn structural_backend_score(b: Backend, sss: &Sss, split: &Split3, p: usize) -> 
         // Dense band: (bw+1) stored diagonals regardless of fill.
         Backend::Dgbmv => 8.0 * n * (bw + 1.0) + 16.0 * n,
         // Coloring re-streams x across phase barriers: charge the full
-        // both-triangle traffic, split across ranks.
-        Backend::Coloring { .. } => 24.0 * nnz / pf + 16.0 * n,
+        // both-triangle traffic split across ranks, plus one barrier
+        // per color class.
+        Backend::Coloring { .. } => {
+            let colors = crate::graph::coloring::color_rows(sss).num_colors as f64;
+            24.0 * nnz / pf + 16.0 * n + colors * BARRIER_COST_BYTES
+        }
+        // RACE streams the stored triangle once in level order (the
+        // level-induced locality keeps x resident), scaled by the
+        // schedule's measured load balance, plus its ≤ 2 parity
+        // barriers.
+        Backend::Race { .. } => {
+            let st = RaceStructure::build(sss, p);
+            12.0 * nnz * st.overall_balance() / pf
+                + 16.0 * n / pf
+                + st.phases() as f64 * BARRIER_COST_BYTES
+        }
         // PARS3: the slowest rank's middle share, plus per-rank halo
         // windows of one bandwidth, plus its slice of the vectors.
         Backend::Pars3 { .. } => {
@@ -746,6 +778,7 @@ fn scored_backend_axis(
         Backend::Csr,
         Backend::Dgbmv,
         Backend::Coloring { p },
+        Backend::Race { p },
         Backend::Pars3 { p },
     ];
     let mut cands: Vec<(Backend, PlanCandidate, Option<Roofline>)> =
@@ -938,8 +971,51 @@ mod tests {
     }
 
     #[test]
+    fn race_is_a_scored_candidate_and_beats_greedy_coloring() {
+        let coo = gen::small_test_matrix(150, 13, 2.0);
+        let planned = Planner::plan(&coo, &constraints()).unwrap();
+        let be = planned.report.axis("backend").unwrap();
+        let race = be
+            .candidates
+            .iter()
+            .find(|c| c.name.starts_with("race"))
+            .expect("race must be in the planner's backend candidate list");
+        assert!(race.score.is_finite(), "race score: {}", race.score);
+        // the 2-phase schedule structurally dominates the greedy
+        // one-barrier-per-color baseline on every matrix
+        let coloring = be.candidates.iter().find(|c| c.name.starts_with("coloring")).unwrap();
+        assert!(
+            race.score < coloring.score,
+            "race {} vs coloring {}",
+            race.score,
+            coloring.score
+        );
+    }
+
+    #[test]
+    fn planner_auto_chooses_race_on_a_small_world_matrix() {
+        use crate::sparse::skew;
+        use crate::util::SmallRng;
+        // ring + 40% long-range rewires: RCM cannot band this, so the
+        // pars3 halo term blows up while RACE's level schedule stays
+        // two phases — the planner must pick race on structural scores
+        let mut rng = SmallRng::seed_from_u64(42);
+        let edges = gen::small_world(400, 3, 0.4, &mut rng);
+        let coo = skew::coo_from_pattern(400, &edges, 1.5, &mut rng);
+        let planned = Planner::plan(&coo, &constraints()).unwrap();
+        assert!(
+            matches!(planned.choice.backend, Backend::Race { .. }),
+            "expected race, planner chose {}",
+            backend_label(planned.choice.backend)
+        );
+        let be = planned.report.axis("backend").unwrap();
+        let chosen = be.candidates.iter().find(|c| c.chosen).unwrap();
+        assert!(chosen.name.starts_with("race") && chosen.score.is_finite());
+    }
+
+    #[test]
     fn backend_and_plan_policies_roundtrip_their_spellings() {
-        for s in ["auto", "serial", "csr", "dgbmv", "coloring", "pars3", "pjrt"] {
+        for s in ["auto", "serial", "csr", "dgbmv", "coloring", "race", "pars3", "pjrt"] {
             let p: BackendPolicy = s.parse().unwrap();
             assert_eq!(p.to_string(), s);
         }

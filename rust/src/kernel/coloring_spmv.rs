@@ -9,6 +9,8 @@
 
 use crate::graph::coloring::{color_rows, RowColoring};
 use crate::kernel::batch::VecBatch;
+use crate::kernel::dia::FormatPolicy;
+use crate::kernel::split3::Split3;
 use crate::mpisim::{Window, World};
 use crate::sparse::Sss;
 use crate::Result;
@@ -25,22 +27,46 @@ pub struct ColoringPlan {
     /// Rank count.
     pub p: usize,
     /// `assign[color][rank]` = rows of that class owned by the rank
-    /// (round-robin within the class).
+    /// (work-weighted: each class is partitioned by
+    /// [`Split3::row_work`], heaviest rows placed first on the
+    /// least-loaded rank, so a phase's barrier waits on the *work*
+    /// stragglers, not the row-count ones).
     pub assign: Vec<Vec<Vec<u32>>>,
 }
 
 impl ColoringPlan {
-    /// Color the matrix and distribute each class round-robin over `p`.
-    /// Accepts an owned or already-shared matrix (no clone either way).
+    /// Color the matrix and distribute each class over `p` ranks by
+    /// row work (LPT greedy: rows sorted heaviest-first, each placed on
+    /// the currently least-loaded rank — per class, since every class
+    /// ends at its own barrier). Accepts an owned or already-shared
+    /// matrix (no clone either way).
     pub fn new(s: impl Into<Arc<Sss>>, p: usize) -> Result<Self> {
         let s: Arc<Sss> = s.into();
         ensure!(p >= 1, "need at least one rank");
         let coloring = color_rows(&s);
+        // DIA-aware per-row work when the band splits cleanly;
+        // otherwise the raw SSS row cost (diagonal + 2 updates/entry).
+        let work: Vec<usize> = match Split3::with_outer_bw_format(&s, 3, FormatPolicy::Auto) {
+            Ok(split) => split.row_work(),
+            Err(_) => {
+                (0..s.n).map(|i| 1 + 2 * (s.row_ptr[i + 1] - s.row_ptr[i])).collect()
+            }
+        };
         let mut assign = Vec::with_capacity(coloring.num_colors);
         for class in &coloring.classes {
+            let mut rows = class.clone();
+            rows.sort_by_key(|&r| std::cmp::Reverse(work[r as usize]));
             let mut per_rank = vec![Vec::new(); p];
-            for (pos, &row) in class.iter().enumerate() {
-                per_rank[pos % p].push(row);
+            let mut loads = vec![0usize; p];
+            for &row in &rows {
+                let rank = loads
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &w)| w)
+                    .map(|(i, _)| i)
+                    .expect("p >= 1");
+                per_rank[rank].push(row);
+                loads[rank] += work[row as usize];
             }
             assign.push(per_rank);
         }
@@ -319,6 +345,43 @@ mod tests {
                         "threaded={threaded} col {c} row {r}: {a} vs {b}"
                     );
                 }
+            }
+        }
+    }
+
+    /// Each color class must be split by row *work*, not row count:
+    /// the LPT greedy guarantees the heaviest rank stays within one
+    /// row of the ideal per-rank share, phase by phase.
+    #[test]
+    fn class_partition_balances_row_work() {
+        let s = banded(160, 7);
+        // the same metric ColoringPlan::new partitions by
+        let work: Vec<usize> = match Split3::with_outer_bw_format(&s, 3, FormatPolicy::Auto) {
+            Ok(split) => split.row_work(),
+            Err(_) => {
+                (0..s.n).map(|i| 1 + 2 * (s.row_ptr[i + 1] - s.row_ptr[i])).collect()
+            }
+        };
+        for p in [2, 4, 8] {
+            let plan = ColoringPlan::new(s.clone(), p).unwrap();
+            for (color, per_rank) in plan.assign.iter().enumerate() {
+                let loads: Vec<usize> = per_rank
+                    .iter()
+                    .map(|rows| rows.iter().map(|&r| work[r as usize]).sum())
+                    .collect();
+                let total: usize = loads.iter().sum();
+                let max = loads.iter().copied().max().unwrap();
+                let max_row = plan.assign[color]
+                    .iter()
+                    .flatten()
+                    .map(|&r| work[r as usize])
+                    .max()
+                    .unwrap_or(0);
+                assert!(
+                    max <= total.div_ceil(p) + max_row,
+                    "color {color} p={p}: max load {max}, ideal {}, max row {max_row}",
+                    total.div_ceil(p)
+                );
             }
         }
     }

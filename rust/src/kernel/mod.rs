@@ -12,6 +12,7 @@ pub mod csr_spmv;
 pub mod dgbmv;
 pub mod dia;
 pub mod pars3;
+pub mod race;
 pub mod registry;
 pub mod serial_sss;
 pub mod split3;

@@ -93,6 +93,16 @@ pub struct Pars3Stats {
     /// [`Pars3Kernel`] (`None` for plan-level executions that did not
     /// go through the kernel adapter).
     pub roofline: Option<Roofline>,
+    /// Parity phases the `race` backend executed per apply (0 for
+    /// every other kernel; at most 2 — see [`crate::kernel::race`]).
+    pub race_phases: usize,
+    /// Recursion depth of the `race` level grouping (0 for every other
+    /// kernel).
+    pub race_depth: usize,
+    /// Per-phase row-work balance of the `race` schedule
+    /// (`max_rank_work * p / phase_total`, 1.0 = perfect; empty for
+    /// every other kernel).
+    pub race_phase_balance: Vec<f64>,
 }
 
 /// The preprocessed parallel kernel.

@@ -1,0 +1,862 @@
+//! RACE-style recursive level-coloring SSpMV (Alappat et al. [RACE]).
+//!
+//! The strongest published competitor to banded preprocessing on
+//! scattered matrices: instead of coloring individual rows (the greedy
+//! distance-2 baseline in [`crate::kernel::coloring_spmv`], which needs
+//! one barrier *per color* and streams `x` in cache-hostile order),
+//! build a BFS **level structure** and group consecutive levels so that
+//!
+//! * rows in the same group stay in level order (the level-induced
+//!   reordering — consecutive levels reference each other, so a group
+//!   is a cache-friendly working set);
+//! * groups alternate between an **even** and an **odd** parity phase.
+//!   Every group spans >= 2 levels, so two same-parity groups are
+//!   separated by >= 2 whole levels. The SSS row kernel writes
+//!   `{i} ∪ cols(i)`, and stored edges connect rows whose BFS levels
+//!   differ by at most 1, hence a row's writes land within one level of
+//!   its own — two rows >= 3 levels apart can never touch the same
+//!   output index, even through a shared neighbour (the distance-2
+//!   conflict). Same-parity groups therefore have **disjoint write
+//!   sets** and run fully parallel; one barrier ends each parity phase,
+//!   for at most **2 barriers per multiply** regardless of the matrix.
+//!
+//! Recursion supplies the parallelism the raw level count cannot: a
+//! group whose row work exceeds the per-thread balance target is split
+//! at its most work-balanced level boundary (both halves keep >= 2
+//! levels), repeatedly — the recursion depth is the number of rounds.
+//! A group that is still oversized once it is down to < 4 levels cannot
+//! be split by levels any further; its level-ordered rows are then
+//! chunked across ranks at the balance target. Cross-chunk writes
+//! inside one such group may collide; the executors accumulate through
+//! the atomic [`Window`] (exactly like the coloring baseline), so the
+//! relaxation is numerically safe — full RACE would recurse with
+//! sub-level BFS structures here, which is future refinement, not a
+//! correctness gap.
+//!
+//! Execution modes mirror `coloring_spmv.rs`: deterministic emulated
+//! scalar/batch paths, plus threaded scalar/batch paths on a
+//! **persistent** `mpisim` world ([`RaceThreaded`], matching
+//! [`crate::kernel::pars3::Pars3Threaded`]) so repeated multiplies pay
+//! thread-spawn cost zero times.
+
+use crate::graph::bfs::components;
+use crate::graph::peripheral::pseudo_peripheral_ls;
+use crate::graph::Adjacency;
+use crate::kernel::batch::VecBatch;
+use crate::kernel::pars3::Pars3Stats;
+use crate::mpisim::{InputSlot, PersistentWorld, RankCtx, RankReport, Window, World};
+use crate::perf::Roofline;
+use crate::sparse::Sss;
+use crate::Result;
+use anyhow::ensure;
+use std::sync::Arc;
+
+/// Minimum levels per group once more than one group exists: a gap
+/// group this tall separates same-parity groups by >= 3 levels, which
+/// defeats both direct-edge (distance-1) and shared-neighbour
+/// (distance-2) write conflicts.
+pub const MIN_GROUP_LEVELS: usize = 2;
+
+/// One group: the consecutive level range `[lo, hi)` and its row work.
+#[derive(Debug, Clone, Copy)]
+pub struct RaceGroup {
+    /// First level (inclusive).
+    pub lo: usize,
+    /// One past the last level.
+    pub hi: usize,
+    /// Total row work of the group's rows.
+    pub work: usize,
+}
+
+/// The level grouping + rank assignment, independent of the matrix
+/// ownership so the planner's structural score can build one from a
+/// borrowed [`Sss`] without cloning the matrix.
+#[derive(Debug, Clone)]
+pub struct RaceStructure {
+    /// BFS levels, every component merged by depth (cross-component
+    /// rows never conflict, so sharing a level index is safe). Each
+    /// component is rooted at a pseudo-peripheral vertex for maximal
+    /// height, reusing `graph/bfs.rs::level_structure` via
+    /// [`pseudo_peripheral_ls`].
+    pub levels: Vec<Vec<u32>>,
+    /// Level index per row.
+    pub level_of: Vec<u32>,
+    /// Groups in level order (consecutive, disjoint, covering).
+    pub groups: Vec<RaceGroup>,
+    /// Rounds of recursive group splitting (>= 1 for any nonempty
+    /// matrix; the first round inspects the single all-levels group).
+    pub depth: usize,
+    /// `assign[phase][rank]` — rows owned by the rank in that parity
+    /// phase, concatenated in (group, level, discovery) order.
+    pub assign: Vec<Vec<Vec<u32>>>,
+    /// Row work per phase per rank (the balance evidence).
+    pub phase_work: Vec<Vec<usize>>,
+    /// Per-thread balance target: `ceil(total_work / p)`.
+    pub balance_target: usize,
+    /// Largest single-row work unit (the granularity floor).
+    pub max_row_work: usize,
+    /// Largest contiguous unit (whole group or chunk of an oversized
+    /// group) handed to one rank — the recursion's balance guarantee is
+    /// `max_unit_work <= balance_target + max_row_work`.
+    pub max_unit_work: usize,
+}
+
+impl RaceStructure {
+    /// Build the level structure, recursive grouping, and rank
+    /// assignment for `p` ranks.
+    pub fn build(s: &Sss, p: usize) -> Self {
+        let p = p.max(1);
+        let n = s.n;
+        let g = Adjacency::from_sss(s);
+
+        // BFS level structure per component, merged by depth.
+        let (comp, ncomp) = components(&g);
+        let mut first = vec![u32::MAX; ncomp];
+        for v in (0..n).rev() {
+            first[comp[v] as usize] = v as u32;
+        }
+        let mut levels: Vec<Vec<u32>> = Vec::new();
+        let mut level_of = vec![0u32; n];
+        for &start in &first {
+            let (_, ls) = pseudo_peripheral_ls(&g, start);
+            for (d, lv) in ls.levels.iter().enumerate() {
+                if levels.len() <= d {
+                    levels.push(Vec::new());
+                }
+                for &v in lv {
+                    level_of[v as usize] = d as u32;
+                }
+                levels[d].extend_from_slice(lv);
+            }
+        }
+
+        // Row work: diagonal term + forward and mirror update per
+        // stored entry (what the phased row kernel actually executes).
+        let work: Vec<usize> =
+            (0..n).map(|i| 1 + 2 * (s.row_ptr[i + 1] - s.row_ptr[i])).collect();
+        let level_work: Vec<usize> = levels
+            .iter()
+            .map(|lv| lv.iter().map(|&r| work[r as usize]).sum())
+            .collect();
+        let total: usize = level_work.iter().sum();
+        let balance_target = total.div_ceil(p);
+        let max_row_work = work.iter().copied().max().unwrap_or(0);
+
+        // Recursive splitting: each round bisects every group that is
+        // over the balance target and still has >= 2 * MIN_GROUP_LEVELS
+        // levels, at its most work-balanced level boundary.
+        let mut groups: Vec<(usize, usize)> =
+            if levels.is_empty() { Vec::new() } else { vec![(0, levels.len())] };
+        let mut depth = 1usize;
+        loop {
+            let mut next = Vec::with_capacity(groups.len() * 2);
+            let mut split_any = false;
+            for &(lo, hi) in &groups {
+                let gw: usize = level_work[lo..hi].iter().sum();
+                if gw > balance_target && hi - lo >= 2 * MIN_GROUP_LEVELS {
+                    let mut best = (usize::MAX, lo + MIN_GROUP_LEVELS);
+                    let mut acc: usize = level_work[lo..lo + MIN_GROUP_LEVELS].iter().sum();
+                    for m in lo + MIN_GROUP_LEVELS..=hi - MIN_GROUP_LEVELS {
+                        let diff = (2 * acc).abs_diff(gw);
+                        if diff < best.0 {
+                            best = (diff, m);
+                        }
+                        acc += level_work[m];
+                    }
+                    next.push((lo, best.1));
+                    next.push((best.1, hi));
+                    split_any = true;
+                } else {
+                    next.push((lo, hi));
+                }
+            }
+            groups = next;
+            if !split_any {
+                break;
+            }
+            depth += 1;
+        }
+        let groups: Vec<RaceGroup> = groups
+            .into_iter()
+            .map(|(lo, hi)| RaceGroup { lo, hi, work: level_work[lo..hi].iter().sum() })
+            .collect();
+
+        // Parity phases + least-loaded rank assignment. Rank loads
+        // carry across phases so the *overall* apply stays balanced
+        // even when one parity holds most of the work. Groups still
+        // over the target after splitting (< 4 levels left) are
+        // chunked across ranks at the target granularity.
+        let phases = if groups.len() >= 2 { 2 } else { groups.len() };
+        let mut assign = vec![vec![Vec::new(); p]; phases];
+        let mut phase_work = vec![vec![0usize; p]; phases];
+        let mut loads = vec![0usize; p];
+        let mut max_unit_work = 0usize;
+        let argmin = |loads: &[usize]| {
+            loads.iter().enumerate().min_by_key(|&(_, &w)| w).map(|(i, _)| i).unwrap_or(0)
+        };
+        for (gi, grp) in groups.iter().enumerate() {
+            let ph = gi % 2;
+            if grp.work > balance_target && p > 1 {
+                let mut unit: Vec<u32> = Vec::new();
+                let mut uw = 0usize;
+                for lv in &levels[grp.lo..grp.hi] {
+                    for &r in lv {
+                        unit.push(r);
+                        uw += work[r as usize];
+                        if uw >= balance_target {
+                            let rank = argmin(&loads);
+                            loads[rank] += uw;
+                            phase_work[ph][rank] += uw;
+                            max_unit_work = max_unit_work.max(uw);
+                            assign[ph][rank].append(&mut unit);
+                            uw = 0;
+                        }
+                    }
+                }
+                if !unit.is_empty() {
+                    let rank = argmin(&loads);
+                    loads[rank] += uw;
+                    phase_work[ph][rank] += uw;
+                    max_unit_work = max_unit_work.max(uw);
+                    assign[ph][rank].append(&mut unit);
+                }
+            } else {
+                let rank = argmin(&loads);
+                loads[rank] += grp.work;
+                phase_work[ph][rank] += grp.work;
+                max_unit_work = max_unit_work.max(grp.work);
+                for lv in &levels[grp.lo..grp.hi] {
+                    assign[ph][rank].extend_from_slice(lv);
+                }
+            }
+        }
+
+        Self {
+            levels,
+            level_of,
+            groups,
+            depth,
+            assign,
+            phase_work,
+            balance_target,
+            max_row_work,
+            max_unit_work,
+        }
+    }
+
+    /// Parity phases per multiply (= barriers per apply in the
+    /// threaded executors). At most 2.
+    pub fn phases(&self) -> usize {
+        self.assign.len()
+    }
+
+    /// Rows of group `gi`, in level order.
+    pub fn group_rows(&self, gi: usize) -> Vec<u32> {
+        let grp = &self.groups[gi];
+        self.levels[grp.lo..grp.hi].concat()
+    }
+
+    /// Per-phase row-work balance: `max_rank_work * p / phase_total`
+    /// (>= 1.0; 1.0 is perfect).
+    pub fn phase_balance(&self) -> Vec<f64> {
+        self.phase_work
+            .iter()
+            .map(|pw| {
+                let total: usize = pw.iter().sum();
+                let max = pw.iter().copied().max().unwrap_or(0);
+                if total == 0 {
+                    1.0
+                } else {
+                    max as f64 * pw.len() as f64 / total as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Whole-apply balance: worst rank's total work across all phases
+    /// over the ideal `total / p` share (>= 1.0). The planner's
+    /// structural score scales the traffic proxy by this.
+    pub fn overall_balance(&self) -> f64 {
+        let p = self.phase_work.first().map_or(1, Vec::len);
+        let mut loads = vec![0usize; p];
+        for pw in &self.phase_work {
+            for (r, &w) in pw.iter().enumerate() {
+                loads[r] += w;
+            }
+        }
+        let total: usize = loads.iter().sum();
+        let max = loads.iter().copied().max().unwrap_or(0);
+        if total == 0 {
+            1.0
+        } else {
+            max as f64 * p as f64 / total as f64
+        }
+    }
+}
+
+/// Preplanned phased executor over a shared matrix.
+#[derive(Debug)]
+pub struct RacePlan {
+    /// The matrix (shared with worker threads).
+    pub s: Arc<Sss>,
+    /// Rank count.
+    pub p: usize,
+    /// Level grouping + assignment.
+    pub structure: RaceStructure,
+}
+
+impl RacePlan {
+    /// Build the level structure and distribute over `p` ranks.
+    /// Accepts an owned or already-shared matrix (no clone either way).
+    pub fn new(s: impl Into<Arc<Sss>>, p: usize) -> Result<Self> {
+        let s: Arc<Sss> = s.into();
+        ensure!(p >= 1, "need at least one rank");
+        let structure = RaceStructure::build(&s, p);
+        Ok(Self { s, p, structure })
+    }
+
+    /// Parity phases per multiply.
+    pub fn phases(&self) -> usize {
+        self.structure.phases()
+    }
+
+    /// Barriers per apply in the threaded executors: one per phase,
+    /// bounded by `2 * depth` (in fact by 2).
+    pub fn barriers_per_apply(&self) -> usize {
+        self.structure.phases()
+    }
+
+    /// Recursion depth of the grouping.
+    pub fn depth(&self) -> usize {
+        self.structure.depth
+    }
+
+    /// Stamp the level-coloring provenance on a stats object.
+    fn note_structure(&self, stats: &mut Pars3Stats) {
+        stats.race_phases = self.phases();
+        stats.race_depth = self.structure.depth;
+        stats.race_phase_balance = self.structure.phase_balance();
+    }
+
+    /// One rank's phased apply: process owned rows phase by phase, one
+    /// barrier per phase. Writes go through the atomic window — across
+    /// same-parity groups they are provably disjoint; inside a chunked
+    /// oversized group they may collide and the window absorbs them.
+    fn rank_apply(&self, win: &Window, x: &[f64], ctx: &mut RankCtx) -> RankReport {
+        let t0 = std::time::Instant::now();
+        let s = &*self.s;
+        let sign = s.sym.sign();
+        for phase in &self.structure.assign {
+            for &i in &phase[ctx.rank] {
+                let i = i as usize;
+                let xi = x[i];
+                let mut yi = s.dvalues[i] * xi;
+                for (j, v) in s.row(i) {
+                    let j = j as usize;
+                    yi += v * x[j];
+                    win.add(j, sign * v * xi);
+                }
+                win.add(i, yi);
+            }
+            ctx.barrier(); // parity-phase synchronization point
+        }
+        RankReport { msgs: 0, msg_values: 0, seconds: t0.elapsed().as_secs_f64() }
+    }
+
+    /// Fused batch variant of [`Self::rank_apply`] over a column-major
+    /// `n × kw` window: each loaded `(j, v)` serves all `kw` columns.
+    fn rank_apply_batch(&self, win: &Window, xd: &[f64], kw: usize, ctx: &mut RankCtx) -> RankReport {
+        let t0 = std::time::Instant::now();
+        let s = &*self.s;
+        let n = s.n;
+        let sign = s.sym.sign();
+        let mut yi = vec![0.0f64; kw];
+        for phase in &self.structure.assign {
+            for &i in &phase[ctx.rank] {
+                let i = i as usize;
+                for c in 0..kw {
+                    yi[c] = s.dvalues[i] * xd[c * n + i];
+                }
+                for (j, v) in s.row(i) {
+                    let j = j as usize;
+                    let sv = sign * v;
+                    for c in 0..kw {
+                        yi[c] += v * xd[c * n + j];
+                        win.add(c * n + j, sv * xd[c * n + i]);
+                    }
+                }
+                for c in 0..kw {
+                    win.add(c * n + i, yi[c]);
+                }
+            }
+            ctx.barrier(); // parity-phase synchronization point
+        }
+        RankReport { msgs: 0, msg_values: 0, seconds: t0.elapsed().as_secs_f64() }
+    }
+
+    /// One-shot threaded execution (spawn, one multiply, join). The
+    /// repeated-multiply hot path is [`RaceThreaded`].
+    pub fn execute_threaded(&self, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
+        assert_eq!(x.len(), self.s.n);
+        let window = Window::new(self.s.n);
+        let win = &window;
+        let reports = World::run(self.p, |mut ctx| self.rank_apply(win, x, &mut ctx));
+        let mut stats = Pars3Stats::default();
+        self.note_structure(&mut stats);
+        for r in reports {
+            stats.rank_seconds.push(r.seconds);
+        }
+        (window.to_vec(), stats)
+    }
+
+    /// Rank-sequential emulation (deterministic, any `p`).
+    pub fn execute_emulated(&self, x: &[f64]) -> (Vec<f64>, Pars3Stats) {
+        let s = &*self.s;
+        assert_eq!(x.len(), s.n);
+        let sign = s.sym.sign();
+        let mut y = vec![0.0f64; s.n];
+        for phase in &self.structure.assign {
+            for rows in phase {
+                for &i in rows {
+                    let i = i as usize;
+                    let xi = x[i];
+                    let mut yi = s.dvalues[i] * xi;
+                    for (j, v) in s.row(i) {
+                        let j = j as usize;
+                        yi += v * x[j];
+                        y[j] += sign * v * xi;
+                    }
+                    y[i] += yi;
+                }
+            }
+        }
+        let mut stats = Pars3Stats::default();
+        self.note_structure(&mut stats);
+        (y, stats)
+    }
+
+    /// Rank-sequential fused batch emulation: identical numerics to
+    /// [`Self::execute_emulated`] column by column, one matrix
+    /// traversal for the whole batch.
+    pub fn execute_emulated_batch(&self, xs: &VecBatch, ys: &mut VecBatch) -> Pars3Stats {
+        let s = &*self.s;
+        let sign = s.sym.sign();
+        let (n, kw) = (s.n, xs.k());
+        assert_eq!(xs.n(), n);
+        assert_eq!(ys.n(), n);
+        assert_eq!(ys.k(), kw);
+        let xd = xs.data();
+        ys.fill_zero();
+        let yd = ys.data_mut();
+        let mut yi = vec![0.0f64; kw];
+        for phase in &self.structure.assign {
+            for rows in phase {
+                for &i in rows {
+                    let i = i as usize;
+                    for c in 0..kw {
+                        yi[c] = s.dvalues[i] * xd[c * n + i];
+                    }
+                    for (j, v) in s.row(i) {
+                        let j = j as usize;
+                        let sv = sign * v;
+                        for c in 0..kw {
+                            yi[c] += v * xd[c * n + j];
+                            yd[c * n + j] += sv * xd[c * n + i];
+                        }
+                    }
+                    for c in 0..kw {
+                        yd[c * n + i] += yi[c];
+                    }
+                }
+            }
+        }
+        let mut stats = Pars3Stats::default();
+        self.note_structure(&mut stats);
+        stats
+    }
+}
+
+/// Persistent threaded executor: rank threads spawn **once** here and
+/// are reused for every apply, mirroring
+/// [`crate::kernel::pars3::Pars3Threaded`]. Input hand-off is
+/// zero-copy through a double-buffered [`InputSlot`].
+pub struct RaceThreaded {
+    plan: Arc<RacePlan>,
+    world: PersistentWorld,
+    window: Arc<Window>,
+    xslot: Arc<InputSlot>,
+    /// `n × k` column-major accumulate window for the fused batch path.
+    batch_window: Option<(usize, Arc<Window>)>,
+}
+
+impl RaceThreaded {
+    /// Spawn the rank threads for this plan.
+    pub fn new(plan: Arc<RacePlan>) -> Self {
+        let world = PersistentWorld::new(plan.p);
+        let window = Window::new(plan.s.n);
+        Self { plan, world, window, xslot: InputSlot::new(), batch_window: None }
+    }
+
+    fn collect(&self, reports: Vec<RankReport>) -> Pars3Stats {
+        let mut stats = Pars3Stats::default();
+        self.plan.note_structure(&mut stats);
+        for r in reports {
+            stats.rank_seconds.push(r.seconds);
+        }
+        stats
+    }
+
+    /// `y = A x` into a caller buffer on the persistent rank threads.
+    pub fn apply_into(&self, x: &[f64], y: &mut [f64]) -> Pars3Stats {
+        assert_eq!(x.len(), self.plan.s.n);
+        assert_eq!(y.len(), self.plan.s.n);
+        // All ranks are idle between jobs, so the epoch reset is safe.
+        self.window.reset();
+        let epoch = self.xslot.publish(x);
+        let plan = self.plan.clone();
+        let win = self.window.clone();
+        let slot = self.xslot.clone();
+        let reports = self.world.run_job(move |ctx| {
+            // SAFETY: run_job returns only after every rank reports
+            // done, so the caller's `x` outlives all reads of `epoch`.
+            let x = unsafe { slot.read(epoch) };
+            plan.rank_apply(&win, x, ctx)
+        });
+        self.xslot.retire(epoch);
+        self.window.read_into(y);
+        self.collect(reports)
+    }
+
+    /// Size (or resize) the `n × k` batch window ahead of time.
+    pub fn prepare_batch(&mut self, k: usize) -> Arc<Window> {
+        match &self.batch_window {
+            Some((bk, w)) if *bk == k => w.clone(),
+            _ => {
+                let w = Window::new(self.plan.s.n * k.max(1));
+                self.batch_window = Some((k.max(1), w.clone()));
+                w
+            }
+        }
+    }
+
+    /// Fused batch multiply on the persistent rank threads: one matrix
+    /// traversal and the same 2-barrier phase schedule as `k = 1`.
+    pub fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) -> Pars3Stats {
+        let n = self.plan.s.n;
+        let k = xs.k();
+        assert_eq!(xs.n(), n);
+        assert_eq!(ys.n(), n);
+        assert_eq!(ys.k(), k);
+        if k == 0 {
+            return Pars3Stats::default();
+        }
+        let win = self.prepare_batch(k);
+        win.reset();
+        let epoch = self.xslot.publish(xs.data());
+        let plan = self.plan.clone();
+        let slot = self.xslot.clone();
+        let wjob = win.clone();
+        let reports = self.world.run_job(move |ctx| {
+            // SAFETY: as in apply_into.
+            let xd = unsafe { slot.read(epoch) };
+            plan.rank_apply_batch(&wjob, xd, k, ctx)
+        });
+        self.xslot.retire(epoch);
+        win.read_into(ys.data_mut());
+        self.collect(reports)
+    }
+
+    /// False once a rank panic has poisoned the persistent world.
+    pub fn healthy(&self) -> bool {
+        !self.world.is_poisoned()
+    }
+}
+
+/// [`crate::kernel::Spmv`] adapter at a fixed rank count (what the
+/// registry hands to solvers, benches, and the service).
+pub struct RaceKernel {
+    plan: Arc<RacePlan>,
+    exec: Option<RaceThreaded>,
+    last_stats: Option<Pars3Stats>,
+}
+
+impl RaceKernel {
+    /// Build the level-coloring plan over `p` ranks. `threaded = false`
+    /// uses the deterministic rank-sequential emulation; `true` spawns
+    /// a persistent rank world once, here.
+    pub fn new(s: impl Into<Arc<Sss>>, p: usize, threaded: bool) -> Result<Self> {
+        let plan = Arc::new(RacePlan::new(s, p)?);
+        let exec = if threaded { Some(RaceThreaded::new(plan.clone())) } else { None };
+        Ok(Self { plan, exec, last_stats: None })
+    }
+
+    /// The underlying phased plan.
+    pub fn plan(&self) -> &RacePlan {
+        &self.plan
+    }
+
+    /// Stats of the most recent apply (phases, recursion depth,
+    /// per-phase balance, roofline).
+    pub fn last_stats(&self) -> Option<&Pars3Stats> {
+        self.last_stats.as_ref()
+    }
+}
+
+impl crate::kernel::Spmv for RaceKernel {
+    fn n(&self) -> usize {
+        self.plan.s.n
+    }
+
+    fn apply(&mut self, x: &[f64], y: &mut [f64]) {
+        let t0 = std::time::Instant::now();
+        let mut stats = match &self.exec {
+            Some(exec) => exec.apply_into(x, y),
+            None => {
+                let (out, stats) = self.plan.execute_emulated(x);
+                y.copy_from_slice(&out);
+                stats
+            }
+        };
+        stats.roofline =
+            Some(Roofline::from_seconds(t0.elapsed().as_secs_f64(), self.flops(), self.bytes()));
+        self.last_stats = Some(stats);
+    }
+
+    fn apply_batch(&mut self, xs: &VecBatch, ys: &mut VecBatch) {
+        let t0 = std::time::Instant::now();
+        let mut stats = match &mut self.exec {
+            Some(exec) => exec.apply_batch(xs, ys),
+            None => self.plan.execute_emulated_batch(xs, ys),
+        };
+        let k = xs.k() as u64;
+        stats.roofline = Some(Roofline::from_seconds(
+            t0.elapsed().as_secs_f64(),
+            self.flops() * k,
+            self.bytes(),
+        ));
+        self.last_stats = Some(stats);
+    }
+
+    fn prepare_hint(&mut self, k: usize) {
+        if let Some(exec) = &mut self.exec {
+            exec.prepare_batch(k);
+        }
+    }
+
+    fn healthy(&self) -> bool {
+        self.exec.as_ref().is_none_or(RaceThreaded::healthy)
+    }
+
+    fn flops(&self) -> u64 {
+        self.plan.s.spmv_flops()
+    }
+
+    fn bytes(&self) -> u64 {
+        self.plan.s.spmv_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "race"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::serial_sss::sss_spmv;
+    use crate::kernel::Spmv;
+    use crate::sparse::{convert, gen, skew, Symmetry};
+    use crate::util::SmallRng;
+
+    fn banded(n: usize, seed: u64) -> Sss {
+        let coo = gen::small_test_matrix(n, seed, 1.5);
+        let g = crate::graph::Adjacency::from_coo(&coo);
+        let perm = crate::graph::rcm(&g);
+        convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew).unwrap()
+    }
+
+    fn small_world_sss(n: usize, seed: u64) -> Sss {
+        let mut rng = SmallRng::seed_from_u64(seed);
+        let edges = gen::small_world(n, 3, 0.4, &mut rng);
+        let coo = skew::coo_from_pattern(n, &edges, 1.5, &mut rng);
+        convert::coo_to_sss(&coo, Symmetry::Skew).unwrap()
+    }
+
+    #[test]
+    fn emulated_matches_serial_on_banded_and_small_world() {
+        for (s, label) in
+            [(banded(120, 1), "banded"), (small_world_sss(150, 2), "sw")]
+        {
+            let n = s.n;
+            let x: Vec<f64> = (0..n).map(|i| ((i * 31) % 17) as f64 * 0.25 - 2.0).collect();
+            let mut want = vec![0.0; n];
+            sss_spmv(&s, &x, &mut want);
+            for p in [1, 3, 8] {
+                let plan = RacePlan::new(s.clone(), p).unwrap();
+                let (got, _) = plan.execute_emulated(&x);
+                for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert!((a - b).abs() < 1e-10, "{label} p={p} row {r}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_threaded_stable_across_repeated_applies() {
+        let s = small_world_sss(140, 3);
+        let mut k = RaceKernel::new(s.clone(), 4, true).unwrap();
+        let mut got = vec![0.0; 140];
+        for round in 0..3u64 {
+            let x: Vec<f64> =
+                (0..140).map(|i| ((i as u64 * 13 + round * 7) % 23) as f64 * 0.5 - 5.0).collect();
+            let mut want = vec![0.0; 140];
+            sss_spmv(&s, &x, &mut want);
+            k.apply(&x, &mut got);
+            for (r, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-10, "round {round} row {r}: {a} vs {b}");
+            }
+        }
+        assert!(k.healthy());
+    }
+
+    #[test]
+    fn batch_executors_match_columnwise_apply() {
+        let s = small_world_sss(90, 4);
+        let xs = VecBatch::from_fn(90, 3, |i, c| ((i + c * 13) % 9) as f64 * 0.5 - 2.0);
+        for threaded in [false, true] {
+            let mut k = RaceKernel::new(s.clone(), 3, threaded).unwrap();
+            let mut ys = VecBatch::zeros(90, 3);
+            k.apply_batch(&xs, &mut ys);
+            for c in 0..3 {
+                let mut want = vec![0.0; 90];
+                k.apply(xs.col(c), &mut want);
+                for (r, (a, b)) in ys.col(c).iter().zip(&want).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-10,
+                        "threaded={threaded} col {c} row {r}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Same-parity groups must have pairwise-disjoint write sets — the
+    /// conflict-freedom claim the 2-barrier schedule rests on.
+    #[test]
+    fn same_parity_groups_are_conflict_free() {
+        for s in [banded(130, 5), small_world_sss(170, 6)] {
+            let st = RaceStructure::build(&s, 4);
+            for parity in 0..2usize {
+                let mut owner: Vec<Option<usize>> = vec![None; s.n];
+                for (gi, _) in st.groups.iter().enumerate().filter(|&(gi, _)| gi % 2 == parity) {
+                    for &i in &st.group_rows(gi) {
+                        let i = i as usize;
+                        let mut claim = |v: usize| match owner[v] {
+                            Some(o) if o != gi => {
+                                panic!("groups {o} and {gi} (parity {parity}) both write {v}")
+                            }
+                            _ => owner[v] = Some(gi),
+                        };
+                        claim(i);
+                        for (j, _) in s.row(i) {
+                            claim(j as usize);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Barriers per apply (= phases) stay within 2 × recursion depth,
+    /// and phases never exceed 2 at all.
+    #[test]
+    fn barriers_bounded_by_twice_recursion_depth() {
+        for (n, seed) in [(60usize, 7u64), (150, 8), (300, 9)] {
+            let s = small_world_sss(n, seed);
+            let plan = RacePlan::new(s, 8).unwrap();
+            assert!(plan.depth() >= 1);
+            assert!(plan.phases() <= 2);
+            assert!(
+                plan.barriers_per_apply() <= 2 * plan.depth(),
+                "barriers {} vs depth {}",
+                plan.barriers_per_apply(),
+                plan.depth()
+            );
+        }
+    }
+
+    /// The recursion + chunking never hands a rank a contiguous unit
+    /// larger than the per-thread balance target plus one row.
+    #[test]
+    fn recursion_respects_balance_target() {
+        for s in [banded(200, 10), small_world_sss(240, 11)] {
+            for p in [2, 4, 8] {
+                let st = RaceStructure::build(&s, p);
+                assert!(
+                    st.max_unit_work <= st.balance_target + st.max_row_work,
+                    "p={p}: unit {} target {} max_row {}",
+                    st.max_unit_work,
+                    st.balance_target,
+                    st.max_row_work
+                );
+                // every row appears exactly once across the assignment
+                let total: usize =
+                    st.assign.iter().flat_map(|ph| ph.iter().map(Vec::len)).sum();
+                assert_eq!(total, s.n);
+            }
+        }
+    }
+
+    /// On the small-world family RACE's 2 phases beat the greedy
+    /// distance-2 coloring's color count — the headline win.
+    #[test]
+    fn fewer_phases_than_greedy_colors_on_small_world() {
+        let s = small_world_sss(200, 12);
+        let plan = RacePlan::new(s.clone(), 8).unwrap();
+        let colors = crate::graph::coloring::color_rows(&s).num_colors;
+        assert!(
+            plan.phases() < colors,
+            "race phases {} vs greedy colors {colors}",
+            plan.phases()
+        );
+    }
+
+    #[test]
+    fn stats_carry_structure_and_roofline() {
+        let s = small_world_sss(110, 13);
+        let mut k = RaceKernel::new(s, 4, false).unwrap();
+        let x: Vec<f64> = (0..110).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut y = vec![0.0; 110];
+        k.apply(&x, &mut y);
+        let stats = k.last_stats().unwrap();
+        assert!(stats.race_phases >= 1 && stats.race_phases <= 2);
+        assert!(stats.race_depth >= 1);
+        assert_eq!(stats.race_phase_balance.len(), stats.race_phases);
+        assert!(stats.race_phase_balance.iter().all(|&b| b >= 1.0));
+        assert!(stats.roofline.is_some());
+        assert_eq!(k.name(), "race");
+    }
+
+    #[test]
+    fn handles_disconnected_components_and_tiny_matrices() {
+        // disconnected: two rings with no cross edges
+        let mut rng = SmallRng::seed_from_u64(14);
+        let mut edges = gen::small_world(40, 2, 0.0, &mut rng);
+        edges.extend(gen::small_world(30, 2, 0.0, &mut rng).iter().map(|&(a, b)| (a + 40, b + 40)));
+        let coo = skew::coo_from_pattern(70, &edges, 1.2, &mut rng);
+        let s = convert::coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        let x: Vec<f64> = (0..70).map(|i| (i as f64 * 0.11).cos()).collect();
+        let mut want = vec![0.0; 70];
+        sss_spmv(&s, &x, &mut want);
+        let plan = RacePlan::new(s, 3).unwrap();
+        let (got, _) = plan.execute_emulated(&x);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        // n = 1
+        let one = banded(1, 15);
+        let plan = RacePlan::new(one, 1).unwrap();
+        let (y1, _) = plan.execute_emulated(&[2.0]);
+        assert_eq!(y1.len(), 1);
+    }
+}

@@ -2,7 +2,8 @@
 //!
 //! Every kernel in the crate — the serial SSS baseline (paper Alg. 1),
 //! plain CSR, the LAPACK-style dense band (`dgbmv`), the graph-coloring
-//! phased baseline (Elafrou et al. [3]), and PARS3 itself — implements
+//! phased baseline (Elafrou et al. [3]), the RACE-style recursive
+//! level-coloring kernel, and PARS3 itself — implements
 //! the same [`Spmv`] trait; this module is the single construction
 //! point. Solvers, the coordinator, and the benches all go through it,
 //! so adding a kernel (or comparing an existing pair) never requires
@@ -25,6 +26,7 @@ use crate::kernel::dgbmv::BandedDgbmv;
 use crate::kernel::blocking::DEFAULT_L2_KIB;
 use crate::kernel::dia::FormatPolicy;
 use crate::kernel::pars3::Pars3Kernel;
+use crate::kernel::race::RaceKernel;
 use crate::kernel::serial_sss::SerialSss;
 use crate::kernel::split3::Split3;
 use crate::kernel::traits::Spmv;
@@ -32,7 +34,8 @@ use crate::sparse::{convert, Coo, Sss, Symmetry};
 use std::sync::Arc;
 
 /// Names of every registered kernel, in bench display order.
-pub const KERNEL_NAMES: &[&str] = &["serial_sss", "csr", "dgbmv", "coloring", "pars3"];
+pub const KERNEL_NAMES: &[&str] =
+    &["serial_sss", "csr", "dgbmv", "coloring", "race", "pars3"];
 
 /// Construction parameters shared by all kernels (parallel kernels use
 /// `threads`/`threaded`; `pars3` additionally uses `outer_bw`; the
@@ -138,6 +141,7 @@ pub fn build_from_sss(
         "csr" => Box::new(CsrSpmv::new(convert::sss_to_csr(&sss))),
         "dgbmv" => Box::new(BandedDgbmv::from_sss_format_budget(&sss, cfg.format, cfg.l2_kib)?),
         "coloring" => Box::new(ColoringKernel::new(sss, p, cfg.threaded)?),
+        "race" => Box::new(RaceKernel::new(sss, p, cfg.threaded)?),
         "pars3" => {
             let split = Split3::with_outer_bw_format_budget(
                 &sss,

@@ -5,7 +5,7 @@
 //! ```text
 //! pars3 info                          # artifact + platform info
 //! pars3 report <table1|rcm|conflicts|splits|fig9|coloring|complexity|all>
-//! pars3 spmv   [--matrix NAME] [--p N] [--backend auto|serial|csr|dgbmv|coloring|pars3|pjrt]
+//! pars3 spmv   [--matrix NAME] [--p N] [--backend auto|serial|csr|dgbmv|coloring|race|pars3|pjrt]
 //! pars3 solve  [--matrix NAME] [--p N] [--backend ...] [--tol T] [--iters K] [--rhs K]
 //! pars3 serve                         # sharded service demo (pipelined clients)
 //! ```
@@ -16,7 +16,7 @@
 //! both by bytes moved), `--reorder auto|rcm|rcm-bicriteria|natural`
 //! (preprocessing strategy; `auto` measures the candidates and declines
 //! when nothing clears `--reorder-min-gain`),
-//! `--backend auto|serial|csr|dgbmv|coloring|pars3|pjrt` (`auto` =
+//! `--backend auto|serial|csr|dgbmv|coloring|race|pars3|pjrt` (`auto` =
 //! execute on the planner's pick), `--plan auto|pinned` (`pinned`
 //! restores legacy per-axis resolution), `--plan-probe N` (time N real
 //! `apply` calls per backend candidate instead of structural proxies),
@@ -167,7 +167,7 @@ fn run() -> Result<()> {
                  usage: pars3 <info|report|spmv|solve|serve> [flags]\n\
                  report subcommands: table1 rcm conflicts splits fig9 coloring complexity all\n\
                  flags: --config F --scale S --ranks 1,2,4 --threaded --matrix NAME --p N\n\
-                        --backend auto|serial|csr|dgbmv|coloring|pars3|pjrt\n\
+                        --backend auto|serial|csr|dgbmv|coloring|race|pars3|pjrt\n\
                         --format auto|dia|sss --reorder auto|rcm|rcm-bicriteria|natural\n\
                         --reorder-min-gain G --plan auto|pinned --plan-probe N\n\
                         --tol T --iters K --rhs K --artifacts DIR --shards W --queue-depth N\n\

@@ -340,13 +340,14 @@ pub fn mesh_pattern(g: usize, rng: &mut SmallRng) -> (usize, Vec<(u32, u32)>) {
     (n, scramble(&edges, n, rng))
 }
 
-/// The four pattern families the planner-honesty and roofline benches
+/// The five pattern families the planner-honesty and roofline benches
 /// sweep, each `(name, n, lower_edges)`:
 ///
 /// * `banded`       — already tightly banded (reordering should decline);
 /// * `scattered`    — scrambled band + long-range edges (reordering wins);
 /// * `disconnected` — disjoint banded blocks, scrambled;
-/// * `symmetric`    — structurally symmetric 2D 5-point mesh.
+/// * `symmetric`    — structurally symmetric 2D 5-point mesh;
+/// * `small_world`  — ring + random shortcuts (level coloring's target).
 pub fn pattern_families(
     n: usize,
     rng: &mut SmallRng,
@@ -367,12 +368,42 @@ pub fn pattern_families(
     let disconnected = scramble(&disconnected, dn, rng);
     let g = (n as f64).sqrt() as usize;
     let (mn, mesh) = mesh_pattern(g.max(6), rng);
+    let sw = small_world(n, 3, 0.3, rng);
     vec![
         ("banded", n, banded),
         ("scattered", n, scattered),
         ("disconnected", dn, disconnected),
         ("symmetric", mn, mesh),
+        ("small_world", n, sw),
     ]
+}
+
+/// Small-world pattern (Watts–Strogatz-style): a ring lattice where
+/// every vertex couples to its `k_neighbors` nearest neighbours on each
+/// side, plus `long_range_frac * k_neighbors * n` random long-range
+/// shortcut edges (the rewires). The BFS level structure is shallow and
+/// wide and no ordering bands the shortcuts — the family RACE-style
+/// level coloring targets and RCM banding serves poorly.
+pub fn small_world(
+    n: usize,
+    k_neighbors: usize,
+    long_range_frac: f64,
+    rng: &mut SmallRng,
+) -> Vec<(u32, u32)> {
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for d in 1..=k_neighbors.min(n.saturating_sub(1) / 2) {
+            push_edge(&mut edges, i, (i + d) % n);
+        }
+    }
+    let extra = ((k_neighbors * n) as f64 * long_range_frac) as usize;
+    for _ in 0..extra {
+        let a = rng.gen_range_usize(0, n);
+        let b = rng.gen_range_usize(0, n);
+        push_edge(&mut edges, a, b);
+    }
+    dedup(&mut edges);
+    edges
 }
 
 /// Convenience: a small, fully deterministic test matrix (shifted skew).
@@ -435,9 +466,12 @@ mod tests {
     fn pattern_families_are_well_formed() {
         let mut rng = SmallRng::seed_from_u64(11);
         let fams = pattern_families(120, &mut rng);
-        assert_eq!(fams.len(), 4);
+        assert_eq!(fams.len(), 5);
         let names: Vec<_> = fams.iter().map(|(f, ..)| *f).collect();
-        assert_eq!(names, ["banded", "scattered", "disconnected", "symmetric"]);
+        assert_eq!(
+            names,
+            ["banded", "scattered", "disconnected", "symmetric", "small_world"]
+        );
         for (f, n, edges) in &fams {
             assert!(*n > 0 && !edges.is_empty(), "{f} empty");
             assert!(
@@ -445,6 +479,17 @@ mod tests {
                 "{f} malformed edges"
             );
         }
+    }
+
+    #[test]
+    fn small_world_ring_plus_shortcuts() {
+        let mut rng = SmallRng::seed_from_u64(21);
+        let e = small_world(50, 2, 0.0, &mut rng);
+        // pure ring lattice: exactly k*n edges, all well-formed
+        assert_eq!(e.len(), 100);
+        assert!(e.iter().all(|&(i, j)| i > j && (i as usize) < 50));
+        let with_shortcuts = small_world(50, 2, 0.5, &mut rng);
+        assert!(with_shortcuts.len() > e.len());
     }
 
     #[test]

@@ -376,6 +376,57 @@ fn random_banded_symmetric(rng: &mut SmallRng) -> pars3::sparse::Sss {
 }
 
 #[test]
+fn prop_race_matches_sss_for_every_mode() {
+    // the RACE level-coloring schedule is a processing order, never a
+    // different computation: for ANY skew or symmetric matrix, both
+    // execution modes (emulated and persistent-threaded) and both
+    // batch widths must reproduce the serial SSS kernel within 1e-12
+    use pars3::kernel::race::RaceKernel;
+    use pars3::kernel::{Spmv, VecBatch};
+    for_all("race == serial for every mode", 6, |rng| {
+        for skew in [true, false] {
+            let s =
+                Arc::new(if skew { random_banded(rng) } else { random_banded_symmetric(rng) });
+            let n = s.n;
+            let p = 1 + rng.gen_range_usize(0, 8);
+            let x: Vec<f64> = (0..n).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect();
+            let mut want = vec![0.0; n];
+            sss_spmv(&s, &x, &mut want);
+            let kw = 8usize;
+            let xs = VecBatch::from_fn(n, kw, |_, _| rng.gen_range_f64(-2.0, 2.0));
+            let mut want_b = VecBatch::zeros(n, kw);
+            for c in 0..kw {
+                let mut col = vec![0.0; n];
+                sss_spmv(&s, xs.col(c), &mut col);
+                want_b.col_mut(c).copy_from_slice(&col);
+            }
+            for threaded in [false, true] {
+                let mut k = RaceKernel::new(s.clone(), p, threaded).unwrap();
+                let mut y = vec![0.0; n];
+                k.apply(&x, &mut y);
+                for (r, (a, b)) in y.iter().zip(&want).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-12,
+                        "skew={skew} threaded={threaded} p={p} row {r}: {a} vs {b} (n={n})"
+                    );
+                }
+                k.prepare_hint(kw);
+                let mut ys = VecBatch::zeros(n, kw);
+                k.apply_batch(&xs, &mut ys);
+                for c in 0..kw {
+                    for (r, (a, b)) in ys.col(c).iter().zip(want_b.col(c)).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-12,
+                            "skew={skew} threaded={threaded} col {c} row {r}: {a} vs {b} (n={n})"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_dia_format_matches_sss_for_every_kernel() {
     // the middle-split storage is an execution detail: for ANY banded
     // skew or symmetric matrix, every registered kernel must produce
@@ -649,6 +700,7 @@ fn prop_client_matches_coordinator_for_every_registered_backend() {
             Backend::Csr,
             Backend::Dgbmv,
             Backend::Coloring { p },
+            Backend::Race { p },
             Backend::Pars3 { p },
         ];
 
