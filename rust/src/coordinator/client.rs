@@ -41,7 +41,7 @@ use crate::coordinator::Backend;
 use crate::kernel::VecBatch;
 use crate::solver::mrs::{MrsOptions, MrsResult};
 use crate::sparse::Coo;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::Arc;
 
@@ -247,6 +247,11 @@ pub(crate) struct ServiceShared {
     pub(crate) depths: Vec<Arc<std::sync::atomic::AtomicUsize>>,
     /// Process-unique id stamped into every handle this service mints.
     pub(crate) service_id: u64,
+    /// Set by [`Service::stop`](crate::coordinator::Service::stop)
+    /// before the shutdown messages are enqueued: clients refuse new
+    /// submissions with [`Pars3Error::ServiceStopped`] instead of
+    /// racing the closing queues.
+    pub(crate) stopped: AtomicBool,
     next_shard: AtomicUsize,
 }
 
@@ -257,7 +262,13 @@ impl ServiceShared {
         service_id: u64,
     ) -> Self {
         debug_assert_eq!(shards.len(), depths.len());
-        Self { shards, depths, service_id, next_shard: AtomicUsize::new(0) }
+        Self {
+            shards,
+            depths,
+            service_id,
+            stopped: AtomicBool::new(false),
+            next_shard: AtomicUsize::new(0),
+        }
     }
 }
 
@@ -286,6 +297,9 @@ impl Client {
         msg: ShardMsg,
         rx: Receiver<Result<T, Pars3Error>>,
     ) -> Ticket<T> {
+        if self.inner.stopped.load(Ordering::SeqCst) {
+            return Ticket::ready(shard, Err(Pars3Error::ServiceStopped));
+        }
         let Some(queue) = self.inner.shards.get(shard) else {
             return Ticket::ready(
                 shard,
@@ -300,7 +314,14 @@ impl Client {
             Ok(()) => Ticket::pending(shard, rx),
             Err(_) => {
                 gauge.fetch_sub(1, Ordering::Relaxed);
-                Ticket::ready(shard, Err(Pars3Error::WorkerPoisoned { shard }))
+                // A dead queue is a deliberate stop if the flag went up
+                // while we were dispatching, a panic otherwise.
+                let err = if self.inner.stopped.load(Ordering::SeqCst) {
+                    Pars3Error::ServiceStopped
+                } else {
+                    Pars3Error::WorkerPoisoned { shard }
+                };
+                Ticket::ready(shard, Err(err))
             }
         }
     }
@@ -514,6 +535,107 @@ impl Client {
         let parts: Vec<Ticket<CacheStats>> =
             (0..self.num_shards()).map(|s| self.cache_stats(s)).collect();
         Ticket::gather_all(parts)
+    }
+}
+
+/// The full typed request surface, abstracted over transport.
+///
+/// Implemented by the in-process [`Client`] (shard queues) and by
+/// [`RemoteClient`](crate::net::RemoteClient) (TCP/UDS), with the same
+/// submit-then-`Ticket` shape, so every caller — and in particular the
+/// backend-sweep integration suite — runs unchanged against both. Local
+/// tickets resolve from a shard worker's reply channel; remote tickets
+/// resolve when the connection's reader thread matches the response's
+/// request id. Either way, submission never blocks on the result.
+pub trait ClientApi {
+    /// See [`Client::prepare`].
+    fn prepare(&self, name: &str, coo: Coo) -> Ticket<MatrixHandle>;
+    /// See [`Client::prepare_replace`].
+    fn prepare_replace(&self, handle: &MatrixHandle, name: &str, coo: Coo)
+        -> Ticket<MatrixHandle>;
+    /// See [`Client::release`].
+    fn release(&self, handle: &MatrixHandle) -> Ticket<()>;
+    /// See [`Client::spmv`].
+    fn spmv(&self, handle: &MatrixHandle, x: Vec<f64>, backend: Backend) -> Ticket<Vec<f64>>;
+    /// See [`Client::solve`].
+    fn solve(
+        &self,
+        handle: &MatrixHandle,
+        b: Vec<f64>,
+        opts: MrsOptions,
+        backend: Backend,
+    ) -> Ticket<MrsResult>;
+    /// See [`Client::spmv_batch`].
+    fn spmv_batch(&self, handle: &MatrixHandle, xs: VecBatch, backend: Backend)
+        -> Ticket<VecBatch>;
+    /// See [`Client::solve_batch`].
+    fn solve_batch(
+        &self,
+        handle: &MatrixHandle,
+        bs: VecBatch,
+        opts: MrsOptions,
+        backend: Backend,
+    ) -> Ticket<Vec<MrsResult>>;
+    /// See [`Client::describe`].
+    fn describe(&self, handle: &MatrixHandle) -> Ticket<MatrixInfo>;
+    /// See [`Client::cache_stats`].
+    fn cache_stats(&self, shard: usize) -> Ticket<CacheStats>;
+    /// See [`Client::cache_stats_all`].
+    fn cache_stats_all(&self) -> Ticket<Vec<CacheStats>>;
+}
+
+impl ClientApi for Client {
+    fn prepare(&self, name: &str, coo: Coo) -> Ticket<MatrixHandle> {
+        Client::prepare(self, name, coo)
+    }
+    fn prepare_replace(
+        &self,
+        handle: &MatrixHandle,
+        name: &str,
+        coo: Coo,
+    ) -> Ticket<MatrixHandle> {
+        Client::prepare_replace(self, handle, name, coo)
+    }
+    fn release(&self, handle: &MatrixHandle) -> Ticket<()> {
+        Client::release(self, handle)
+    }
+    fn spmv(&self, handle: &MatrixHandle, x: Vec<f64>, backend: Backend) -> Ticket<Vec<f64>> {
+        Client::spmv(self, handle, x, backend)
+    }
+    fn solve(
+        &self,
+        handle: &MatrixHandle,
+        b: Vec<f64>,
+        opts: MrsOptions,
+        backend: Backend,
+    ) -> Ticket<MrsResult> {
+        Client::solve(self, handle, b, opts, backend)
+    }
+    fn spmv_batch(
+        &self,
+        handle: &MatrixHandle,
+        xs: VecBatch,
+        backend: Backend,
+    ) -> Ticket<VecBatch> {
+        Client::spmv_batch(self, handle, xs, backend)
+    }
+    fn solve_batch(
+        &self,
+        handle: &MatrixHandle,
+        bs: VecBatch,
+        opts: MrsOptions,
+        backend: Backend,
+    ) -> Ticket<Vec<MrsResult>> {
+        Client::solve_batch(self, handle, bs, opts, backend)
+    }
+    fn describe(&self, handle: &MatrixHandle) -> Ticket<MatrixInfo> {
+        Client::describe(self, handle)
+    }
+    fn cache_stats(&self, shard: usize) -> Ticket<CacheStats> {
+        Client::cache_stats(self, shard)
+    }
+    fn cache_stats_all(&self) -> Ticket<Vec<CacheStats>> {
+        Client::cache_stats_all(self)
     }
 }
 

@@ -89,6 +89,22 @@ pub enum Pars3Error {
     },
     /// `Ticket::wait` after `try_wait` already returned the result.
     TicketConsumed,
+    /// The service was stopped ([`Service::stop`] or a remote `Stop`
+    /// message): the request was refused, or was still queued when the
+    /// shard drained its queue on shutdown. Distinct from
+    /// [`Self::WorkerPoisoned`] — the service ended deliberately, not
+    /// by a panic.
+    ///
+    /// [`Service::stop`]: crate::coordinator::Service::stop
+    ServiceStopped,
+    /// A socket-level failure on the remote-serving path (connect,
+    /// read, write, accept). The payload names the operation and the
+    /// underlying `std::io::Error`.
+    Io(String),
+    /// The remote peer sent bytes that do not decode as a valid frame
+    /// or message (bad tag, truncated payload, trailing bytes,
+    /// oversized frame). The connection is unusable after this.
+    Protocol(String),
     /// Escape hatch for internal failures with no dedicated variant
     /// (kernel construction details, artifact I/O, ...). The payload is
     /// the full `anyhow`-style context chain.
@@ -131,8 +147,25 @@ impl fmt::Display for Pars3Error {
             Self::TicketConsumed => {
                 write!(f, "ticket already consumed (try_wait returned its result)")
             }
+            Self::ServiceStopped => write!(f, "service stopped (request refused or dropped)"),
+            Self::Io(why) => write!(f, "i/o error: {why}"),
+            Self::Protocol(why) => write!(f, "protocol error: {why}"),
             Self::Internal(why) => write!(f, "{why}"),
         }
+    }
+}
+
+impl Pars3Error {
+    /// Wrap a socket-level failure with the operation that hit it
+    /// (`std::io::Error` is neither `Clone` nor `Eq`, so the message is
+    /// captured instead of the error value).
+    pub fn io(op: &str, e: std::io::Error) -> Self {
+        Self::Io(format!("{op}: {e}"))
+    }
+
+    /// A [`Self::Protocol`] decoding failure.
+    pub fn protocol(why: impl Into<String>) -> Self {
+        Self::Protocol(why.into())
     }
 }
 
@@ -163,6 +196,13 @@ mod tests {
         assert!(Pars3Error::BackendUnavailable { backend: "pjrt", reason: "x".into() }
             .to_string()
             .contains("pjrt"));
+        assert!(Pars3Error::ServiceStopped.to_string().contains("stopped"));
+        let io = Pars3Error::io(
+            "connect tcp://x:1",
+            std::io::Error::new(std::io::ErrorKind::ConnectionRefused, "refused"),
+        );
+        assert!(io.to_string().contains("connect tcp://x:1"), "{io}");
+        assert!(Pars3Error::protocol("bad tag 0x42").to_string().contains("bad tag"));
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod pipeline;
 pub mod planner;
 pub mod service;
 
-pub use client::{Client, MatrixHandle, Ticket};
+pub use client::{Client, ClientApi, MatrixHandle, Ticket};
 pub use config::Config;
 pub use error::Pars3Error;
 pub use pipeline::{Backend, Coordinator, Prepared};

@@ -53,6 +53,7 @@ use crate::kernel::registry::{self, KernelConfig};
 use crate::kernel::split3::Split3;
 use crate::perf::Roofline;
 use crate::sparse::{Coo, Sss};
+use crate::util::json::Json;
 use std::fmt;
 use std::time::Instant;
 
@@ -276,6 +277,61 @@ impl PlanChoice {
             backend_label(self.backend)
         )
     }
+
+    /// JSON encoding for the wire.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("reorder".to_string(), Json::Str(self.reorder.name().to_string()));
+        m.insert("format".to_string(), Json::Str(self.format.to_string()));
+        m.insert("backend".to_string(), backend_to_json(self.backend));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`PlanChoice::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(PlanChoice {
+            reorder: j.req("reorder")?.as_str()?.parse()?,
+            format: j.req("format")?.as_str()?.parse()?,
+            backend: backend_from_json(j.req("backend")?)?,
+        })
+    }
+}
+
+/// Structured JSON form of a concrete [`Backend`]: `{"kind": ...}` plus
+/// `"p"` for the parallel backends (the display label `pars3(p=8)` is
+/// for humans; the wire wants something parseable without string
+/// surgery).
+pub fn backend_to_json(b: Backend) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    let (kind, p) = match b {
+        Backend::Serial => ("serial", None),
+        Backend::Csr => ("csr", None),
+        Backend::Dgbmv => ("dgbmv", None),
+        Backend::Coloring { p } => ("coloring", Some(p)),
+        Backend::Race { p } => ("race", Some(p)),
+        Backend::Pars3 { p } => ("pars3", Some(p)),
+        Backend::Pjrt => ("pjrt", None),
+    };
+    m.insert("kind".to_string(), Json::Str(kind.to_string()));
+    if let Some(p) = p {
+        m.insert("p".to_string(), Json::Num(p as f64));
+    }
+    Json::Obj(m)
+}
+
+/// Inverse of [`backend_to_json`].
+pub fn backend_from_json(j: &Json) -> anyhow::Result<Backend> {
+    let p = || j.req("p")?.as_usize();
+    Ok(match j.req("kind")?.as_str()? {
+        "serial" => Backend::Serial,
+        "csr" => Backend::Csr,
+        "dgbmv" => Backend::Dgbmv,
+        "coloring" => Backend::Coloring { p: p()? },
+        "race" => Backend::Race { p: p()? },
+        "pars3" => Backend::Pars3 { p: p()? },
+        "pjrt" => Backend::Pjrt,
+        other => anyhow::bail!("unknown backend kind '{other}'"),
+    })
 }
 
 /// One scored candidate on one plan axis.
@@ -388,6 +444,128 @@ impl PlanReport {
             }
         }
         s
+    }
+
+    /// JSON encoding for the wire (`describe` responses carry the full
+    /// evidence tree across process boundaries).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("mode".to_string(), Json::Str(self.mode.name().to_string()));
+        m.insert("reorder".to_string(), self.reorder.to_json());
+        m.insert("axes".to_string(), Json::Arr(self.axes.iter().map(|a| a.to_json()).collect()));
+        m.insert("probe_spmvs".to_string(), Json::Num(self.probe_spmvs as f64));
+        m.insert(
+            "roofline".to_string(),
+            match &self.roofline {
+                Some(r) => r.to_json(),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`PlanReport::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(PlanReport {
+            mode: j.req("mode")?.as_str()?.parse()?,
+            reorder: crate::graph::reorder::ReorderReport::from_json(j.req("reorder")?)?,
+            axes: j
+                .req("axes")?
+                .as_arr()?
+                .iter()
+                .map(AxisReport::from_json)
+                .collect::<anyhow::Result<_>>()?,
+            probe_spmvs: j.req("probe_spmvs")?.as_usize()?,
+            roofline: match j.req("roofline")? {
+                Json::Null => None,
+                r => Some(Roofline::from_json(r)?),
+            },
+        })
+    }
+}
+
+/// Intern an axis name back to the `&'static str` the report structs
+/// hold (there are exactly three axes, ever).
+fn axis_named(name: &str) -> anyhow::Result<&'static str> {
+    Ok(match name {
+        "reorder" => "reorder",
+        "format" => "format",
+        "backend" => "backend",
+        other => anyhow::bail!("unknown plan axis '{other}'"),
+    })
+}
+
+impl PlanCandidate {
+    /// JSON encoding for the wire.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("score".to_string(), Json::Num(self.score));
+        m.insert("detail".to_string(), Json::Str(self.detail.clone()));
+        m.insert(
+            "probe_s".to_string(),
+            match self.probe_s {
+                Some(t) => Json::Num(t),
+                None => Json::Null,
+            },
+        );
+        m.insert("chosen".to_string(), Json::Bool(self.chosen));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`PlanCandidate::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(PlanCandidate {
+            name: j.req("name")?.as_str()?.to_string(),
+            score: j.req("score")?.as_f64()?,
+            detail: j.req("detail")?.as_str()?.to_string(),
+            probe_s: match j.req("probe_s")? {
+                Json::Null => None,
+                t => Some(t.as_f64()?),
+            },
+            chosen: matches!(j.req("chosen")?, Json::Bool(true)),
+        })
+    }
+}
+
+impl AxisReport {
+    /// JSON encoding for the wire.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("axis".to_string(), Json::Str(self.axis.to_string()));
+        m.insert("pinned".to_string(), Json::Bool(self.pinned));
+        m.insert("chosen".to_string(), Json::Str(self.chosen.clone()));
+        m.insert(
+            "candidates".to_string(),
+            Json::Arr(self.candidates.iter().map(|c| c.to_json()).collect()),
+        );
+        m.insert(
+            "decline".to_string(),
+            match &self.decline {
+                Some(d) => Json::Str(d.clone()),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`AxisReport::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(AxisReport {
+            axis: axis_named(j.req("axis")?.as_str()?)?,
+            pinned: matches!(j.req("pinned")?, Json::Bool(true)),
+            chosen: j.req("chosen")?.as_str()?.to_string(),
+            candidates: j
+                .req("candidates")?
+                .as_arr()?
+                .iter()
+                .map(PlanCandidate::from_json)
+                .collect::<anyhow::Result<_>>()?,
+            decline: match j.req("decline")? {
+                Json::Null => None,
+                d => Some(d.as_str()?.to_string()),
+            },
+        })
     }
 }
 
@@ -907,6 +1085,34 @@ mod tests {
         let roof = planned.report.roofline.expect("native plan must carry a roofline");
         assert!(roof.gflops > 0.0 && roof.gbytes > 0.0 && roof.peak_gbytes > 0.0);
         assert!(planned.report.summary().contains("roofline"));
+    }
+
+    #[test]
+    fn plan_report_round_trips_through_json() {
+        // a probed plan fills every optional field: probe timings,
+        // roofline, decline reasons (when the gate declines)
+        let coo = gen::small_test_matrix(90, 13, 2.0);
+        let mut cons = constraints();
+        cons.probe_spmvs = 2;
+        let planned = Planner::plan(&coo, &cons).unwrap();
+        let text = planned.report.to_json().dump();
+        let back = PlanReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, planned.report);
+        let choice = PlanChoice::from_json(&planned.choice.to_json()).unwrap();
+        assert_eq!(choice, planned.choice);
+        // every backend spelling survives the structured form
+        for b in [
+            Backend::Serial,
+            Backend::Csr,
+            Backend::Dgbmv,
+            Backend::Coloring { p: 3 },
+            Backend::Race { p: 5 },
+            Backend::Pars3 { p: 8 },
+            Backend::Pjrt,
+        ] {
+            assert_eq!(backend_from_json(&backend_to_json(b)).unwrap(), b);
+        }
+        assert!(axis_named("storage").is_err());
     }
 
     #[test]

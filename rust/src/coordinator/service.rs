@@ -27,8 +27,8 @@ use crate::kernel::VecBatch;
 use crate::solver::mrs::{MrsOptions, MrsResult};
 use crate::sparse::Coo;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Process-unique service ids: stamped into every [`MatrixHandle`] so a
@@ -79,6 +79,37 @@ pub struct MatrixInfo {
     /// chosen flags, probe timings and decline reasons, plus the full
     /// embedded reordering report.
     pub plan: PlanReport,
+}
+
+impl MatrixInfo {
+    /// JSON encoding for the wire. `describe` is metadata, not the hot
+    /// path, so the whole evidence tree travels as JSON (the f64
+    /// vectors of `spmv`/`solve` stay raw — see [`crate::net::proto`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("n".to_string(), Json::Num(self.n as f64));
+        m.insert("nnz_lower".to_string(), Json::Num(self.nnz_lower as f64));
+        m.insert("bw_before".to_string(), Json::Num(self.bw_before as f64));
+        m.insert("reordered_bw".to_string(), Json::Num(self.reordered_bw as f64));
+        m.insert("choice".to_string(), self.choice.to_json());
+        m.insert("plan".to_string(), self.plan.to_json());
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`MatrixInfo::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        Ok(MatrixInfo {
+            name: j.req("name")?.as_str()?.to_string(),
+            n: j.req("n")?.as_usize()?,
+            nnz_lower: j.req("nnz_lower")?.as_usize()?,
+            bw_before: j.req("bw_before")?.as_usize()?,
+            reordered_bw: j.req("reordered_bw")?.as_usize()?,
+            choice: PlanChoice::from_json(j.req("choice")?)?,
+            plan: PlanReport::from_json(j.req("plan")?)?,
+        })
+    }
 }
 
 /// A request routed to one shard worker. Each variant carries its own
@@ -139,6 +170,26 @@ pub(crate) enum ShardMsg {
     Shutdown,
 }
 
+impl ShardMsg {
+    /// Resolve this request's ticket with `err` without executing it —
+    /// the graceful-shutdown path: requests still queued when the shard
+    /// drains reply typed [`Pars3Error::ServiceStopped`] instead of
+    /// leaving the ticket to a `WorkerPoisoned` channel drop.
+    fn reject(self, err: Pars3Error) {
+        match self {
+            ShardMsg::Prepare { reply, .. } => drop(reply.send(Err(err))),
+            ShardMsg::Spmv { reply, .. } => drop(reply.send(Err(err))),
+            ShardMsg::Solve { reply, .. } => drop(reply.send(Err(err))),
+            ShardMsg::SpmvBatch { reply, .. } => drop(reply.send(Err(err))),
+            ShardMsg::SolveBatch { reply, .. } => drop(reply.send(Err(err))),
+            ShardMsg::Describe { reply, .. } => drop(reply.send(Err(err))),
+            ShardMsg::Release { reply, .. } => drop(reply.send(Err(err))),
+            ShardMsg::CacheStats { reply } => drop(reply.send(Err(err))),
+            ShardMsg::Shutdown => {}
+        }
+    }
+}
+
 /// A shard-local matrix slot. `prep` is `None` once released; the
 /// generation is monotone across the slot's whole lifetime (bumped by
 /// replace, release, and re-occupation), so no historical handle can
@@ -187,7 +238,21 @@ fn shard_worker(
         // counter was incremented by the client at submission)
         depth.fetch_sub(1, Ordering::Relaxed);
         match msg {
-            ShardMsg::Shutdown => break,
+            ShardMsg::Shutdown => {
+                // graceful drain: anything queued behind the shutdown
+                // (FIFO, so it was submitted after stop began) resolves
+                // to a typed ServiceStopped instead of a dropped channel
+                loop {
+                    match rx.try_recv() {
+                        Ok(late) => {
+                            depth.fetch_sub(1, Ordering::Relaxed);
+                            late.reject(Pars3Error::ServiceStopped);
+                        }
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+                break;
+            }
             ShardMsg::Prepare { replace, name, coo, reply } => {
                 let result = (|| {
                     // validate the replace target BEFORE the expensive
@@ -293,12 +358,16 @@ fn shard_worker(
 }
 
 /// Handle to a running sharded service. [`Service::client`] mints
-/// [`Client`]s; dropping (or [`Service::shutdown`]) stops every shard
-/// worker — tickets still in flight then resolve to
-/// [`Pars3Error::WorkerPoisoned`], so drain your tickets first.
+/// [`Client`]s; [`Service::stop`] (idempotent, `&self` so it works
+/// through an `Arc` from a network front-end), [`Service::shutdown`],
+/// or dropping stops every shard worker **gracefully**: requests
+/// dequeued before the stop complete normally, requests still queued —
+/// and every submission from then on — resolve to the typed
+/// [`Pars3Error::ServiceStopped`] instead of hanging or reporting a
+/// worker panic.
 pub struct Service {
     shared: Arc<ServiceShared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Service {
@@ -323,7 +392,10 @@ impl Service {
             senders.push(tx);
             depths.push(gauge);
         }
-        Self { shared: Arc::new(ServiceShared::new(senders, depths, service_id)), workers }
+        Self {
+            shared: Arc::new(ServiceShared::new(senders, depths, service_id)),
+            workers: Mutex::new(workers),
+        }
     }
 
     /// A new client over this service's shard pool. Clients (and their
@@ -338,7 +410,28 @@ impl Service {
         self.shared.shards.len()
     }
 
-    fn stop(&mut self) {
+    /// Stop the service **gracefully** and join every shard worker.
+    /// Takes `&self` so a network front-end holding the service in an
+    /// `Arc` can stop it from a connection thread (a remote `Stop`
+    /// message). The sequence:
+    ///
+    /// 1. The shared `stopped` flag flips, so every submission from any
+    ///    [`Client`] clone from here on resolves
+    ///    [`Pars3Error::ServiceStopped`] without touching a queue.
+    /// 2. Each shard receives a shutdown message. FIFO order means
+    ///    requests already queued ahead of it complete normally; the
+    ///    worker then drains anything behind it, rejecting each with
+    ///    `ServiceStopped`.
+    /// 3. The workers are joined.
+    ///
+    /// Idempotent: later calls (including [`Drop`]) find the flag set
+    /// and no workers left to join.
+    pub fn stop(&self) {
+        self.shared.stopped.store(true, Ordering::SeqCst);
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        if workers.is_empty() {
+            return;
+        }
         for (tx, gauge) in self.shared.shards.iter().zip(&self.shared.depths) {
             // the worker decrements the gauge for every message it
             // dequeues, so count the shutdown too (send failure means
@@ -351,20 +444,21 @@ impl Service {
                 gauge.fetch_sub(1, Ordering::Relaxed);
             }
         }
-        for w in std::mem::take(&mut self.workers) {
+        for w in workers {
             let _ = w.join();
         }
     }
 
-    /// Stop every shard worker and join them.
-    pub fn shutdown(mut self) {
+    /// Stop every shard worker and join them (consuming spelling of
+    /// [`Service::stop`]).
+    pub fn shutdown(self) {
         self.stop();
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        self.stop();
+        self.stop(); // no-op when stop()/shutdown() already ran
     }
 }
 
@@ -702,6 +796,52 @@ mod tests {
         let err = client.prepare("bad", coo).wait().unwrap_err();
         assert!(matches!(err, Pars3Error::InvalidMatrix(_)), "{err}");
         svc.shutdown();
+    }
+
+    #[test]
+    fn stop_is_graceful_and_types_late_requests() {
+        use crate::coordinator::client::Ticket;
+        let svc = Service::start(one_shard_cfg());
+        let client = svc.client();
+        let h = client.prepare("m", gen::small_test_matrix(60, 50, 2.0)).wait().unwrap();
+
+        // a request in flight when stop() is called was queued BEFORE
+        // the shutdown message (FIFO), so it completes normally
+        let inflight = client.spmv(&h, vec![1.0; 60], Backend::Serial);
+        svc.stop();
+        assert_eq!(inflight.wait().unwrap().len(), 60, "in-flight work completes on stop");
+
+        // every submission after stop() fails typed, without hanging
+        let err = client.spmv(&h, vec![1.0; 60], Backend::Serial).wait().unwrap_err();
+        assert_eq!(err, Pars3Error::ServiceStopped);
+        let err = client.prepare("late", gen::small_test_matrix(40, 51, 2.0)).wait().unwrap_err();
+        assert_eq!(err, Pars3Error::ServiceStopped);
+        let err = client.cache_stats(0).wait().unwrap_err();
+        assert_eq!(err, Pars3Error::ServiceStopped);
+
+        // a request that raced the flag and landed in the queue BEHIND
+        // the shutdown message is drained with the same typed error.
+        // Reconstruct that interleaving deterministically: queue both
+        // messages, then run the worker loop inline.
+        let (tx, rx) = sync_channel::<ShardMsg>(8);
+        let gauge = Arc::new(AtomicUsize::new(2));
+        let (reply, reply_rx) = std::sync::mpsc::channel();
+        tx.send(ShardMsg::Shutdown).unwrap();
+        tx.send(ShardMsg::CacheStats { reply }).unwrap();
+        shard_worker(0, 999, one_shard_cfg(), rx, gauge.clone());
+        let t: Ticket<CacheStats> = Ticket::pending(0, reply_rx);
+        assert_eq!(t.wait().unwrap_err(), Pars3Error::ServiceStopped);
+        assert_eq!(gauge.load(Ordering::Relaxed), 0, "drain must settle the queue gauge");
+
+        // stop through an Arc (the network front-end shape: connection
+        // threads share the service and stop it on a remote Stop)
+        let svc = Arc::new(Service::start(one_shard_cfg()));
+        let svc2 = svc.clone();
+        std::thread::spawn(move || svc2.stop()).join().unwrap();
+        assert_eq!(
+            svc.client().cache_stats(0).wait().unwrap_err(),
+            Pars3Error::ServiceStopped
+        );
     }
 
     #[test]

@@ -148,6 +148,66 @@ pub struct ReorderReport {
     pub candidates: Vec<CandidateScore>,
 }
 
+/// Intern a strategy name back to its `&'static str` spelling (the
+/// report structs hold static names; a deserializer has only owned
+/// text, so the known spellings are the bridge).
+pub fn strategy_named(name: &str) -> anyhow::Result<&'static str> {
+    Ok(match name {
+        "natural" => "natural",
+        "rcm" => "rcm",
+        "rcm-bicriteria" => "rcm-bicriteria",
+        other => anyhow::bail!("unknown reorder strategy name '{other}'"),
+    })
+}
+
+impl ComponentStats {
+    /// JSON encoding for the wire.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("start".to_string(), Json::Num(self.start as f64));
+        m.insert("size".to_string(), Json::Num(self.size as f64));
+        m.insert("height".to_string(), Json::Num(self.height as f64));
+        m.insert("width".to_string(), Json::Num(self.width as f64));
+        m.insert("bw".to_string(), Json::Num(self.bw as f64));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`ComponentStats::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        Ok(ComponentStats {
+            start: j.req("start")?.as_usize()? as u32,
+            size: j.req("size")?.as_usize()?,
+            height: j.req("height")?.as_usize()?,
+            width: j.req("width")?.as_usize()?,
+            bw: j.req("bw")?.as_usize()?,
+        })
+    }
+}
+
+impl CandidateScore {
+    /// JSON encoding for the wire.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("strategy".to_string(), Json::Str(self.strategy.to_string()));
+        m.insert("bandwidth".to_string(), Json::Num(self.bandwidth as f64));
+        m.insert("profile".to_string(), Json::Num(self.profile as f64));
+        m.insert("chosen".to_string(), Json::Bool(self.chosen));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`CandidateScore::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        Ok(CandidateScore {
+            strategy: strategy_named(j.req("strategy")?.as_str()?)?,
+            bandwidth: j.req("bandwidth")?.as_usize()?,
+            profile: j.req("profile")?.as_usize()? as u64,
+            chosen: matches!(j.req("chosen")?, crate::util::json::Json::Bool(true)),
+        })
+    }
+}
+
 impl ReorderReport {
     /// One-line human summary for CLI/serve output.
     pub fn summary(&self) -> String {
@@ -161,6 +221,57 @@ impl ReorderReport {
             self.profile_after,
             self.components.len()
         )
+    }
+
+    /// JSON encoding for the wire (`Client::describe` now crosses
+    /// process boundaries, and the report's evidence must arrive
+    /// intact).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("requested".to_string(), Json::Str(self.requested.name().to_string()));
+        m.insert("strategy".to_string(), Json::Str(self.strategy.to_string()));
+        m.insert("bw_before".to_string(), Json::Num(self.bw_before as f64));
+        m.insert("bw_after".to_string(), Json::Num(self.bw_after as f64));
+        m.insert("profile_before".to_string(), Json::Num(self.profile_before as f64));
+        m.insert("profile_after".to_string(), Json::Num(self.profile_after as f64));
+        m.insert("height".to_string(), Json::Num(self.height as f64));
+        m.insert("width".to_string(), Json::Num(self.width as f64));
+        m.insert(
+            "components".to_string(),
+            Json::Arr(self.components.iter().map(|c| c.to_json()).collect()),
+        );
+        m.insert(
+            "candidates".to_string(),
+            Json::Arr(self.candidates.iter().map(|c| c.to_json()).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`ReorderReport::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        Ok(ReorderReport {
+            requested: j.req("requested")?.as_str()?.parse()?,
+            strategy: strategy_named(j.req("strategy")?.as_str()?)?,
+            bw_before: j.req("bw_before")?.as_usize()?,
+            bw_after: j.req("bw_after")?.as_usize()?,
+            profile_before: j.req("profile_before")?.as_usize()? as u64,
+            profile_after: j.req("profile_after")?.as_usize()? as u64,
+            height: j.req("height")?.as_usize()?,
+            width: j.req("width")?.as_usize()?,
+            components: j
+                .req("components")?
+                .as_arr()?
+                .iter()
+                .map(ComponentStats::from_json)
+                .collect::<anyhow::Result<_>>()?,
+            candidates: j
+                .req("candidates")?
+                .as_arr()?
+                .iter()
+                .map(CandidateScore::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        })
     }
 }
 
@@ -587,5 +698,18 @@ mod tests {
         // direct strategies still expose their self-score
         assert_eq!(report.candidates.len(), 1);
         assert!(report.candidates[0].chosen);
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        // a multi-component Auto run exercises every field: component
+        // stats, full candidate table, and the interned strategy names
+        let g = Adjacency::from_lower_edges(7, &[(1, 0), (2, 1), (4, 3), (5, 4)]);
+        let (_, report) = reorder_with_report(&g, ReorderPolicy::Auto, 0.0);
+        let text = report.to_json().dump();
+        let back =
+            ReorderReport::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, report);
+        assert!(strategy_named("symrcm").is_err());
     }
 }

@@ -16,13 +16,15 @@
 //!   `artifacts/` and executed from Rust via PJRT (`runtime`).
 //!
 //! Start with [`coordinator::Coordinator`] for the high-level pipeline,
-//! or [`kernel::pars3`] for the parallel kernel itself. See DESIGN.md
+//! [`kernel::pars3`] for the parallel kernel itself, or [`net::Server`]
+//! to put the sharded service on a TCP/Unix socket. See DESIGN.md
 //! for the module inventory and EXPERIMENTS.md for reproduced results.
 
 pub mod coordinator;
 pub mod graph;
 pub mod kernel;
 pub mod mpisim;
+pub mod net;
 pub mod perf;
 pub mod report;
 pub mod runtime;

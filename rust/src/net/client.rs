@@ -1,0 +1,406 @@
+//! [`RemoteClient`]: the in-process client's surface over a socket.
+//!
+//! Submission has the same non-blocking shape as
+//! [`Client`](crate::coordinator::Client): every method encodes one
+//! request frame, registers a resolver under the request id, writes the
+//! frame, and returns a [`Ticket`] immediately — so a caller can put a
+//! burst of requests on the wire and only then start waiting, exactly
+//! like the shard-queue pipelining the service tests rely on. A reader
+//! thread matches each incoming response to its resolver by id.
+//!
+//! Failure stays typed end to end: a request the server rejects comes
+//! back as the original [`Pars3Error`] (wire tag, not stringly); a torn
+//! connection resolves every in-flight *and* every future ticket to
+//! [`Pars3Error::Io`] instead of hanging.
+
+use crate::coordinator::{
+    Backend, CacheStats, ClientApi, MatrixHandle, MatrixInfo, Pars3Error, Ticket,
+};
+use crate::kernel::VecBatch;
+use crate::net::frame::{write_frame, FrameDecoder};
+use crate::net::proto::{Request, Response};
+use crate::net::{Conn, Listen};
+use crate::solver::mrs::{MrsOptions, MrsResult};
+use crate::sparse::Coo;
+use std::collections::HashMap;
+use std::io::Read;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Called by the reader thread with the matched response (or the
+/// connection-failure error); forwards the typed result into the
+/// ticket's reply channel.
+type Resolver = Box<dyn FnOnce(Result<Response, Pars3Error>) + Send>;
+
+#[derive(Default)]
+struct PendingMap {
+    map: HashMap<u64, Resolver>,
+    /// Set once when the connection dies; every later submission
+    /// resolves to a clone of this immediately.
+    dead: Option<Pars3Error>,
+}
+
+/// A connection to a [`Server`](crate::net::Server), speaking the same
+/// typed, pipelined request surface as the in-process client.
+pub struct RemoteClient {
+    /// Write half. Requests from concurrent callers interleave at frame
+    /// granularity, never inside a frame.
+    conn: Mutex<Box<dyn Conn>>,
+    /// Request ids are connection-local; 0 is reserved for
+    /// connection-level server errors, so the counter starts at 1.
+    next_id: AtomicU64,
+    pending: Arc<Mutex<PendingMap>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl RemoteClient {
+    /// Connect to a serving address (`tcp://host:port` or
+    /// `uds:/path`).
+    pub fn connect(addr: &Listen) -> Result<RemoteClient, Pars3Error> {
+        let conn = crate::net::connect(addr)?;
+        let read_half = conn
+            .try_clone_conn()
+            .map_err(|e| Pars3Error::io("clone connection", e))?;
+        let pending = Arc::new(Mutex::new(PendingMap::default()));
+        let reader = {
+            let pending = pending.clone();
+            std::thread::spawn(move || reader_loop(read_half, pending))
+        };
+        Ok(RemoteClient {
+            conn: Mutex::new(conn),
+            next_id: AtomicU64::new(1),
+            pending,
+            reader: Some(reader),
+        })
+    }
+
+    /// Ask the server to stop its service gracefully (see
+    /// [`Service::stop`](crate::coordinator::Service::stop)): in-flight
+    /// work completes, queued and later work resolves to
+    /// [`Pars3Error::ServiceStopped`], and the server's accept loop
+    /// exits. The ticket resolves when the server acknowledges.
+    pub fn stop(&self) -> Ticket<()> {
+        self.submit(
+            |id| Request::Stop { id },
+            |resp| match resp {
+                Response::Unit { .. } => Ok(()),
+                other => Err(unexpected("stop", &other)),
+            },
+        )
+    }
+
+    /// Encode-register-write one request; the returned ticket resolves
+    /// when the reader thread matches the response id.
+    fn submit<T: Send + 'static>(
+        &self,
+        make: impl FnOnce(u64) -> Request,
+        extract: fn(Response) -> Result<T, Pars3Error>,
+    ) -> Ticket<T> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel::<Result<T, Pars3Error>>();
+        {
+            let mut p = self.pending.lock().unwrap();
+            if let Some(err) = &p.dead {
+                return Ticket::ready(0, Err(err.clone()));
+            }
+            // register before writing: the response cannot overtake a
+            // request that is not on the wire yet
+            p.map.insert(
+                id,
+                Box::new(move |r: Result<Response, Pars3Error>| {
+                    let _ = tx.send(r.and_then(extract));
+                }),
+            );
+        }
+        let (tag, payload) = make(id).encode();
+        let wrote = {
+            let mut w = self.conn.lock().unwrap();
+            write_frame(&mut *w, tag, &payload)
+                .and_then(|()| w.flush().map_err(|e| Pars3Error::io("flush request", e)))
+        };
+        if let Err(err) = wrote {
+            if let Some(resolve) = self.pending.lock().unwrap().map.remove(&id) {
+                resolve(Err(err));
+            }
+        }
+        Ticket::pending(0, rx)
+    }
+}
+
+impl Drop for RemoteClient {
+    fn drop(&mut self) {
+        // unblocks the reader thread's blocking read
+        self.conn.lock().unwrap().shutdown_conn();
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Short response descriptor for mismatch errors (never `Debug` — a
+/// response can carry megabytes of vector data).
+fn kind(resp: &Response) -> &'static str {
+    match resp {
+        Response::Handle { .. } => "handle",
+        Response::Unit { .. } => "unit",
+        Response::Vec { .. } => "vec",
+        Response::Batch { .. } => "batch",
+        Response::Solve { .. } => "solve",
+        Response::SolveBatch { .. } => "solve-batch",
+        Response::Info { .. } => "info",
+        Response::Stats { .. } => "stats",
+        Response::Error { .. } => "error",
+    }
+}
+
+fn unexpected(what: &str, got: &Response) -> Pars3Error {
+    Pars3Error::protocol(format!("unexpected {} response to {what}", kind(got)))
+}
+
+fn reader_loop(mut conn: Box<dyn Conn>, pending: Arc<Mutex<PendingMap>>) {
+    let mut dec = FrameDecoder::new();
+    let mut buf = [0u8; 64 * 1024];
+    let fail: Pars3Error = 'conn: loop {
+        let n = match conn.read(&mut buf) {
+            Ok(0) => break 'conn Pars3Error::Io("server closed the connection".to_string()),
+            Err(e) => break 'conn Pars3Error::io("read response", e),
+            Ok(n) => n,
+        };
+        dec.feed(&buf[..n]);
+        loop {
+            let resp = match dec.next_frame() {
+                Ok(None) => break,
+                Err(err) => break 'conn err,
+                Ok(Some((tag, payload))) => match Response::decode(tag, &payload) {
+                    Ok(resp) => resp,
+                    Err(err) => break 'conn err,
+                },
+            };
+            match resp.id() {
+                // id 0: the server reports a connection-level failure
+                // (unparseable request) — framing is unrecoverable
+                0 => {
+                    break 'conn match resp {
+                        Response::Error { err, .. } => err,
+                        other => unexpected("connection-level frame", &other),
+                    };
+                }
+                id => {
+                    let resolver = pending.lock().unwrap().map.remove(&id);
+                    if let Some(resolve) = resolver {
+                        resolve(Ok(resp));
+                    }
+                    // no resolver: the write failed after registration
+                    // and already resolved the ticket — drop the frame
+                }
+            }
+        }
+    };
+    // the connection is gone: everything in flight, and everything
+    // submitted from now on, resolves to the same typed error
+    let mut p = pending.lock().unwrap();
+    for (_, resolve) in p.map.drain() {
+        resolve(Err(fail.clone()));
+    }
+    p.dead = Some(fail);
+}
+
+impl ClientApi for RemoteClient {
+    fn prepare(&self, name: &str, coo: Coo) -> Ticket<MatrixHandle> {
+        let name = name.to_string();
+        self.submit(
+            |id| Request::Prepare { id, name, coo },
+            |resp| match resp {
+                Response::Handle { handle, .. } => Ok(handle),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("prepare", &other)),
+            },
+        )
+    }
+
+    fn prepare_replace(
+        &self,
+        handle: &MatrixHandle,
+        name: &str,
+        coo: Coo,
+    ) -> Ticket<MatrixHandle> {
+        let (handle, name) = (handle.clone(), name.to_string());
+        self.submit(
+            |id| Request::PrepareReplace { id, handle, name, coo },
+            |resp| match resp {
+                Response::Handle { handle, .. } => Ok(handle),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("prepare_replace", &other)),
+            },
+        )
+    }
+
+    fn release(&self, handle: &MatrixHandle) -> Ticket<()> {
+        let handle = handle.clone();
+        self.submit(
+            |id| Request::Release { id, handle },
+            |resp| match resp {
+                Response::Unit { .. } => Ok(()),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("release", &other)),
+            },
+        )
+    }
+
+    fn spmv(&self, handle: &MatrixHandle, x: Vec<f64>, backend: Backend) -> Ticket<Vec<f64>> {
+        let handle = handle.clone();
+        self.submit(
+            |id| Request::Spmv { id, handle, x, backend },
+            |resp| match resp {
+                Response::Vec { y, .. } => Ok(y),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("spmv", &other)),
+            },
+        )
+    }
+
+    fn solve(
+        &self,
+        handle: &MatrixHandle,
+        b: Vec<f64>,
+        opts: MrsOptions,
+        backend: Backend,
+    ) -> Ticket<MrsResult> {
+        let handle = handle.clone();
+        self.submit(
+            |id| Request::Solve { id, handle, b, opts, backend },
+            |resp| match resp {
+                Response::Solve { result, .. } => Ok(result),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("solve", &other)),
+            },
+        )
+    }
+
+    fn spmv_batch(
+        &self,
+        handle: &MatrixHandle,
+        xs: VecBatch,
+        backend: Backend,
+    ) -> Ticket<VecBatch> {
+        let handle = handle.clone();
+        self.submit(
+            |id| Request::SpmvBatch { id, handle, xs, backend },
+            |resp| match resp {
+                Response::Batch { ys, .. } => Ok(ys),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("spmv_batch", &other)),
+            },
+        )
+    }
+
+    fn solve_batch(
+        &self,
+        handle: &MatrixHandle,
+        bs: VecBatch,
+        opts: MrsOptions,
+        backend: Backend,
+    ) -> Ticket<Vec<MrsResult>> {
+        let handle = handle.clone();
+        self.submit(
+            |id| Request::SolveBatch { id, handle, bs, opts, backend },
+            |resp| match resp {
+                Response::SolveBatch { results, .. } => Ok(results),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("solve_batch", &other)),
+            },
+        )
+    }
+
+    fn describe(&self, handle: &MatrixHandle) -> Ticket<MatrixInfo> {
+        let handle = handle.clone();
+        self.submit(
+            |id| Request::Describe { id, handle },
+            |resp| match resp {
+                Response::Info { info, .. } => Ok(info),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("describe", &other)),
+            },
+        )
+    }
+
+    fn cache_stats(&self, shard: usize) -> Ticket<CacheStats> {
+        let shard = shard as u64;
+        self.submit(
+            |id| Request::CacheStats { id, shard: Some(shard) },
+            |resp| match resp {
+                Response::Stats { stats, .. } => stats
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| Pars3Error::protocol("empty stats response")),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("cache_stats", &other)),
+            },
+        )
+    }
+
+    fn cache_stats_all(&self) -> Ticket<Vec<CacheStats>> {
+        self.submit(
+            |id| Request::CacheStats { id, shard: None },
+            |resp| match resp {
+                Response::Stats { stats, .. } => Ok(stats),
+                Response::Error { err, .. } => Err(err),
+                other => Err(unexpected("cache_stats_all", &other)),
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Config;
+    use crate::net::Server;
+    use crate::sparse::gen;
+
+    #[test]
+    fn remote_client_round_trips_over_uds() {
+        let dir = std::env::temp_dir().join(format!("pars3-rc-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let listen = Listen::Uds(dir.join("rc.sock"));
+        let server =
+            Server::bind(&listen, Config { shards: 1, ..Config::default() }).unwrap();
+        let client = RemoteClient::connect(&listen).unwrap();
+
+        let n = 80;
+        let h = client.prepare("remote", gen::small_test_matrix(n, 11, 2.0)).wait().unwrap();
+        let y = client.spmv(&h, vec![1.0; n], Backend::Serial).wait().unwrap();
+        assert_eq!(y.len(), n);
+        let info = client.describe(&h).wait().unwrap();
+        assert_eq!((info.name.as_str(), info.n), ("remote", n));
+        client.release(&h).wait().unwrap();
+
+        // graceful remote stop: acknowledged, then typed refusals
+        client.stop().wait().unwrap();
+        let err = client.spmv(&h, vec![1.0; n], Backend::Serial).wait().unwrap_err();
+        assert!(matches!(err, Pars3Error::ServiceStopped), "{err}");
+        server.join();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn a_dead_connection_yields_typed_io_errors() {
+        // a "server" that accepts and immediately hangs up
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = Listen::Tcp(l.local_addr().unwrap().to_string());
+        let client = RemoteClient::connect(&addr).unwrap();
+        let (sock, _) = l.accept().unwrap();
+
+        let fake = MatrixHandle { service: 1, shard: 0, slot: 0, generation: 1 };
+        let t = client.spmv(&fake, vec![1.0], Backend::Serial);
+        drop(sock); // connection dies with the request in flight
+        let err = t.wait().unwrap_err();
+        assert!(matches!(err, Pars3Error::Io(_)), "{err}");
+
+        // later submissions fail the same way instead of hanging
+        let err = client.describe(&fake).wait().unwrap_err();
+        assert!(matches!(err, Pars3Error::Io(_)), "{err}");
+    }
+}

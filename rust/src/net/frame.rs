@@ -1,0 +1,195 @@
+//! Length-prefixed framing: `[len: u32 LE][tag: u8][payload]`.
+//!
+//! `len` counts the tag byte plus the payload, so a frame occupies
+//! `4 + len` bytes on the wire and `len >= 1` always. The decoder is
+//! incremental: feed it whatever the socket returned — half a length
+//! prefix, three frames and a torn fourth — and it yields exactly the
+//! complete frames, keeping the remainder buffered. TCP guarantees no
+//! particular read boundaries, so the codec must not assume any.
+
+use crate::coordinator::Pars3Error;
+use std::io::Write;
+
+/// Upper bound on `len` (1 GiB): a corrupt or malicious length prefix
+/// fails as a typed protocol error instead of a gigabyte allocation.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Write one frame. The caller batches `flush` as it sees fit.
+pub fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<(), Pars3Error> {
+    let len = payload.len() as u64 + 1;
+    if len > MAX_FRAME as u64 {
+        return Err(Pars3Error::protocol(format!("frame too large: {len} bytes")));
+    }
+    let mut head = [0u8; 5];
+    head[..4].copy_from_slice(&(len as u32).to_le_bytes());
+    head[4] = tag;
+    w.write_all(&head).map_err(|e| Pars3Error::io("write frame header", e))?;
+    w.write_all(payload).map_err(|e| Pars3Error::io("write frame payload", e))?;
+    Ok(())
+}
+
+/// Incremental frame decoder. [`feed`](Self::feed) raw bytes in, drain
+/// complete `(tag, payload)` frames out with
+/// [`next_frame`](Self::next_frame).
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Read position inside `buf` (consumed frames are compacted away
+    /// lazily, so feeding many small chunks does not repeatedly shift
+    /// the tail).
+    pos: usize,
+}
+
+impl FrameDecoder {
+    /// Empty decoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append raw bytes from the transport.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // compact before growing: everything before `pos` is consumed
+        if self.pos > 0 && self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 4096 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Next complete frame, `Ok(None)` if more bytes are needed, or a
+    /// [`Pars3Error::Protocol`] on a corrupt length prefix. After an
+    /// error the stream has no recoverable framing — drop the
+    /// connection.
+    pub fn next_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>, Pars3Error> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]);
+        if len == 0 || len > MAX_FRAME {
+            return Err(Pars3Error::protocol(format!("bad frame length {len}")));
+        }
+        if avail.len() < 4 + len as usize {
+            return Ok(None);
+        }
+        let tag = avail[4];
+        let payload = avail[5..4 + len as usize].to_vec();
+        self.pos += 4 + len as usize;
+        Ok(Some((tag, payload)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn encode(tag: u8, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, tag, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn frame_layout_is_len_tag_payload() {
+        let bytes = encode(7, b"abc");
+        assert_eq!(&bytes[..4], &4u32.to_le_bytes(), "len counts tag + payload");
+        assert_eq!(bytes[4], 7);
+        assert_eq!(&bytes[5..], b"abc");
+
+        // empty payload is a valid frame (len = 1, just the tag)
+        let bytes = encode(9, b"");
+        assert_eq!(&bytes[..4], &1u32.to_le_bytes());
+        assert_eq!(bytes.len(), 5);
+    }
+
+    #[test]
+    fn decoder_survives_byte_at_a_time_feeding() {
+        let mut wire = encode(1, b"hello");
+        wire.extend(encode(2, b""));
+        wire.extend(encode(3, &[0xff; 300]));
+
+        let mut dec = FrameDecoder::new();
+        let mut frames = Vec::new();
+        for b in &wire {
+            dec.feed(std::slice::from_ref(b));
+            while let Some(f) = dec.next_frame().unwrap() {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames.len(), 3);
+        assert_eq!(frames[0], (1, b"hello".to_vec()));
+        assert_eq!(frames[1], (2, Vec::new()));
+        assert_eq!(frames[2], (3, vec![0xff; 300]));
+        assert_eq!(dec.pending(), 0);
+    }
+
+    #[test]
+    fn decoder_survives_arbitrary_split_points() {
+        let mut wire = encode(5, b"first");
+        wire.extend(encode(6, b"second frame with more bytes"));
+        // every possible single split of the two-frame stream
+        for cut in 0..=wire.len() {
+            let mut dec = FrameDecoder::new();
+            let mut frames = Vec::new();
+            for chunk in [&wire[..cut], &wire[cut..]] {
+                dec.feed(chunk);
+                while let Some(f) = dec.next_frame().unwrap() {
+                    frames.push(f);
+                }
+            }
+            assert_eq!(frames.len(), 2, "cut at {cut}");
+            assert_eq!(frames[0].1, b"first", "cut at {cut}");
+            assert_eq!(frames[1].1, b"second frame with more bytes", "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn torn_header_yields_nothing_until_complete() {
+        let wire = encode(1, b"xy");
+        let mut dec = FrameDecoder::new();
+        dec.feed(&wire[..3]); // half the length prefix
+        assert!(dec.next_frame().unwrap().is_none());
+        dec.feed(&wire[3..5]); // length + tag, no payload yet
+        assert!(dec.next_frame().unwrap().is_none());
+        dec.feed(&wire[5..]);
+        assert_eq!(dec.next_frame().unwrap(), Some((1, b"xy".to_vec())));
+    }
+
+    #[test]
+    fn corrupt_length_prefix_is_a_typed_protocol_error() {
+        let mut dec = FrameDecoder::new();
+        dec.feed(&0u32.to_le_bytes()); // len 0: no room for the tag
+        assert!(matches!(dec.next_frame(), Err(Pars3Error::Protocol(_))));
+
+        let mut dec = FrameDecoder::new();
+        dec.feed(&u32::MAX.to_le_bytes()); // 4 GiB "frame"
+        let err = dec.next_frame().unwrap_err();
+        assert!(err.to_string().contains("frame length"), "{err}");
+
+        // the writer refuses to produce an oversized frame too
+        let huge = vec![0u8; MAX_FRAME as usize];
+        let mut out = Vec::new();
+        assert!(matches!(write_frame(&mut out, 1, &huge), Err(Pars3Error::Protocol(_))));
+    }
+
+    #[test]
+    fn long_sessions_compact_the_consumed_prefix() {
+        let mut dec = FrameDecoder::new();
+        let frame = encode(1, &[7u8; 100]);
+        for _ in 0..200 {
+            dec.feed(&frame);
+            assert!(dec.next_frame().unwrap().is_some());
+        }
+        // consumed bytes must not accumulate without bound
+        assert!(dec.buf.len() < 3 * frame.len(), "buffer grew to {}", dec.buf.len());
+        assert_eq!(dec.pending(), 0);
+    }
+}

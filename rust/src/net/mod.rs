@@ -1,0 +1,158 @@
+//! Out-of-process serving: wire protocol, TCP/UDS transport, and a
+//! remote client with the in-process `Client`'s shape.
+//!
+//! The sharded [`Service`](crate::coordinator::Service) (PR 4) serves
+//! in-process [`Client`](crate::coordinator::Client)s; this module puts
+//! the same typed surface on a socket so the "heavy traffic" north star
+//! stops being bounded by one process. The paper's band split already
+//! bounds cross-rank traffic to halo rows, and distributed-memory RCM
+//! (Azad et al.) shows even `prepare` tolerates a process boundary —
+//! so the rank/shard abstractions promote to real transports:
+//!
+//! * [`frame`] — length-prefixed framing (4-byte LE length, 1-byte
+//!   message tag, payload) with an incremental decoder that tolerates
+//!   torn reads: a frame split at any byte boundary reassembles.
+//! * [`proto`] — the binary message layer: every request/response of
+//!   the typed client surface, with f64 vectors and batches encoded as
+//!   raw little-endian bytes (no JSON float round-trip on the hot
+//!   path; only `describe`'s evidence tree travels as JSON).
+//! * [`server`] — accepts TCP and Unix-domain connections; one reader
+//!   thread per connection submits into the sharded service through
+//!   the non-blocking in-process `Client`, so a burst of pipelined
+//!   requests is in flight across shards before the first response is
+//!   written back.
+//! * [`client`] — [`RemoteClient`]: `prepare`/`spmv`/`solve`/... with
+//!   the same submit-then-[`Ticket`](crate::coordinator::Ticket) shape
+//!   as the in-process client, behind the shared
+//!   [`ClientApi`](crate::coordinator::ClientApi) trait, so the same
+//!   backend-sweep suite runs against both transports.
+//!
+//! Responses are matched by request id, and each connection writes its
+//! replies in submission order — within one shard that is execution
+//! order anyway (FIFO queues), so pipelining survives the wire intact.
+
+pub mod client;
+pub mod frame;
+pub mod proto;
+pub mod server;
+
+pub use client::RemoteClient;
+pub use server::Server;
+
+use crate::coordinator::Pars3Error;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+
+/// A serve/connect address: `tcp://host:port` or `uds:/path/to.sock`.
+///
+/// TCP reaches across machines; a Unix-domain socket stays on-box but
+/// skips the TCP stack (no checksums, no Nagle, larger effective
+/// buffers), which measurably matters at small-message rates — see
+/// `benches/remote_throughput.rs` for the k=1 gap.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Listen {
+    /// TCP address in `host:port` form.
+    Tcp(String),
+    /// Unix-domain socket path.
+    Uds(PathBuf),
+}
+
+impl std::fmt::Display for Listen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Listen::Tcp(a) => write!(f, "tcp://{a}"),
+            Listen::Uds(p) => write!(f, "uds:{}", p.display()),
+        }
+    }
+}
+
+impl std::str::FromStr for Listen {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if let Some(addr) = s.strip_prefix("tcp://") {
+            if addr.is_empty() {
+                anyhow::bail!("empty tcp address in '{s}'");
+            }
+            return Ok(Listen::Tcp(addr.to_string()));
+        }
+        if let Some(path) = s.strip_prefix("uds:") {
+            if path.is_empty() {
+                anyhow::bail!("empty socket path in '{s}'");
+            }
+            return Ok(Listen::Uds(PathBuf::from(path)));
+        }
+        anyhow::bail!("unknown listen address '{s}' (expected tcp://host:port or uds:/path)")
+    }
+}
+
+/// The subset of socket behavior the server and client need, so one
+/// connection loop serves both transports. (`try_clone` is inherent on
+/// `TcpStream`/`UnixStream`, not a trait — this bridges it.)
+pub(crate) trait Conn: Read + Write + Send {
+    /// Independent handle to the same socket (reader/writer split).
+    fn try_clone_conn(&self) -> std::io::Result<Box<dyn Conn>>;
+    /// Shut down both directions, unblocking any reader.
+    fn shutdown_conn(&self);
+}
+
+impl Conn for TcpStream {
+    fn try_clone_conn(&self) -> std::io::Result<Box<dyn Conn>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+
+    fn shutdown_conn(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+impl Conn for UnixStream {
+    fn try_clone_conn(&self) -> std::io::Result<Box<dyn Conn>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+
+    fn shutdown_conn(&self) {
+        let _ = self.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+/// Open a client connection to `addr`.
+pub(crate) fn connect(addr: &Listen) -> Result<Box<dyn Conn>, Pars3Error> {
+    match addr {
+        Listen::Tcp(a) => {
+            let s = TcpStream::connect(a).map_err(|e| Pars3Error::io(&format!("connect {addr}"), e))?;
+            // request/response round trips are latency-bound; don't let
+            // Nagle batch our small frames
+            let _ = s.set_nodelay(true);
+            Ok(Box::new(s))
+        }
+        Listen::Uds(p) => {
+            let s = UnixStream::connect(p)
+                .map_err(|e| Pars3Error::io(&format!("connect {addr}"), e))?;
+            Ok(Box::new(s))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_addresses_parse_and_display() {
+        let t: Listen = "tcp://127.0.0.1:7313".parse().unwrap();
+        assert_eq!(t, Listen::Tcp("127.0.0.1:7313".to_string()));
+        assert_eq!(t.to_string(), "tcp://127.0.0.1:7313");
+
+        let u: Listen = "uds:/tmp/pars3.sock".parse().unwrap();
+        assert_eq!(u, Listen::Uds(PathBuf::from("/tmp/pars3.sock")));
+        assert_eq!(u.to_string(), "uds:/tmp/pars3.sock");
+
+        assert!("7313".parse::<Listen>().is_err());
+        assert!("tcp://".parse::<Listen>().is_err());
+        assert!("uds:".parse::<Listen>().is_err());
+        assert!("http://x".parse::<Listen>().is_err());
+    }
+}

@@ -1,0 +1,878 @@
+//! Binary message layer: the full typed client surface on the wire.
+//!
+//! Every [`Request`]/[`Response`] encodes to one frame
+//! ([`super::frame`]): the frame tag selects the message, the payload
+//! is a flat little-endian encoding. Numeric vectors and batches —
+//! the hot path — are raw LE `f64` bytes (count-prefixed), never text:
+//! an `spmv` round trip moves `16n` bytes of payload plus a fixed
+//! header, with no float formatting or parsing anywhere. Only
+//! `describe`'s evidence tree ([`MatrixInfo`] with its embedded
+//! [`PlanReport`](crate::coordinator::PlanReport)) travels as JSON —
+//! it is metadata, produced once per matrix, and the tree is deep
+//! enough that a hand-rolled binary layout would buy nothing but
+//! maintenance risk. That JSON path is total even for non-finite
+//! floats (see [`crate::util::json`]).
+//!
+//! Requests carry a connection-local `id`; the server echoes it in the
+//! response, which is what lets a client pipeline many requests and
+//! match results as they return.
+
+use crate::coordinator::client::MatrixHandle;
+use crate::coordinator::service::{CacheStats, MatrixInfo};
+use crate::coordinator::{Backend, Pars3Error};
+use crate::kernel::registry::KERNEL_NAMES;
+use crate::kernel::VecBatch;
+use crate::solver::mrs::{MrsOptions, MrsResult};
+use crate::sparse::Coo;
+use crate::util::json::Json;
+
+/// A client-to-server message. `id` is connection-local and echoed in
+/// the response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Register a matrix (expensive preprocessing; resolves to a
+    /// handle).
+    Prepare { id: u64, name: String, coo: Coo },
+    /// Re-prepare under an existing handle (generation bump).
+    PrepareReplace { id: u64, handle: MatrixHandle, name: String, coo: Coo },
+    /// Unregister the matrix under a handle.
+    Release { id: u64, handle: MatrixHandle },
+    /// One multiply `y = A x`.
+    Spmv { id: u64, handle: MatrixHandle, x: Vec<f64>, backend: Backend },
+    /// Fused batch multiply.
+    SpmvBatch { id: u64, handle: MatrixHandle, xs: VecBatch, backend: Backend },
+    /// MRS solve.
+    Solve { id: u64, handle: MatrixHandle, b: Vec<f64>, opts: MrsOptions, backend: Backend },
+    /// Multi-RHS MRS solve.
+    SolveBatch { id: u64, handle: MatrixHandle, bs: VecBatch, opts: MrsOptions, backend: Backend },
+    /// Preprocessing metadata for a handle.
+    Describe { id: u64, handle: MatrixHandle },
+    /// Cache/queue counters: one shard, or every shard (`None`).
+    CacheStats { id: u64, shard: Option<u64> },
+    /// Stop the service gracefully; the server acknowledges, then shuts
+    /// down its listener.
+    Stop { id: u64 },
+}
+
+/// A server-to-client message. Matched to its request by `id`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// `Prepare`/`PrepareReplace` succeeded.
+    Handle { id: u64, handle: MatrixHandle },
+    /// `Release`/`Stop` succeeded.
+    Unit { id: u64 },
+    /// `Spmv` result.
+    Vec { id: u64, y: Vec<f64> },
+    /// `SpmvBatch` result.
+    Batch { id: u64, ys: VecBatch },
+    /// `Solve` result.
+    Solve { id: u64, result: MrsResult },
+    /// `SolveBatch` result.
+    SolveBatch { id: u64, results: Vec<MrsResult> },
+    /// `Describe` result.
+    Info { id: u64, info: MatrixInfo },
+    /// `CacheStats` result (one entry, or one per shard).
+    Stats { id: u64, stats: Vec<CacheStats> },
+    /// The request failed with a typed error.
+    Error { id: u64, err: Pars3Error },
+}
+
+impl Response {
+    /// The echoed request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Handle { id, .. }
+            | Response::Unit { id }
+            | Response::Vec { id, .. }
+            | Response::Batch { id, .. }
+            | Response::Solve { id, .. }
+            | Response::SolveBatch { id, .. }
+            | Response::Info { id, .. }
+            | Response::Stats { id, .. }
+            | Response::Error { id, .. } => *id,
+        }
+    }
+}
+
+// ---- flat little-endian encoding primitives -------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    put_u64(out, xs.len() as u64);
+    out.reserve(xs.len() * 8);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u64(out, xs.len() as u64);
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Cursor over a received payload; every read is bounds-checked into a
+/// typed [`Pars3Error::Protocol`].
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], Pars3Error> {
+        if self.i + n > self.b.len() {
+            return Err(Pars3Error::protocol(format!(
+                "truncated payload: wanted {n} bytes at offset {} of {}",
+                self.i,
+                self.b.len()
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, Pars3Error> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64, Pars3Error> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, Pars3Error> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn len(&mut self) -> Result<usize, Pars3Error> {
+        let n = self.u64()?;
+        // an element is at least one byte; a count beyond the payload
+        // is corrupt, not a request for a huge allocation
+        if n > self.b.len() as u64 {
+            return Err(Pars3Error::protocol(format!("implausible count {n}")));
+        }
+        Ok(n as usize)
+    }
+
+    fn str(&mut self) -> Result<String, Pars3Error> {
+        let n = self.len()?;
+        let s = std::str::from_utf8(self.take(n)?)
+            .map_err(|e| Pars3Error::protocol(format!("bad utf-8 string: {e}")))?;
+        Ok(s.to_string())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, Pars3Error> {
+        let n = self.u64()?;
+        if n.checked_mul(8).map(|bytes| bytes > (self.b.len() - self.i) as u64).unwrap_or(true) {
+            return Err(Pars3Error::protocol(format!("implausible f64 count {n}")));
+        }
+        let raw = self.take(n as usize * 8)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, Pars3Error> {
+        let n = self.u64()?;
+        if n.checked_mul(4).map(|bytes| bytes > (self.b.len() - self.i) as u64).unwrap_or(true) {
+            return Err(Pars3Error::protocol(format!("implausible u32 count {n}")));
+        }
+        let raw = self.take(n as usize * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> Result<(), Pars3Error> {
+        if self.i != self.b.len() {
+            return Err(Pars3Error::protocol(format!(
+                "{} trailing bytes after message",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---- domain encodings -----------------------------------------------
+
+fn put_handle(out: &mut Vec<u8>, h: &MatrixHandle) {
+    put_u64(out, h.service);
+    put_u64(out, h.shard as u64);
+    put_u64(out, h.slot as u64);
+    put_u64(out, h.generation);
+}
+
+fn get_handle(d: &mut Dec) -> Result<MatrixHandle, Pars3Error> {
+    Ok(MatrixHandle {
+        service: d.u64()?,
+        shard: d.u64()? as usize,
+        slot: d.u64()? as usize,
+        generation: d.u64()?,
+    })
+}
+
+fn put_backend(out: &mut Vec<u8>, b: Backend) {
+    let (kind, p) = match b {
+        Backend::Serial => (0u8, 0),
+        Backend::Csr => (1, 0),
+        Backend::Dgbmv => (2, 0),
+        Backend::Coloring { p } => (3, p),
+        Backend::Race { p } => (4, p),
+        Backend::Pars3 { p } => (5, p),
+        Backend::Pjrt => (6, 0),
+    };
+    put_u8(out, kind);
+    put_u64(out, p as u64);
+}
+
+fn get_backend(d: &mut Dec) -> Result<Backend, Pars3Error> {
+    let kind = d.u8()?;
+    let p = d.u64()? as usize;
+    Ok(match kind {
+        0 => Backend::Serial,
+        1 => Backend::Csr,
+        2 => Backend::Dgbmv,
+        3 => Backend::Coloring { p },
+        4 => Backend::Race { p },
+        5 => Backend::Pars3 { p },
+        6 => Backend::Pjrt,
+        other => return Err(Pars3Error::protocol(format!("unknown backend kind {other}"))),
+    })
+}
+
+fn put_coo(out: &mut Vec<u8>, coo: &Coo) {
+    put_u64(out, coo.n as u64);
+    put_u32s(out, &coo.rows);
+    put_u32s(out, &coo.cols);
+    put_f64s(out, &coo.vals);
+}
+
+fn get_coo(d: &mut Dec) -> Result<Coo, Pars3Error> {
+    let n = d.u64()? as usize;
+    let rows = d.u32s()?;
+    let cols = d.u32s()?;
+    let vals = d.f64s()?;
+    if rows.len() != cols.len() || rows.len() != vals.len() {
+        return Err(Pars3Error::protocol("ragged COO arrays"));
+    }
+    Ok(Coo { n, rows, cols, vals })
+}
+
+fn put_batch(out: &mut Vec<u8>, b: &VecBatch) {
+    put_u64(out, b.n() as u64);
+    put_u64(out, b.k() as u64);
+    put_f64s(out, b.data());
+}
+
+fn get_batch(d: &mut Dec) -> Result<VecBatch, Pars3Error> {
+    let n = d.u64()? as usize;
+    let k = d.u64()? as usize;
+    let data = d.f64s()?;
+    if data.len() != n * k {
+        return Err(Pars3Error::protocol(format!(
+            "batch data length {} != n*k = {}",
+            data.len(),
+            n * k
+        )));
+    }
+    let mut b = VecBatch::zeros(n, k);
+    b.data_mut().copy_from_slice(&data);
+    Ok(b)
+}
+
+fn put_opts(out: &mut Vec<u8>, o: &MrsOptions) {
+    put_f64(out, o.alpha);
+    put_u64(out, o.max_iters as u64);
+    put_f64(out, o.tol);
+}
+
+fn get_opts(d: &mut Dec) -> Result<MrsOptions, Pars3Error> {
+    Ok(MrsOptions { alpha: d.f64()?, max_iters: d.u64()? as usize, tol: d.f64()? })
+}
+
+fn put_mrs_result(out: &mut Vec<u8>, r: &MrsResult) {
+    put_f64s(out, &r.x);
+    put_f64s(out, &r.r);
+    put_f64s(out, &r.history);
+    put_u64(out, r.iters as u64);
+    put_u8(out, r.converged as u8);
+}
+
+fn get_mrs_result(d: &mut Dec) -> Result<MrsResult, Pars3Error> {
+    Ok(MrsResult {
+        x: d.f64s()?,
+        r: d.f64s()?,
+        history: d.f64s()?,
+        iters: d.u64()? as usize,
+        converged: d.u8()? != 0,
+    })
+}
+
+fn put_cache_stats(out: &mut Vec<u8>, s: &CacheStats) {
+    put_u64(out, s.shard as u64);
+    put_u64(out, s.cached as u64);
+    put_u64(out, s.built as u64);
+    put_u64(out, s.queue_depth as u64);
+}
+
+fn get_cache_stats(d: &mut Dec) -> Result<CacheStats, Pars3Error> {
+    Ok(CacheStats {
+        shard: d.u64()? as usize,
+        cached: d.u64()? as usize,
+        built: d.u64()? as usize,
+        queue_depth: d.u64()? as usize,
+    })
+}
+
+/// Intern a backend name received off the wire back to the `&'static`
+/// spelling [`Pars3Error::BackendUnavailable`] holds. Unknown names
+/// map to a fixed placeholder rather than leaking per-message
+/// allocations.
+fn intern_backend_name(name: &str) -> &'static str {
+    for &k in KERNEL_NAMES {
+        if k == name {
+            return k;
+        }
+    }
+    match name {
+        "pjrt" => "pjrt",
+        _ => "unknown-backend",
+    }
+}
+
+fn put_error(out: &mut Vec<u8>, e: &Pars3Error) {
+    match e {
+        Pars3Error::UnknownMatrix { shard, slot } => {
+            put_u8(out, 1);
+            put_u64(out, *shard as u64);
+            put_u64(out, *slot as u64);
+        }
+        Pars3Error::UnknownShard { shard, shards } => {
+            put_u8(out, 2);
+            put_u64(out, *shard as u64);
+            put_u64(out, *shards as u64);
+        }
+        Pars3Error::ForeignHandle { handle_service, service } => {
+            put_u8(out, 3);
+            put_u64(out, *handle_service);
+            put_u64(out, *service);
+        }
+        Pars3Error::StaleHandle { shard, slot, held, current } => {
+            put_u8(out, 4);
+            put_u64(out, *shard as u64);
+            put_u64(out, *slot as u64);
+            put_u64(out, *held);
+            put_u64(out, *current);
+        }
+        Pars3Error::DimensionMismatch { expected, got } => {
+            put_u8(out, 5);
+            put_u64(out, *expected as u64);
+            put_u64(out, *got as u64);
+        }
+        Pars3Error::BackendUnavailable { backend, reason } => {
+            put_u8(out, 6);
+            put_str(out, backend);
+            put_str(out, reason);
+        }
+        Pars3Error::UnknownKernel { name } => {
+            put_u8(out, 7);
+            put_str(out, name);
+        }
+        Pars3Error::InvalidMatrix(why) => {
+            put_u8(out, 8);
+            put_str(out, why);
+        }
+        Pars3Error::WorkerPoisoned { shard } => {
+            put_u8(out, 9);
+            put_u64(out, *shard as u64);
+        }
+        Pars3Error::TicketConsumed => put_u8(out, 10),
+        Pars3Error::ServiceStopped => put_u8(out, 11),
+        Pars3Error::Io(why) => {
+            put_u8(out, 12);
+            put_str(out, why);
+        }
+        Pars3Error::Protocol(why) => {
+            put_u8(out, 13);
+            put_str(out, why);
+        }
+        Pars3Error::Internal(why) => {
+            put_u8(out, 14);
+            put_str(out, why);
+        }
+    }
+}
+
+fn get_error(d: &mut Dec) -> Result<Pars3Error, Pars3Error> {
+    Ok(match d.u8()? {
+        1 => Pars3Error::UnknownMatrix { shard: d.u64()? as usize, slot: d.u64()? as usize },
+        2 => Pars3Error::UnknownShard { shard: d.u64()? as usize, shards: d.u64()? as usize },
+        3 => Pars3Error::ForeignHandle { handle_service: d.u64()?, service: d.u64()? },
+        4 => Pars3Error::StaleHandle {
+            shard: d.u64()? as usize,
+            slot: d.u64()? as usize,
+            held: d.u64()?,
+            current: d.u64()?,
+        },
+        5 => Pars3Error::DimensionMismatch {
+            expected: d.u64()? as usize,
+            got: d.u64()? as usize,
+        },
+        6 => Pars3Error::BackendUnavailable {
+            backend: intern_backend_name(&d.str()?),
+            reason: d.str()?,
+        },
+        7 => Pars3Error::UnknownKernel { name: d.str()? },
+        8 => Pars3Error::InvalidMatrix(d.str()?),
+        9 => Pars3Error::WorkerPoisoned { shard: d.u64()? as usize },
+        10 => Pars3Error::TicketConsumed,
+        11 => Pars3Error::ServiceStopped,
+        12 => Pars3Error::Io(d.str()?),
+        13 => Pars3Error::Protocol(d.str()?),
+        14 => Pars3Error::Internal(d.str()?),
+        other => return Err(Pars3Error::protocol(format!("unknown error tag {other}"))),
+    })
+}
+
+// ---- message encode / decode ----------------------------------------
+
+/// Request frame tags.
+mod rtag {
+    pub const PREPARE: u8 = 1;
+    pub const PREPARE_REPLACE: u8 = 2;
+    pub const RELEASE: u8 = 3;
+    pub const SPMV: u8 = 4;
+    pub const SPMV_BATCH: u8 = 5;
+    pub const SOLVE: u8 = 6;
+    pub const SOLVE_BATCH: u8 = 7;
+    pub const DESCRIBE: u8 = 8;
+    pub const CACHE_STATS: u8 = 9;
+    pub const STOP: u8 = 10;
+}
+
+/// Response frame tags (high bit set).
+mod ptag {
+    pub const HANDLE: u8 = 0x81;
+    pub const UNIT: u8 = 0x82;
+    pub const VEC: u8 = 0x83;
+    pub const BATCH: u8 = 0x84;
+    pub const SOLVE: u8 = 0x85;
+    pub const SOLVE_BATCH: u8 = 0x86;
+    pub const INFO: u8 = 0x87;
+    pub const STATS: u8 = 0x88;
+    pub const ERROR: u8 = 0x8F;
+}
+
+impl Request {
+    /// Encode to a `(frame tag, payload)` pair.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut out = Vec::new();
+        match self {
+            Request::Prepare { id, name, coo } => {
+                put_u64(&mut out, *id);
+                put_str(&mut out, name);
+                put_coo(&mut out, coo);
+                (rtag::PREPARE, out)
+            }
+            Request::PrepareReplace { id, handle, name, coo } => {
+                put_u64(&mut out, *id);
+                put_handle(&mut out, handle);
+                put_str(&mut out, name);
+                put_coo(&mut out, coo);
+                (rtag::PREPARE_REPLACE, out)
+            }
+            Request::Release { id, handle } => {
+                put_u64(&mut out, *id);
+                put_handle(&mut out, handle);
+                (rtag::RELEASE, out)
+            }
+            Request::Spmv { id, handle, x, backend } => {
+                put_u64(&mut out, *id);
+                put_handle(&mut out, handle);
+                put_backend(&mut out, *backend);
+                put_f64s(&mut out, x);
+                (rtag::SPMV, out)
+            }
+            Request::SpmvBatch { id, handle, xs, backend } => {
+                put_u64(&mut out, *id);
+                put_handle(&mut out, handle);
+                put_backend(&mut out, *backend);
+                put_batch(&mut out, xs);
+                (rtag::SPMV_BATCH, out)
+            }
+            Request::Solve { id, handle, b, opts, backend } => {
+                put_u64(&mut out, *id);
+                put_handle(&mut out, handle);
+                put_backend(&mut out, *backend);
+                put_opts(&mut out, opts);
+                put_f64s(&mut out, b);
+                (rtag::SOLVE, out)
+            }
+            Request::SolveBatch { id, handle, bs, opts, backend } => {
+                put_u64(&mut out, *id);
+                put_handle(&mut out, handle);
+                put_backend(&mut out, *backend);
+                put_opts(&mut out, opts);
+                put_batch(&mut out, bs);
+                (rtag::SOLVE_BATCH, out)
+            }
+            Request::Describe { id, handle } => {
+                put_u64(&mut out, *id);
+                put_handle(&mut out, handle);
+                (rtag::DESCRIBE, out)
+            }
+            Request::CacheStats { id, shard } => {
+                put_u64(&mut out, *id);
+                match shard {
+                    Some(s) => {
+                        put_u8(&mut out, 1);
+                        put_u64(&mut out, *s);
+                    }
+                    None => put_u8(&mut out, 0),
+                }
+                (rtag::CACHE_STATS, out)
+            }
+            Request::Stop { id } => {
+                put_u64(&mut out, *id);
+                (rtag::STOP, out)
+            }
+        }
+    }
+
+    /// Decode a received `(frame tag, payload)` pair.
+    pub fn decode(tag: u8, payload: &[u8]) -> Result<Request, Pars3Error> {
+        let mut d = Dec::new(payload);
+        let req = match tag {
+            rtag::PREPARE => {
+                Request::Prepare { id: d.u64()?, name: d.str()?, coo: get_coo(&mut d)? }
+            }
+            rtag::PREPARE_REPLACE => Request::PrepareReplace {
+                id: d.u64()?,
+                handle: get_handle(&mut d)?,
+                name: d.str()?,
+                coo: get_coo(&mut d)?,
+            },
+            rtag::RELEASE => Request::Release { id: d.u64()?, handle: get_handle(&mut d)? },
+            rtag::SPMV => Request::Spmv {
+                id: d.u64()?,
+                handle: get_handle(&mut d)?,
+                backend: get_backend(&mut d)?,
+                x: d.f64s()?,
+            },
+            rtag::SPMV_BATCH => Request::SpmvBatch {
+                id: d.u64()?,
+                handle: get_handle(&mut d)?,
+                backend: get_backend(&mut d)?,
+                xs: get_batch(&mut d)?,
+            },
+            rtag::SOLVE => Request::Solve {
+                id: d.u64()?,
+                handle: get_handle(&mut d)?,
+                backend: get_backend(&mut d)?,
+                opts: get_opts(&mut d)?,
+                b: d.f64s()?,
+            },
+            rtag::SOLVE_BATCH => Request::SolveBatch {
+                id: d.u64()?,
+                handle: get_handle(&mut d)?,
+                backend: get_backend(&mut d)?,
+                opts: get_opts(&mut d)?,
+                bs: get_batch(&mut d)?,
+            },
+            rtag::DESCRIBE => Request::Describe { id: d.u64()?, handle: get_handle(&mut d)? },
+            rtag::CACHE_STATS => {
+                let id = d.u64()?;
+                let shard = match d.u8()? {
+                    0 => None,
+                    1 => Some(d.u64()?),
+                    other => {
+                        return Err(Pars3Error::protocol(format!("bad shard selector {other}")))
+                    }
+                };
+                Request::CacheStats { id, shard }
+            }
+            rtag::STOP => Request::Stop { id: d.u64()? },
+            other => return Err(Pars3Error::protocol(format!("unknown request tag {other:#x}"))),
+        };
+        d.done()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    /// Encode to a `(frame tag, payload)` pair.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        let mut out = Vec::new();
+        match self {
+            Response::Handle { id, handle } => {
+                put_u64(&mut out, *id);
+                put_handle(&mut out, handle);
+                (ptag::HANDLE, out)
+            }
+            Response::Unit { id } => {
+                put_u64(&mut out, *id);
+                (ptag::UNIT, out)
+            }
+            Response::Vec { id, y } => {
+                put_u64(&mut out, *id);
+                put_f64s(&mut out, y);
+                (ptag::VEC, out)
+            }
+            Response::Batch { id, ys } => {
+                put_u64(&mut out, *id);
+                put_batch(&mut out, ys);
+                (ptag::BATCH, out)
+            }
+            Response::Solve { id, result } => {
+                put_u64(&mut out, *id);
+                put_mrs_result(&mut out, result);
+                (ptag::SOLVE, out)
+            }
+            Response::SolveBatch { id, results } => {
+                put_u64(&mut out, *id);
+                put_u64(&mut out, results.len() as u64);
+                for r in results {
+                    put_mrs_result(&mut out, r);
+                }
+                (ptag::SOLVE_BATCH, out)
+            }
+            Response::Info { id, info } => {
+                put_u64(&mut out, *id);
+                put_str(&mut out, &info.to_json().dump());
+                (ptag::INFO, out)
+            }
+            Response::Stats { id, stats } => {
+                put_u64(&mut out, *id);
+                put_u64(&mut out, stats.len() as u64);
+                for s in stats {
+                    put_cache_stats(&mut out, s);
+                }
+                (ptag::STATS, out)
+            }
+            Response::Error { id, err } => {
+                put_u64(&mut out, *id);
+                put_error(&mut out, err);
+                (ptag::ERROR, out)
+            }
+        }
+    }
+
+    /// Decode a received `(frame tag, payload)` pair.
+    pub fn decode(tag: u8, payload: &[u8]) -> Result<Response, Pars3Error> {
+        let mut d = Dec::new(payload);
+        let resp = match tag {
+            ptag::HANDLE => Response::Handle { id: d.u64()?, handle: get_handle(&mut d)? },
+            ptag::UNIT => Response::Unit { id: d.u64()? },
+            ptag::VEC => Response::Vec { id: d.u64()?, y: d.f64s()? },
+            ptag::BATCH => Response::Batch { id: d.u64()?, ys: get_batch(&mut d)? },
+            ptag::SOLVE => Response::Solve { id: d.u64()?, result: get_mrs_result(&mut d)? },
+            ptag::SOLVE_BATCH => {
+                let id = d.u64()?;
+                let n = d.len()?;
+                let mut results = Vec::with_capacity(n);
+                for _ in 0..n {
+                    results.push(get_mrs_result(&mut d)?);
+                }
+                Response::SolveBatch { id, results }
+            }
+            ptag::INFO => {
+                let id = d.u64()?;
+                let text = d.str()?;
+                let json = Json::parse(&text)
+                    .map_err(|e| Pars3Error::protocol(format!("bad info json: {e:#}")))?;
+                let info = MatrixInfo::from_json(&json)
+                    .map_err(|e| Pars3Error::protocol(format!("bad info shape: {e:#}")))?;
+                Response::Info { id, info }
+            }
+            ptag::STATS => {
+                let id = d.u64()?;
+                let n = d.len()?;
+                let mut stats = Vec::with_capacity(n);
+                for _ in 0..n {
+                    stats.push(get_cache_stats(&mut d)?);
+                }
+                Response::Stats { id, stats }
+            }
+            ptag::ERROR => Response::Error { id: d.u64()?, err: get_error(&mut d)? },
+            other => return Err(Pars3Error::protocol(format!("unknown response tag {other:#x}"))),
+        };
+        d.done()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn handle() -> MatrixHandle {
+        MatrixHandle { service: 42, shard: 1, slot: 3, generation: 7 }
+    }
+
+    #[test]
+    fn every_request_round_trips() {
+        let mut coo = Coo::new(4);
+        coo.push(1, 0, 2.5);
+        coo.push(3, 2, -1.25);
+        let opts = MrsOptions { alpha: 2.0, max_iters: 500, tol: 1e-9 };
+        let reqs = vec![
+            Request::Prepare { id: 1, name: "m".into(), coo: coo.clone() },
+            Request::PrepareReplace { id: 2, handle: handle(), name: "m2".into(), coo },
+            Request::Release { id: 3, handle: handle() },
+            Request::Spmv { id: 4, handle: handle(), x: vec![1.0, -2.0, 0.5], backend: Backend::Pars3 { p: 4 } },
+            Request::SpmvBatch {
+                id: 5,
+                handle: handle(),
+                xs: VecBatch::from_fn(3, 2, |i, c| (i * 2 + c) as f64),
+                backend: Backend::Serial,
+            },
+            Request::Solve { id: 6, handle: handle(), b: vec![0.0; 3], opts: opts.clone(), backend: Backend::Race { p: 2 } },
+            Request::SolveBatch {
+                id: 7,
+                handle: handle(),
+                bs: VecBatch::zeros(2, 2),
+                opts,
+                backend: Backend::Csr,
+            },
+            Request::Describe { id: 8, handle: handle() },
+            Request::CacheStats { id: 9, shard: Some(2) },
+            Request::CacheStats { id: 10, shard: None },
+            Request::Stop { id: 11 },
+        ];
+        for req in reqs {
+            let (tag, payload) = req.encode();
+            assert_eq!(Request::decode(tag, &payload).unwrap(), req, "tag {tag}");
+        }
+    }
+
+    #[test]
+    fn data_responses_round_trip() {
+        let mrs = MrsResult {
+            x: vec![1.0, 2.0],
+            r: vec![1e-12, -1e-12],
+            history: vec![4.0, 1.0, 0.25],
+            iters: 3,
+            converged: true,
+        };
+        let resps = vec![
+            Response::Handle { id: 1, handle: handle() },
+            Response::Unit { id: 2 },
+            Response::Vec { id: 3, y: vec![0.5, -0.25, f64::MIN_POSITIVE] },
+            Response::Batch { id: 4, ys: VecBatch::from_fn(2, 3, |i, c| (i + c) as f64 - 1.5) },
+            Response::Solve { id: 5, result: mrs.clone() },
+            Response::SolveBatch { id: 6, results: vec![mrs.clone(), MrsResult { converged: false, ..mrs }] },
+            Response::Stats {
+                id: 7,
+                stats: vec![
+                    CacheStats { shard: 0, cached: 1, built: 2, queue_depth: 3 },
+                    CacheStats { shard: 1, cached: 0, built: 0, queue_depth: 0 },
+                ],
+            },
+        ];
+        for resp in resps {
+            let (tag, payload) = resp.encode();
+            let back = Response::decode(tag, &payload).unwrap();
+            assert_eq!(back.id(), resp.id());
+            assert_eq!(back, resp, "tag {tag}");
+        }
+    }
+
+    #[test]
+    fn every_error_variant_round_trips() {
+        let errs = vec![
+            Pars3Error::UnknownMatrix { shard: 1, slot: 2 },
+            Pars3Error::UnknownShard { shard: 9, shards: 4 },
+            Pars3Error::ForeignHandle { handle_service: 8, service: 7 },
+            Pars3Error::StaleHandle { shard: 0, slot: 1, held: 2, current: 5 },
+            Pars3Error::DimensionMismatch { expected: 100, got: 99 },
+            Pars3Error::BackendUnavailable { backend: "pjrt", reason: "no plugin".into() },
+            Pars3Error::UnknownKernel { name: "nope".into() },
+            Pars3Error::InvalidMatrix("diagonal".into()),
+            Pars3Error::WorkerPoisoned { shard: 3 },
+            Pars3Error::TicketConsumed,
+            Pars3Error::ServiceStopped,
+            Pars3Error::Io("read: reset".into()),
+            Pars3Error::Protocol("bad tag".into()),
+            Pars3Error::Internal("context: inner".into()),
+        ];
+        for err in errs {
+            let resp = Response::Error { id: 99, err: err.clone() };
+            let (tag, payload) = resp.encode();
+            assert_eq!(Response::decode(tag, &payload).unwrap(), resp, "{err}");
+        }
+        // an interned backend name off the wire is one of the known
+        // statics; a fabricated one degrades to the placeholder
+        assert_eq!(intern_backend_name("pars3"), "pars3");
+        assert_eq!(intern_backend_name("made-up"), "unknown-backend");
+    }
+
+    #[test]
+    fn floats_cross_the_wire_bit_exact() {
+        // raw LE bytes, not text: denormals, -0.0, and exact ULP
+        // patterns survive untouched
+        let y = vec![
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            -0.0,
+            1.0 + f64::EPSILON,
+            2.2250738585072014e-308,
+            9.007199254740993e15, // 2^53 + 1, unrepresentable in text shortcuts
+        ];
+        let (tag, payload) = Response::Vec { id: 1, y: y.clone() }.encode();
+        match Response::decode(tag, &payload).unwrap() {
+            Response::Vec { y: back, .. } => {
+                for (a, b) in y.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_oversized_payloads_are_typed_errors() {
+        let (tag, payload) = Request::Spmv {
+            id: 1,
+            handle: handle(),
+            x: vec![1.0; 8],
+            backend: Backend::Serial,
+        }
+        .encode();
+        // every prefix fails as Protocol, never panics
+        for cut in 0..payload.len() {
+            let err = Request::decode(tag, &payload[..cut]).unwrap_err();
+            assert!(matches!(err, Pars3Error::Protocol(_)), "cut {cut}: {err}");
+        }
+        // trailing garbage is rejected too
+        let mut long = payload.clone();
+        long.push(0);
+        assert!(matches!(Request::decode(tag, &long), Err(Pars3Error::Protocol(_))));
+        // a count field claiming more elements than the payload holds
+        let mut forged = Vec::new();
+        put_u64(&mut forged, 1); // id
+        put_u64(&mut forged, u64::MAX); // "length" of the name string
+        let err = Request::decode(rtag::PREPARE, &forged).unwrap_err();
+        assert!(err.to_string().contains("implausible"), "{err}");
+        // unknown tags
+        assert!(Request::decode(0x7f, &[]).is_err());
+        assert!(Response::decode(0x01, &[]).is_err());
+    }
+}

@@ -1,0 +1,469 @@
+//! The serving front-end: sockets in, sharded [`Service`] behind.
+//!
+//! One accept loop (non-blocking poll so it can observe the stop flag)
+//! spawns two threads per connection:
+//!
+//! * a **reader** that decodes frames and submits each request into
+//!   the service through the in-process non-blocking
+//!   [`Client`](crate::coordinator::Client) — submission returns a
+//!   [`Ticket`] immediately, so a burst of pipelined requests is
+//!   in flight across shards before any response is produced;
+//! * a **writer** that resolves tickets in submission order and writes
+//!   the framed responses back. Within one shard, submission order is
+//!   execution order (FIFO queues), so the writer never idles on a
+//!   ticket whose work hasn't started.
+//!
+//! Backpressure composes: a full shard queue blocks the reader's
+//! dispatch, which stops it draining the socket, which eventually
+//! fills the peer's send buffer — exactly the bounded-queue behavior
+//! the in-process client has, extended over TCP.
+//!
+//! A remote `Stop` request (or [`Server::stop`]) stops the service
+//! gracefully: requests already dequeued complete, everything queued
+//! or submitted later resolves to the typed
+//! [`Pars3Error::ServiceStopped`], and the accept loop closes the
+//! listener. Connection threads exit when their peer disconnects.
+
+use crate::coordinator::{
+    CacheStats, Client, Config, MatrixHandle, MatrixInfo, Pars3Error, Service, Ticket,
+};
+use crate::net::frame::{write_frame, FrameDecoder};
+use crate::net::proto::{Request, Response};
+use crate::net::{Conn, Listen};
+use crate::kernel::VecBatch;
+use crate::solver::mrs::MrsResult;
+use std::io::Read;
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Accept-poll interval: long enough to cost nothing, short enough
+/// that `stop` feels immediate.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+enum Acceptor {
+    Tcp(TcpListener),
+    Uds(UnixListener, PathBuf),
+}
+
+impl Acceptor {
+    /// Non-blocking accept: `Ok(Some)` on a new (blocking-mode)
+    /// connection, `Ok(None)` when no peer is waiting.
+    fn poll_accept(&self) -> std::io::Result<Option<Box<dyn Conn>>> {
+        match self {
+            Acceptor::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    let _ = s.set_nodelay(true);
+                    Ok(Some(Box::new(s)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+            Acceptor::Uds(l, _) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Ok(Some(Box::new(s)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+        }
+    }
+}
+
+impl Drop for Acceptor {
+    fn drop(&mut self) {
+        if let Acceptor::Uds(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// A response not yet produced: the request's ticket, tagged with the
+/// id to echo. The writer resolves these in submission order.
+enum Pending {
+    Handle(u64, Ticket<MatrixHandle>),
+    Unit(u64, Ticket<()>),
+    Vec(u64, Ticket<Vec<f64>>),
+    Batch(u64, Ticket<VecBatch>),
+    Solve(u64, Ticket<MrsResult>),
+    SolveBatch(u64, Ticket<Vec<MrsResult>>),
+    Info(u64, Ticket<MatrixInfo>),
+    StatsOne(u64, Ticket<CacheStats>),
+    StatsAll(u64, Ticket<Vec<CacheStats>>),
+    /// Already resolved at dispatch time (stop ack, protocol errors).
+    Immediate(Response),
+}
+
+impl Pending {
+    /// Block until the underlying ticket resolves; errors become typed
+    /// [`Response::Error`] frames, never dropped connections.
+    fn resolve(self) -> Response {
+        fn finish<T>(id: u64, t: Ticket<T>, ok: impl FnOnce(T) -> Response) -> Response {
+            match t.wait() {
+                Ok(v) => ok(v),
+                Err(err) => Response::Error { id, err },
+            }
+        }
+        match self {
+            Pending::Handle(id, t) => finish(id, t, |handle| Response::Handle { id, handle }),
+            Pending::Unit(id, t) => finish(id, t, |()| Response::Unit { id }),
+            Pending::Vec(id, t) => finish(id, t, |y| Response::Vec { id, y }),
+            Pending::Batch(id, t) => finish(id, t, |ys| Response::Batch { id, ys }),
+            Pending::Solve(id, t) => finish(id, t, |result| Response::Solve { id, result }),
+            Pending::SolveBatch(id, t) => {
+                finish(id, t, |results| Response::SolveBatch { id, results })
+            }
+            Pending::Info(id, t) => finish(id, t, |info| Response::Info { id, info }),
+            Pending::StatsOne(id, t) => finish(id, t, |s| Response::Stats { id, stats: vec![s] }),
+            Pending::StatsAll(id, t) => finish(id, t, |stats| Response::Stats { id, stats }),
+            Pending::Immediate(resp) => resp,
+        }
+    }
+}
+
+/// A running network server over its own sharded [`Service`].
+pub struct Server {
+    service: Arc<Service>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    local: Listen,
+}
+
+impl Server {
+    /// Bind `listen` and start serving `cfg`'s sharded service.
+    /// `tcp://host:0` binds an ephemeral port — read the real address
+    /// back from [`Server::local_addr`]. A UDS path left behind by a
+    /// dead server is removed and re-bound.
+    pub fn bind(listen: &Listen, cfg: Config) -> Result<Server, Pars3Error> {
+        let (acceptor, local) = match listen {
+            Listen::Tcp(addr) => {
+                let l = TcpListener::bind(addr)
+                    .map_err(|e| Pars3Error::io(&format!("bind {listen}"), e))?;
+                l.set_nonblocking(true)
+                    .map_err(|e| Pars3Error::io("set_nonblocking", e))?;
+                let real = l
+                    .local_addr()
+                    .map_err(|e| Pars3Error::io("local_addr", e))?;
+                (Acceptor::Tcp(l), Listen::Tcp(real.to_string()))
+            }
+            Listen::Uds(path) => {
+                if path.exists() {
+                    // either a stale socket from a dead server or a live
+                    // one; binding over a live server is a deployment
+                    // error the bind below would mask, so probe first
+                    if std::os::unix::net::UnixStream::connect(path).is_ok() {
+                        return Err(Pars3Error::Io(format!(
+                            "bind {listen}: socket is already being served"
+                        )));
+                    }
+                    let _ = std::fs::remove_file(path);
+                }
+                let l = UnixListener::bind(path)
+                    .map_err(|e| Pars3Error::io(&format!("bind {listen}"), e))?;
+                l.set_nonblocking(true)
+                    .map_err(|e| Pars3Error::io("set_nonblocking", e))?;
+                (Acceptor::Uds(l, path.clone()), Listen::Uds(path.clone()))
+            }
+        };
+
+        let service = Arc::new(Service::start(cfg));
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let service = service.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || accept_loop(acceptor, service, stop))
+        };
+        Ok(Server { service, stop, accept: Some(accept), local })
+    }
+
+    /// The bound address (with the real port for `tcp://host:0`).
+    pub fn local_addr(&self) -> &Listen {
+        &self.local
+    }
+
+    /// Stop serving: the service stops gracefully (see
+    /// [`Service::stop`]) and the accept loop closes the listener.
+    /// Idempotent.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.service.stop();
+    }
+
+    /// Block until the server stops — via [`Server::stop`] or a remote
+    /// `Stop` request. The foreground of `pars3 serve`.
+    pub fn join(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(acceptor: Acceptor, service: Arc<Service>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match acceptor.poll_accept() {
+            Ok(Some(conn)) => spawn_connection(conn, service.clone(), stop.clone()),
+            Ok(None) => std::thread::sleep(ACCEPT_POLL),
+            Err(_) => break,
+        }
+    }
+    // dropping the acceptor closes the listener (and unlinks a UDS path)
+}
+
+/// Two detached threads per connection: reader (decode + dispatch) and
+/// writer (resolve + encode). They exit when the peer disconnects —
+/// reader on EOF, writer when the reader drops its channel.
+fn spawn_connection(conn: Box<dyn Conn>, service: Arc<Service>, stop: Arc<AtomicBool>) {
+    let Ok(write_half) = conn.try_clone_conn() else {
+        return;
+    };
+    let (tx, rx) = channel::<Pending>();
+    std::thread::spawn(move || writer_loop(write_half, rx));
+    std::thread::spawn(move || reader_loop(conn, service, stop, tx));
+}
+
+fn reader_loop(
+    mut conn: Box<dyn Conn>,
+    service: Arc<Service>,
+    stop: Arc<AtomicBool>,
+    replies: Sender<Pending>,
+) {
+    let client = service.client();
+    let mut dec = FrameDecoder::new();
+    let mut buf = [0u8; 64 * 1024];
+    'conn: loop {
+        let n = match conn.read(&mut buf) {
+            Ok(0) | Err(_) => break, // peer closed (or reset); writer follows via channel drop
+            Ok(n) => n,
+        };
+        dec.feed(&buf[..n]);
+        loop {
+            match dec.next_frame() {
+                Ok(None) => break,
+                Ok(Some((tag, payload))) => {
+                    let req = match Request::decode(tag, &payload) {
+                        Ok(req) => req,
+                        Err(err) => {
+                            // id 0 is reserved for connection-level
+                            // failures (request ids start at 1)
+                            let _ = replies.send(Pending::Immediate(Response::Error {
+                                id: 0,
+                                err,
+                            }));
+                            break 'conn;
+                        }
+                    };
+                    if !dispatch(req, &client, &service, &stop, &replies) {
+                        break 'conn;
+                    }
+                }
+                Err(err) => {
+                    let _ = replies.send(Pending::Immediate(Response::Error { id: 0, err }));
+                    break 'conn;
+                }
+            }
+        }
+    }
+}
+
+/// Submit one request into the service. Returns `false` when the
+/// connection should stop reading (reply channel gone).
+fn dispatch(
+    req: Request,
+    client: &Client,
+    service: &Arc<Service>,
+    stop: &Arc<AtomicBool>,
+    replies: &Sender<Pending>,
+) -> bool {
+    let pending = match req {
+        Request::Prepare { id, name, coo } => Pending::Handle(id, client.prepare(&name, coo)),
+        Request::PrepareReplace { id, handle, name, coo } => {
+            Pending::Handle(id, client.prepare_replace(&handle, &name, coo))
+        }
+        Request::Release { id, handle } => Pending::Unit(id, client.release(&handle)),
+        Request::Spmv { id, handle, x, backend } => {
+            Pending::Vec(id, client.spmv(&handle, x, backend))
+        }
+        Request::SpmvBatch { id, handle, xs, backend } => {
+            Pending::Batch(id, client.spmv_batch(&handle, xs, backend))
+        }
+        Request::Solve { id, handle, b, opts, backend } => {
+            Pending::Solve(id, client.solve(&handle, b, opts, backend))
+        }
+        Request::SolveBatch { id, handle, bs, opts, backend } => {
+            Pending::SolveBatch(id, client.solve_batch(&handle, bs, opts, backend))
+        }
+        Request::Describe { id, handle } => Pending::Info(id, client.describe(&handle)),
+        Request::CacheStats { id, shard: Some(s) } => {
+            Pending::StatsOne(id, client.cache_stats(s as usize))
+        }
+        Request::CacheStats { id, shard: None } => {
+            Pending::StatsAll(id, client.cache_stats_all())
+        }
+        Request::Stop { id } => {
+            // stop the service first (in-flight work completes, queued
+            // work drains typed), then the listener; the ack goes out
+            // through the normal reply path, after every response to a
+            // request this connection submitted earlier
+            service.stop();
+            stop.store(true, Ordering::SeqCst);
+            Pending::Immediate(Response::Unit { id })
+        }
+    };
+    replies.send(pending).is_ok()
+}
+
+fn writer_loop(mut conn: Box<dyn Conn>, replies: Receiver<Pending>) {
+    while let Ok(pending) = replies.recv() {
+        let mut batch = vec![pending.resolve()];
+        // drain whatever else resolved or queued meanwhile, then flush
+        // once — pipelined bursts pay one syscall tail, not one per
+        // response
+        loop {
+            match replies.try_recv() {
+                Ok(p) => batch.push(p.resolve()),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        for resp in &batch {
+            let (tag, payload) = resp.encode();
+            if write_frame(&mut conn, tag, &payload).is_err() {
+                conn.shutdown_conn();
+                return;
+            }
+        }
+        if conn.flush().is_err() {
+            conn.shutdown_conn();
+            return;
+        }
+    }
+    conn.shutdown_conn();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Backend;
+    use crate::net::frame::write_frame;
+    use crate::sparse::gen;
+    use std::io::Write;
+    use std::net::TcpStream;
+
+    fn send(conn: &mut impl Write, req: &Request) {
+        let (tag, payload) = req.encode();
+        write_frame(conn, tag, &payload).unwrap();
+        conn.flush().unwrap();
+    }
+
+    fn recv(conn: &mut impl Read, dec: &mut FrameDecoder) -> Response {
+        let mut buf = [0u8; 4096];
+        loop {
+            if let Some((tag, payload)) = dec.next_frame().unwrap() {
+                return Response::decode(tag, &payload).unwrap();
+            }
+            let n = conn.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed the connection mid-response");
+            dec.feed(&buf[..n]);
+        }
+    }
+
+    fn one_shard_cfg() -> Config {
+        Config { shards: 1, ..Config::default() }
+    }
+
+    #[test]
+    fn raw_frames_prepare_multiply_and_stop_over_tcp() {
+        let server =
+            Server::bind(&"tcp://127.0.0.1:0".parse().unwrap(), one_shard_cfg()).unwrap();
+        let Listen::Tcp(addr) = server.local_addr().clone() else {
+            panic!("tcp bind reported {:?}", server.local_addr());
+        };
+        assert!(!addr.ends_with(":0"), "ephemeral port resolved: {addr}");
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        let mut dec = FrameDecoder::new();
+
+        let n = 60;
+        send(&mut conn, &Request::Prepare { id: 1, name: "m".into(), coo: gen::small_test_matrix(n, 5, 2.0) });
+        let resp = recv(&mut conn, &mut dec);
+        let Response::Handle { id: 1, handle } = resp else {
+            panic!("expected handle, got {resp:?}");
+        };
+        send(
+            &mut conn,
+            &Request::Spmv { id: 2, handle: handle.clone(), x: vec![1.0; n], backend: Backend::Serial },
+        );
+        let Response::Vec { id: 2, y } = recv(&mut conn, &mut dec) else {
+            panic!("expected spmv result");
+        };
+        assert_eq!(y.len(), n);
+
+        // graceful stop over the wire: acknowledged in order, then every
+        // later request gets the typed refusal rather than a dead socket
+        send(&mut conn, &Request::Stop { id: 3 });
+        let Response::Unit { id: 3 } = recv(&mut conn, &mut dec) else {
+            panic!("stop not acknowledged");
+        };
+        send(
+            &mut conn,
+            &Request::Spmv { id: 4, handle, x: vec![1.0; n], backend: Backend::Serial },
+        );
+        let resp = recv(&mut conn, &mut dec);
+        let Response::Error { id: 4, err: Pars3Error::ServiceStopped } = resp else {
+            panic!("expected typed ServiceStopped, got {resp:?}");
+        };
+
+        // the accept loop observed the remote stop, so join returns
+        server.join();
+    }
+
+    #[test]
+    fn uds_socket_is_served_guarded_and_cleaned_up() {
+        let dir = std::env::temp_dir().join(format!("pars3-uds-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("srv.sock");
+        let listen = Listen::Uds(path.clone());
+
+        let server = Server::bind(&listen, one_shard_cfg()).unwrap();
+        assert!(path.exists());
+
+        // binding over a *live* server is refused, not hijacked
+        let err = Server::bind(&listen, one_shard_cfg()).unwrap_err();
+        assert!(matches!(err, Pars3Error::Io(_)), "{err}");
+
+        let mut conn = std::os::unix::net::UnixStream::connect(&path).unwrap();
+        let mut dec = FrameDecoder::new();
+        send(&mut conn, &Request::CacheStats { id: 1, shard: None });
+        let Response::Stats { id: 1, stats } = recv(&mut conn, &mut dec) else {
+            panic!("expected stats");
+        };
+        assert_eq!(stats.len(), 1, "one shard, one entry");
+
+        server.stop();
+        server.join();
+        assert!(!path.exists(), "socket path unlinked on shutdown");
+
+        // a stale path left by a dead server (here: a plain file nothing
+        // is listening on) is swept aside and re-bound
+        std::fs::write(&path, b"stale").unwrap();
+        let server = Server::bind(&listen, one_shard_cfg()).unwrap();
+        assert!(path.exists());
+        drop(server); // Drop stops and joins
+        assert!(!path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

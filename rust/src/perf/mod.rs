@@ -120,6 +120,31 @@ impl Roofline {
             self.arithmetic_intensity
         )
     }
+
+    /// JSON encoding for the wire / bench reports (degenerate
+    /// measurements can carry non-finite rates, which
+    /// [`crate::util::json`] round-trips as `NaN`/`Infinity` literals).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("gflops".to_string(), Json::Num(self.gflops));
+        m.insert("gbytes".to_string(), Json::Num(self.gbytes));
+        m.insert("peak_gbytes".to_string(), Json::Num(self.peak_gbytes));
+        m.insert("achieved_fraction".to_string(), Json::Num(self.achieved_fraction));
+        m.insert("arithmetic_intensity".to_string(), Json::Num(self.arithmetic_intensity));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`Roofline::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        Ok(Roofline {
+            gflops: j.req("gflops")?.as_f64()?,
+            gbytes: j.req("gbytes")?.as_f64()?,
+            peak_gbytes: j.req("peak_gbytes")?.as_f64()?,
+            achieved_fraction: j.req("achieved_fraction")?.as_f64()?,
+            arithmetic_intensity: j.req("arithmetic_intensity")?.as_f64()?,
+        })
+    }
 }
 
 /// Roofline point from a [`Timing`]'s minimum (least-noise) run.
@@ -185,6 +210,18 @@ mod tests {
         assert_eq!(r.gbytes, 0.0);
         assert_eq!(r.arithmetic_intensity, 0.0);
         assert_eq!(r.achieved_fraction, 0.0);
+    }
+
+    #[test]
+    fn roofline_round_trips_through_json() {
+        let r = Roofline::from_seconds(0.5, 1_000_000_000, 2_000_000_000);
+        assert_eq!(Roofline::from_json(&r.to_json()).unwrap(), r);
+        // a degenerate point survives the text form too
+        let text =
+            Roofline { achieved_fraction: f64::INFINITY, ..r }.to_json().dump();
+        let back =
+            Roofline::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.achieved_fraction, f64::INFINITY);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::kernel::{Spmv, VecBatch};
 use crate::solver::compaction::BatchCompactor;
 
 /// Options for [`mrs_solve`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MrsOptions {
     /// Shift `alpha` (must be nonzero for convergence).
     pub alpha: f64,
@@ -34,7 +34,7 @@ impl Default for MrsOptions {
 }
 
 /// Solve result.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MrsResult {
     /// Final iterate.
     pub x: Vec<f64>,

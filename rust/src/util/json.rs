@@ -3,8 +3,16 @@
 //!
 //! Parses the artifact manifest written by `python/compile/aot.py` and
 //! the coordinator config; writes the machine-readable bench reports
-//! ([`crate::util::bencher`]). Supports the full JSON value grammar
+//! ([`crate::util::bencher`]) and the wire encoding of plan/stats
+//! reports ([`crate::net`]). Supports the full JSON value grammar
 //! except exotic number formats; strings support the standard escapes.
+//!
+//! Non-finite floats extend strict JSON with the `NaN` / `Infinity` /
+//! `-Infinity` literals (the Python-`json` convention): reports carry
+//! measured ratios that can legitimately be non-finite (e.g. a speedup
+//! over a zero-time baseline), and now that they cross process
+//! boundaries the encoding must be total — `dump` then `parse` returns
+//! the value, never `null` in its place.
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -80,8 +88,9 @@ impl Json {
     }
 
     /// Serialize to compact JSON text. Round-trips through
-    /// [`Json::parse`]; non-finite numbers (which JSON cannot
-    /// represent) are written as `null`.
+    /// [`Json::parse`] for **every** value, including non-finite
+    /// numbers (written as the `NaN`/`Infinity`/`-Infinity` literals,
+    /// which strict JSON lacks but our parser — and Python's — accept).
     pub fn dump(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -93,7 +102,10 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(x) if !x.is_finite() => out.push_str("null"),
+            Json::Num(x) if x.is_nan() => out.push_str("NaN"),
+            Json::Num(x) if x.is_infinite() => {
+                out.push_str(if *x > 0.0 { "Infinity" } else { "-Infinity" })
+            }
             Json::Num(x) => {
                 let _ = write!(out, "{x}");
             }
@@ -173,6 +185,11 @@ impl<'a> Parser<'a> {
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
             b'n' => self.lit("null", Json::Null),
+            b'N' => self.lit("NaN", Json::Num(f64::NAN)),
+            b'I' => self.lit("Infinity", Json::Num(f64::INFINITY)),
+            b'-' if self.b.get(self.i + 1) == Some(&b'I') => {
+                self.lit("-Infinity", Json::Num(f64::NEG_INFINITY))
+            }
             _ => self.number(),
         }
     }
@@ -331,10 +348,38 @@ mod tests {
     }
 
     #[test]
-    fn dump_writes_non_finite_as_null() {
-        assert_eq!(Json::Num(f64::NAN).dump(), "null");
-        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+    fn non_finite_floats_round_trip() {
         assert_eq!(Json::Num(2.5).dump(), "2.5");
+        assert_eq!(Json::Num(f64::NAN).dump(), "NaN");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "Infinity");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).dump(), "-Infinity");
+
+        // NaN != NaN, so the round trip is asserted structurally
+        match Json::parse("NaN").unwrap() {
+            Json::Num(x) => assert!(x.is_nan()),
+            other => panic!("expected number, got {other:?}"),
+        }
+        assert_eq!(Json::parse("Infinity").unwrap(), Json::Num(f64::INFINITY));
+        assert_eq!(Json::parse("-Infinity").unwrap(), Json::Num(f64::NEG_INFINITY));
+
+        // nested, through a full dump->parse cycle
+        let v = Json::Arr(vec![
+            Json::Num(f64::NEG_INFINITY),
+            Json::Num(-1.5),
+            Json::Num(f64::NAN),
+            Json::Num(f64::INFINITY),
+        ]);
+        let parsed = Json::parse(&v.dump()).unwrap();
+        let a = parsed.as_arr().unwrap();
+        assert_eq!(a[0], Json::Num(f64::NEG_INFINITY));
+        assert_eq!(a[1], Json::Num(-1.5));
+        assert!(matches!(a[2], Json::Num(x) if x.is_nan()));
+        assert_eq!(a[3], Json::Num(f64::INFINITY));
+
+        // near-miss literals still fail loudly
+        assert!(Json::parse("Nan").is_err());
+        assert!(Json::parse("-Inf").is_err());
+        assert!(Json::parse("Infinit").is_err());
     }
 
     #[test]

@@ -376,3 +376,106 @@ fn skew_part_preconditioning_flow() {
     );
     assert!(r.converged);
 }
+
+#[test]
+fn remote_client_matches_local_pipeline_over_tcp_and_uds() {
+    // the wire is a transport, not a different engine: for every
+    // registry backend, a RemoteClient over TCP and over UDS must
+    // return what a direct Coordinator returns on the same matrix —
+    // with the whole burst submitted before the first wait, same as
+    // the in-process pipelining contract.
+    use pars3::coordinator::{ClientApi, Pars3Error};
+    use pars3::kernel::VecBatch;
+    use pars3::net::{Listen, RemoteClient, Server};
+
+    let n = 160;
+    let alpha = 2.0;
+    let coo = gen::small_test_matrix(n, 9, alpha);
+    let mut coord = Coordinator::new(Config::default());
+    let prep = coord.prepare("ref", &coo).unwrap();
+    let p = 4;
+    let backends = [
+        Backend::Serial,
+        Backend::Csr,
+        Backend::Dgbmv,
+        Backend::Coloring { p },
+        Backend::Race { p },
+        Backend::Pars3 { p },
+    ];
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.2).sin()).collect();
+    let xs = VecBatch::from_fn(n, 3, |i, c| ((i * 3 + c) as f64 * 0.05).cos());
+    let opts = MrsOptions { alpha, max_iters: 200, tol: 1e-8 };
+
+    let dir = std::env::temp_dir().join(format!("pars3-it-net-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let listens =
+        [Listen::Tcp("127.0.0.1:0".to_string()), Listen::Uds(dir.join("loopback.sock"))];
+
+    for listen in &listens {
+        let server =
+            Server::bind(listen, Config { shards: 2, ..Config::default() }).unwrap();
+        let client = RemoteClient::connect(server.local_addr()).unwrap();
+        let h = client.prepare("m", coo.clone()).wait().unwrap();
+
+        // backend sweep, pipelined: every request is on the wire before
+        // the first wait
+        let tickets: Vec<_> =
+            backends.iter().map(|&b| client.spmv(&h, x.clone(), b)).collect();
+        assert_eq!(tickets.len(), backends.len(), "all submitted before any wait");
+        for (&backend, t) in backends.iter().zip(tickets) {
+            let got = t.wait().unwrap();
+            let want = coord.spmv(&prep, &x, backend).unwrap();
+            let diff =
+                got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+            assert!(diff <= 1e-12, "{listen}: {backend:?} diverged by {diff:.3e}");
+        }
+
+        // fused batch and solve agree too (raw-LE f64 batches both ways)
+        let got = client.spmv_batch(&h, xs.clone(), Backend::Pars3 { p }).wait().unwrap();
+        let want = coord.spmv_batch(&prep, &xs, Backend::Pars3 { p }).unwrap();
+        for c in 0..3 {
+            let diff = got
+                .col(c)
+                .iter()
+                .zip(want.col(c))
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(diff <= 1e-12, "{listen}: batch col {c} diverged by {diff:.3e}");
+        }
+        let got = client.solve(&h, x.clone(), opts.clone(), Backend::Serial).wait().unwrap();
+        let want = coord.solve(&prep, &x, &opts, Backend::Serial).unwrap();
+        assert_eq!((got.converged, got.iters), (want.converged, want.iters), "{listen}");
+        let diff =
+            got.x.iter().zip(&want.x).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
+        assert!(diff <= 1e-12, "{listen}: solve diverged by {diff:.3e}");
+
+        // describe's evidence tree crosses as JSON and reconstructs
+        let info = client.describe(&h).wait().unwrap();
+        assert_eq!((info.name.as_str(), info.n), ("m", n), "{listen}");
+        assert_eq!(info.bw_before, prep.bw_before, "{listen}");
+        assert_eq!(info.reordered_bw, prep.reordered_bw, "{listen}");
+        assert!(!info.plan.summary().is_empty(), "{listen}");
+
+        // stats, single-shard and all-shards
+        let all = client.cache_stats_all().wait().unwrap();
+        assert_eq!(all.len(), 2, "{listen}: one entry per shard");
+        let one = client.cache_stats(h.shard()).wait().unwrap();
+        assert_eq!(one.shard, h.shard(), "{listen}");
+
+        // typed errors survive the wire as variants
+        client.release(&h).wait().unwrap();
+        match client.spmv(&h, x.clone(), Backend::Serial).wait() {
+            Err(Pars3Error::StaleHandle { .. }) => {}
+            other => panic!("{listen}: expected StaleHandle, got {:?}", other.map(|y| y.len())),
+        }
+        match client.spmv(&h, vec![0.0; 3], Backend::Serial).wait() {
+            // released handle: staleness outranks the dimension check
+            Err(Pars3Error::StaleHandle { .. }) => {}
+            other => panic!("{listen}: expected StaleHandle, got {:?}", other.map(|y| y.len())),
+        }
+
+        server.stop();
+        server.join();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -734,3 +734,135 @@ fn prop_client_matches_coordinator_for_every_registered_backend() {
         svc.shutdown();
     });
 }
+
+#[test]
+fn prop_frame_codec_round_trips_every_message() {
+    // any sequence of wire messages survives encode -> concatenate ->
+    // adversarial re-chunking (byte-at-a-time or random cuts) ->
+    // decode, bit-for-bit. TCP guarantees no read boundaries; this is
+    // the property that makes the framed codec safe over it.
+    use pars3::coordinator::{CacheStats, Pars3Error, Service};
+    use pars3::kernel::VecBatch;
+    use pars3::net::frame::{write_frame, FrameDecoder};
+    use pars3::net::proto::{Request, Response};
+    use pars3::solver::mrs::{MrsOptions, MrsResult};
+
+    // handles are only minted by a service (opaque fields); one real
+    // handle serves every case — the codec just sees its four words
+    let svc = Service::start(Config { shards: 1, ..Config::default() });
+    let client = svc.client();
+    let handle = client.prepare("prop", gen::small_test_matrix(30, 3, 2.0)).wait().unwrap();
+    let info = client.describe(&handle).wait().unwrap();
+
+    for_all("frame codec round trips", 48, |rng| {
+        #[derive(Debug, PartialEq)]
+        enum Msg {
+            Req(Request),
+            Resp(Response),
+        }
+        fn vecf(rng: &mut SmallRng, len: usize) -> Vec<f64> {
+            (0..len).map(|_| rng.gen_range_f64(-1e3, 1e3)).collect()
+        }
+
+        let n = 5 + rng.gen_range_usize(0, 30);
+        let coo = {
+            let edges = gen::random_banded_pattern(n, 2, 0.5, rng);
+            skew::coo_from_pattern(n, &edges, 1.5 + rng.gen_f64(), rng)
+        };
+        let p = 1 + rng.gen_range_usize(0, 8);
+        let backend = [
+            Backend::Serial,
+            Backend::Csr,
+            Backend::Dgbmv,
+            Backend::Coloring { p },
+            Backend::Race { p },
+            Backend::Pars3 { p },
+            Backend::Pjrt,
+        ][rng.gen_range_usize(0, 7)];
+        let opts = MrsOptions {
+            alpha: 1.0 + rng.gen_f64(),
+            max_iters: 1 + rng.gen_range_usize(0, 300),
+            tol: 1e-8,
+        };
+        let k = 1 + rng.gen_range_usize(0, 4);
+        let xs = VecBatch::from_fn(n, k, |i, c| ((i * 31 + c * 7) as f64).sin());
+        let mrs = MrsResult {
+            x: vecf(rng, n),
+            r: vecf(rng, n),
+            history: vecf(rng, 4),
+            iters: rng.gen_range_usize(0, 300),
+            converged: rng.gen_f64() < 0.5,
+        };
+        let err = match rng.gen_range_usize(0, 5) {
+            0 => Pars3Error::ServiceStopped,
+            1 => Pars3Error::DimensionMismatch { expected: n, got: n + 1 },
+            2 => Pars3Error::Io("connection reset by peer".into()),
+            3 => Pars3Error::StaleHandle { shard: 0, slot: 1, held: 1, current: 2 },
+            _ => Pars3Error::Protocol("torn frame".into()),
+        };
+        let shard_sel =
+            if rng.gen_f64() < 0.5 { Some(rng.gen_range_usize(0, 9) as u64) } else { None };
+
+        // every message kind once, with randomized contents
+        let msgs = vec![
+            Msg::Req(Request::Prepare { id: 1, name: format!("m{n}"), coo: coo.clone() }),
+            Msg::Req(Request::PrepareReplace { id: 2, handle, name: "r".into(), coo }),
+            Msg::Req(Request::Release { id: 3, handle }),
+            Msg::Req(Request::Spmv { id: 4, handle, x: vecf(rng, n), backend }),
+            Msg::Req(Request::SpmvBatch { id: 5, handle, xs: xs.clone(), backend }),
+            Msg::Req(Request::Solve {
+                id: 6,
+                handle,
+                b: vecf(rng, n),
+                opts: opts.clone(),
+                backend,
+            }),
+            Msg::Req(Request::SolveBatch { id: 7, handle, bs: xs.clone(), opts, backend }),
+            Msg::Req(Request::Describe { id: 8, handle }),
+            Msg::Req(Request::CacheStats { id: 9, shard: shard_sel }),
+            Msg::Req(Request::Stop { id: 10 }),
+            Msg::Resp(Response::Handle { id: 11, handle }),
+            Msg::Resp(Response::Unit { id: 12 }),
+            Msg::Resp(Response::Vec { id: 13, y: vecf(rng, n) }),
+            Msg::Resp(Response::Batch { id: 14, ys: xs }),
+            Msg::Resp(Response::Solve { id: 15, result: mrs.clone() }),
+            Msg::Resp(Response::SolveBatch { id: 16, results: vec![mrs] }),
+            Msg::Resp(Response::Info { id: 17, info: info.clone() }),
+            Msg::Resp(Response::Stats {
+                id: 18,
+                stats: vec![CacheStats { shard: 0, cached: 1, built: 2, queue_depth: 3 }],
+            }),
+            Msg::Resp(Response::Error { id: 19, err }),
+        ];
+
+        let mut wire = Vec::new();
+        for m in &msgs {
+            let (tag, payload) = match m {
+                Msg::Req(r) => r.encode(),
+                Msg::Resp(r) => r.encode(),
+            };
+            write_frame(&mut wire, tag, &payload).unwrap();
+        }
+
+        let byte_mode = rng.gen_f64() < 0.25;
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut i = 0;
+        while i < wire.len() {
+            let step = if byte_mode { 1 } else { 1 + rng.gen_range_usize(0, 301) };
+            let j = (i + step).min(wire.len());
+            dec.feed(&wire[i..j]);
+            i = j;
+            while let Some((tag, payload)) = dec.next_frame().unwrap() {
+                got.push(if tag < 0x80 {
+                    Msg::Req(Request::decode(tag, &payload).unwrap())
+                } else {
+                    Msg::Resp(Response::decode(tag, &payload).unwrap())
+                });
+            }
+        }
+        assert_eq!(got, msgs);
+        assert_eq!(dec.pending(), 0, "no bytes left behind");
+    });
+    svc.shutdown();
+}
