@@ -1,0 +1,98 @@
+//! Bench: **prepare scaling** — wall-clock of the one-time prepare
+//! pipeline (pseudo-peripheral BFS + RCM + permutation + SSS build) as
+//! the prepare-pool width grows, on a scrambled banded pattern (the
+//! paper's main case: RCM has real work to do).
+//!
+//! Two invariants are asserted, not just reported:
+//!
+//! * the permutation and the built SSS arrays are **bit-identical** for
+//!   every pool width (the parallel prepare is a pure speedup);
+//! * the per-stage [`PrepareTimings`] ride the [`ReorderReport`] out of
+//!   the pipeline (bfs/rcm/build all stamped).
+//!
+//! The report lands in `target/bench_reports/prepare_scaling.{md,json}`;
+//! CI copies the JSON next to the repo-root `BENCH_prepare_scaling.json`
+//! trajectory artifact. `PARS3_BENCH_SCALE` (float) overrides the
+//! problem size — the CI smoke job runs this bench tiny.
+
+use pars3::graph::reorder::ReorderPolicy;
+use pars3::kernel::registry;
+use pars3::report::md_table;
+use pars3::sparse::{gen, skew};
+use pars3::util::bencher::Bencher;
+use pars3::util::{PrepPool, SmallRng};
+
+fn main() {
+    let mut scale = 1.0f64;
+    if let Ok(s) = std::env::var("PARS3_BENCH_SCALE") {
+        scale = s.parse().expect("PARS3_BENCH_SCALE must be a float");
+    }
+    let n = ((40000.0 * scale) as usize).max(600);
+    let mut rng = SmallRng::seed_from_u64(11);
+    let mut edges = gen::random_banded_pattern(n, 6, 0.5, &mut rng);
+    gen::add_long_range(&mut edges, n, 0.02, &mut rng);
+    let edges = gen::scramble(&edges, n, &mut rng);
+    let coo = skew::coo_from_pattern(n, &edges, 2.0, &mut rng);
+
+    let mut b = Bencher::new("prepare_scaling");
+    let mut rows = Vec::new();
+
+    // the serial reference: every wider pool must reproduce its output
+    let serial_pool = PrepPool::serial();
+    let (serial_perm, serial_sss, _) =
+        registry::reorder_to_sss_with(&coo, ReorderPolicy::Rcm, 0.0, &serial_pool)
+            .expect("serial prepare");
+    let t_serial = b.bench("prepare/threads=1", 1, 3, || {
+        let out = registry::reorder_to_sss_with(&coo, ReorderPolicy::Rcm, 0.0, &serial_pool)
+            .expect("prepare");
+        std::hint::black_box(&out);
+    });
+
+    for threads in [1usize, 2, 4] {
+        let pool = PrepPool::new(threads);
+        let (perm, sss, mut report) =
+            registry::reorder_to_sss_with(&coo, ReorderPolicy::Rcm, 0.0, &pool)
+                .expect("prepare");
+        assert_eq!(perm, serial_perm, "threads={threads}: permutation must be bit-identical");
+        assert_eq!(sss.row_ptr, serial_sss.row_ptr, "threads={threads}");
+        assert_eq!(sss.col_ind, serial_sss.col_ind, "threads={threads}");
+        assert_eq!(sss.vals, serial_sss.vals, "threads={threads}");
+        assert!(report.timings.bfs_ms >= 0.0 && report.timings.build_ms > 0.0);
+        let t = if threads == 1 {
+            t_serial
+        } else {
+            b.bench(&format!("prepare/threads={threads}"), 1, 3, || {
+                let out = registry::reorder_to_sss_with(&coo, ReorderPolicy::Rcm, 0.0, &pool)
+                    .expect("prepare");
+                std::hint::black_box(&out);
+            })
+        };
+        // stamp the serial reference so the summary carries the speedup
+        report.timings.serial_ms = t_serial.min * 1e3;
+        rows.push(vec![
+            threads.to_string(),
+            format!("{:.3e}", t.min),
+            format!("{:.3}", report.timings.bfs_ms),
+            format!("{:.3}", report.timings.rcm_ms),
+            format!("{:.3}", report.timings.build_ms),
+            format!("{:.2}", t_serial.min / t.min),
+        ]);
+        println!("{}", report.timings.summary());
+    }
+
+    b.section(&format!(
+        "## Prepare scaling (n = {n}, RCM + SSS build; permutation asserted \
+         bit-identical to serial at every width)\n\n{}",
+        md_table(
+            &["threads", "prepare s (min)", "bfs ms", "rcm ms", "build ms", "speedup"],
+            &rows
+        )
+    ));
+    b.section(
+        "The per-stage columns come from the last measured run's \
+         `PrepareTimings` (the same struct `describe` and the wire \
+         protocol expose); `speedup` is min-over-min against the \
+         1-thread run of this same process.\n",
+    );
+    b.finish();
+}

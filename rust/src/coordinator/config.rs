@@ -19,6 +19,7 @@
 //! backend = "auto"
 //! plan = "auto"
 //! plan_probe = 0
+//! prepare_threads = 4
 //! shards = 2
 //! queue_depth = 64
 //! max_cached_kernels = 32
@@ -72,6 +73,11 @@ pub struct Config {
     /// Timed `apply` calls per backend candidate during planning
     /// (`0` = structural scoring only, no probe kernels built).
     pub plan_probe: usize,
+    /// Prepare-pool width: BFS/RCM reordering and format construction
+    /// run across this many workers (default: the machine's available
+    /// parallelism). The computed permutation and formats are identical
+    /// for every width; only prepare wall-clock changes.
+    pub prepare_threads: usize,
     /// Worker shards in the request service (each owns a `Coordinator`
     /// and its kernel cache; matrices are assigned round-robin).
     pub shards: usize,
@@ -102,6 +108,7 @@ impl Default for Config {
             backend: BackendPolicy::Auto,
             plan: PlanMode::Auto,
             plan_probe: 0,
+            prepare_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             shards: 2,
             queue_depth: 64,
             max_cached_kernels: 32,
@@ -155,6 +162,9 @@ impl Config {
                     cfg.plan = value.trim_matches('"').parse().context("plan")?;
                 }
                 "plan_probe" => cfg.plan_probe = value.parse().context("plan_probe")?,
+                "prepare_threads" => {
+                    cfg.prepare_threads = value.parse().context("prepare_threads")?;
+                }
                 "shards" => cfg.shards = value.parse().context("shards")?,
                 "queue_depth" => cfg.queue_depth = value.parse().context("queue_depth")?,
                 "max_cached_kernels" => {
@@ -193,6 +203,9 @@ impl Config {
         if cfg.l2_kib == 0 {
             bail!("l2_kib must be >= 1");
         }
+        if cfg.prepare_threads == 0 {
+            bail!("prepare_threads must be >= 1");
+        }
         Ok(cfg)
     }
 }
@@ -210,7 +223,7 @@ mod tests {
     #[test]
     fn parses_full_config() {
         let c = Config::parse(
-            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nreorder = \"rcm-bicriteria\"\nreorder_min_gain = 0.1\nl2_kib = 512\nbackend = \"pars3\"\nplan = \"pinned\"\nplan_probe = 2\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
+            "# comment\nscale = 0.5\nalpha = 3.0\nouter_bw = 5\nranks = [1, 2, 4]\nartifacts_dir = \"art\"\nthreaded = true\nformat = \"dia\"\nreorder = \"rcm-bicriteria\"\nreorder_min_gain = 0.1\nl2_kib = 512\nbackend = \"pars3\"\nplan = \"pinned\"\nplan_probe = 2\nprepare_threads = 3\nshards = 4\nqueue_depth = 16\nmax_cached_kernels = 8\nseed = 7\n",
         )
         .unwrap();
         assert_eq!(c.scale, 0.5);
@@ -226,6 +239,7 @@ mod tests {
         assert_eq!(c.backend, BackendPolicy::Pars3);
         assert_eq!(c.plan, PlanMode::Pinned);
         assert_eq!(c.plan_probe, 2);
+        assert_eq!(c.prepare_threads, 3);
         assert_eq!(c.shards, 4);
         assert_eq!(c.queue_depth, 16);
         assert_eq!(c.max_cached_kernels, 8);
@@ -257,6 +271,7 @@ mod tests {
         assert!(Config::parse("shards = 0").is_err());
         assert!(Config::parse("queue_depth = 0").is_err());
         assert!(Config::parse("l2_kib = 0").is_err());
+        assert!(Config::parse("prepare_threads = 0").is_err());
     }
 
     #[test]

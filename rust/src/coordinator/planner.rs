@@ -41,10 +41,12 @@
 use crate::coordinator::config::Config;
 use crate::coordinator::error::Pars3Error;
 use crate::coordinator::pipeline::Backend;
+use crate::graph::bfs::{level_structure_with, LevelStructure};
+use crate::graph::peripheral::{bi_criteria_start_from, pseudo_peripheral_ls_from};
 use crate::graph::rcm::{bandwidth_under, profile_under};
 use crate::graph::reorder::{
-    CandidateScore, Natural, Rcm, RcmBiCriteria, ReorderOutcome, ReorderPolicy, ReorderReport,
-    ReorderStrategy,
+    rcm_per_component_with, CandidateScore, Natural, PrepareTimings, ReorderOutcome,
+    ReorderPolicy, ReorderReport, ReorderStrategy,
 };
 use crate::graph::Adjacency;
 use crate::kernel::dia::{DiaBand, FormatPolicy};
@@ -54,6 +56,9 @@ use crate::kernel::split3::Split3;
 use crate::perf::Roofline;
 use crate::sparse::{Coo, Sss};
 use crate::util::json::Json;
+use crate::util::pool::PrepPool;
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::fmt;
 use std::time::Instant;
 
@@ -226,6 +231,10 @@ pub struct PlanConstraints {
     /// Cache budget (KiB) probe kernels tile their band passes with
     /// (must match execution so probe timings transfer).
     pub l2_kib: usize,
+    /// Prepare-pool width: BFS/RCM/format construction and the probe
+    /// loop run across this many workers (the permutation is identical
+    /// for every width — parallelism is an execution detail).
+    pub prepare_threads: usize,
 }
 
 impl PlanConstraints {
@@ -245,6 +254,7 @@ impl PlanConstraints {
             threaded: cfg.threaded,
             probe_spmvs: cfg.plan_probe,
             l2_kib: cfg.l2_kib,
+            prepare_threads: cfg.prepare_threads,
         }
     }
 }
@@ -596,11 +606,13 @@ impl Planner {
     /// return the preprocessed artifacts plus the [`PlanReport`]
     /// evidence.
     pub fn plan(coo: &Coo, cons: &PlanConstraints) -> Result<Planned, Pars3Error> {
-        // Axis 1: reorder. `reorder_to_sss` already runs the scoring
-        // loop (via `score_reorder_candidates` when the policy is
-        // Auto), so both pinned and unpinned resolution share it.
+        let pool = PrepPool::new(cons.prepare_threads);
+        // Axis 1: reorder. `reorder_to_sss_with` already runs the
+        // scoring loop (via `score_reorder_candidates_with` when the
+        // policy is Auto), so both pinned and unpinned resolution share
+        // it — BFS, CM visits, and format construction all on `pool`.
         let (perm, sss, rreport) =
-            registry::reorder_to_sss(coo, cons.reorder, cons.reorder_min_gain)?;
+            registry::reorder_to_sss_with(coo, cons.reorder, cons.reorder_min_gain, &pool)?;
         let reorder_pinned =
             cons.mode == PlanMode::Pinned || cons.reorder != ReorderPolicy::Auto;
         let reorder_axis = reorder_axis_report(&rreport, reorder_pinned, cons.reorder_min_gain);
@@ -649,7 +661,7 @@ impl Planner {
             let b = cons.backend.resolve(p).unwrap_or(Backend::Pars3 { p });
             (b, pinned_backend_axis(b, &sss, &split, p), None)
         } else {
-            scored_backend_axis(&sss, &split, p, &kcfg, cons)?
+            scored_backend_axis(&sss, &split, p, &kcfg, cons, &pool)?
         };
         // every native plan carries a measured roofline point for its
         // chosen backend: reuse the probe's when one ran, else take a
@@ -673,17 +685,56 @@ impl Planner {
     }
 }
 
+/// Single-threaded [`score_reorder_candidates_with`].
+pub fn score_reorder_candidates(g: &Adjacency, min_gain: f64) -> ReorderOutcome {
+    score_reorder_candidates_with(g, min_gain, &PrepPool::serial())
+}
+
 /// The candidate-scoring loop behind [`ReorderPolicy::Auto`]
 /// (extracted from `reorder::Auto` so the planner owns the scorer):
 /// run every strategy, score by (bandwidth, envelope profile), keep
 /// the natural order unless the best reordering clears `min_gain`.
-pub fn score_reorder_candidates(g: &Adjacency, min_gain: f64) -> ReorderOutcome {
-    let natural = Natural.reorder(g);
+///
+/// The candidate strategies discover components in the same vertex
+/// order, so their peripheral searches all begin with a BFS from the
+/// same start vertices; that initial level structure is computed once
+/// per component start and shared across candidates instead of
+/// re-running BFS from scratch for each one. The returned outcome's
+/// timings sum every candidate's work (that is what an Auto prepare
+/// actually spent).
+pub fn score_reorder_candidates_with(
+    g: &Adjacency,
+    min_gain: f64,
+    pool: &PrepPool,
+) -> ReorderOutcome {
+    let natural = Natural.reorder_with(g, pool);
     let nat_bw = bandwidth_under(g, &natural.perm);
     let nat_profile = profile_under(g, &natural.perm);
 
+    let start_ls: RefCell<HashMap<u32, LevelStructure>> = RefCell::new(HashMap::new());
+    let initial_ls = |s: u32| -> LevelStructure {
+        start_ls
+            .borrow_mut()
+            .entry(s)
+            .or_insert_with(|| level_structure_with(g, s, pool))
+            .clone()
+    };
+
     // Rcm first so an exact (bw, profile) tie keeps the classic pick.
-    let reorderers = [Rcm.reorder(g), RcmBiCriteria.reorder(g)];
+    let reorderers = [
+        rcm_per_component_with(
+            g,
+            "rcm",
+            &|g, s| pseudo_peripheral_ls_from(g, initial_ls(s), pool),
+            pool,
+        ),
+        rcm_per_component_with(
+            g,
+            "rcm-bicriteria",
+            &|g, s| bi_criteria_start_from(g, initial_ls(s), pool),
+            pool,
+        ),
+    ];
     let mut scored: Vec<(ReorderOutcome, usize, u64)> = reorderers
         .into_iter()
         .map(|out| {
@@ -719,8 +770,19 @@ pub fn score_reorder_candidates(g: &Adjacency, min_gain: f64) -> ReorderOutcome 
             chosen: accept && i == best,
         });
     }
+    // Auto's prepare cost is every candidate it weighed, not just the
+    // winner's own run.
+    let timings = PrepareTimings {
+        bfs_ms: natural.timings.bfs_ms
+            + scored.iter().map(|(o, _, _)| o.timings.bfs_ms).sum::<f64>(),
+        rcm_ms: natural.timings.rcm_ms
+            + scored.iter().map(|(o, _, _)| o.timings.rcm_ms).sum::<f64>(),
+        threads: pool.threads(),
+        ..PrepareTimings::default()
+    };
     let mut winner = if accept { scored.swap_remove(best).0 } else { natural };
     winner.candidates = candidates;
+    winner.timings = timings;
     winner
 }
 
@@ -869,17 +931,62 @@ fn scored_format_axis(split: &Split3) -> (FormatPolicy, AxisReport) {
 /// a couple of KiB does, so a backend needing `k` barriers per apply
 /// pays `k` of these on top of its traffic estimate. This is what
 /// separates RACE's fixed 2-phase schedule from greedy coloring's
-/// one-barrier-per-color ladder.
+/// one-barrier-per-color ladder. The constant is the fallback; with a
+/// probe budget the planner measures the real round-trip instead
+/// ([`measured_barrier_cost_bytes`]).
 const BARRIER_COST_BYTES: f64 = 2048.0;
+
+/// Barrier rounds the calibration times (enough to average out
+/// scheduler noise, cheap enough to run once per plan).
+const BARRIER_CAL_ROUNDS: usize = 64;
+
+/// Measure the byte-equivalent cost of one barrier round-trip on the
+/// **real** persistent rank world: time `BARRIER_CAL_ROUNDS` barriers
+/// across `p` rank threads (after one warmup job absorbs thread
+/// start-up), take the slowest rank, and convert seconds to bytes at
+/// the machine's measured streaming rate. Only run when the plan has a
+/// probe budget — calibration spins up `p` threads and a memory sweep,
+/// which a probe-free structural plan must not pay; those plans keep
+/// the [`BARRIER_COST_BYTES`] constant.
+fn measured_barrier_cost_bytes(p: usize) -> Option<f64> {
+    use crate::mpisim::comm::{PersistentWorld, RankReport};
+    if p < 2 {
+        // a 1-rank barrier is a no-op; the constant is closer to truth
+        return None;
+    }
+    let world = PersistentWorld::new(p);
+    world.run_job(|ctx| {
+        ctx.barrier();
+        RankReport::default()
+    });
+    let reports = world.run_job(|ctx| {
+        let t0 = Instant::now();
+        for _ in 0..BARRIER_CAL_ROUNDS {
+            ctx.barrier();
+        }
+        RankReport { seconds: t0.elapsed().as_secs_f64(), ..Default::default() }
+    });
+    let per_barrier_s =
+        reports.iter().map(|r| r.seconds).fold(0.0f64, f64::max) / BARRIER_CAL_ROUNDS as f64;
+    let bytes = per_barrier_s * crate::perf::membench::peak_gbytes() * 1e9;
+    (bytes.is_finite() && bytes > 0.0).then_some(bytes)
+}
 
 /// Structural proxy for one backend: estimated bytes streamed per
 /// `apply`, with the parallel kernels credited for splitting the
 /// matrix across `p` ranks and PARS3 charged for its halo exchange
 /// plus the worst rank's share of [`Split3::row_work`] (load balance —
 /// an even row split only helps if the work is evenly banded). Phased
-/// kernels additionally pay [`BARRIER_COST_BYTES`] per barrier: the
+/// kernels additionally pay `barrier_bytes` per barrier (the measured
+/// round-trip when calibration ran, else [`BARRIER_COST_BYTES`]): the
 /// greedy coloring one per color, RACE one per parity phase (≤ 2).
-fn structural_backend_score(b: Backend, sss: &Sss, split: &Split3, p: usize) -> f64 {
+fn structural_backend_score(
+    b: Backend,
+    sss: &Sss,
+    split: &Split3,
+    p: usize,
+    barrier_bytes: f64,
+) -> f64 {
     let n = sss.n as f64;
     let nnz = sss.nnz_lower() as f64;
     let bw = sss.bandwidth() as f64;
@@ -895,7 +1002,7 @@ fn structural_backend_score(b: Backend, sss: &Sss, split: &Split3, p: usize) -> 
         // per color class.
         Backend::Coloring { .. } => {
             let colors = crate::graph::coloring::color_rows(sss).num_colors as f64;
-            24.0 * nnz / pf + 16.0 * n + colors * BARRIER_COST_BYTES
+            24.0 * nnz / pf + 16.0 * n + colors * barrier_bytes
         }
         // RACE streams the stored triangle once in level order (the
         // level-induced locality keeps x resident), scaled by the
@@ -905,7 +1012,7 @@ fn structural_backend_score(b: Backend, sss: &Sss, split: &Split3, p: usize) -> 
             let st = RaceStructure::build(sss, p);
             12.0 * nnz * st.overall_balance() / pf
                 + 16.0 * n / pf
-                + st.phases() as f64 * BARRIER_COST_BYTES
+                + st.phases() as f64 * barrier_bytes
         }
         // PARS3: the slowest rank's middle share, plus per-rank halo
         // windows of one bandwidth, plus its slice of the vectors.
@@ -928,7 +1035,7 @@ fn max_chunk_work(split: &Split3, p: usize) -> usize {
 }
 
 fn pinned_backend_axis(b: Backend, sss: &Sss, split: &Split3, p: usize) -> AxisReport {
-    let score = structural_backend_score(b, sss, split, p);
+    let score = structural_backend_score(b, sss, split, p, BARRIER_COST_BYTES);
     AxisReport {
         axis: "backend",
         pinned: true,
@@ -950,6 +1057,7 @@ fn scored_backend_axis(
     p: usize,
     kcfg: &KernelConfig,
     cons: &PlanConstraints,
+    pool: &PrepPool,
 ) -> Result<(Backend, AxisReport, Option<Roofline>), Pars3Error> {
     let backends = [
         Backend::Serial,
@@ -959,36 +1067,48 @@ fn scored_backend_axis(
         Backend::Race { p },
         Backend::Pars3 { p },
     ];
+    // With a probe budget the barrier charge in the structural proxy is
+    // calibrated on the real persistent world; structural-only plans
+    // keep the constant (calibration costs threads + a memory sweep).
+    let barrier_bytes = if cons.probe_spmvs > 0 {
+        measured_barrier_cost_bytes(p).unwrap_or(BARRIER_COST_BYTES)
+    } else {
+        BARRIER_COST_BYTES
+    };
+    // Candidates are scored concurrently on the prepare pool. Probe
+    // timings stay comparative — every candidate runs under the same
+    // contention — and the results come back in candidate order, so
+    // the first-minimum tie-break below is unchanged.
     let mut cands: Vec<(Backend, PlanCandidate, Option<Roofline>)> =
-        Vec::with_capacity(backends.len());
-    for b in backends {
-        let structural = structural_backend_score(b, sss, split, p);
-        let (score, probe_s, detail, roof) = if cons.probe_spmvs > 0 {
-            match probe_backend(b, sss, split, kcfg, cons.probe_spmvs) {
-                Ok((t, roof)) => (
-                    t,
-                    Some(t),
-                    format!(
-                        "probe min over {} apply(s); {}; structural ~{} B/apply",
-                        cons.probe_spmvs,
-                        roof.summary(),
-                        structural as u64
+        pool.map_items(backends.len(), |i| {
+            let b = backends[i];
+            let structural = structural_backend_score(b, sss, split, p, barrier_bytes);
+            let (score, probe_s, detail, roof) = if cons.probe_spmvs > 0 {
+                match probe_backend(b, sss, split, kcfg, cons.probe_spmvs) {
+                    Ok((t, roof)) => (
+                        t,
+                        Some(t),
+                        format!(
+                            "probe min over {} apply(s); {}; structural ~{} B/apply",
+                            cons.probe_spmvs,
+                            roof.summary(),
+                            structural as u64
+                        ),
+                        Some(roof),
                     ),
-                    Some(roof),
-                ),
-                // A candidate that cannot even build disqualifies
-                // itself; the failure is the evidence.
-                Err(e) => (f64::INFINITY, None, format!("probe failed: {e}"), None),
-            }
-        } else {
-            (structural, None, format!("structural ~{} B/apply", structural as u64), None)
-        };
-        cands.push((
-            b,
-            PlanCandidate { name: backend_label(b), score, detail, probe_s, chosen: false },
-            roof,
-        ));
-    }
+                    // A candidate that cannot even build disqualifies
+                    // itself; the failure is the evidence.
+                    Err(e) => (f64::INFINITY, None, format!("probe failed: {e}"), None),
+                }
+            } else {
+                (structural, None, format!("structural ~{} B/apply", structural as u64), None)
+            };
+            (
+                b,
+                PlanCandidate { name: backend_label(b), score, detail, probe_s, chosen: false },
+                roof,
+            )
+        });
     // First minimum wins ties, keeping the registry order (serial
     // first) deterministic.
     let mut best = 0;
@@ -1217,6 +1337,27 @@ mod tests {
         let be = planned.report.axis("backend").unwrap();
         let chosen = be.candidates.iter().find(|c| c.chosen).unwrap();
         assert!(chosen.name.starts_with("race") && chosen.score.is_finite());
+    }
+
+    #[test]
+    fn prepare_threads_never_change_the_plan_or_permutation() {
+        let coo = gen::small_test_matrix(160, 21, 2.0);
+        let mut c1 = constraints();
+        c1.prepare_threads = 1;
+        let mut c4 = constraints();
+        c4.prepare_threads = 4;
+        let p1 = Planner::plan(&coo, &c1).unwrap();
+        let p4 = Planner::plan(&coo, &c4).unwrap();
+        assert_eq!(p1.perm, p4.perm, "permutation must be pool-width invariant");
+        assert_eq!(p1.choice, p4.choice, "plan choice must be pool-width invariant");
+        assert_eq!(p4.report.reorder.timings.threads, 4);
+        assert_eq!(p1.report.reorder.timings.threads, 1);
+        // outside the wall-clock timings the reorder evidence is identical
+        let mut r1 = p1.report.reorder.clone();
+        let mut r4 = p4.report.reorder.clone();
+        r1.timings = Default::default();
+        r4.timings = Default::default();
+        assert_eq!(r1, r4);
     }
 
     #[test]

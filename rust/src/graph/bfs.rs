@@ -1,7 +1,17 @@
 //! Breadth-first level structures (the engine under RCM and the
 //! pseudo-peripheral finder).
+//!
+//! Both the serial and the level-synchronous parallel BFS live here;
+//! [`level_structure_with`] is the parallel entry point (Azad et al.,
+//! distributed-memory RCM: split the frontier, merge per-worker next
+//! frontiers deterministically). The parallel expansion is bit-for-bit
+//! identical to the serial one — see [`expand_frontier`].
 
 use crate::graph::Adjacency;
+use crate::util::pool::PrepPool;
+
+/// Frontier size below which parallel expansion is not worth a spawn.
+const MIN_PAR_FRONTIER: usize = 512;
 
 /// Rooted level structure: vertices grouped by BFS distance from a root.
 #[derive(Debug, Clone)]
@@ -35,29 +45,82 @@ impl LevelStructure {
 
 /// BFS from `root`, returning the level structure of its component.
 pub fn level_structure(g: &Adjacency, root: u32) -> LevelStructure {
+    level_structure_with(g, root, &PrepPool::serial())
+}
+
+/// Level-synchronous BFS from `root` on `pool`: each level's frontier
+/// is expanded in parallel and the per-worker next frontiers are merged
+/// in worker order, so the result is identical to [`level_structure`]
+/// for every thread count.
+pub fn level_structure_with(g: &Adjacency, root: u32, pool: &PrepPool) -> LevelStructure {
     let mut dist = vec![u32::MAX; g.n];
     let mut levels: Vec<Vec<u32>> = vec![vec![root]];
     dist[root as usize] = 0;
-    let mut frontier = vec![root];
     let mut d = 0u32;
-    while !frontier.is_empty() {
-        let mut next = Vec::new();
-        for &v in &frontier {
-            for &w in g.neighbors(v as usize) {
-                if dist[w as usize] == u32::MAX {
-                    dist[w as usize] = d + 1;
-                    next.push(w);
-                }
-            }
-        }
+    loop {
+        let next = {
+            let frontier: &[u32] = levels.last().expect("levels starts non-empty");
+            expand_frontier(g, frontier, &mut dist, d + 1, pool)
+        };
         d += 1;
         if next.is_empty() {
             break;
         }
-        levels.push(next.clone());
-        frontier = next;
+        levels.push(next);
     }
     LevelStructure { levels, dist }
+}
+
+/// Expand one BFS level: claim every unvisited neighbor of `frontier`
+/// at distance `nd` and return the next frontier.
+///
+/// Parallel path determinism: workers only **read** `dist` (a snapshot
+/// taken at level start) and collect candidate children per parent in
+/// frontier order; the serial merge then claims first occurrences in
+/// worker order. The concatenated candidate sequence visits (parent,
+/// neighbor) pairs in exactly the serial scan order, and first-claim
+/// filtering of duplicates reproduces the serial `next` bit for bit.
+fn expand_frontier(
+    g: &Adjacency,
+    frontier: &[u32],
+    dist: &mut [u32],
+    nd: u32,
+    pool: &PrepPool,
+) -> Vec<u32> {
+    if pool.threads() == 1 || frontier.len() < MIN_PAR_FRONTIER {
+        let mut next = Vec::new();
+        for &v in frontier {
+            for &w in g.neighbors(v as usize) {
+                if dist[w as usize] == u32::MAX {
+                    dist[w as usize] = nd;
+                    next.push(w);
+                }
+            }
+        }
+        return next;
+    }
+    let snapshot: &[u32] = dist;
+    let found = pool.map_chunks(frontier.len(), MIN_PAR_FRONTIER / 4, |_, r| {
+        let mut buf = Vec::new();
+        for &v in &frontier[r] {
+            for &w in g.neighbors(v as usize) {
+                if snapshot[w as usize] == u32::MAX {
+                    buf.push(w);
+                }
+            }
+        }
+        buf
+    });
+    let mut next = Vec::new();
+    for buf in found {
+        for w in buf {
+            if dist[w as usize] == u32::MAX {
+                dist[w as usize] = nd;
+                next.push(w);
+            }
+        }
+    }
+    next
 }
 
 /// Connected components; returns `comp[v]` and component count.
@@ -122,5 +185,26 @@ mod tests {
         let g = Adjacency::from_lower_edges(3, &[(1, 0)]);
         let ls = level_structure(&g, 0);
         assert_eq!(ls.dist[2], u32::MAX);
+    }
+
+    #[test]
+    fn parallel_levels_match_serial_on_wide_frontiers() {
+        // complete binary tree (frontier doubles past the parallel
+        // threshold) plus child→uncle links so a child is reachable
+        // from two same-level parents that can land in different worker
+        // chunks — the duplicate-claim case the ordered merge must get
+        // right
+        let n = 8191usize;
+        let mut edges: Vec<(u32, u32)> = (1..n as u32).map(|i| (i, (i - 1) / 2)).collect();
+        for p in 1..(n as u32 - 1) / 2 {
+            edges.push((2 * p + 1, p + 1));
+        }
+        let g = Adjacency::from_lower_edges(n, &edges);
+        let serial = level_structure(&g, 0);
+        for t in [2usize, 3, 8] {
+            let par = level_structure_with(&g, 0, &PrepPool::new(t));
+            assert_eq!(par.dist, serial.dist, "threads={t}");
+            assert_eq!(par.levels, serial.levels, "threads={t}");
+        }
     }
 }

@@ -13,8 +13,9 @@
 //!   achievable bandwidth), accepting a candidate that grows the
 //!   height *or* narrows the structure at equal height.
 
-use crate::graph::bfs::{level_structure, LevelStructure};
+use crate::graph::bfs::{level_structure_with, LevelStructure};
 use crate::graph::Adjacency;
+use crate::util::pool::PrepPool;
 
 /// Candidate-shortlist size for [`bi_criteria_start`] (RCM++ evaluates
 /// a few low-degree last-level vertices, not just the minimum-degree
@@ -26,12 +27,34 @@ pub fn pseudo_peripheral(g: &Adjacency, start: u32) -> u32 {
     pseudo_peripheral_ls(g, start).0
 }
 
+/// [`pseudo_peripheral`] on a prepare pool (the inner BFS sweeps run
+/// level-parallel).
+pub fn pseudo_peripheral_with(g: &Adjacency, start: u32, pool: &PrepPool) -> u32 {
+    let ls0 = level_structure_with(g, start, pool);
+    pseudo_peripheral_ls_from(g, ls0, pool).0
+}
+
 /// [`pseudo_peripheral`] returning the final root's level structure
 /// too (callers that score the pick reuse it instead of re-running the
 /// BFS).
 pub fn pseudo_peripheral_ls(g: &Adjacency, start: u32) -> (u32, LevelStructure) {
-    let mut v = start;
-    let mut ls = level_structure(g, v);
+    let pool = PrepPool::serial();
+    let ls0 = level_structure_with(g, start, &pool);
+    pseudo_peripheral_ls_from(g, ls0, &pool)
+}
+
+/// George-Liu iteration from a **precomputed** start level structure.
+/// Splitting the initial BFS out lets `Auto`'s candidate scorer compute
+/// it once per component start and share it between this finder and
+/// [`bi_criteria_start_from`] instead of re-running BFS from scratch
+/// per candidate strategy.
+pub fn pseudo_peripheral_ls_from(
+    g: &Adjacency,
+    ls0: LevelStructure,
+    pool: &PrepPool,
+) -> (u32, LevelStructure) {
+    let mut v = ls0.levels[0][0];
+    let mut ls = ls0;
     loop {
         let last = match ls.last_level() {
             Some(l) => l,
@@ -39,7 +62,7 @@ pub fn pseudo_peripheral_ls(g: &Adjacency, start: u32) -> (u32, LevelStructure) 
         };
         // minimum-degree vertex of the last level
         let u = *last.iter().min_by_key(|&&w| g.degree(w as usize)).unwrap();
-        let ls_u = level_structure(g, u);
+        let ls_u = level_structure_with(g, u, pool);
         if ls_u.height() > ls.height() {
             v = u;
             ls = ls_u;
@@ -57,8 +80,21 @@ pub fn pseudo_peripheral_ls(g: &Adjacency, start: u32) -> (u32, LevelStructure) 
 /// pair (height is bounded by the component size, width by 1 from
 /// below).
 pub fn bi_criteria_start(g: &Adjacency, start: u32) -> (u32, LevelStructure) {
-    let mut v = start;
-    let mut ls = level_structure(g, v);
+    let pool = PrepPool::serial();
+    let ls0 = level_structure_with(g, start, &pool);
+    bi_criteria_start_from(g, ls0, &pool)
+}
+
+/// [`bi_criteria_start`] from a **precomputed** start level structure
+/// on a prepare pool (see [`pseudo_peripheral_ls_from`] for why the
+/// initial BFS is split out).
+pub fn bi_criteria_start_from(
+    g: &Adjacency,
+    ls0: LevelStructure,
+    pool: &PrepPool,
+) -> (u32, LevelStructure) {
+    let mut v = ls0.levels[0][0];
+    let mut ls = ls0;
     loop {
         let last = match ls.last_level() {
             Some(l) => l,
@@ -74,7 +110,7 @@ pub fn bi_criteria_start(g: &Adjacency, start: u32) -> (u32, LevelStructure) {
         };
         let mut best: Option<(u32, LevelStructure)> = None;
         for &u in &cand {
-            let ls_u = level_structure(g, u);
+            let ls_u = level_structure_with(g, u, pool);
             if !better(&ls_u, &ls) {
                 continue;
             }

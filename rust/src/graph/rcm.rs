@@ -9,8 +9,13 @@
 //! Disconnected graphs are handled component-by-component (each gets its
 //! own pseudo-peripheral start), so the permutation is always total.
 
-use crate::graph::peripheral::pseudo_peripheral;
+use crate::graph::peripheral::pseudo_peripheral_with;
 use crate::graph::Adjacency;
+use crate::util::pool::PrepPool;
+
+/// CM level width below which parallel child collection is not worth a
+/// spawn (mirrors the BFS frontier floor).
+const MIN_PAR_LEVEL: usize = 512;
 
 /// Compute the RCM permutation.
 ///
@@ -18,7 +23,15 @@ use crate::graph::Adjacency;
 /// `new` in the reordered matrix (the convention
 /// [`crate::sparse::Coo::permute_symmetric`] expects).
 pub fn rcm(g: &Adjacency) -> Vec<u32> {
-    let order = cm_order(g);
+    rcm_with(g, &PrepPool::serial())
+}
+
+/// [`rcm`] on a prepare pool: peripheral-search BFS and per-level child
+/// sorting run across the workers, producing a permutation **bit-for-bit
+/// identical** to the serial one for every thread count (see
+/// [`cm_visit_component_with`] for the determinism argument).
+pub fn rcm_with(g: &Adjacency, pool: &PrepPool) -> Vec<u32> {
+    let order = cm_order_with(g, pool);
     // CM order lists old ids in visit sequence; RCM reverses it.
     let n = g.n;
     let mut perm = vec![0u32; n];
@@ -30,17 +43,21 @@ pub fn rcm(g: &Adjacency) -> Vec<u32> {
 
 /// The forward Cuthill-McKee visit order (old vertex ids in sequence).
 pub fn cm_order(g: &Adjacency) -> Vec<u32> {
+    cm_order_with(g, &PrepPool::serial())
+}
+
+/// [`cm_order`] on a prepare pool.
+pub fn cm_order_with(g: &Adjacency, pool: &PrepPool) -> Vec<u32> {
     let n = g.n;
     let mut visited = vec![false; n];
     let mut order = Vec::with_capacity(n);
-    let mut scratch: Vec<u32> = Vec::new();
 
     for s in 0..n {
         if visited[s] {
             continue;
         }
-        let root = pseudo_peripheral(g, s as u32);
-        cm_visit_component(g, root, &mut visited, &mut order, &mut scratch);
+        let root = pseudo_peripheral_with(g, s as u32, pool);
+        cm_visit_component_with(g, root, &mut visited, &mut order, pool);
     }
     order
 }
@@ -74,6 +91,81 @@ pub(crate) fn cm_visit_component(
         }
         scratch.sort_unstable_by_key(|&w| (g.degree(w as usize), w));
         order.extend_from_slice(scratch);
+    }
+}
+
+/// Level-synchronous parallel CM component visit, identical in output
+/// to [`cm_visit_component`] for every thread count.
+///
+/// The serial FIFO processes the queue level by level: every vertex
+/// appended while the head is inside level `d`'s window belongs to
+/// level `d+1`, so expanding the whole window `[lo, hi)` at once is the
+/// same computation. Within a window, workers only **read** the
+/// visited set (a snapshot taken at window start) and collect each
+/// parent's not-yet-visited neighbours, sorting each parent's run by
+/// `(degree, id)` in place; the serial merge then walks the runs in
+/// window order and claims first occurrences. A child already claimed
+/// by an earlier parent in the window appears in a later parent's
+/// sorted run too, but deleting claimed entries from a sorted superset
+/// preserves the relative order of the rest — exactly the serial
+/// parent's sorted scratch — so the appended order is bit-for-bit the
+/// serial one.
+pub(crate) fn cm_visit_component_with(
+    g: &Adjacency,
+    root: u32,
+    visited: &mut [bool],
+    order: &mut Vec<u32>,
+    pool: &PrepPool,
+) {
+    visited[root as usize] = true;
+    let mut lo = order.len();
+    order.push(root);
+    let mut scratch: Vec<u32> = Vec::new();
+    while lo < order.len() {
+        let hi = order.len();
+        let width = hi - lo;
+        if pool.threads() == 1 || width < MIN_PAR_LEVEL {
+            // serial window expansion: the classic per-parent claim
+            for idx in lo..hi {
+                let v = order[idx];
+                scratch.clear();
+                for &w in g.neighbors(v as usize) {
+                    if !visited[w as usize] {
+                        visited[w as usize] = true;
+                        scratch.push(w);
+                    }
+                }
+                scratch.sort_unstable_by_key(|&w| (g.degree(w as usize), w));
+                order.extend_from_slice(&scratch);
+            }
+        } else {
+            let runs = {
+                let window: &[u32] = &order[lo..hi];
+                let seen: &[bool] = visited;
+                pool.map_chunks(width, MIN_PAR_LEVEL / 4, |_, r| {
+                    let mut buf = Vec::new();
+                    for &v in &window[r] {
+                        let start = buf.len();
+                        for &w in g.neighbors(v as usize) {
+                            if !seen[w as usize] {
+                                buf.push(w);
+                            }
+                        }
+                        buf[start..].sort_unstable_by_key(|&w| (g.degree(w as usize), w));
+                    }
+                    buf
+                })
+            };
+            for run in runs {
+                for w in run {
+                    if !visited[w as usize] {
+                        visited[w as usize] = true;
+                        order.push(w);
+                    }
+                }
+            }
+        }
+        lo = hi;
     }
 }
 
@@ -161,6 +253,30 @@ mod tests {
         }
         assert!(seen.iter().all(|&s| s));
         assert_eq!(bandwidth_under(&g, &perm), 1);
+    }
+
+    #[test]
+    fn parallel_rcm_is_bit_identical_on_wide_levels() {
+        // hub-and-spoke with a shared leaf layer: CM levels of width
+        // ~2000 push past the parallel threshold, and leaves reachable
+        // from many same-level parents exercise the claimed-duplicate
+        // filtering in the ordered run merge
+        let mut rng = SmallRng::seed_from_u64(9);
+        let mids = 2000u32;
+        let leaves = 4000u32;
+        let n = (1 + mids + leaves) as usize;
+        let mut edges: Vec<(u32, u32)> = (0..mids).map(|i| (1 + i, 0)).collect();
+        for i in 0..mids {
+            for _ in 0..3 {
+                let leaf = 1 + mids + rng.gen_range_usize(0, leaves as usize) as u32;
+                edges.push((leaf, 1 + i));
+            }
+        }
+        let g = Adjacency::from_lower_edges(n, &edges);
+        let serial = rcm(&g);
+        for t in [2usize, 4, 8] {
+            assert_eq!(rcm_with(&g, &PrepPool::new(t)), serial, "threads={t}");
+        }
     }
 
     #[test]

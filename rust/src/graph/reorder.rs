@@ -33,10 +33,12 @@
 //! into `Prepared`, `MatrixInfo`/`Client::describe`, `Pars3Stats`, and
 //! the CLI output.
 
-use crate::graph::bfs::LevelStructure;
-use crate::graph::peripheral::{bi_criteria_start, pseudo_peripheral_ls};
+use crate::graph::bfs::{level_structure_with, LevelStructure};
+use crate::graph::peripheral::{bi_criteria_start_from, pseudo_peripheral_ls_from};
 use crate::graph::rcm::{bandwidth_under, profile_under};
 use crate::graph::Adjacency;
+use crate::util::pool::PrepPool;
+use std::time::Instant;
 
 /// Which reordering strategy `prepare` runs — the config/CLI selector
 /// (`reorder = auto|rcm|rcm-bicriteria|natural`, `--reorder`).
@@ -119,8 +121,86 @@ pub struct CandidateScore {
     pub chosen: bool,
 }
 
+/// Per-stage wall-clock timings of one prepare run (milliseconds).
+///
+/// `bfs_ms`/`rcm_ms` are stamped by the reorder strategies; `build_ms`
+/// (permutation application + SSS conversion) is stamped by the kernel
+/// registry's build path on top of the strategy's report. `serial_ms`
+/// is `0.0` unless a caller (the `prepare_scaling` bench) explicitly
+/// measured a single-threaded baseline to compare against. Timings are
+/// measurements, not plan inputs — two runs of the same prepare differ
+/// here and nowhere else, which is why the determinism tests zero this
+/// struct before comparing reports.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PrepareTimings {
+    /// Level-structure / peripheral-search BFS time.
+    pub bfs_ms: f64,
+    /// CM visit + reversal (the permutation computation proper).
+    pub rcm_ms: f64,
+    /// Permutation application + format construction (registry path).
+    pub build_ms: f64,
+    /// Single-threaded baseline for the same prepare, when measured
+    /// (`0.0` = not measured).
+    pub serial_ms: f64,
+    /// Prepare-pool width the run used.
+    pub threads: usize,
+}
+
+impl PrepareTimings {
+    /// Total measured prepare time across the recorded stages.
+    pub fn total_ms(&self) -> f64 {
+        self.bfs_ms + self.rcm_ms + self.build_ms
+    }
+
+    /// Speedup vs the measured serial baseline (`None` when no baseline
+    /// was recorded or the run was too fast to resolve).
+    pub fn speedup(&self) -> Option<f64> {
+        let total = self.total_ms();
+        (self.serial_ms > 0.0 && total > 0.0).then(|| self.serial_ms / total)
+    }
+
+    /// One-line human summary for CLI/serve output.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "prepare timings: bfs {:.3} ms, rcm {:.3} ms, build {:.3} ms ({} thread(s)",
+            self.bfs_ms, self.rcm_ms, self.build_ms, self.threads
+        );
+        if let Some(sp) = self.speedup() {
+            s.push_str(&format!(", {sp:.2}x vs serial"));
+        }
+        s.push(')');
+        s
+    }
+
+    /// JSON encoding for the wire.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("bfs_ms".to_string(), Json::Num(self.bfs_ms));
+        m.insert("rcm_ms".to_string(), Json::Num(self.rcm_ms));
+        m.insert("build_ms".to_string(), Json::Num(self.build_ms));
+        m.insert("serial_ms".to_string(), Json::Num(self.serial_ms));
+        m.insert("threads".to_string(), Json::Num(self.threads as f64));
+        Json::Obj(m)
+    }
+
+    /// Inverse of [`PrepareTimings::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        Ok(PrepareTimings {
+            bfs_ms: j.req("bfs_ms")?.as_f64()?,
+            rcm_ms: j.req("rcm_ms")?.as_f64()?,
+            build_ms: j.req("build_ms")?.as_f64()?,
+            serial_ms: j.req("serial_ms")?.as_f64()?,
+            threads: j.req("threads")?.as_usize()?,
+        })
+    }
+}
+
 /// Instrumentation emitted by every reordering run.
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// (`PartialEq` only: the embedded [`PrepareTimings`] carry `f64`
+/// wall-clock measurements.)
+#[derive(Debug, Clone, PartialEq)]
 pub struct ReorderReport {
     /// The policy the caller requested.
     pub requested: ReorderPolicy,
@@ -146,6 +226,8 @@ pub struct ReorderReport {
     /// Candidate scores (`Auto`: every strategy it weighed; direct
     /// strategies: their single self-score).
     pub candidates: Vec<CandidateScore>,
+    /// Per-stage prepare timings (wall clock, milliseconds).
+    pub timings: PrepareTimings,
 }
 
 /// Intern a strategy name back to its `&'static str` spelling (the
@@ -245,6 +327,7 @@ impl ReorderReport {
             "candidates".to_string(),
             Json::Arr(self.candidates.iter().map(|c| c.to_json()).collect()),
         );
+        m.insert("timings".to_string(), self.timings.to_json());
         Json::Obj(m)
     }
 
@@ -271,6 +354,7 @@ impl ReorderReport {
                 .iter()
                 .map(CandidateScore::from_json)
                 .collect::<anyhow::Result<_>>()?,
+            timings: PrepareTimings::from_json(j.req("timings")?)?,
         })
     }
 }
@@ -287,6 +371,9 @@ pub struct ReorderOutcome {
     pub components: Vec<ComponentStats>,
     /// Candidate scores ([`Auto`] only; empty for direct strategies).
     pub candidates: Vec<CandidateScore>,
+    /// Per-stage timings of this run (`build_ms` stamped later by the
+    /// registry build path).
+    pub timings: PrepareTimings,
 }
 
 /// A pluggable reordering strategy over the pattern graph.
@@ -295,12 +382,20 @@ pub struct ReorderOutcome {
 /// new`, every position hit exactly once) and reorder per connected
 /// component: each component's vertices map to a contiguous index
 /// range, so its ordering is independent of every other component's.
+/// The permutation must also be independent of the pool width —
+/// parallelism is an execution detail, never a different ordering.
 pub trait ReorderStrategy {
     /// Strategy name (report/CLI spelling).
     fn name(&self) -> &'static str;
 
-    /// Compute the permutation and its per-component stats.
-    fn reorder(&self, g: &Adjacency) -> ReorderOutcome;
+    /// Compute the permutation and its per-component stats on the given
+    /// prepare pool.
+    fn reorder_with(&self, g: &Adjacency, pool: &PrepPool) -> ReorderOutcome;
+
+    /// Single-threaded [`Self::reorder_with`].
+    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
+        self.reorder_with(g, &PrepPool::serial())
+    }
 }
 
 /// Identity ordering (decline to reorder). Component stats are still
@@ -340,7 +435,8 @@ impl ReorderStrategy for Natural {
         "natural"
     }
 
-    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
+    fn reorder_with(&self, g: &Adjacency, pool: &PrepPool) -> ReorderOutcome {
+        let t0 = Instant::now();
         let n = g.n;
         let perm: Vec<u32> = (0..n as u32).collect();
         let mut components = Vec::new();
@@ -381,7 +477,14 @@ impl ReorderStrategy for Natural {
             }
             components.push(ComponentStats { start: s as u32, size, height, width, bw });
         }
-        ReorderOutcome { strategy: self.name(), perm, components, candidates: Vec::new() }
+        // the single measurement scan is the "BFS" stage of this
+        // strategy; it has no CM visit to time
+        let timings = PrepareTimings {
+            bfs_ms: t0.elapsed().as_secs_f64() * 1e3,
+            threads: pool.threads(),
+            ..PrepareTimings::default()
+        };
+        ReorderOutcome { strategy: self.name(), perm, components, candidates: Vec::new(), timings }
     }
 }
 
@@ -391,27 +494,38 @@ impl ReorderStrategy for Natural {
 /// visit, and reverse **within the component** — component `c` occupies
 /// the contiguous range its discovery order assigns, so each block's
 /// ordering is exactly the RCM of that component in isolation.
-fn rcm_per_component(
+///
+/// `pick` receives the pool so its peripheral-search BFS sweeps run
+/// level-parallel; the CM visit runs on the same pool. `pick` time is
+/// booked as `bfs_ms`, the visit + reversal as `rcm_ms`.
+/// `pub(crate)` so the planner's `Auto` scorer can inject pick closures
+/// that share one cached start-level structure across candidates.
+pub(crate) fn rcm_per_component_with(
     g: &Adjacency,
     name: &'static str,
     pick: &dyn Fn(&Adjacency, u32) -> (u32, LevelStructure),
+    pool: &PrepPool,
 ) -> ReorderOutcome {
     let n = g.n;
     let mut perm = vec![0u32; n];
     let mut visited = vec![false; n];
     let mut components = Vec::new();
     let mut order: Vec<u32> = Vec::new();
-    let mut scratch: Vec<u32> = Vec::new();
     let mut base = 0usize;
+    let (mut bfs_s, mut rcm_s) = (0.0f64, 0.0f64);
     for s in 0..n {
         if visited[s] {
             continue;
         }
+        let t0 = Instant::now();
         let (root, ls) = pick(g, s as u32);
+        bfs_s += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
         order.clear();
-        // the one shared CM engine (rcm::cm_visit_component) expands
-        // the component's visit order — same rule as classic cm_order
-        crate::graph::rcm::cm_visit_component(g, root, &mut visited, &mut order, &mut scratch);
+        // the one shared CM engine (rcm::cm_visit_component_with)
+        // expands the component's visit order — same rule and output as
+        // classic cm_order for every pool width
+        crate::graph::rcm::cm_visit_component_with(g, root, &mut visited, &mut order, pool);
         // RCM: reverse the CM visit within the component's range
         for (i, &old) in order.iter().rev().enumerate() {
             perm[old as usize] = (base + i) as u32;
@@ -423,6 +537,7 @@ fn rcm_per_component(
                 bw = bw.max((pv - perm[w as usize] as i64).unsigned_abs() as usize);
             }
         }
+        rcm_s += t1.elapsed().as_secs_f64();
         components.push(ComponentStats {
             start: root,
             size: order.len(),
@@ -432,7 +547,13 @@ fn rcm_per_component(
         });
         base += order.len();
     }
-    ReorderOutcome { strategy: name, perm, components, candidates: Vec::new() }
+    let timings = PrepareTimings {
+        bfs_ms: bfs_s * 1e3,
+        rcm_ms: rcm_s * 1e3,
+        threads: pool.threads(),
+        ..PrepareTimings::default()
+    };
+    ReorderOutcome { strategy: name, perm, components, candidates: Vec::new(), timings }
 }
 
 impl ReorderStrategy for Rcm {
@@ -440,8 +561,13 @@ impl ReorderStrategy for Rcm {
         "rcm"
     }
 
-    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
-        rcm_per_component(g, self.name(), &pseudo_peripheral_ls)
+    fn reorder_with(&self, g: &Adjacency, pool: &PrepPool) -> ReorderOutcome {
+        rcm_per_component_with(
+            g,
+            self.name(),
+            &|g, s| pseudo_peripheral_ls_from(g, level_structure_with(g, s, pool), pool),
+            pool,
+        )
     }
 }
 
@@ -450,8 +576,13 @@ impl ReorderStrategy for RcmBiCriteria {
         "rcm-bicriteria"
     }
 
-    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
-        rcm_per_component(g, self.name(), &bi_criteria_start)
+    fn reorder_with(&self, g: &Adjacency, pool: &PrepPool) -> ReorderOutcome {
+        rcm_per_component_with(
+            g,
+            self.name(),
+            &|g, s| bi_criteria_start_from(g, level_structure_with(g, s, pool), pool),
+            pool,
+        )
     }
 }
 
@@ -460,11 +591,11 @@ impl ReorderStrategy for Auto {
         "auto"
     }
 
-    fn reorder(&self, g: &Adjacency) -> ReorderOutcome {
+    fn reorder_with(&self, g: &Adjacency, pool: &PrepPool) -> ReorderOutcome {
         // The candidate-scoring loop lives with the other plan-axis
         // scorers in the planner; this strategy is the thin policy
         // adapter the registry path keeps using.
-        crate::coordinator::planner::score_reorder_candidates(g, self.min_gain)
+        crate::coordinator::planner::score_reorder_candidates_with(g, self.min_gain, pool)
     }
 }
 
@@ -479,13 +610,26 @@ pub fn strategy_for(policy: ReorderPolicy, min_gain: f64) -> Box<dyn ReorderStra
     }
 }
 
-/// Run the policy's strategy and assemble the full [`ReorderReport`].
+/// Run the policy's strategy and assemble the full [`ReorderReport`]
+/// (single-threaded; see [`reorder_with_report_with`]).
 pub fn reorder_with_report(
     g: &Adjacency,
     policy: ReorderPolicy,
     min_gain: f64,
 ) -> (Vec<u32>, ReorderReport) {
-    let out = strategy_for(policy, min_gain).reorder(g);
+    reorder_with_report_with(g, policy, min_gain, &PrepPool::serial())
+}
+
+/// Run the policy's strategy on a prepare pool and assemble the full
+/// [`ReorderReport`]. The permutation is identical for every pool
+/// width; only the recorded timings differ.
+pub fn reorder_with_report_with(
+    g: &Adjacency,
+    policy: ReorderPolicy,
+    min_gain: f64,
+    pool: &PrepPool,
+) -> (Vec<u32>, ReorderReport) {
+    let out = strategy_for(policy, min_gain).reorder_with(g, pool);
     // Auto already measured every candidate (natural included), so its
     // scores are reused verbatim; only the direct strategies pay the
     // before/after measurement passes here.
@@ -532,6 +676,7 @@ pub fn reorder_with_report(
         width: out.components.iter().map(|c| c.width).max().unwrap_or(0),
         components: out.components,
         candidates,
+        timings: out.timings,
     };
     (out.perm, report)
 }

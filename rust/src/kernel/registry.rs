@@ -31,7 +31,9 @@ use crate::kernel::serial_sss::SerialSss;
 use crate::kernel::split3::Split3;
 use crate::kernel::traits::Spmv;
 use crate::sparse::{convert, Coo, Sss, Symmetry};
+use crate::util::pool::PrepPool;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Names of every registered kernel, in bench display order.
 pub const KERNEL_NAMES: &[&str] =
@@ -100,12 +102,29 @@ pub fn reorder_to_sss(
     strategy: ReorderPolicy,
     min_gain: f64,
 ) -> Result<(Vec<u32>, Sss, ReorderReport), Pars3Error> {
+    reorder_to_sss_with(coo, strategy, min_gain, &PrepPool::serial())
+}
+
+/// [`reorder_to_sss`] on a prepare pool: the strategy's BFS/CM passes,
+/// the symmetric permutation, and the SSS assembly all run across the
+/// pool's workers, producing bit-identical artifacts for every width.
+/// The permutation + conversion time is stamped into the report as
+/// `timings.build_ms`.
+pub fn reorder_to_sss_with(
+    coo: &Coo,
+    strategy: ReorderPolicy,
+    min_gain: f64,
+    pool: &PrepPool,
+) -> Result<(Vec<u32>, Sss, ReorderReport), Pars3Error> {
     let g = Adjacency::from_coo(coo);
-    let (perm, report) = reorder::reorder_with_report(&g, strategy, min_gain);
-    let sss = convert::coo_to_sss(&coo.permute_symmetric(&perm), Symmetry::Skew)
-        .map_err(|e| {
-            Pars3Error::InvalidMatrix(format!("matrix is not (shifted) skew-symmetric: {e:#}"))
-        })?;
+    let (perm, mut report) = reorder::reorder_with_report_with(&g, strategy, min_gain, pool);
+    let t0 = Instant::now();
+    let sss =
+        convert::coo_to_sss_with(&coo.permute_symmetric_with(&perm, pool), Symmetry::Skew, pool)
+            .map_err(|e| {
+                Pars3Error::InvalidMatrix(format!("matrix is not (shifted) skew-symmetric: {e:#}"))
+            })?;
+    report.timings.build_ms = t0.elapsed().as_secs_f64() * 1e3;
     Ok((perm, sss, report))
 }
 

@@ -25,7 +25,9 @@
 //! `--shards W` (service worker pool), `--queue-depth N` (per-shard
 //! backpressure bound), `--max-cached-kernels N` (per-shard
 //! kernel-cache LRU cap, 0 = unbounded), `--l2-kib K` (cache budget the
-//! tile-blocked band kernels size their row tiles against).
+//! tile-blocked band kernels size their row tiles against),
+//! `--prepare-threads N` (prepare-pool width for BFS/RCM and format
+//! construction; the permutation is identical for every width).
 
 use pars3::coordinator::{Backend, ClientApi, Config, Coordinator, Service};
 use pars3::mpisim::CostModel;
@@ -115,6 +117,9 @@ fn load_config(args: &Args) -> Result<Config> {
     if let Some(l) = args.flags.get("l2-kib") {
         cfg.l2_kib = l.parse()?;
     }
+    if let Some(t) = args.flags.get("prepare-threads") {
+        cfg.prepare_threads = t.parse()?;
+    }
     // flag overrides must obey the same invariants the TOML path enforces
     if cfg.shards == 0 {
         anyhow::bail!("--shards must be >= 1");
@@ -127,6 +132,9 @@ fn load_config(args: &Args) -> Result<Config> {
     }
     if cfg.l2_kib == 0 {
         anyhow::bail!("--l2-kib must be >= 1");
+    }
+    if cfg.prepare_threads == 0 {
+        anyhow::bail!("--prepare-threads must be >= 1");
     }
     Ok(cfg)
 }
@@ -175,7 +183,7 @@ fn run() -> Result<()> {
                         --format auto|dia|sss --reorder auto|rcm|rcm-bicriteria|natural\n\
                         --reorder-min-gain G --plan auto|pinned --plan-probe N\n\
                         --tol T --iters K --rhs K --artifacts DIR --shards W --queue-depth N\n\
-                        --max-cached-kernels N --l2-kib K\n\
+                        --max-cached-kernels N --l2-kib K --prepare-threads N\n\
                         --listen tcp://host:port|uds:/path (serve)\n\
                         --connect tcp://host:port|uds:/path [--stop] (client)"
             );
@@ -275,6 +283,7 @@ fn cmd_spmv(cfg: Config, args: &Args) -> Result<()> {
     );
     println!("{}", prep.plan.summary());
     println!("{}", prep.plan.detail());
+    println!("{}", prep.plan.reorder.timings.summary());
     let x: Vec<f64> = (0..prep.n).map(|i| (i as f64 * 0.37).sin()).collect();
     let t0 = std::time::Instant::now();
     let y = coord.spmv(&prep, &x, backend)?;

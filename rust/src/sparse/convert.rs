@@ -4,8 +4,13 @@
 //! round-trip exactly; the tests below check every pair.
 
 use crate::sparse::{Coo, Csr, Sss, Symmetry};
+use crate::util::pool::PrepPool;
 use crate::Result;
 use anyhow::ensure;
+
+/// Rows per slab floor for the parallel SSS build (below this a slab is
+/// not worth a spawn).
+const MIN_PAR_ROWS: usize = 2048;
 
 /// COO -> CSR. Duplicates are summed; columns end up sorted per row.
 pub fn coo_to_csr(coo: &Coo) -> Csr {
@@ -38,43 +43,82 @@ pub fn csr_to_coo(csr: &Csr) -> Coo {
 /// `(i, j, v)` the matching upper entry must equal `sign * v` (within
 /// 1e-12), and vice versa; the diagonal is stored densely.
 pub fn coo_to_sss(coo: &Coo, sym: Symmetry) -> Result<Sss> {
+    coo_to_sss_with(coo, sym, &PrepPool::serial())
+}
+
+/// [`coo_to_sss`] on a prepare pool (the SSS assembly runs slab-parallel
+/// via [`csr_to_sss_with`]; the COO->CSR sort stays serial — it is a
+/// comparison sort whose output the slabs then split).
+pub fn coo_to_sss_with(coo: &Coo, sym: Symmetry, pool: &PrepPool) -> Result<Sss> {
     let csr = coo_to_csr(coo);
-    csr_to_sss(&csr, sym)
+    csr_to_sss_with(&csr, sym, pool)
 }
 
 /// CSR (full matrix) -> SSS with mirror verification.
 pub fn csr_to_sss(csr: &Csr, sym: Symmetry) -> Result<Sss> {
+    csr_to_sss_with(csr, sym, &PrepPool::serial())
+}
+
+/// [`csr_to_sss`] on a prepare pool. Each contiguous row slab builds
+/// its own diagonal slice, per-row lower-entry counts, and packed
+/// (col_ind, vals) run; the merge concatenates slabs in row order and
+/// prefix-sums the counts into `row_ptr`, so the assembled arrays are
+/// identical to the serial single-pass build for every pool width. A
+/// failing slab reports its first bad row; applying `?` in slab order
+/// makes the surfaced error the globally earliest one — the same error
+/// (message included) the serial pass raises.
+pub fn csr_to_sss_with(csr: &Csr, sym: Symmetry, pool: &PrepPool) -> Result<Sss> {
     let n = csr.n;
     let sign = sym.sign();
-    let mut dvalues = vec![0.0f64; n];
-    let mut row_ptr = vec![0usize; n + 1];
-    let mut col_ind = Vec::new();
-    let mut vals = Vec::new();
-    for i in 0..n {
-        for (j, v) in csr.row(i) {
-            let j = j as usize;
-            match j.cmp(&i) {
-                std::cmp::Ordering::Equal => dvalues[i] = v,
-                std::cmp::Ordering::Less => {
-                    let mirror = csr.get(j, i);
-                    ensure!(
-                        (mirror - sign * v).abs() <= 1e-12 * (1.0 + v.abs()),
-                        "entry ({i},{j})={v} has mirror {mirror}, violates {sym:?}"
-                    );
-                    col_ind.push(j as u32);
-                    vals.push(v);
-                }
-                std::cmp::Ordering::Greater => {
-                    // upper entry: verify its lower mirror exists
-                    let mirror = csr.get(j, i);
-                    ensure!(
-                        (v - sign * mirror).abs() <= 1e-12 * (1.0 + v.abs()),
-                        "upper entry ({i},{j})={v} missing lower mirror"
-                    );
+    type Slab = (Vec<f64>, Vec<usize>, Vec<u32>, Vec<f64>);
+    let slabs = pool.map_chunks(n, MIN_PAR_ROWS, |_, r| -> Result<Slab> {
+        let base = r.start;
+        let mut dvalues = vec![0.0f64; r.len()];
+        let mut counts = vec![0usize; r.len()];
+        let mut col_ind = Vec::new();
+        let mut vals = Vec::new();
+        for i in r {
+            for (j, v) in csr.row(i) {
+                let j = j as usize;
+                match j.cmp(&i) {
+                    std::cmp::Ordering::Equal => dvalues[i - base] = v,
+                    std::cmp::Ordering::Less => {
+                        let mirror = csr.get(j, i);
+                        ensure!(
+                            (mirror - sign * v).abs() <= 1e-12 * (1.0 + v.abs()),
+                            "entry ({i},{j})={v} has mirror {mirror}, violates {sym:?}"
+                        );
+                        col_ind.push(j as u32);
+                        vals.push(v);
+                        counts[i - base] += 1;
+                    }
+                    std::cmp::Ordering::Greater => {
+                        // upper entry: verify its lower mirror exists
+                        let mirror = csr.get(j, i);
+                        ensure!(
+                            (v - sign * mirror).abs() <= 1e-12 * (1.0 + v.abs()),
+                            "upper entry ({i},{j})={v} missing lower mirror"
+                        );
+                    }
                 }
             }
         }
-        row_ptr[i + 1] = vals.len();
+        Ok((dvalues, counts, col_ind, vals))
+    });
+    let mut dvalues = Vec::with_capacity(n);
+    let mut row_ptr = vec![0usize; n + 1];
+    let mut col_ind = Vec::new();
+    let mut vals = Vec::new();
+    let mut row = 0usize;
+    for slab in slabs {
+        let (dv, counts, ci, vs) = slab?;
+        dvalues.extend_from_slice(&dv);
+        for c in counts {
+            row_ptr[row + 1] = row_ptr[row] + c;
+            row += 1;
+        }
+        col_ind.extend_from_slice(&ci);
+        vals.extend_from_slice(&vs);
     }
     if sym == Symmetry::Skew {
         // Skew part has zero diagonal; dvalues carries only the shift.
@@ -167,5 +211,41 @@ mod tests {
         let mut c = Coo::new(3);
         c.push(1, 0, 2.0); // no (0,1) entry at all
         assert!(coo_to_sss(&c, Symmetry::Skew).is_err());
+    }
+
+    #[test]
+    fn parallel_sss_build_matches_serial() {
+        // enough rows to split into several slabs (MIN_PAR_ROWS = 2048)
+        let n = 6000usize;
+        let mut rng = SmallRng::seed_from_u64(17);
+        let pattern = crate::sparse::gen::random_banded_pattern(n, 5, 0.4, &mut rng);
+        let coo = skew::coo_from_pattern(n, &pattern, 1.5, &mut rng);
+        let serial = coo_to_sss(&coo, Symmetry::Skew).unwrap();
+        for t in [2usize, 4, 8] {
+            let par = coo_to_sss_with(&coo, Symmetry::Skew, &PrepPool::new(t)).unwrap();
+            assert_eq!(par.row_ptr, serial.row_ptr, "threads={t}");
+            assert_eq!(par.col_ind, serial.col_ind, "threads={t}");
+            assert_eq!(par.vals, serial.vals, "threads={t}");
+            assert_eq!(par.dvalues, serial.dvalues, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_sss_build_surfaces_the_earliest_error() {
+        // two bad mirrors far apart land in different slabs; the
+        // parallel build must report the same (earliest) one as serial
+        let n = 6000usize;
+        let mut rng = SmallRng::seed_from_u64(23);
+        let pattern = crate::sparse::gen::random_banded_pattern(n, 3, 0.7, &mut rng);
+        let mut coo = skew::coo_from_pattern(n, &pattern, 1.5, &mut rng);
+        for i in [100u32, 5900] {
+            coo.push(i, i - 1, 3.25);
+            coo.push(i - 1, i, 3.25); // symmetric pair violates skew
+        }
+        let serial_err = format!("{:#}", coo_to_sss(&coo, Symmetry::Skew).unwrap_err());
+        for t in [2usize, 4] {
+            let err = coo_to_sss_with(&coo, Symmetry::Skew, &PrepPool::new(t)).unwrap_err();
+            assert_eq!(format!("{err:#}"), serial_err, "threads={t}");
+        }
     }
 }

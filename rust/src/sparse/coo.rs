@@ -5,8 +5,12 @@
 //! tiny "outer split" of the 3-way decomposition, where the paper notes
 //! elements are few and scattered.
 
+use crate::util::pool::PrepPool;
 use crate::Result;
 use anyhow::ensure;
+
+/// Entry count below which a parallel permutation is not worth a spawn.
+const MIN_PAR_NNZ: usize = 4096;
 
 /// A sparse matrix in coordinate (triplet) form.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -101,10 +105,39 @@ impl Coo {
     /// Apply a symmetric permutation: entry (i, j) moves to
     /// (perm[i], perm[j]). `perm[old] = new`.
     pub fn permute_symmetric(&self, perm: &[u32]) -> Coo {
+        self.permute_symmetric_with(perm, &PrepPool::serial())
+    }
+
+    /// [`Coo::permute_symmetric`] on a prepare pool: the triplet arrays
+    /// are mapped in contiguous entry chunks and concatenated in chunk
+    /// order, so the output entry order — and everything downstream of
+    /// it — is identical to the serial mapping for every pool width.
+    pub fn permute_symmetric_with(&self, perm: &[u32], pool: &PrepPool) -> Coo {
         debug_assert_eq!(perm.len(), self.n);
-        let mut out = Coo::with_capacity(self.n, self.nnz());
-        for k in 0..self.nnz() {
-            out.push(perm[self.rows[k] as usize], perm[self.cols[k] as usize], self.vals[k]);
+        let nnz = self.nnz();
+        if pool.threads() == 1 || nnz < MIN_PAR_NNZ {
+            let mut out = Coo::with_capacity(self.n, nnz);
+            for k in 0..nnz {
+                out.push(perm[self.rows[k] as usize], perm[self.cols[k] as usize], self.vals[k]);
+            }
+            return out;
+        }
+        let parts = pool.map_chunks(nnz, MIN_PAR_NNZ / 4, |_, r| {
+            let mut rows = Vec::with_capacity(r.len());
+            let mut cols = Vec::with_capacity(r.len());
+            let mut vals = Vec::with_capacity(r.len());
+            for k in r {
+                rows.push(perm[self.rows[k] as usize]);
+                cols.push(perm[self.cols[k] as usize]);
+                vals.push(self.vals[k]);
+            }
+            (rows, cols, vals)
+        });
+        let mut out = Coo::with_capacity(self.n, nnz);
+        for (rows, cols, vals) in parts {
+            out.rows.extend_from_slice(&rows);
+            out.cols.extend_from_slice(&cols);
+            out.vals.extend_from_slice(&vals);
         }
         out
     }
@@ -208,6 +241,23 @@ mod tests {
         let mut y = [0.0; 4];
         c.spmv_ref(&x, &mut y);
         assert_eq!(y, [1.0, 0.0, 10.0, -4.0]);
+    }
+
+    #[test]
+    fn parallel_permutation_matches_serial() {
+        // enough entries to cross the parallel threshold
+        let n = 3000usize;
+        let mut c = Coo::new(n);
+        for i in 0..n as u32 {
+            c.push(i, (i * 7 + 3) % n as u32, i as f64 * 0.5 - 1.0);
+            c.push((i * 13 + 1) % n as u32, i, -(i as f64));
+        }
+        // reversal permutation
+        let perm: Vec<u32> = (0..n as u32).rev().collect();
+        let serial = c.permute_symmetric(&perm);
+        for t in [2usize, 4, 8] {
+            assert_eq!(c.permute_symmetric_with(&perm, &PrepPool::new(t)), serial, "threads={t}");
+        }
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Small self-contained utilities standing in for crates unavailable in
 //! this offline environment (DESIGN.md §2): a deterministic PRNG
 //! (`rand` substitute), a minimal JSON parser/writer (`serde_json`
-//! substitute), and a property-test driver (`proptest` substitute).
+//! substitute), a property-test driver (`proptest` substitute), and the
+//! scoped prepare thread pool ([`pool::PrepPool`]).
 
 pub mod bencher;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 
+pub use pool::PrepPool;
 pub use rng::SmallRng;

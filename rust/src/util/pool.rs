@@ -1,0 +1,182 @@
+//! Scoped prepare thread pool (§Parallel prepare).
+//!
+//! [`PrepPool`] is the shared parallelism handle for the *prepare*
+//! pipeline — BFS level expansion, per-level RCM child sorting,
+//! permutation application, SSS construction, and the planner's timed
+//! probes. It is deliberately a **width**, not a set of persistent
+//! threads: every parallel region runs on `std::thread::scope` workers
+//! spawned for that region, so closures may borrow freely from the
+//! caller's stack (graph, dist array, frontier) with no `Arc`/`'static`
+//! plumbing and no cross-region state. Persistent rank threads remain
+//! the apply path's business ([`crate::mpisim::PersistentWorld`]);
+//! prepare regions are long enough (milliseconds on matrices where
+//! parallelism matters at all) that scoped spawn cost is noise.
+//!
+//! Determinism contract: [`PrepPool::map_chunks`] splits `0..n` into
+//! **contiguous, ordered** chunks and returns the per-chunk results in
+//! chunk order, whatever the interleaving of the workers. Callers that
+//! merge those results in order — the BFS frontier merge, the RCM
+//! per-level child merge, the slab concatenation in `sparse::convert`
+//! — therefore produce output that is bit-for-bit independent of
+//! scheduling and of the thread count.
+
+use std::ops::Range;
+
+/// Work-size floor below which a parallel region is not worth a spawn;
+/// callers pass domain-specific floors, this is the shared default.
+pub const MIN_PAR_WORK: usize = 256;
+
+/// A prepare-parallelism handle: a clamped thread width plus the scoped
+/// fan-out primitives the prepare stages share.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrepPool {
+    threads: usize,
+}
+
+impl PrepPool {
+    /// A pool of `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// The single-threaded pool: every `map_*` call runs inline.
+    pub fn serial() -> Self {
+        Self { threads: 1 }
+    }
+
+    /// A pool as wide as the machine (`available_parallelism`), the
+    /// `--prepare-threads` default.
+    pub fn default_parallel() -> Self {
+        Self::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `0..n` into at most [`Self::threads`] contiguous chunks of
+    /// at least `min_chunk` items each, run `f(chunk_index, range)` on a
+    /// scoped worker per chunk, and return the results **in chunk
+    /// order**. Degenerates to one inline call (no spawn) when the work
+    /// is too small or the pool is serial; a panic in any worker
+    /// propagates to the caller via the scope join.
+    pub fn map_chunks<T, F>(&self, n: usize, min_chunk: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, Range<usize>) -> T + Sync,
+    {
+        let min_chunk = min_chunk.max(1);
+        let chunks = self.threads.min((n + min_chunk - 1) / min_chunk).max(1);
+        if chunks == 1 {
+            return vec![f(0, 0..n)];
+        }
+        let per = (n + chunks - 1) / chunks;
+        let mut out: Vec<Option<T>> = (0..chunks).map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (idx, slot) in out.iter_mut().enumerate() {
+                let range = (idx * per).min(n)..((idx + 1) * per).min(n);
+                let f = &f;
+                s.spawn(move || {
+                    *slot = Some(f(idx, range));
+                });
+            }
+        });
+        out.into_iter().map(|r| r.expect("scoped pool worker completed")).collect()
+    }
+
+    /// Run `f(i)` for every `i in 0..n` (one logical task per item,
+    /// batched onto the workers) and return the results in item order.
+    /// This is the fan-out behind the planner's concurrent probes.
+    pub fn map_items<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.map_chunks(n, 1, |_, r| r.map(&f).collect::<Vec<T>>())
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = PrepPool::serial();
+        assert_eq!(pool.threads(), 1);
+        let got = pool.map_chunks(10, 1, |idx, r| (idx, r));
+        assert_eq!(got, vec![(0, 0..10)]);
+    }
+
+    #[test]
+    fn zero_width_clamps_to_one() {
+        assert_eq!(PrepPool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn chunks_cover_the_range_in_order() {
+        let pool = PrepPool::new(4);
+        for n in [0usize, 1, 3, 4, 5, 17, 1000] {
+            let chunks = pool.map_chunks(n, 1, |_, r| r);
+            let mut expect = 0;
+            for r in &chunks {
+                assert_eq!(r.start, expect, "n={n}");
+                expect = r.end;
+            }
+            assert_eq!(expect, n, "chunks must cover 0..{n}");
+            assert!(chunks.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn min_chunk_limits_the_split() {
+        let pool = PrepPool::new(8);
+        // 100 items at min_chunk 64 -> at most 2 chunks
+        let chunks = pool.map_chunks(100, 64, |_, r| r);
+        assert!(chunks.len() <= 2, "got {} chunks", chunks.len());
+        // below the floor -> inline
+        assert_eq!(pool.map_chunks(63, 64, |_, r| r), vec![0..63]);
+    }
+
+    #[test]
+    fn map_items_preserves_item_order() {
+        let pool = PrepPool::new(3);
+        let got = pool.map_items(20, |i| i * i);
+        let want: Vec<usize> = (0..20).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn results_are_deterministic_across_widths() {
+        // the determinism contract callers rely on: ordered chunk merge
+        // gives the same concatenation for every thread count
+        let serial: Vec<usize> = PrepPool::serial()
+            .map_chunks(500, 16, |_, r| r.map(|i| i * 3).collect::<Vec<_>>())
+            .into_iter()
+            .flatten()
+            .collect();
+        for t in [2usize, 4, 7] {
+            let par: Vec<usize> = PrepPool::new(t)
+                .map_chunks(500, 16, |_, r| r.map(|i| i * 3).collect::<Vec<_>>())
+                .into_iter()
+                .flatten()
+                .collect();
+            assert_eq!(par, serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        PrepPool::new(2).map_chunks(600, 1, |idx, _| {
+            if idx == 1 {
+                panic!("worker boom");
+            }
+            0
+        });
+    }
+}

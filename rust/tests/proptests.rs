@@ -82,6 +82,77 @@ fn prop_rcm_is_total_permutation_on_disconnected_graphs() {
     });
 }
 
+/// One random pattern from the three families the reordering benches
+/// exercise: tight banded, scattered (long-range + scrambled), and
+/// disconnected blocks. Returns `(n, edges)`.
+fn pattern_families(rng: &mut SmallRng) -> (usize, Vec<(u32, u32)>) {
+    match rng.gen_range_usize(0, 3) {
+        0 => {
+            let n = 20 + rng.gen_range_usize(0, 300);
+            (n, gen::random_banded_pattern(n, 1 + rng.gen_range_usize(0, 5), 0.5, rng))
+        }
+        1 => {
+            let n = 20 + rng.gen_range_usize(0, 300);
+            let mut e = gen::random_banded_pattern(n, 2, 0.5, rng);
+            gen::add_long_range(&mut e, n, 0.2 * rng.gen_f64(), rng);
+            (n, gen::scramble(&e, n, rng))
+        }
+        _ => {
+            let (n, e) = disconnected_pattern(rng);
+            (n, gen::scramble(&e, n, rng))
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_bfs_and_rcm_match_serial_for_every_pool_width() {
+    // the prepare pool is a pure speedup: for ANY pattern family and
+    // ANY pool width, the BFS level structure and the RCM permutation
+    // are bit-identical to the serial ones
+    use pars3::graph::bfs::{level_structure, level_structure_with};
+    use pars3::graph::rcm::rcm_with;
+    use pars3::util::PrepPool;
+    for_all("parallel bfs/rcm == serial", 20, |rng| {
+        let (n, edges) = pattern_families(rng);
+        let g = Adjacency::from_lower_edges(n, &edges);
+        let serial_perm = rcm(&g);
+        let root = rng.gen_range_usize(0, n) as u32;
+        let serial_ls = level_structure(&g, root);
+        for t in [1usize, 2, 4] {
+            let pool = PrepPool::new(t);
+            assert_eq!(rcm_with(&g, &pool), serial_perm, "threads={t} n={n}");
+            let ls = level_structure_with(&g, root, &pool);
+            assert_eq!(ls.dist, serial_ls.dist, "threads={t} n={n} root={root}");
+            assert_eq!(ls.levels, serial_ls.levels, "threads={t} n={n} root={root}");
+        }
+    });
+}
+
+#[test]
+fn prop_reorder_report_is_deterministic_per_pool_width() {
+    // same input + same pool width => the same permutation and the same
+    // ReorderReport (wall-clock timings excepted — they are the only
+    // nondeterministic fields, so they are zeroed before comparing)
+    use pars3::graph::reorder::{reorder_with_report_with, ReorderPolicy};
+    use pars3::util::PrepPool;
+    for_all("reorder report deterministic", 10, |rng| {
+        let (n, edges) = pattern_families(rng);
+        let g = Adjacency::from_lower_edges(n, &edges);
+        for policy in [ReorderPolicy::Rcm, ReorderPolicy::Auto] {
+            for t in [1usize, 4] {
+                let pool = PrepPool::new(t);
+                let (perm_a, mut rep_a) = reorder_with_report_with(&g, policy, 0.0, &pool);
+                let (perm_b, mut rep_b) = reorder_with_report_with(&g, policy, 0.0, &pool);
+                assert_eq!(perm_a, perm_b, "{policy} threads={t} n={n}");
+                assert_eq!(rep_a.timings.threads, t, "{policy}");
+                rep_a.timings = Default::default();
+                rep_b.timings = Default::default();
+                assert_eq!(rep_a, rep_b, "{policy} threads={t} n={n}");
+            }
+        }
+    });
+}
+
 #[test]
 fn prop_prepare_permutation_never_increases_bandwidth() {
     // The pipeline's reordering contract: `Coordinator::prepare` picks
